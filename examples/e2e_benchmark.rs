@@ -1,0 +1,112 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the system on a real small workload:
+//!   1. generates the benchmark suite's QPs,
+//!   2. solves each with baseline SMO *and* PA-SMO over paired
+//!      permutations through the Rust coordinator (threaded fan-out),
+//!   3. verifies solution quality against the independent dense
+//!      projected-gradient reference on a subsample,
+//!   4. runs prediction through the AOT/PJRT decision artifact and checks
+//!      it against the native decision path,
+//!   5. prints the paper's headline metric (iterations/time, SMO vs PA,
+//!      Wilcoxon-marked) — the Table-2 shape.
+//!
+//! ```sh
+//! cargo run --release --example e2e_benchmark [-- --perms 10 --full]
+//! ```
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use pasmo::coordinator::experiments::{table2, ExpOptions};
+use pasmo::data::synth::chessboard;
+use pasmo::kernel::matrix::DenseGram;
+use pasmo::kernel::{KernelFunction, NativeRowComputer};
+use pasmo::runtime::engine::PjrtEngine;
+use pasmo::runtime::gram::{PjrtDecision, PjrtRowComputer};
+use pasmo::solver::reference::solve_reference;
+use pasmo::svm::predict::decision_values;
+use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+use pasmo::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let mut opts = ExpOptions::default();
+    opts.perms = args.get_parse_or("perms", 5usize);
+    opts.scale = args.get_parse_or("scale", 0.15);
+    opts.max_len = args.get_parse_or("max-len", 800usize);
+    opts.full = args.flag("full");
+
+    println!("=== PA-SMO end-to-end validation ===\n");
+
+    // ---- (1)+(5) the headline Table-2 run over the fast suite ----
+    println!("{}", table2(&opts));
+
+    // ---- (3) oracle check: solvers vs dense projected gradient ----
+    let small = Arc::new(chessboard(120, 4, 3));
+    let nc = NativeRowComputer::new(small.clone(), KernelFunction::Rbf { gamma: 0.5 });
+    let dense = DenseGram::materialize(&nc);
+    let reference = solve_reference(&dense, small.labels(), 100.0, 200_000, 1e-14);
+    let cfg = TrainConfig::new(100.0, 0.5);
+    let (_, pa) = train(&small, &cfg.with_solver(SolverChoice::Pasmo));
+    let (_, smo) = train(&small, &cfg.with_solver(SolverChoice::Smo));
+    println!(
+        "## Oracle check (chess-board ℓ=120, C=100)\n\
+         reference objective  = {:.6}\n\
+         SMO objective        = {:.6}\n\
+         PA-SMO objective     = {:.6}\n",
+        reference.objective, smo.objective, pa.objective
+    );
+    let tol = 1e-3 * (1.0 + reference.objective.abs());
+    anyhow::ensure!((smo.objective - reference.objective).abs() < tol, "SMO off oracle");
+    anyhow::ensure!((pa.objective - reference.objective).abs() < tol, "PA-SMO off oracle");
+
+    // ---- (2)+(4) the PJRT layers: train + predict through artifacts ----
+    match PjrtEngine::open_default() {
+        Ok(engine) => {
+            let engine = Rc::new(engine);
+            let ds = Arc::new(chessboard(600, 4, 4));
+            let computer = PjrtRowComputer::new(engine.clone(), ds.clone(), 0.5)?;
+            let t0 = std::time::Instant::now();
+            let (model, res) =
+                train_with_computer(&ds, &TrainConfig::new(1e4, 0.5), Box::new(computer));
+            println!(
+                "## PJRT training path (chess-board ℓ=600)\n\
+                 converged={} iterations={} time={:.3}s SV={}",
+                res.converged,
+                res.iterations,
+                t0.elapsed().as_secs_f64(),
+                res.sv
+            );
+            anyhow::ensure!(res.converged, "PJRT-path training failed to converge");
+
+            // decision artifact vs native decision
+            let queries = chessboard(64, 4, 5);
+            let dec = PjrtDecision::new(
+                engine,
+                &model.support,
+                &model.coef,
+                model.bias,
+                0.5,
+            )?;
+            let via_pjrt = dec.decide(&queries)?;
+            let via_native = decision_values(&model, &queries);
+            // Relative tolerance: with C = 10⁴ the dual coefficients round
+            // to f32 on device, so the error scales with the coef norm.
+            let coef_scale = model.coef.iter().map(|c| c.abs()).fold(1.0f64, f64::max);
+            let max_rel = via_pjrt
+                .iter()
+                .zip(&via_native)
+                .map(|(a, b)| (a - b).abs() / coef_scale.max(1.0 + b.abs()))
+                .fold(0.0f64, f64::max);
+            println!("decision artifact vs native: max relative |Δf| = {max_rel:.2e}\n");
+            anyhow::ensure!(max_rel < 1e-4, "PJRT decision mismatch");
+        }
+        Err(e) => {
+            println!("## PJRT layers skipped ({e}); run `make artifacts`\n");
+        }
+    }
+
+    println!("e2e_benchmark OK");
+    Ok(())
+}

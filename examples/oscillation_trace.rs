@@ -1,0 +1,102 @@
+//! Figure 1: the oscillation cone, in the minimal scenario the paper
+//! draws — a low-dimensional QP where plain SMO zig-zags between two
+//! working-set directions while PA-SMO's planned step cuts through.
+//!
+//! We build a 3-variable problem (two +1 examples, one −1) with strong
+//! second-order cross terms, trace both solvers at full resolution, and
+//! print the α-path plus per-iteration objective so the cone is visible
+//! in the numbers (and pipeable to a plotting tool).
+//!
+//! ```sh
+//! cargo run --release --example oscillation_trace
+//! ```
+
+use pasmo::kernel::matrix::{DenseGram, Gram, RowComputer};
+use pasmo::solver::events::TelemetryConfig;
+use pasmo::solver::pasmo::PasmoSolver;
+use pasmo::solver::smo::{SmoSolver, SolverConfig};
+use pasmo::solver::StepKind;
+
+/// RowComputer over an explicit Gram matrix (the "two working sets"
+/// scenario needs exact control of the cross terms).
+struct ExplicitGram(DenseGram);
+
+impl RowComputer for ExplicitGram {
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+    fn compute_row(&self, i: usize, out: &mut [f32]) {
+        for j in 0..self.0.len() {
+            out[j] = self.0.at(i, j) as f32;
+        }
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.0.at(i, i)
+    }
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.0.at(i, j)
+    }
+}
+
+fn scenario() -> (DenseGram, Vec<i8>, f64) {
+    // Strong positive coupling between the two +1 variables creates the
+    // narrow niveau ellipses of Figure 1; C is large enough that all
+    // steps stay free (the planning regime).
+    let k = DenseGram::from_matrix(
+        3,
+        vec![
+            1.0, 0.85, 0.10, //
+            0.85, 1.0, 0.15, //
+            0.10, 0.15, 1.0,
+        ],
+    );
+    (k, vec![1, 1, -1], 1e6)
+}
+
+fn run(label: &str, pa: bool) -> (u64, Vec<(u64, f64)>, u64) {
+    let (k, labels, c) = scenario();
+    let mut gram = Gram::new(Box::new(ExplicitGram(k)), 1 << 20);
+    let cfg = SolverConfig {
+        eps: 1e-8, // tight accuracy makes the oscillation phase long
+        shrinking: false,
+        telemetry: TelemetryConfig::full(1),
+        ..Default::default()
+    };
+    let res = if pa {
+        PasmoSolver::new(cfg).solve(&labels, c, &mut gram)
+    } else {
+        SmoSolver::new(cfg).solve(&labels, c, &mut gram)
+    };
+    println!(
+        "{label:<8} iterations={:<4} planning={:<3} final f={:.10}",
+        res.iterations, res.telemetry.planning_steps, res.objective
+    );
+    let planning = res.telemetry.planning_steps;
+    (res.iterations, res.telemetry.objective_trace.clone(), planning)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("Figure-1 minimal oscillation scenario (3 variables, ε=1e-8)\n");
+    let (it_smo, trace_smo, _) = run("SMO", false);
+    let (it_pa, trace_pa, planning) = run("PA-SMO", true);
+
+    println!("\niter   f(SMO)            f(PA-SMO)");
+    for t in 0..trace_smo.len().max(trace_pa.len()).min(30) {
+        let fs = trace_smo.get(t).map(|&(_, f)| format!("{f:.12}")).unwrap_or_default();
+        let fp = trace_pa.get(t).map(|&(_, f)| format!("{f:.12}")).unwrap_or_default();
+        println!("{t:>4}   {fs:<16}  {fp:<16}");
+    }
+
+    println!(
+        "\nSMO needed {it_smo} iterations; PA-SMO {it_pa} (with {planning} planned steps)."
+    );
+    anyhow::ensure!(
+        it_pa <= it_smo,
+        "planning should not lose on the oscillation scenario"
+    );
+    // sanity: PA actually planned
+    anyhow::ensure!(planning > 0 || it_pa <= 4, "expected planning steps in the cone");
+    let _ = StepKind::Planning;
+    println!("oscillation_trace OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: train a PA-SMO SVM on the chess-board problem and evaluate.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API end to end: synthetic data → PA-SMO
+//! training (PJRT kernel path when artifacts exist, native fallback) →
+//! prediction → model save/load round trip.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use pasmo::data::synth::chessboard;
+use pasmo::runtime::engine::PjrtEngine;
+use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::svm::predict::accuracy;
+use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+use pasmo::svm::SvmModel;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's hardest benchmark family, at quickstart size.
+    let train_set = Arc::new(chessboard(1000, 4, 1));
+    let test_set = chessboard(2000, 4, 2);
+
+    // Paper hyper-parameters for chess-board: C = 10⁶, γ = 0.5.
+    let cfg = TrainConfig::new(1e6, 0.5).with_solver(SolverChoice::Pasmo);
+
+    // Prefer the AOT/PJRT kernel path (the three-layer deployment shape);
+    // fall back to the native Rust kernel when artifacts are not built.
+    let (model, result) = match PjrtEngine::open_default() {
+        Ok(engine) => {
+            println!("kernel path: PJRT ({} artifacts)", engine.manifest.artifacts.len());
+            let computer = PjrtRowComputer::new(Rc::new(engine), train_set.clone(), 0.5)?;
+            train_with_computer(&train_set, &cfg, Box::new(computer))
+        }
+        Err(e) => {
+            println!("kernel path: native (PJRT unavailable: {e})");
+            train(&train_set, &cfg)
+        }
+    };
+
+    println!(
+        "\ntrained chess-board-1000 with PA-SMO:\n\
+         iterations        = {}\n\
+         planning steps    = {}\n\
+         wall time         = {:.3}s\n\
+         dual objective    = {:.4}\n\
+         KKT gap           = {:.2e} (ε = 10⁻³)\n\
+         support vectors   = {} ({} bounded)",
+        result.iterations,
+        result.telemetry.planning_steps,
+        result.wall_time_s,
+        result.objective,
+        result.gap,
+        result.sv,
+        result.bsv,
+    );
+
+    let train_acc = accuracy(&model, &train_set);
+    let test_acc = accuracy(&model, &test_set);
+    println!("train accuracy    = {train_acc:.4}");
+    println!("test  accuracy    = {test_acc:.4}");
+
+    // Model persistence round trip.
+    let path = std::env::temp_dir().join("pasmo-quickstart-model.json");
+    model.save(&path)?;
+    let reloaded = SvmModel::load(&path)?;
+    assert_eq!(reloaded.n_sv(), model.n_sv());
+    println!("model round-trip  = ok ({} SVs, {})", reloaded.n_sv(), path.display());
+
+    anyhow::ensure!(result.converged, "solver did not converge");
+    anyhow::ensure!(test_acc > 0.9, "unexpectedly poor accuracy {test_acc}");
+    println!("\nquickstart OK");
+    Ok(())
+}

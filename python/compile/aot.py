@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2 graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry in ARTIFACTS plus ``MANIFEST.json``
+describing shapes and argument order, which the Rust runtime reads to pick
+the right artifact for a dataset (smallest D >= d, etc.).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _gram_artifact(q: int, l: int, d: int):
+    """gram_rows entry point at fixed [Q, L, D]; args (xq, x, gamma)."""
+    return {
+        "entry": "gram_rows",
+        "fn": model.gram_rows,
+        "args": [_spec(q, d), _spec(l, d), _spec(1, 1)],
+        "arg_names": ["xq", "x", "gamma"],
+        "out_shape": [q, l],
+        "q": q,
+        "l": l,
+        "d": d,
+    }
+
+
+def _decision_artifact(q: int, l: int, d: int):
+    """decision_function at fixed [Q, L, D]; args (xq, x, coef, bias, gamma)."""
+    return {
+        "entry": "decision_function",
+        "fn": model.decision_function,
+        "args": [_spec(q, d), _spec(l, d), _spec(l), _spec(1), _spec(1, 1)],
+        "arg_names": ["xq", "x", "coef", "bias", "gamma"],
+        "out_shape": [q],
+        "q": q,
+        "l": l,
+        "d": d,
+    }
+
+
+# The artifact set the Rust runtime expects. L tiles are chunked by the
+# caller, so a single L per entry point suffices; D variants cover the
+# suite's feature counts (zero-padding D is exact for RBF).
+ARTIFACTS = {
+    "gram_q4_l2048_d64": _gram_artifact(4, 2048, 64),
+    "gram_q4_l2048_d256": _gram_artifact(4, 2048, 256),
+    "gram_q16_l2048_d64": _gram_artifact(16, 2048, 64),
+    "decision_q16_l2048_d64": _decision_artifact(16, 2048, 64),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "artifacts": {}}
+    for name, art in ARTIFACTS.items():
+        lowered = jax.jit(art["fn"]).lower(*art["args"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "entry": art["entry"],
+            "file": f"{name}.hlo.txt",
+            "arg_names": art["arg_names"],
+            "arg_shapes": [list(s.shape) for s in art["args"]],
+            "out_shape": art["out_shape"],
+            "q": art["q"],
+            "l": art["l"],
+            "d": art["d"],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'MANIFEST.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 — Pallas kernel: fused RBF decision function.
+
+Computes ``f[q] = Σ_l coef[l] · exp(-gamma ||xq[q] - x[l]||²) + bias`` in a
+single kernel: each grid step forms one ``[Q, TL]`` Gram tile (MXU matmul
+for the cross term, exactly as in rbf_gram.py) and immediately contracts
+it with the coefficient tile — the ``[Q, L]`` Gram block is never
+materialized in HBM. The output block maps every grid step to the same
+``[Q]`` accumulator (TPU grid steps are sequential, so `+=` is sound; this
+is the canonical Pallas reduction idiom).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_gram import DEFAULT_TILE_L
+
+
+def _decision_kernel(gamma_ref, xq_ref, x_ref, coef_ref, bias_ref, o_ref):
+    xq = xq_ref[...]  # [Q, D]
+    x = x_ref[...]  # [TL, D]
+    coef = coef_ref[...]  # [TL]
+    gamma = gamma_ref[0, 0]
+    qn = jnp.sum(xq * xq, axis=1, keepdims=True)  # [Q, 1]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # [TL, 1]
+    cross = jax.lax.dot_general(
+        xq,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, TL]
+    k = jnp.exp(-gamma * jnp.maximum(qn + xn.T - 2.0 * cross, 0.0))
+    contrib = k @ coef  # [Q] — fused contraction, Gram tile stays in VMEM
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref) + bias_ref[0]
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        o_ref[...] += contrib
+
+    # program 0 must also add its contribution after initializing
+    @pl.when(pl.program_id(0) == 0)
+    def _first():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("tile_l",))
+def rbf_decision(xq, x, coef, bias, gamma, *, tile_l: int = DEFAULT_TILE_L):
+    """Fused decision values ``[Q]`` for queries ``xq`` against SVs ``x``.
+
+    ``coef`` carries the signed dual coefficients (length L, zero on
+    padded rows); ``bias`` is shape ``[1]``; ``gamma`` a runtime scalar.
+    """
+    q, d = xq.shape
+    l, d2 = x.shape
+    if d != d2:
+        raise ValueError(f"feature dims differ: xq has {d}, x has {d2}")
+    if coef.shape != (l,):
+        raise ValueError(f"coef shape {coef.shape} != ({l},)")
+    tile_l = min(tile_l, l)
+    if l % tile_l != 0:
+        raise ValueError(f"L={l} not a multiple of tile_l={tile_l}")
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (l // tile_l,)
+    return pl.pallas_call(
+        _decision_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # gamma
+            pl.BlockSpec((q, d), lambda i: (0, 0)),  # queries, resident
+            pl.BlockSpec((tile_l, d), lambda i: (i, 0)),  # SV tile
+            pl.BlockSpec((tile_l,), lambda i: (i,)),  # coef tile
+            pl.BlockSpec((1,), lambda i: (0,)),  # bias
+        ],
+        out_specs=pl.BlockSpec((q,), lambda i: (0,)),  # shared accumulator
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(
+        gamma,
+        xq.astype(jnp.float32),
+        x.astype(jnp.float32),
+        jnp.asarray(coef, jnp.float32),
+        jnp.asarray(bias, jnp.float32).reshape(1),
+    )

@@ -1,0 +1,80 @@
+"""L1 — Pallas kernel: tiled RBF Gram block.
+
+Computes ``K[q, l] = exp(-gamma * ||xq[q] - x[l]||^2)`` for a query block
+``xq`` of shape ``[Q, D]`` against a data block ``x`` of shape ``[L, D]``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the squared distance is
+decomposed as ``||a||^2 + ||b||^2 - 2 a.b`` so the dominant cost is the
+``[Q, D] x [D, TL]`` inner-product block, which lands on the MXU systolic
+array. The grid tiles the data dimension L into TL-row tiles; each grid
+step streams one ``[TL, D]`` tile of the dataset HBM->VMEM (expressed via
+BlockSpec), while the query block and its norms stay resident in VMEM.
+
+VMEM footprint per grid step at the AOT default (Q=16, TL=256, D=64):
+    xq 16*64*4 + x 256*64*4 + out 16*256*4  ~= 86 KiB  << 16 MiB VMEM.
+
+``interpret=True`` is mandatory in this environment: real-TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Data-dimension tile. 256 rows keeps the MXU-bound matmul fat while the
+# per-step VMEM footprint stays tiny; it also divides every AOT L choice.
+DEFAULT_TILE_L = 256
+
+
+def _rbf_block_kernel(gamma_ref, xq_ref, x_ref, o_ref):
+    """One grid step: RBF Gram block of the query block vs one data tile."""
+    xq = xq_ref[...]  # [Q, D], VMEM-resident across the grid
+    x = x_ref[...]  # [TL, D], streamed tile
+    gamma = gamma_ref[0, 0]
+    # ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b ; the a.b term is the MXU matmul.
+    qn = jnp.sum(xq * xq, axis=1, keepdims=True)  # [Q, 1]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # [TL, 1]
+    cross = jax.lax.dot_general(
+        xq,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, TL]
+    d2 = qn + xn.T - 2.0 * cross
+    # Zero-clamp: padding and cancellation can push d2 epsilon-negative.
+    o_ref[...] = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_l",))
+def rbf_gram_block(xq, x, gamma, *, tile_l: int = DEFAULT_TILE_L):
+    """RBF Gram block ``[Q, L]`` of ``xq`` [Q, D] vs ``x`` [L, D].
+
+    ``gamma`` is a runtime scalar (shape ``[1, 1]`` f32) so one AOT artifact
+    serves every dataset. ``L`` must be a multiple of ``tile_l``; the Rust
+    caller zero-pads D (exact for RBF) and masks the padded L tail.
+    """
+    q, d = xq.shape
+    l, d2 = x.shape
+    if d != d2:
+        raise ValueError(f"feature dims differ: xq has {d}, x has {d2}")
+    tile_l = min(tile_l, l)
+    if l % tile_l != 0:
+        raise ValueError(f"L={l} not a multiple of tile_l={tile_l}")
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (l // tile_l,)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # gamma, replicated
+            pl.BlockSpec((q, d), lambda i: (0, 0)),  # query block, resident
+            pl.BlockSpec((tile_l, d), lambda i: (i, 0)),  # streamed data tile
+        ],
+        out_specs=pl.BlockSpec((q, tile_l), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, l), jnp.float32),
+        interpret=True,  # CPU-PJRT executable; real TPU would drop this
+    )(gamma, xq.astype(jnp.float32), x.astype(jnp.float32))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the Pallas kernels (the CORE correctness signal).
+
+Everything here is written in the most direct way possible — broadcasted
+squared distances, no tiling, no tricks — so that a mismatch against the
+Pallas kernel unambiguously blames the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_gram_block_ref(xq, x, gamma):
+    """Reference RBF Gram block: ``K[q, l] = exp(-gamma ||xq[q]-x[l]||^2)``."""
+    xq = jnp.asarray(xq, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    diff = xq[:, None, :] - x[None, :, :]  # [Q, L, D]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [Q, L]
+    return jnp.exp(-jnp.float32(gamma) * d2)
+
+
+def decision_function_ref(xq, x, coef, bias, gamma):
+    """Reference SVM decision values: ``f(xq) = K(xq, x) @ coef + bias``."""
+    k = rbf_gram_block_ref(xq, x, gamma)
+    return k @ jnp.asarray(coef, jnp.float32) + jnp.float32(bias)

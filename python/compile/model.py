@@ -1,0 +1,41 @@
+"""L2 — JAX compute graph for the PA-SMO system.
+
+For an SVM-training QP solver the "model" is the kernel-computation graph:
+the solver's per-iteration hot spot is evaluating Gram rows, and prediction
+is a Gram block contracted with the dual coefficients. Both are expressed
+here on top of the L1 Pallas kernel so they lower into a single fused HLO
+module per entry point (see aot.py).
+
+These functions are build-time only; the Rust runtime executes their AOT
+artifacts. Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+from .kernels.decision import rbf_decision
+from .kernels.rbf_gram import rbf_gram_block
+
+
+def gram_rows(xq, x, gamma):
+    """Gram rows for a block of query points: ``[Q, L]``.
+
+    This is what the SMO hot loop asks for: the kernel rows of the current
+    working-set indices (Q=4 artifact) or a batch for warm-up / gradient
+    reconstruction after unshrinking (Q=16 artifact).
+    """
+    return (rbf_gram_block(xq, x, gamma),)
+
+
+def decision_function(xq, x, coef, bias, gamma):
+    """SVM decision values for a query block: ``f(xq) = K(xq, X) coef + b``.
+
+    ``coef`` carries the signed dual variables (alpha in the paper's
+    self-dual convention already includes the label sign); padded tail rows
+    of ``x`` must come with ``coef = 0`` so they drop out exactly.
+
+    Uses the *fused* L1 kernel (kernels/decision.py): the Gram tile is
+    contracted with the coefficient tile inside VMEM, never materializing
+    the [Q, L] block in HBM.
+    """
+    scores = rbf_decision(xq, x, coef.reshape(-1), bias.reshape(1), gamma)
+    return (scores,)

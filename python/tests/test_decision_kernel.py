@@ -1,0 +1,56 @@
+"""Fused decision kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.decision import rbf_decision
+from compile.kernels.ref import decision_function_ref
+
+
+def _data(seed, q, l, d):
+    rng = np.random.default_rng(seed)
+    xq = rng.normal(size=(q, d)).astype(np.float32)
+    x = rng.normal(size=(l, d)).astype(np.float32)
+    coef = rng.normal(size=(l,)).astype(np.float32)
+    return xq, x, coef
+
+
+def test_matches_ref_basic():
+    xq, x, coef = _data(0, 8, 512, 16)
+    got = np.asarray(rbf_decision(xq, x, coef, np.float32(0.75), 0.5))
+    want = np.asarray(decision_function_ref(xq, x, coef, 0.75, 0.5))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_multi_tile_accumulation_is_exact():
+    """The cross-tile accumulator must agree with the single-tile result."""
+    xq, x, coef = _data(1, 4, 512, 8)
+    one_tile = np.asarray(rbf_decision(xq, x, coef, np.float32(0.0), 1.0, tile_l=512))
+    many_tiles = np.asarray(rbf_decision(xq, x, coef, np.float32(0.0), 1.0, tile_l=64))
+    assert_allclose(one_tile, many_tiles, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_coef_gives_bias():
+    xq, x, _ = _data(2, 3, 256, 4)
+    got = np.asarray(rbf_decision(xq, x, np.zeros(256, np.float32), np.float32(2.5), 1.0))
+    assert_allclose(got, np.full(3, 2.5, np.float32), rtol=0, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.integers(1, 12),
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([32, 128]),
+    d=st.integers(1, 24),
+    gamma=st.floats(1e-3, 5.0),
+    bias=st.floats(-3.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(q, tiles, tile, d, gamma, bias, seed):
+    l = tiles * tile
+    xq, x, coef = _data(seed, q, l, d)
+    got = np.asarray(rbf_decision(xq, x, coef, np.float32(bias), gamma, tile_l=tile))
+    want = np.asarray(decision_function_ref(xq, x, coef, bias, gamma))
+    assert got.shape == (q,)
+    assert_allclose(got, want, rtol=1e-3, atol=2e-3)

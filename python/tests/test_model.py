@@ -1,0 +1,59 @@
+"""L2 correctness: model entry points vs reference, shapes, padding rules."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import decision_function_ref, rbf_gram_block_ref
+
+
+def _data(seed, q, l, d):
+    rng = np.random.default_rng(seed)
+    xq = rng.normal(size=(q, d)).astype(np.float32)
+    x = rng.normal(size=(l, d)).astype(np.float32)
+    coef = rng.normal(size=(l,)).astype(np.float32)
+    return xq, x, coef
+
+
+def test_gram_rows_matches_ref():
+    xq, x, _ = _data(0, 4, 512, 16)
+    (k,) = model.gram_rows(xq, x, np.float32(0.25))
+    assert_allclose(np.asarray(k), rbf_gram_block_ref(xq, x, 0.25), rtol=1e-5, atol=1e-6)
+
+
+def test_decision_matches_ref():
+    xq, x, coef = _data(1, 16, 512, 16)
+    bias = np.asarray([0.375], np.float32)
+    (scores,) = model.decision_function(xq, x, coef, bias, np.float32(0.1))
+    want = decision_function_ref(xq, x, coef, 0.375, 0.1)
+    assert_allclose(np.asarray(scores), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_decision_padded_tail_drops_out():
+    """Padded data rows with coef=0 must not change decision values —
+    the contract the Rust runtime relies on when chunking L."""
+    xq, x, coef = _data(2, 8, 256, 8)
+    bias = np.asarray([0.0], np.float32)
+    (s0,) = model.decision_function(xq, x, coef, bias, np.float32(0.5))
+    xpad = np.vstack([x, np.full((256, 8), 7.5, np.float32)])
+    cpad = np.concatenate([coef, np.zeros(256, np.float32)])
+    (s1,) = model.decision_function(xq, xpad, cpad, bias, np.float32(0.5))
+    assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(1, 16),
+    l=st.sampled_from([256, 512]),
+    d=st.integers(1, 32),
+    gamma=st.floats(1e-3, 10.0),
+    bias=st.floats(-5.0, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decision_hypothesis(q, l, d, gamma, bias, seed):
+    xq, x, coef = _data(seed, q, l, d)
+    b = np.asarray([bias], np.float32)
+    (scores,) = model.decision_function(xq, x, coef, b, np.float32(gamma))
+    want = decision_function_ref(xq, x, coef, bias, gamma)
+    assert_allclose(np.asarray(scores), np.asarray(want), rtol=5e-4, atol=1e-4)

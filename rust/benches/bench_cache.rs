@@ -1,0 +1,45 @@
+//! Kernel-cache behaviour (DESIGN.md P2): hit rate and end-to-end solver
+//! time as a function of the cache budget — the paper's §2 claim that
+//! caching + shrinking "result in an enormous speed up".
+
+use std::sync::Arc;
+
+use pasmo::data::synth::chessboard;
+use pasmo::kernel::matrix::Gram;
+use pasmo::kernel::{KernelFunction, NativeRowComputer};
+use pasmo::solver::pasmo::PasmoSolver;
+use pasmo::solver::smo::SolverConfig;
+
+fn main() {
+    println!("==== bench_cache ====");
+    println!("PA-SMO on chess-board-600 (C=1e6) under varying cache budgets\n");
+    let ds = Arc::new(chessboard(600, 4, 1));
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "cache", "time", "iters", "hits", "misses", "hit-rate"
+    );
+    for &budget in &[
+        2 * 600 * 4,          // pathological: the working pair only
+        32 * 600 * 4,         // 32 rows
+        128 * 600 * 4,        // 128 rows
+        600 * 600 * 4,        // full matrix
+        100 * 1024 * 1024usize, // LIBSVM default
+    ] {
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+        let mut gram = Gram::new(Box::new(nc), budget);
+        let cfg = SolverConfig { cache_bytes: budget, ..Default::default() };
+        let res = PasmoSolver::new(cfg).solve(ds.labels(), 1e6, &mut gram);
+        let s = res.cache_stats;
+        println!(
+            "{:>12} {:>9.3}s {:>10} {:>10} {:>10} {:>7.1}%",
+            format!("{}KiB", budget / 1024),
+            res.wall_time_s,
+            res.iterations,
+            s.hits,
+            s.misses,
+            100.0 * s.hit_rate()
+        );
+        assert!(res.converged);
+    }
+    println!("\nexpectation: hit-rate ↑ and time ↓ monotonically with budget");
+}

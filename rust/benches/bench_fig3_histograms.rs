@@ -1,0 +1,22 @@
+//! Regenerates paper Figure 3: histograms of the planning-step size
+//! μ/μ*−1 in the paper's sign(t)·(10^{t²/2}−1) parameterization.
+
+mod common;
+
+fn main() {
+    common::banner("bench_fig3_histograms", "paper Figure 3 (μ/μ*−1 histograms)");
+    let mut opts = common::bench_options();
+    // Figure 3 is about step-size telemetry, not timing: a few
+    // oscillation-prone datasets carry the signal.
+    if opts.datasets.is_empty() && !opts.full {
+        opts.datasets = vec![
+            "chess-board-1000".into(),
+            "banana".into(),
+            "titanic".into(),
+            "ringnorm".into(),
+        ];
+    }
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::fig3(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Figure 4: multiple planning-ahead with the
+//! N ∈ {1,2,3,5,10,20} most recent working sets, runtime normalized to
+//! N = 1.
+
+mod common;
+
+fn main() {
+    common::banner("bench_fig4_multipa", "paper Figure 4 (multi-PA N sweep)");
+    let mut opts = common::bench_options();
+    if opts.datasets.is_empty() && !opts.full {
+        // 6 solver variants × perms: keep the fast set focused on
+        // datasets with runtimes above measurement noise (paper's filter).
+        opts.datasets = vec![
+            "chess-board-1000".into(),
+            "banana".into(),
+            "waveform".into(),
+            "twonorm".into(),
+        ];
+    }
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::fig4(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

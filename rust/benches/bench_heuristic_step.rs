@@ -1,0 +1,17 @@
+//! Regenerates the §7.3 "heretical" experiment: fixed 1.1× over-relaxed
+//! Newton steps vs SMO vs PA-SMO (including the chess-board where the
+//! cheap trick falls behind). Also prints the Figure-2 gain parabola.
+
+mod common;
+
+fn main() {
+    common::banner(
+        "bench_heuristic_step",
+        "paper §7.3 (1.1× over-relaxation) + Figure 2 (gain parabola)",
+    );
+    let opts = common::bench_options();
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::fig2());
+    println!("{}", pasmo::coordinator::experiments::heuristic_step(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,80 @@
+//! Kernel-row throughput: native Rust computer vs the PJRT/AOT artifact
+//! path, across dataset sizes and feature dims (DESIGN.md P1).
+//!
+//! Reports rows/s and effective GFLOP/s (2·ℓ·d flops per row for the dot
+//! products, plus the exp). This is the L1/L3 boundary the perf pass
+//! optimizes.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use pasmo::data::dataset::Dataset;
+use pasmo::kernel::matrix::RowComputer;
+use pasmo::kernel::{KernelFunction, NativeRowComputer};
+use pasmo::runtime::engine::PjrtEngine;
+use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::util::prng::Pcg;
+use pasmo::util::timer::bench;
+
+fn random_ds(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+    }
+    Arc::new(ds)
+}
+
+fn flops(n: usize, d: usize) -> f64 {
+    (n * (2 * d + 4)) as f64 // per full row
+}
+
+fn main() {
+    println!("==== bench_kernel_throughput ====");
+    println!("gram-row evaluation: native Rust vs PJRT artifact (DESIGN.md P1)\n");
+    let engine = PjrtEngine::open_default().ok().map(Rc::new);
+    if engine.is_none() {
+        println!("(PJRT artifacts missing — native only; run `make artifacts`)\n");
+    }
+
+    for &(n, d) in &[(1000usize, 2usize), (4096, 16), (4096, 64), (16384, 64), (8192, 200)] {
+        let ds = random_ds(n, d, 42);
+        let native = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+        let mut out = vec![0f32; n];
+        let mut i = 0usize;
+        let r = bench(&format!("native  l={n:<6} d={d:<4}"), 20, || {
+            i = (i + 17) % n;
+            native.compute_row(i, &mut out);
+            out[0]
+        });
+        println!(
+            "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s",
+            r.line(),
+            1.0 / r.mean_s,
+            flops(n, d) / r.mean_s / 1e9
+        );
+
+        if let Some(engine) = &engine {
+            match PjrtRowComputer::new(engine.clone(), ds.clone(), 0.5) {
+                Ok(pjrt) => {
+                    let mut i = 0usize;
+                    let r = bench(&format!("pjrt    l={n:<6} d={d:<4}"), 10, || {
+                        i = (i + 17) % n;
+                        pjrt.compute_row(i, &mut out);
+                        out[0]
+                    });
+                    println!(
+                        "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s",
+                        r.line(),
+                        1.0 / r.mean_s,
+                        flops(n, d) / r.mean_s / 1e9
+                    );
+                }
+                Err(e) => println!("pjrt    l={n:<6} d={d:<4}: unavailable ({e})"),
+            }
+        }
+        println!();
+    }
+}

@@ -1,0 +1,57 @@
+//! L3 hot-path microbenchmark (perf-pass instrument): per-iteration cost
+//! of SMO vs PA-SMO, and its breakdown sensitivity to ℓ and shrinking.
+//!
+//! The solver's per-iteration work is O(active): one WSS scan, one
+//! stopping scan, one gradient update over two rows. This bench reports
+//! iterations/second so perf regressions in the loop show up directly.
+
+use std::sync::Arc;
+
+use pasmo::data::synth::{chessboard, surrogate, SurrogateSpec};
+use pasmo::kernel::matrix::Gram;
+use pasmo::kernel::{KernelFunction, NativeRowComputer};
+use pasmo::solver::pasmo::PasmoSolver;
+use pasmo::solver::smo::{SmoSolver, SolverConfig};
+
+fn run(name: &str, ds: &Arc<pasmo::data::Dataset>, c: f64, gamma: f64, pa: bool, shrink: bool) {
+    let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
+    let mut gram = Gram::new(Box::new(nc), 100 << 20);
+    let cfg = SolverConfig { shrinking: shrink, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let res = if pa {
+        PasmoSolver::new(cfg).solve(ds.labels(), c, &mut gram)
+    } else {
+        SmoSolver::new(cfg).solve(ds.labels(), c, &mut gram)
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<44} {:>8} iters  {:>8.3}s  {:>10.0} iters/s  (planning {})",
+        res.iterations,
+        dt,
+        res.iterations as f64 / dt,
+        res.telemetry.planning_steps
+    );
+}
+
+fn main() {
+    println!("==== bench_solver_hotpath ====");
+    println!("per-iteration solver cost (native kernel path)\n");
+    // ℓ=3000 takes minutes and is noise-prone on shared machines; opt in.
+    let sizes: &[usize] = if std::env::var("PASMO_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+    {
+        &[500, 1500, 3000]
+    } else {
+        &[500, 1500]
+    };
+    for &n in sizes {
+        let cb = Arc::new(chessboard(n, 4, 1));
+        run(&format!("SMO     chess-board ℓ={n} shrink=on"), &cb, 1e6, 0.5, false, true);
+        run(&format!("PA-SMO  chess-board ℓ={n} shrink=on"), &cb, 1e6, 0.5, true, true);
+        run(&format!("PA-SMO  chess-board ℓ={n} shrink=off"), &cb, 1e6, 0.5, true, false);
+    }
+    // a dense-SV problem (most variables active: worst case for the scans)
+    let spec = SurrogateSpec { dim: 10, label_noise: 0.25, separation: 1.0, ..Default::default() };
+    let hard = Arc::new(surrogate(1500, &spec, 3));
+    run("SMO     noisy-surrogate ℓ=1500", &hard, 1.0, 0.05, false, true);
+    run("PA-SMO  noisy-surrogate ℓ=1500", &hard, 1.0, 0.05, true, true);
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table 1: dataset statistics (SV / BSV) under the
+//! paper's hyper-parameters.
+
+mod common;
+
+fn main() {
+    common::banner("bench_table1", "paper Table 1 (datasets, C, γ, SV, BSV)");
+    let opts = common::bench_options();
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::table1(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Regenerates paper Table 2 — the headline comparison: mean runtime and
+//! iteration count of SMO vs PA-SMO over paired permutations with
+//! Wilcoxon significance markers.
+
+mod common;
+
+fn main() {
+    common::banner(
+        "bench_table2",
+        "paper Table 2 (SMO vs PA-SMO time + iterations, Wilcoxon '>')",
+    );
+    let opts = common::bench_options();
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::table2(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Regenerates the §7.2 ablation: modified working-set selection without
+//! planning vs plain SMO vs full PA-SMO — shows the speed-up comes from
+//! planning, not from the WSS change.
+
+mod common;
+
+fn main() {
+    common::banner("bench_wss_ablation", "paper §7.2 (WSS-only vs planning)");
+    let opts = common::bench_options();
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::wss_ablation(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

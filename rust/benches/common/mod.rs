@@ -1,0 +1,35 @@
+//! Shared options for the bench targets.
+//!
+//! Every bench regenerates one paper table/figure at a CI-friendly scale
+//! by default. Environment knobs:
+//! * `PASMO_BENCH_FULL=1` — paper-scale suite (22 datasets, paper ℓ).
+//! * `PASMO_BENCH_PERMS=N` — permutations per dataset (default 5).
+//! * `PASMO_BENCH_MAXLEN=N` — ℓ cap in fast mode (default 600).
+
+use pasmo::coordinator::experiments::ExpOptions;
+
+pub fn bench_options() -> ExpOptions {
+    let envn = |k: &str, d: usize| -> usize {
+        std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    let mut o = ExpOptions::default();
+    o.full = std::env::var("PASMO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    o.perms = envn("PASMO_BENCH_PERMS", 5);
+    o.max_len = envn("PASMO_BENCH_MAXLEN", 600);
+    o.scale = 0.2;
+    o
+}
+
+/// Print the standard bench banner.
+pub fn banner(name: &str, what: &str) {
+    println!("==== {name} ====");
+    println!("regenerates: {what}");
+    let o = bench_options();
+    println!(
+        "mode: {} | perms={} max_len={} scale={}\n",
+        if o.full { "FULL (paper scale)" } else { "fast (set PASMO_BENCH_FULL=1 for paper scale)" },
+        o.perms,
+        o.max_len,
+        o.scale
+    );
+}

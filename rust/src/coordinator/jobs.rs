@@ -1,0 +1,135 @@
+//! Permutation fan-out: run a set of solver configurations over N random
+//! permutations of a dataset, in parallel across OS threads.
+//!
+//! This mirrors the paper's §7 protocol: "we created 100 random
+//! permutations of each dataset … all measurements reported are mean
+//! values over these 100 permutations" — the permutation changes the
+//! solver's tie-breaking in the first iteration and hence the whole
+//! optimization path, so the *same* permutation is fed to every solver
+//! (the measurements are paired for the Wilcoxon test).
+
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Dataset;
+use crate::data::splits::permutations;
+use crate::svm::train::{train, TrainConfig};
+
+/// One (solver, permutation) measurement.
+#[derive(Debug, Clone)]
+pub struct RunMeasurement {
+    pub time_s: f64,
+    pub iterations: u64,
+    pub objective: f64,
+    pub converged: bool,
+    pub sv: usize,
+    pub bsv: usize,
+    pub planning_steps: u64,
+}
+
+/// Run `configs` over `perms` permutations of `base`. Returns
+/// `results[config][perm]` (paired across configs by permutation index).
+pub fn run_permutations(
+    base: &Arc<Dataset>,
+    configs: &[TrainConfig],
+    perms: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<Vec<RunMeasurement>> {
+    let perm_list = permutations(base.len(), perms, seed);
+    let results: Vec<Mutex<Vec<Option<RunMeasurement>>>> = configs
+        .iter()
+        .map(|_| Mutex::new(vec![None; perms]))
+        .collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let workers = threads
+        .max(1)
+        .min(perms.max(1))
+        .min(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let p = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if p >= perms {
+                    break;
+                }
+                let permuted = Arc::new(base.permuted(&perm_list[p]));
+                for (ci, cfg) in configs.iter().enumerate() {
+                    let (_, res) = train(&permuted, cfg);
+                    let m = RunMeasurement {
+                        time_s: res.wall_time_s,
+                        iterations: res.iterations,
+                        objective: res.objective,
+                        converged: res.converged,
+                        sv: res.sv,
+                        bsv: res.bsv,
+                        planning_steps: res.telemetry.planning_steps,
+                    };
+                    results[ci].lock().unwrap()[p] = Some(m);
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|r| r.expect("permutation run missing"))
+                .collect()
+        })
+        .collect()
+}
+
+/// Column extractors for paired statistics.
+pub fn times(ms: &[RunMeasurement]) -> Vec<f64> {
+    ms.iter().map(|m| m.time_s).collect()
+}
+pub fn iterations(ms: &[RunMeasurement]) -> Vec<f64> {
+    ms.iter().map(|m| m.iterations as f64).collect()
+}
+pub fn objectives(ms: &[RunMeasurement]) -> Vec<f64> {
+    ms.iter().map(|m| m.objective).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::train::SolverChoice;
+
+    #[test]
+    fn paired_runs_cover_all_permutations_and_converge() {
+        let ds = Arc::new(chessboard(120, 4, 1));
+        let base = TrainConfig::new(10.0, 0.5);
+        let cfgs = [
+            base.with_solver(SolverChoice::Smo),
+            base.with_solver(SolverChoice::Pasmo),
+        ];
+        let res = run_permutations(&ds, &cfgs, 4, 7, 2);
+        assert_eq!(res.len(), 2);
+        for per_cfg in &res {
+            assert_eq!(per_cfg.len(), 4);
+            assert!(per_cfg.iter().all(|m| m.converged));
+        }
+        // paired: same permutation => same problem => close objectives
+        for p in 0..4 {
+            let rel = (res[0][p].objective - res[1][p].objective).abs()
+                / (1.0 + res[0][p].objective.abs());
+            assert!(rel < 5e-3, "perm {p}: {rel}");
+        }
+    }
+
+    #[test]
+    fn single_thread_and_multi_thread_agree_on_iterations() {
+        let ds = Arc::new(chessboard(100, 4, 2));
+        let cfgs = [TrainConfig::new(10.0, 0.5).with_solver(SolverChoice::Smo)];
+        let a = run_permutations(&ds, &cfgs, 3, 5, 1);
+        let b = run_permutations(&ds, &cfgs, 3, 5, 3);
+        let ia: Vec<u64> = a[0].iter().map(|m| m.iterations).collect();
+        let ib: Vec<u64> = b[0].iter().map(|m| m.iterations).collect();
+        assert_eq!(ia, ib, "determinism across thread counts");
+    }
+}

@@ -1,0 +1,4 @@
+//! Experiment coordinator: permutation fan-out and per-table/figure drivers.
+pub mod jobs;
+pub mod report;
+pub mod experiments;

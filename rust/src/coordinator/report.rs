@@ -1,0 +1,64 @@
+//! Report sink: print experiment sections and append them to a file.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Collects report sections, mirroring them to stdout.
+pub struct Report {
+    sections: Vec<String>,
+    quiet: bool,
+}
+
+impl Report {
+    pub fn new(quiet: bool) -> Report {
+        Report { sections: Vec::new(), quiet }
+    }
+
+    /// Add a section (echoed to stdout unless quiet).
+    pub fn section(&mut self, text: impl Into<String>) {
+        let text = text.into();
+        if !self.quiet {
+            println!("{text}");
+        }
+        self.sections.push(text);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+
+    /// Concatenated report.
+    pub fn render(&self) -> String {
+        self.sections.join("\n\n")
+    }
+
+    /// Write (overwrite) the report to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(self.render().as_bytes())?;
+        f.write_all(b"\n")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_and_saves() {
+        let mut r = Report::new(true);
+        assert!(r.is_empty());
+        r.section("## A\ndata");
+        r.section("## B");
+        assert_eq!(r.render(), "## A\ndata\n\n## B");
+        let path = std::env::temp_dir().join("pasmo-report-test.md");
+        r.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("## B"));
+        std::fs::remove_file(&path).ok();
+    }
+}

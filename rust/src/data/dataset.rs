@@ -1,0 +1,175 @@
+//! Dense binary-classification dataset.
+//!
+//! SMO's hot path is full-row kernel evaluation, so features are stored
+//! dense row-major f32 (the layout both the native SIMD-friendly path and
+//! the PJRT artifacts consume). Labels are ±1.
+
+/// A dense binary-classification dataset: `len` rows of `dim` f32 features
+/// plus ±1 labels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    dim: usize,
+    /// Row-major `[len, dim]`.
+    features: Vec<f32>,
+    labels: Vec<i8>,
+}
+
+impl Dataset {
+    /// Build from row-major features and ±1 labels.
+    pub fn new(dim: usize, features: Vec<f32>, labels: Vec<i8>) -> Dataset {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(features.len(), labels.len() * dim, "features/labels mismatch");
+        assert!(
+            labels.iter().all(|&y| y == 1 || y == -1),
+            "labels must be +/-1"
+        );
+        Dataset { dim, features, labels }
+    }
+
+    /// Empty dataset with a fixed feature dimension.
+    pub fn with_dim(dim: usize) -> Dataset {
+        Dataset { dim, features: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Append one example.
+    pub fn push(&mut self, x: &[f32], y: i8) {
+        assert_eq!(x.len(), self.dim);
+        assert!(y == 1 || y == -1);
+        self.features.extend_from_slice(x);
+        self.labels.push(y);
+    }
+
+    /// Number of examples ℓ.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Feature dimension d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Feature row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Label of example `i` (±1).
+    #[inline]
+    pub fn label(&self, i: usize) -> i8 {
+        self.labels[i]
+    }
+
+    /// All labels.
+    pub fn labels(&self) -> &[i8] {
+        &self.labels
+    }
+
+    /// Raw row-major feature buffer.
+    pub fn features(&self) -> &[f32] {
+        &self.features
+    }
+
+    /// Counts of (positive, negative) labels.
+    pub fn class_counts(&self) -> (usize, usize) {
+        let pos = self.labels.iter().filter(|&&y| y == 1).count();
+        (pos, self.labels.len() - pos)
+    }
+
+    /// New dataset with rows reordered by `perm` (perm[i] = source index).
+    pub fn permuted(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.len());
+        let mut out = Dataset::with_dim(self.dim);
+        out.features.reserve(self.features.len());
+        out.labels.reserve(self.labels.len());
+        for &src in perm {
+            out.features.extend_from_slice(self.row(src));
+            out.labels.push(self.labels[src]);
+        }
+        out
+    }
+
+    /// Subset by index list (used by CV splits).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::with_dim(self.dim);
+        for &i in idx {
+            out.push(self.row(i), self.labels[i]);
+        }
+        out
+    }
+
+    /// Squared Euclidean distance between rows i and j (f64 accumulate).
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f64;
+        for k in 0..self.dim {
+            let d = (a[k] - b[k]) as f64;
+            s += d * d;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0], vec![1, -1, 1])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let d = toy();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.row(1), &[1.0, 0.0]);
+        assert_eq!(d.label(1), -1);
+        assert_eq!(d.class_counts(), (2, 1));
+    }
+
+    #[test]
+    fn sqdist_matches_hand_computation() {
+        let d = toy();
+        assert_eq!(d.sqdist(0, 1), 1.0);
+        assert_eq!(d.sqdist(0, 2), 4.0);
+        assert_eq!(d.sqdist(1, 2), 5.0);
+        assert_eq!(d.sqdist(2, 2), 0.0);
+    }
+
+    #[test]
+    fn permuted_reorders_rows_and_labels() {
+        let d = toy();
+        let p = d.permuted(&[2, 0, 1]);
+        assert_eq!(p.row(0), d.row(2));
+        assert_eq!(p.label(0), d.label(2));
+        assert_eq!(p.row(2), d.row(1));
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let d = toy();
+        let s = d.subset(&[0, 2]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(1), d.row(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be")]
+    fn rejects_bad_labels() {
+        Dataset::new(1, vec![0.0], vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn rejects_shape_mismatch() {
+        Dataset::new(2, vec![0.0; 5], vec![1, -1]);
+    }
+}

@@ -1,0 +1,182 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! Format: one example per line, `<label> <index>:<value> ...` with
+//! 1-based, strictly increasing indices. We densify on read (the solver
+//! and the PJRT artifacts are dense); `dim` is the max index seen unless
+//! an explicit dimension is forced (to align train/test files).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+
+/// One parsed sparse example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseExample {
+    pub label: i8,
+    /// (0-based index, value), strictly increasing by index.
+    pub entries: Vec<(usize, f32)>,
+}
+
+/// Parse one LIBSVM line. Accepts labels `+1/-1/1/-1.0` etc. (sign only).
+pub fn parse_line(line: &str) -> Result<SparseExample> {
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().context("empty line")?;
+    let label_val: f64 = label_tok
+        .parse()
+        .with_context(|| format!("bad label {label_tok:?}"))?;
+    let label = if label_val > 0.0 {
+        1
+    } else if label_val < 0.0 {
+        -1
+    } else {
+        bail!("label must be nonzero (+1/-1), got {label_tok:?}");
+    };
+    let mut entries = Vec::new();
+    let mut last = 0usize; // 1-based last index
+    for tok in parts {
+        if tok.starts_with('#') {
+            break; // trailing comment
+        }
+        let (idx, val) = tok
+            .split_once(':')
+            .with_context(|| format!("bad feature token {tok:?}"))?;
+        let idx: usize = idx.parse().with_context(|| format!("bad index {idx:?}"))?;
+        if idx == 0 {
+            bail!("indices are 1-based, got 0");
+        }
+        if idx <= last {
+            bail!("indices must be strictly increasing ({last} then {idx})");
+        }
+        last = idx;
+        let val: f32 = val.parse().with_context(|| format!("bad value {val:?}"))?;
+        entries.push((idx - 1, val));
+    }
+    Ok(SparseExample { label, entries })
+}
+
+/// Read a LIBSVM file into a dense [`Dataset`]. `force_dim` overrides the
+/// inferred dimension (must be >= max index).
+pub fn read(path: &Path, force_dim: Option<usize>) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_from(std::io::BufReader::new(file), force_dim)
+}
+
+/// Read from any buffered reader (unit-testable without touching disk).
+pub fn read_from<R: BufRead>(reader: R, force_dim: Option<usize>) -> Result<Dataset> {
+    let mut examples = Vec::new();
+    let mut max_dim = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let ex = parse_line(trimmed)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        if let Some((idx, _)) = ex.entries.last() {
+            max_dim = max_dim.max(idx + 1);
+        }
+        examples.push(ex);
+    }
+    let dim = match force_dim {
+        Some(d) => {
+            if d < max_dim {
+                bail!("force_dim {d} < max feature index {max_dim}");
+            }
+            d
+        }
+        None => max_dim.max(1),
+    };
+    let mut ds = Dataset::with_dim(dim);
+    let mut row = vec![0f32; dim];
+    for ex in &examples {
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for &(i, v) in &ex.entries {
+            row[i] = v;
+        }
+        ds.push(&row, ex.label);
+    }
+    Ok(ds)
+}
+
+/// Write a dataset in LIBSVM format (zero entries skipped).
+pub fn write(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.len() {
+        write!(w, "{}", if ds.label(i) > 0 { "+1" } else { "-1" })?;
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_lines() {
+        let ex = parse_line("+1 1:0.5 3:2 7:-1.25").unwrap();
+        assert_eq!(ex.label, 1);
+        assert_eq!(ex.entries, vec![(0, 0.5), (2, 2.0), (6, -1.25)]);
+        let ex = parse_line("-1.0 2:1e-3").unwrap();
+        assert_eq!(ex.label, -1);
+        assert_eq!(ex.entries, vec![(1, 1e-3)]);
+    }
+
+    #[test]
+    fn label_only_line_is_valid() {
+        let ex = parse_line("+1").unwrap();
+        assert!(ex.entries.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_line("0 1:2").is_err()); // zero label
+        assert!(parse_line("+1 0:2").is_err()); // 0-based index
+        assert!(parse_line("+1 2:1 2:3").is_err()); // non-increasing
+        assert!(parse_line("+1 a:b").is_err());
+        assert!(parse_line("").is_err());
+    }
+
+    #[test]
+    fn read_densifies_and_infers_dim() {
+        let text = "+1 1:1 3:3\n-1 2:2\n\n# comment\n+1 1:9\n";
+        let ds = read_from(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.row(0), &[1.0, 0.0, 3.0]);
+        assert_eq!(ds.row(1), &[0.0, 2.0, 0.0]);
+        assert_eq!(ds.labels(), &[1, -1, 1]);
+    }
+
+    #[test]
+    fn force_dim_pads_and_validates() {
+        let ds = read_from(Cursor::new("+1 1:1\n"), Some(5)).unwrap();
+        assert_eq!(ds.dim(), 5);
+        assert!(read_from(Cursor::new("+1 9:1\n"), Some(3)).is_err());
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let dir = std::env::temp_dir().join("pasmo-libsvm-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.libsvm");
+        let ds = Dataset::new(3, vec![1.0, 0.0, 2.5, 0.0, 0.0, 0.0], vec![1, -1]);
+        write(&ds, &path).unwrap();
+        let rt = read(&path, Some(3)).unwrap();
+        assert_eq!(ds, rt);
+        std::fs::remove_file(&path).ok();
+    }
+}

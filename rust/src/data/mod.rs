@@ -1,0 +1,13 @@
+//! Dataset substrate: dense dataset type, LIBSVM-format IO, feature
+//! scaling, synthetic generators for the paper's 22-dataset suite, and
+//! permutation / cross-validation splits.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod regression;
+pub mod scale;
+pub mod splits;
+pub mod suite;
+pub mod synth;
+
+pub use dataset::Dataset;

@@ -1,0 +1,116 @@
+//! Dense regression dataset + synthetic generators (substrate for the
+//! ε-SVR extension, `svm::svr`).
+
+use crate::util::prng::Pcg;
+
+/// A dense regression dataset: rows of f32 features with f64 targets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegressionDataset {
+    dim: usize,
+    features: Vec<f32>,
+    targets: Vec<f64>,
+}
+
+impl RegressionDataset {
+    pub fn with_dim(dim: usize) -> RegressionDataset {
+        assert!(dim > 0);
+        RegressionDataset { dim, features: Vec::new(), targets: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: &[f32], y: f64) {
+        assert_eq!(x.len(), self.dim);
+        self.features.extend_from_slice(x);
+        self.targets.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn target(&self, i: usize) -> f64 {
+        self.targets[i]
+    }
+
+    pub fn targets(&self) -> &[f64] {
+        &self.targets
+    }
+}
+
+/// The classic `sinc` regression benchmark: `y = sin(x)/x + noise` on
+/// `[-10, 10]` (1-D).
+pub fn sinc(n: usize, noise_sd: f64, seed: u64) -> RegressionDataset {
+    let mut rng = Pcg::new(seed);
+    let mut ds = RegressionDataset::with_dim(1);
+    for _ in 0..n {
+        let x = rng.range(-10.0, 10.0);
+        let clean = if x.abs() < 1e-9 { 1.0 } else { x.sin() / x };
+        ds.push(&[x as f32], clean + rng.normal() * noise_sd);
+    }
+    ds
+}
+
+/// A noisy linear target in `d` dimensions: `y = w·x + b + noise`.
+pub fn linear_target(n: usize, d: usize, noise_sd: f64, seed: u64) -> RegressionDataset {
+    let mut rng = Pcg::new(seed);
+    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let b = rng.normal();
+    let mut ds = RegressionDataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        let mut y = b;
+        for (k, v) in row.iter_mut().enumerate() {
+            *v = rng.normal() as f32;
+            y += w[k] * *v as f64;
+        }
+        ds.push(&row, y + rng.normal() * noise_sd);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sinc_targets_follow_the_function() {
+        let ds = sinc(200, 0.0, 1);
+        for i in 0..ds.len() {
+            let x = ds.row(i)[0] as f64;
+            let want = if x.abs() < 1e-9 { 1.0 } else { x.sin() / x };
+            assert!((ds.target(i) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn noise_increases_target_variance() {
+        let clean = sinc(2000, 0.0, 2);
+        let noisy = sinc(2000, 0.5, 2);
+        let var = |ds: &RegressionDataset| {
+            let m = ds.targets().iter().sum::<f64>() / ds.len() as f64;
+            ds.targets().iter().map(|t| (t - m).powi(2)).sum::<f64>() / ds.len() as f64
+        };
+        assert!(var(&noisy) > var(&clean) + 0.1);
+    }
+
+    #[test]
+    fn linear_target_shapes() {
+        let ds = linear_target(50, 3, 0.1, 3);
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.row(10).len(), 3);
+    }
+}

@@ -1,0 +1,147 @@
+//! Feature scaling to `[-1, 1]` or zero-mean/unit-variance.
+//!
+//! The paper's benchmarks (following Rätsch et al.) are normalized before
+//! training; RBF-kernel SVMs are scale-sensitive, so generators and
+//! LIBSVM-loaded data go through one of these before solving.
+
+use super::dataset::Dataset;
+
+/// Per-feature affine transform `x' = (x - shift) * factor`.
+#[derive(Debug, Clone)]
+pub struct Scaler {
+    shift: Vec<f32>,
+    factor: Vec<f32>,
+}
+
+impl Scaler {
+    /// Fit a min-max scaler mapping each feature to `[-1, 1]`.
+    /// Constant features map to 0.
+    pub fn fit_minmax(ds: &Dataset) -> Scaler {
+        let d = ds.dim();
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..ds.len() {
+            for (k, &v) in ds.row(i).iter().enumerate() {
+                lo[k] = lo[k].min(v);
+                hi[k] = hi[k].max(v);
+            }
+        }
+        let mut shift = vec![0f32; d];
+        let mut factor = vec![0f32; d];
+        for k in 0..d {
+            if hi[k] > lo[k] {
+                shift[k] = (hi[k] + lo[k]) / 2.0;
+                factor[k] = 2.0 / (hi[k] - lo[k]);
+            } // else constant: shift=lo, factor=0 -> maps to 0
+            if hi[k] == lo[k] {
+                shift[k] = lo[k];
+            }
+        }
+        Scaler { shift, factor }
+    }
+
+    /// Fit a standardizer (zero mean, unit variance; constant features -> 0).
+    pub fn fit_standard(ds: &Dataset) -> Scaler {
+        let d = ds.dim();
+        let n = ds.len().max(1) as f64;
+        let mut mean = vec![0f64; d];
+        for i in 0..ds.len() {
+            for (k, &v) in ds.row(i).iter().enumerate() {
+                mean[k] += v as f64;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n);
+        let mut var = vec![0f64; d];
+        for i in 0..ds.len() {
+            for (k, &v) in ds.row(i).iter().enumerate() {
+                let dlt = v as f64 - mean[k];
+                var[k] += dlt * dlt;
+            }
+        }
+        let shift: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+        let factor: Vec<f32> = var
+            .iter()
+            .map(|&v| {
+                let sd = (v / n).sqrt();
+                if sd > 1e-12 {
+                    (1.0 / sd) as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Scaler { shift, factor }
+    }
+
+    /// Apply to a dataset, producing a new one.
+    pub fn apply(&self, ds: &Dataset) -> Dataset {
+        let mut out = Dataset::with_dim(ds.dim());
+        let mut row = vec![0f32; ds.dim()];
+        for i in 0..ds.len() {
+            for (k, &v) in ds.row(i).iter().enumerate() {
+                row[k] = (v - self.shift[k]) * self.factor[k];
+            }
+            out.push(&row, ds.label(i));
+        }
+        out
+    }
+
+    /// Apply to a single feature vector in place (for predict-time queries).
+    pub fn apply_row(&self, x: &mut [f32]) {
+        for (k, v) in x.iter_mut().enumerate() {
+            *v = (*v - self.shift[k]) * self.factor[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            2,
+            vec![0.0, 10.0, 2.0, 10.0, 4.0, 10.0, 1.0, 10.0],
+            vec![1, -1, 1, -1],
+        )
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_interval_and_kills_constants() {
+        let ds = toy();
+        let s = Scaler::fit_minmax(&ds);
+        let t = s.apply(&ds);
+        for i in 0..t.len() {
+            assert!(t.row(i)[0] >= -1.0 && t.row(i)[0] <= 1.0);
+            assert_eq!(t.row(i)[1], 0.0); // constant feature
+        }
+        // extremes hit the interval ends
+        assert_eq!(t.row(0)[0], -1.0);
+        assert_eq!(t.row(2)[0], 1.0);
+    }
+
+    #[test]
+    fn standard_gives_zero_mean_unit_var() {
+        let ds = toy();
+        let s = Scaler::fit_standard(&ds);
+        let t = s.apply(&ds);
+        let n = t.len() as f64;
+        let mean: f64 = (0..t.len()).map(|i| t.row(i)[0] as f64).sum::<f64>() / n;
+        let var: f64 = (0..t.len())
+            .map(|i| (t.row(i)[0] as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn apply_row_matches_apply() {
+        let ds = toy();
+        let s = Scaler::fit_minmax(&ds);
+        let t = s.apply(&ds);
+        let mut row = ds.row(3).to_vec();
+        s.apply_row(&mut row);
+        assert_eq!(row.as_slice(), t.row(3));
+    }
+}

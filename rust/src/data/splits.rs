@@ -1,0 +1,114 @@
+//! Permutations and k-fold cross-validation splits.
+//!
+//! The paper's Table 2 averages over 100 random permutations of each
+//! dataset (the permutation changes LIBSVM's first-iteration tie-breaking
+//! and hence the whole optimization path); grid search uses k-fold CV.
+
+use crate::util::prng::Pcg;
+
+/// `count` random permutations of `0..n`, deterministically derived from
+/// `seed` (permutation p uses stream `seed ⊕ p`).
+pub fn permutations(n: usize, count: usize, seed: u64) -> Vec<Vec<usize>> {
+    (0..count)
+        .map(|p| Pcg::new(seed ^ (p as u64).wrapping_mul(0xA24BAED4963EE407)).permutation(n))
+        .collect()
+}
+
+/// k-fold split: returns `k` (train_idx, test_idx) pairs covering `0..n`,
+/// shuffled by `seed`. Folds differ in size by at most one.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n, "need 2 <= k <= n");
+    let order = Pcg::new(seed).permutation(n);
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &idx) in order.iter().enumerate() {
+        folds[i % k].push(idx);
+    }
+    (0..k)
+        .map(|f| {
+            let test = folds[f].clone();
+            let train: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| folds[g].iter().copied())
+                .collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Stratified train/test split preserving class balance.
+pub fn train_test_split(
+    labels: &[i8],
+    test_fraction: f64,
+    seed: u64,
+) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let mut rng = Pcg::new(seed);
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for class in [1i8, -1] {
+        let mut idx: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &y)| y == class)
+            .map(|(i, _)| i)
+            .collect();
+        rng.shuffle(&mut idx);
+        let ntest = (idx.len() as f64 * test_fraction).round() as usize;
+        test.extend_from_slice(&idx[..ntest]);
+        train.extend_from_slice(&idx[ntest..]);
+    }
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutations_are_valid_and_distinct() {
+        let ps = permutations(50, 5, 7);
+        assert_eq!(ps.len(), 5);
+        for p in &ps {
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        }
+        assert_ne!(ps[0], ps[1]);
+        // deterministic
+        assert_eq!(ps, permutations(50, 5, 7));
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let folds = kfold(23, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 23];
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 23);
+            for &i in test {
+                seen[i] += 1;
+            }
+            // train and test disjoint
+            for &i in test {
+                assert!(!train.contains(&i));
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each index in exactly one test fold");
+    }
+
+    #[test]
+    fn stratified_split_preserves_balance() {
+        let labels: Vec<i8> = (0..100).map(|i| if i < 30 { 1 } else { -1 }).collect();
+        let (train, test) = train_test_split(&labels, 0.2, 11);
+        assert_eq!(train.len() + test.len(), 100);
+        let tpos = test.iter().filter(|&&i| labels[i] == 1).count();
+        assert_eq!(tpos, 6); // 20% of 30
+        assert_eq!(test.len(), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kfold_rejects_k_larger_than_n() {
+        kfold(3, 5, 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! The paper's 22-dataset benchmark suite (Table 1), backed by exact or
+//! surrogate generators (DESIGN.md §4).
+//!
+//! Every [`DatasetSpec`] carries the paper's (ℓ, C, γ) plus the reported
+//! SV / BSV counts so experiment reports can print paper-vs-measured side
+//! by side. `generate(len, seed)` draws a dataset of any size — the
+//! default experiment scale caps ℓ so the suite finishes in CI time, while
+//! `--full` restores the paper's sizes.
+
+use super::dataset::Dataset;
+use super::synth::{banana, chessboard, ringnorm, surrogate, twonorm, waveform, SurrogateSpec};
+
+/// Which generator backs a dataset.
+#[derive(Debug, Clone)]
+pub enum Generator {
+    Chessboard { board: usize },
+    Twonorm,
+    Ringnorm,
+    Waveform,
+    Banana,
+    Surrogate(SurrogateSpec),
+}
+
+/// One row of the paper's Table 1 plus its generator.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// ℓ in the paper.
+    pub paper_len: usize,
+    /// Regularization parameter C from Table 1.
+    pub c: f64,
+    /// RBF kernel width γ from Table 1.
+    pub gamma: f64,
+    /// Support vectors reported in Table 1 (rounded means).
+    pub paper_sv: usize,
+    /// Bounded support vectors reported in Table 1.
+    pub paper_bsv: usize,
+    pub generator: Generator,
+}
+
+impl DatasetSpec {
+    /// Draw `len` examples (deterministically in `seed`).
+    pub fn generate(&self, len: usize, seed: u64) -> Dataset {
+        match &self.generator {
+            Generator::Chessboard { board } => chessboard(len, *board, seed),
+            Generator::Twonorm => twonorm(len, seed),
+            Generator::Ringnorm => ringnorm(len, seed),
+            Generator::Waveform => waveform(len, seed),
+            Generator::Banana => banana(len, seed),
+            Generator::Surrogate(spec) => surrogate(len, spec, seed),
+        }
+    }
+
+    /// Experiment size: paper ℓ scaled by `scale`, floored at 64.
+    pub fn scaled_len(&self, scale: f64) -> usize {
+        ((self.paper_len as f64 * scale).round() as usize).max(64)
+    }
+}
+
+fn sur(
+    dim: usize,
+    clusters: usize,
+    separation: f64,
+    label_noise: f64,
+    positive_fraction: f64,
+    binary_fraction: f64,
+) -> Generator {
+    Generator::Surrogate(SurrogateSpec {
+        dim,
+        clusters,
+        separation,
+        label_noise,
+        positive_fraction,
+        binary_fraction,
+    })
+}
+
+/// The full 22-dataset suite in the paper's Table 1 order.
+///
+/// Surrogate knobs: `label_noise` is tuned to the paper's BSV fraction
+/// (noisy labels inside the class-overlap region end up at the box bound);
+/// `separation` to the SV fraction; `binary_fraction` marks the game /
+/// categorical datasets.
+pub fn suite() -> Vec<DatasetSpec> {
+    use Generator::*;
+    vec![
+        DatasetSpec { name: "banana", paper_len: 5300, c: 100.0, gamma: 0.25, paper_sv: 1223, paper_bsv: 1199, generator: Banana },
+        DatasetSpec { name: "breast-cancer", paper_len: 277, c: 0.6, gamma: 0.1, paper_sv: 178, paper_bsv: 131, generator: sur(9, 2, 1.2, 0.22, 0.29, 0.0) },
+        DatasetSpec { name: "diabetis", paper_len: 768, c: 0.5, gamma: 0.05, paper_sv: 445, paper_bsv: 414, generator: sur(8, 2, 1.1, 0.25, 0.35, 0.0) },
+        DatasetSpec { name: "flare-solar", paper_len: 1066, c: 1.5, gamma: 0.1, paper_sv: 744, paper_bsv: 709, generator: sur(9, 2, 0.8, 0.32, 0.55, 0.4) },
+        DatasetSpec { name: "german", paper_len: 1000, c: 1.0, gamma: 0.05, paper_sv: 620, paper_bsv: 426, generator: sur(20, 3, 1.2, 0.21, 0.30, 0.3) },
+        DatasetSpec { name: "heart", paper_len: 270, c: 1.0, gamma: 0.005, paper_sv: 158, paper_bsv: 149, generator: sur(13, 2, 1.4, 0.24, 0.44, 0.2) },
+        DatasetSpec { name: "image", paper_len: 2310, c: 100.0, gamma: 0.1, paper_sv: 301, paper_bsv: 84, generator: sur(18, 4, 2.8, 0.015, 0.57, 0.0) },
+        DatasetSpec { name: "ringnorm", paper_len: 7400, c: 2.0, gamma: 0.1, paper_sv: 625, paper_bsv: 86, generator: Ringnorm },
+        DatasetSpec { name: "splice", paper_len: 3175, c: 10.0, gamma: 0.01, paper_sv: 1426, paper_bsv: 7, generator: sur(60, 3, 2.0, 0.0, 0.52, 0.8) },
+        DatasetSpec { name: "thyroid", paper_len: 215, c: 500.0, gamma: 0.05, paper_sv: 17, paper_bsv: 3, generator: sur(5, 1, 4.5, 0.005, 0.3, 0.0) },
+        DatasetSpec { name: "titanic", paper_len: 2201, c: 1000.0, gamma: 0.1, paper_sv: 934, paper_bsv: 915, generator: sur(3, 2, 0.9, 0.3, 0.32, 0.7) },
+        DatasetSpec { name: "twonorm", paper_len: 7400, c: 0.5, gamma: 0.02, paper_sv: 734, paper_bsv: 662, generator: Twonorm },
+        DatasetSpec { name: "waveform", paper_len: 5000, c: 1.0, gamma: 0.05, paper_sv: 1262, paper_bsv: 980, generator: Waveform },
+        DatasetSpec { name: "chess-board-1000", paper_len: 1000, c: 1e6, gamma: 0.5, paper_sv: 41, paper_bsv: 3, generator: Chessboard { board: 4 } },
+        DatasetSpec { name: "chess-board-10000", paper_len: 10_000, c: 1e6, gamma: 0.5, paper_sv: 129, paper_bsv: 84, generator: Chessboard { board: 4 } },
+        DatasetSpec { name: "chess-board-100000", paper_len: 100_000, c: 1e6, gamma: 0.5, paper_sv: 556, paper_bsv: 504, generator: Chessboard { board: 4 } },
+        DatasetSpec { name: "connect-4", paper_len: 61_108, c: 4.5, gamma: 0.2, paper_sv: 13_485, paper_bsv: 5994, generator: sur(42, 6, 1.8, 0.07, 0.66, 1.0) },
+        DatasetSpec { name: "king-rook-vs-king", paper_len: 28_056, c: 10.0, gamma: 0.5, paper_sv: 5815, paper_bsv: 206, generator: sur(6, 8, 2.2, 0.004, 0.5, 0.0) },
+        DatasetSpec { name: "tic-tac-toe", paper_len: 958, c: 200.0, gamma: 0.02, paper_sv: 104, paper_bsv: 0, generator: sur(9, 3, 3.0, 0.0, 0.65, 1.0) },
+        DatasetSpec { name: "internet-ads", paper_len: 2358, c: 10.0, gamma: 0.03, paper_sv: 1350, paper_bsv: 6, generator: sur(200, 3, 2.2, 0.0, 0.14, 0.9) },
+        DatasetSpec { name: "ionosphere", paper_len: 351, c: 3.0, gamma: 0.4, paper_sv: 190, paper_bsv: 8, generator: sur(34, 2, 2.4, 0.01, 0.64, 0.0) },
+        DatasetSpec { name: "spam-database", paper_len: 4601, c: 10.0, gamma: 0.005, paper_sv: 1982, paper_bsv: 583, generator: sur(57, 3, 1.6, 0.06, 0.39, 0.2) },
+    ]
+}
+
+/// Look a dataset up by name.
+pub fn find(name: &str) -> Option<DatasetSpec> {
+    suite().into_iter().find(|d| d.name == name)
+}
+
+/// The fast sub-suite used by default in benches: every generator family,
+/// bounded sizes.
+pub fn fast_suite_names() -> Vec<&'static str> {
+    vec![
+        "banana",
+        "breast-cancer",
+        "diabetis",
+        "heart",
+        "thyroid",
+        "titanic",
+        "twonorm",
+        "ringnorm",
+        "waveform",
+        "tic-tac-toe",
+        "ionosphere",
+        "chess-board-1000",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_all_22_paper_rows() {
+        let s = suite();
+        assert_eq!(s.len(), 22);
+        let names: Vec<&str> = s.iter().map(|d| d.name).collect();
+        for want in [
+            "banana", "splice", "chess-board-100000", "connect-4", "spam-database",
+        ] {
+            assert!(names.contains(&want), "{want} missing");
+        }
+    }
+
+    #[test]
+    fn find_and_generate() {
+        let spec = find("chess-board-1000").unwrap();
+        assert_eq!(spec.paper_len, 1000);
+        assert_eq!(spec.c, 1e6);
+        let ds = spec.generate(128, 7);
+        assert_eq!(ds.len(), 128);
+        assert_eq!(ds.dim(), 2);
+    }
+
+    #[test]
+    fn every_spec_generates_nonempty_balancedish_data() {
+        for spec in suite() {
+            let ds = spec.generate(256, 42);
+            assert_eq!(ds.len(), 256, "{}", spec.name);
+            assert!(ds.dim() >= 2, "{}", spec.name);
+            let (p, n) = ds.class_counts();
+            assert!(p > 10 && n > 10, "{}: degenerate classes {p}/{n}", spec.name);
+        }
+    }
+
+    #[test]
+    fn scaled_len_floors() {
+        let spec = find("thyroid").unwrap();
+        assert_eq!(spec.scaled_len(1.0), 215);
+        assert_eq!(spec.scaled_len(0.001), 64);
+    }
+
+    #[test]
+    fn fast_suite_is_subset() {
+        for name in fast_suite_names() {
+            assert!(find(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Banana-shaped 2-D benchmark (Rätsch suite): two interleaved crescents
+//! with Gaussian noise — the canonical construction used for the
+//! distributed "banana" dataset.
+
+use crate::data::dataset::Dataset;
+use crate::util::prng::Pcg;
+
+/// Two noisy crescents of radius `r`, vertical/horizontal offset chosen so
+/// the arms interleave. `noise` is the isotropic Gaussian sd.
+pub fn banana(n: usize, seed: u64) -> Dataset {
+    banana_with(n, 2.0, 0.6, seed)
+}
+
+/// Parameterized variant (used by tests and ablations).
+pub fn banana_with(n: usize, r: f64, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(2);
+    for _ in 0..n {
+        let y: i8 = if rng.bernoulli(0.5) { 1 } else { -1 };
+        // Angle spans a half-moon; the two moons face each other.
+        let theta = rng.range(0.0, std::f64::consts::PI);
+        let (mut x0, mut x1) = if y == 1 {
+            (r * theta.cos(), r * theta.sin())
+        } else {
+            (r - r * theta.cos(), -r * theta.sin() + r * 0.5)
+        };
+        x0 += rng.normal() * noise;
+        x1 += rng.normal() * noise;
+        ds.push(&[x0 as f32, x1 as f32], y);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_2d_and_roughly_balanced() {
+        let ds = banana(5000, 1);
+        assert_eq!(ds.dim(), 2);
+        let (p, n) = ds.class_counts();
+        assert!((p as f64 / (p + n) as f64 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn classes_overlap_but_are_separated_in_the_mean() {
+        let ds = banana(20_000, 2);
+        let mut mp = [0f64; 2];
+        let mut mn = [0f64; 2];
+        let (p, n) = ds.class_counts();
+        for i in 0..ds.len() {
+            let r = ds.row(i);
+            if ds.label(i) == 1 {
+                mp[0] += r[0] as f64;
+                mp[1] += r[1] as f64;
+            } else {
+                mn[0] += r[0] as f64;
+                mn[1] += r[1] as f64;
+            }
+        }
+        mp.iter_mut().for_each(|v| *v /= p as f64);
+        mn.iter_mut().for_each(|v| *v /= n as f64);
+        let dist = ((mp[0] - mn[0]).powi(2) + (mp[1] - mn[1]).powi(2)).sqrt();
+        assert!(dist > 0.5, "class means too close: {dist}");
+        assert!(dist < 6.0, "classes trivially separated: {dist}");
+    }
+
+    #[test]
+    fn lower_noise_means_tighter_arms() {
+        let tight = banana_with(5000, 2.0, 0.05, 3);
+        let loose = banana_with(5000, 2.0, 1.5, 3);
+        let spread = |ds: &Dataset| {
+            let mut m = [0f64; 2];
+            for i in 0..ds.len() {
+                m[0] += ds.row(i)[0] as f64;
+                m[1] += ds.row(i)[1] as f64;
+            }
+            m.iter_mut().for_each(|v| *v /= ds.len() as f64);
+            (0..ds.len())
+                .map(|i| {
+                    (ds.row(i)[0] as f64 - m[0]).powi(2)
+                        + (ds.row(i)[1] as f64 - m[1]).powi(2)
+                })
+                .sum::<f64>()
+                / ds.len() as f64
+        };
+        assert!(spread(&tight) < spread(&loose));
+    }
+}

@@ -1,0 +1,157 @@
+//! Breiman's classic synthetic benchmarks: twonorm, ringnorm, waveform.
+//!
+//! These three of the paper's Rätsch-suite datasets have published
+//! generative definitions (Breiman 1996, "Bias, variance and arcing
+//! classifiers"), so we reproduce them exactly rather than substituting.
+
+use crate::data::dataset::Dataset;
+use crate::util::prng::Pcg;
+
+/// twonorm: d=20. Class +1 ~ N(+a·1, I), class −1 ~ N(−a·1, I), a = 2/√20.
+pub fn twonorm(n: usize, seed: u64) -> Dataset {
+    let d = 20usize;
+    let a = 2.0 / (d as f64).sqrt();
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        let y: i8 = if rng.bernoulli(0.5) { 1 } else { -1 };
+        let mean = a * y as f64;
+        for v in row.iter_mut() {
+            *v = rng.normal_ms(mean, 1.0) as f32;
+        }
+        ds.push(&row, y);
+    }
+    ds
+}
+
+/// ringnorm: d=20. Class +1 ~ N(0, 4I); class −1 ~ N(a·1, I), a = 1/√20.
+pub fn ringnorm(n: usize, seed: u64) -> Dataset {
+    let d = 20usize;
+    let a = 1.0 / (d as f64).sqrt();
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        let y: i8 = if rng.bernoulli(0.5) { 1 } else { -1 };
+        if y == 1 {
+            for v in row.iter_mut() {
+                *v = rng.normal_ms(0.0, 2.0) as f32;
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v = rng.normal_ms(a, 1.0) as f32;
+            }
+        }
+        ds.push(&row, y);
+    }
+    ds
+}
+
+/// The three triangular base waves of the waveform generator.
+fn wave(h: usize, t: usize) -> f64 {
+    // h1 peaks at t=7, h2 at t=15, h3 at t=11 (classic CART definition,
+    // t = 1..21, triangle of half-width 6).
+    let center = match h {
+        1 => 7.0,
+        2 => 15.0,
+        3 => 11.0,
+        _ => unreachable!(),
+    };
+    (6.0 - (t as f64 - center).abs()).max(0.0)
+}
+
+/// waveform: d=21, binary variant. Class +1 mixes waves (1,2), class −1
+/// mixes waves (1,3); u ~ U[0,1], plus unit Gaussian noise per coordinate.
+pub fn waveform(n: usize, seed: u64) -> Dataset {
+    let d = 21usize;
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        let y: i8 = if rng.bernoulli(0.5) { 1 } else { -1 };
+        let (wa, wb) = if y == 1 { (1, 2) } else { (1, 3) };
+        let u = rng.uniform();
+        for (t, v) in row.iter_mut().enumerate() {
+            let base = u * wave(wa, t + 1) + (1.0 - u) * wave(wb, t + 1);
+            *v = (base + rng.normal()) as f32;
+        }
+        ds.push(&row, y);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class_means(ds: &Dataset, class: i8) -> Vec<f64> {
+        let mut mean = vec![0f64; ds.dim()];
+        let mut count = 0usize;
+        for i in 0..ds.len() {
+            if ds.label(i) == class {
+                count += 1;
+                for (k, &v) in ds.row(i).iter().enumerate() {
+                    mean[k] += v as f64;
+                }
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= count as f64);
+        mean
+    }
+
+    #[test]
+    fn twonorm_class_means_are_symmetric() {
+        let ds = twonorm(20_000, 5);
+        assert_eq!(ds.dim(), 20);
+        let a = 2.0 / 20f64.sqrt();
+        let mp = class_means(&ds, 1);
+        let mn = class_means(&ds, -1);
+        for k in 0..20 {
+            assert!((mp[k] - a).abs() < 0.08, "mp[{k}]={}", mp[k]);
+            assert!((mn[k] + a).abs() < 0.08, "mn[{k}]={}", mn[k]);
+        }
+    }
+
+    #[test]
+    fn ringnorm_class_variances_differ() {
+        let ds = ringnorm(20_000, 6);
+        let var = |class: i8| {
+            let m = class_means(&ds, class);
+            let mut v = 0f64;
+            let mut c = 0usize;
+            for i in 0..ds.len() {
+                if ds.label(i) == class {
+                    c += 1;
+                    for (k, &x) in ds.row(i).iter().enumerate() {
+                        v += (x as f64 - m[k]).powi(2);
+                    }
+                }
+            }
+            v / (c as f64 * 20.0)
+        };
+        let vp = var(1);
+        let vn = var(-1);
+        assert!((vp - 4.0).abs() < 0.3, "vp={vp}");
+        assert!((vn - 1.0).abs() < 0.1, "vn={vn}");
+    }
+
+    #[test]
+    fn waveform_has_triangular_structure() {
+        let ds = waveform(20_000, 7);
+        assert_eq!(ds.dim(), 21);
+        // Coordinate 7 (t=8) is near wave-1 peak; both classes share wave 1,
+        // so the class-mean difference concentrates at coords near t=15 vs 11.
+        let mp = class_means(&ds, 1);
+        let mn = class_means(&ds, -1);
+        assert!(mp[14] > mn[14] + 0.5, "wave-2 peak separates classes");
+        assert!(mn[10] > 0.0 && mp[10] > 0.0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(twonorm(64, 1), twonorm(64, 1));
+        assert_eq!(ringnorm(64, 2), ringnorm(64, 2));
+        assert_eq!(waveform(64, 3), waveform(64, 3));
+    }
+}

@@ -1,0 +1,74 @@
+//! The chess-board problem (Glasmachers & Igel, 2005) — the paper's
+//! hardest benchmark: a k×k checkerboard on `[0, k]²` with XOR labels.
+//!
+//! With γ=0.5 and C=10⁶ nearly all examples become free support vectors
+//! with strong cross-dependencies, producing the oscillatory SMO behaviour
+//! that motivates planning-ahead (paper §3, Table 2 rows chess-board-*).
+
+use crate::data::dataset::Dataset;
+use crate::util::prng::Pcg;
+
+/// Sample `n` points uniformly on `[0, board]²`, labeled by checkerboard
+/// parity. `board` is the number of fields per side (paper uses 4).
+pub fn chessboard(n: usize, board: usize, seed: u64) -> Dataset {
+    assert!(board >= 1);
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(2);
+    for _ in 0..n {
+        let x0 = rng.range(0.0, board as f64);
+        let x1 = rng.range(0.0, board as f64);
+        // Clamp floor to the board (x == board has probability 0 but be safe).
+        let c0 = (x0.floor() as usize).min(board - 1);
+        let c1 = (x1.floor() as usize).min(board - 1);
+        let y = if (c0 + c1) % 2 == 0 { 1 } else { -1 };
+        ds.push(&[x0 as f32, x1 as f32], y);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_follow_checkerboard_parity() {
+        let ds = chessboard(500, 4, 1);
+        for i in 0..ds.len() {
+            let r = ds.row(i);
+            let c0 = (r[0].floor() as usize).min(3);
+            let c1 = (r[1].floor() as usize).min(3);
+            let want = if (c0 + c1) % 2 == 0 { 1 } else { -1 };
+            assert_eq!(ds.label(i), want);
+        }
+    }
+
+    #[test]
+    fn points_are_in_the_board() {
+        let ds = chessboard(300, 4, 2);
+        for i in 0..ds.len() {
+            let r = ds.row(i);
+            assert!(r[0] >= 0.0 && r[0] <= 4.0);
+            assert!(r[1] >= 0.0 && r[1] <= 4.0);
+        }
+    }
+
+    #[test]
+    fn roughly_balanced_classes() {
+        let ds = chessboard(4000, 4, 3);
+        let (pos, neg) = ds.class_counts();
+        let ratio = pos as f64 / (pos + neg) as f64;
+        assert!((ratio - 0.5).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(chessboard(50, 4, 9), chessboard(50, 4, 9));
+        assert_ne!(chessboard(50, 4, 9), chessboard(50, 4, 10));
+    }
+
+    #[test]
+    fn single_field_board_is_one_class() {
+        let ds = chessboard(100, 1, 4);
+        assert!(ds.labels().iter().all(|&y| y == 1));
+    }
+}

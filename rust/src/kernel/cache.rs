@@ -1,0 +1,247 @@
+//! LRU kernel-row cache with a byte budget (the paper §2's caching
+//! technique: "the algorithm needs to recompute only those rows … which
+//! have not been used recently").
+//!
+//! Rows are stored in individually boxed allocations, so map growth or
+//! eviction of *other* rows never moves a row's storage — this is what
+//! makes the pinned two-row borrow in [`super::matrix::Gram`] sound.
+//! Eviction scans for the least-recently-used entry; the scan is O(#rows)
+//! but only runs on a miss, which already paid an O(ℓ·d) row computation.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Identity hasher for `usize` keys (row indices are small and dense —
+/// SipHash is pure overhead on the two lookups per solver iteration).
+#[derive(Default)]
+pub struct IdentityHasher(u64);
+
+impl Hasher for IdentityHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, _: &[u8]) {
+        unreachable!("IdentityHasher is for usize keys only");
+    }
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        // spread the low bits a little so HashMap buckets stay balanced
+        self.0 = (n as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+}
+
+type RowMap = HashMap<usize, Entry, BuildHasherDefault<IdentityHasher>>;
+
+/// Cache statistics (exposed in experiment reports and the cache bench).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    row: Box<[f32]>,
+    last_use: u64,
+}
+
+/// LRU cache of kernel rows keyed by example index.
+pub struct RowCache {
+    entries: RowMap,
+    capacity_rows: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl RowCache {
+    /// Budgeted by bytes; each row costs `row_len * 4` bytes. At least two
+    /// rows are always allowed (the solver needs the working-set pair).
+    pub fn with_budget(bytes: usize, row_len: usize) -> RowCache {
+        let capacity_rows = (bytes / (row_len.max(1) * std::mem::size_of::<f32>())).max(2);
+        RowCache::with_capacity_rows(capacity_rows)
+    }
+
+    /// Capacity in rows (>= 2 enforced).
+    pub fn with_capacity_rows(capacity_rows: usize) -> RowCache {
+        RowCache {
+            entries: RowMap::default(),
+            capacity_rows: capacity_rows.max(2),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Is row `i` resident (does not touch LRU order)?
+    pub fn contains(&self, i: usize) -> bool {
+        self.entries.contains_key(&i)
+    }
+
+    /// Raw pointer + length of a resident row. Used by `Gram::rows_pair`
+    /// to hand out two row borrows; the storage is a stable boxed slice.
+    pub(crate) fn row_ptr(&self, i: usize) -> Option<(*const f32, usize)> {
+        self.entries.get(&i).map(|e| (e.row.as_ptr(), e.row.len()))
+    }
+
+    /// Get row `i`, computing it via `compute` on a miss. `pinned` is never
+    /// evicted by this call (pass the other working-set row).
+    pub fn get_or_compute(
+        &mut self,
+        i: usize,
+        row_len: usize,
+        pinned: Option<usize>,
+        compute: impl FnOnce(&mut [f32]),
+    ) -> &[f32] {
+        self.clock += 1;
+        let clock = self.clock;
+        // Hit path: single hash lookup; the raw-parts round trip works
+        // around the NLL borrow limitation (the storage is a boxed slice,
+        // stable for the lifetime of the entry).
+        if let Some(e) = self.entries.get_mut(&i) {
+            self.stats.hits += 1;
+            e.last_use = clock;
+            let (p, l) = (e.row.as_ptr(), e.row.len());
+            return unsafe { std::slice::from_raw_parts(p, l) };
+        }
+        self.stats.misses += 1;
+        if self.entries.len() >= self.capacity_rows {
+            self.evict_one(pinned, i);
+        }
+        let mut row = vec![0f32; row_len].into_boxed_slice();
+        compute(&mut row);
+        self.entries.insert(i, Entry { row, last_use: clock });
+        &self.entries[&i].row
+    }
+
+    /// Drop the least-recently-used entry, skipping `pinned` and `incoming`.
+    fn evict_one(&mut self, pinned: Option<usize>, incoming: usize) {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(&k, _)| Some(k) != pinned && k != incoming)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(&k, _)| k);
+        if let Some(k) = victim {
+            self.entries.remove(&k);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Invalidate everything (dataset changed).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(v: f32) -> impl FnOnce(&mut [f32]) {
+        move |row| row.iter_mut().for_each(|x| *x = v)
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = RowCache::with_capacity_rows(4);
+        let r = c.get_or_compute(3, 8, None, fill(3.0));
+        assert_eq!(r[0], 3.0);
+        let computed = std::cell::Cell::new(false);
+        let r = c.get_or_compute(3, 8, None, |row| {
+            computed.set(true);
+            row[0] = 99.0;
+        });
+        assert_eq!(r[0], 3.0, "hit must not recompute");
+        assert!(!computed.get());
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = RowCache::with_capacity_rows(2);
+        c.get_or_compute(0, 4, None, fill(0.0));
+        c.get_or_compute(1, 4, None, fill(1.0));
+        c.get_or_compute(0, 4, None, fill(0.0)); // touch 0; 1 is now LRU
+        c.get_or_compute(2, 4, None, fill(2.0)); // evicts 1
+        assert!(c.contains(0));
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_row_survives_eviction() {
+        let mut c = RowCache::with_capacity_rows(2);
+        c.get_or_compute(0, 4, None, fill(0.0));
+        c.get_or_compute(1, 4, None, fill(1.0));
+        // 0 is LRU, but pinned — so 1 must be evicted instead.
+        c.get_or_compute(2, 4, Some(0), fill(2.0));
+        assert!(c.contains(0));
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn byte_budget_translates_to_rows() {
+        let c = RowCache::with_budget(100 * 4 * 10, 100);
+        assert_eq!(c.capacity_rows(), 10);
+        // tiny budget still allows the working pair
+        let c = RowCache::with_budget(1, 1000);
+        assert_eq!(c.capacity_rows(), 2);
+    }
+
+    #[test]
+    fn behaves_like_oracle_map_under_random_access() {
+        use crate::util::prng::Pcg;
+        // Property: a cached read always returns exactly what the oracle
+        // computes for that index, regardless of access pattern.
+        let mut c = RowCache::with_capacity_rows(8);
+        let mut rng = Pcg::new(0xC0FFEE);
+        for _ in 0..2000 {
+            let i = rng.below(32);
+            let row = c.get_or_compute(i, 4, None, move |r| {
+                r.iter_mut().for_each(|x| *x = i as f32 * 10.0)
+            });
+            assert!(row.iter().all(|&x| x == i as f32 * 10.0), "index {i}");
+        }
+        assert!(c.len() <= 8);
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 2000);
+        assert!(s.hits > 0 && s.evictions > 0);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(0, 4, None, fill(0.0));
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.contains(0));
+    }
+}

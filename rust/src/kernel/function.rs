@@ -1,0 +1,124 @@
+//! Mercer kernel functions (LIBSVM-compatible parameterizations).
+//!
+//! The paper's experiments use the Gaussian kernel exclusively; linear,
+//! polynomial and sigmoid are provided for API completeness and to test
+//! the solver on semi-definite / indefinite-direction edge cases.
+
+/// A kernel function `k(x, z)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelFunction {
+    /// `exp(-gamma ||x - z||^2)` — the paper's kernel.
+    Rbf { gamma: f64 },
+    /// `x . z`
+    Linear,
+    /// `(gamma x . z + coef0)^degree`
+    Poly { gamma: f64, coef0: f64, degree: u32 },
+    /// `tanh(gamma x . z + coef0)` — not PSD in general; exercises the
+    /// solver's vanishing/negative-curvature handling.
+    Sigmoid { gamma: f64, coef0: f64 },
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for k in 0..a.len() {
+        s += a[k] as f64 * b[k] as f64;
+    }
+    s
+}
+
+#[inline]
+fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for k in 0..a.len() {
+        let d = a[k] as f64 - b[k] as f64;
+        s += d * d;
+    }
+    s
+}
+
+impl KernelFunction {
+    /// Evaluate `k(a, b)`.
+    #[inline]
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        match *self {
+            KernelFunction::Rbf { gamma } => (-gamma * sqdist(a, b)).exp(),
+            KernelFunction::Linear => dot(a, b),
+            KernelFunction::Poly { gamma, coef0, degree } => {
+                (gamma * dot(a, b) + coef0).powi(degree as i32)
+            }
+            KernelFunction::Sigmoid { gamma, coef0 } => (gamma * dot(a, b) + coef0).tanh(),
+        }
+    }
+
+    /// `k(x, x)` — cheap for RBF (always 1).
+    #[inline]
+    pub fn eval_self(&self, a: &[f32]) -> f64 {
+        match *self {
+            KernelFunction::Rbf { .. } => 1.0,
+            _ => self.eval(a, a),
+        }
+    }
+
+    /// The γ parameter if the kernel has one.
+    pub fn gamma(&self) -> Option<f64> {
+        match *self {
+            KernelFunction::Rbf { gamma }
+            | KernelFunction::Poly { gamma, .. }
+            | KernelFunction::Sigmoid { gamma, .. } => Some(gamma),
+            KernelFunction::Linear => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: [f32; 3] = [1.0, 0.0, 2.0];
+    const B: [f32; 3] = [0.0, 1.0, 2.0];
+
+    #[test]
+    fn rbf_hand_computed() {
+        let k = KernelFunction::Rbf { gamma: 0.5 };
+        // ||A-B||^2 = 1 + 1 + 0 = 2  ->  exp(-1)
+        assert!((k.eval(&A, &B) - (-1.0f64).exp()).abs() < 1e-12);
+        assert_eq!(k.eval_self(&A), 1.0);
+    }
+
+    #[test]
+    fn rbf_symmetry_and_unit_diagonal() {
+        let k = KernelFunction::Rbf { gamma: 1.3 };
+        assert_eq!(k.eval(&A, &B), k.eval(&B, &A));
+        assert!((k.eval(&A, &A) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        let k = KernelFunction::Linear;
+        assert_eq!(k.eval(&A, &B), 4.0);
+        assert_eq!(k.eval_self(&A), 5.0);
+    }
+
+    #[test]
+    fn poly_hand_computed() {
+        let k = KernelFunction::Poly { gamma: 0.5, coef0: 1.0, degree: 2 };
+        // (0.5*4 + 1)^2 = 9
+        assert_eq!(k.eval(&A, &B), 9.0);
+    }
+
+    #[test]
+    fn sigmoid_bounded() {
+        let k = KernelFunction::Sigmoid { gamma: 10.0, coef0: 0.0 };
+        let v = k.eval(&A, &B);
+        assert!(v > 0.99 && v <= 1.0);
+    }
+
+    #[test]
+    fn gamma_accessor() {
+        assert_eq!(KernelFunction::Rbf { gamma: 0.25 }.gamma(), Some(0.25));
+        assert_eq!(KernelFunction::Linear.gamma(), None);
+    }
+}

@@ -1,0 +1,287 @@
+//! Gram matrix facade: what the solver sees.
+//!
+//! [`Gram`] combines a [`RowComputer`] (native Rust or PJRT-backed) with
+//! the LRU [`super::cache::RowCache`] and a precomputed diagonal. The
+//! solver's per-iteration needs are:
+//!   * `rows_pair(i, j)` — the two working-set rows (cache-pinned borrow),
+//!   * `entry(i, j)` — single kernel values for the planning-ahead 4×4
+//!     minor (served from resident rows when possible),
+//!   * `diag(i)` — `K_ii` for the second-order gain denominator.
+
+use super::cache::{CacheStats, RowCache};
+
+/// Anything that can produce full kernel rows. Implemented by
+/// [`super::native::NativeRowComputer`] and the PJRT-backed
+/// `runtime::gram::PjrtRowComputer`.
+pub trait RowComputer: Send {
+    /// Number of examples ℓ (row length).
+    fn len(&self) -> usize;
+    /// Compute the full row `K[i, :]` into `out` (`out.len() == len()`).
+    fn compute_row(&self, i: usize, out: &mut [f32]);
+    /// `K[i, i]`.
+    fn diag(&self, i: usize) -> f64;
+    /// Single entry `K[i, j]` (direct evaluation; no caching).
+    fn entry(&self, i: usize, j: usize) -> f64;
+}
+
+/// Cached Gram-matrix view over a [`RowComputer`].
+pub struct Gram {
+    computer: Box<dyn RowComputer>,
+    cache: RowCache,
+    diag: Vec<f64>,
+    len: usize,
+}
+
+impl Gram {
+    /// Default cache budget: 100 MB, LIBSVM's default.
+    pub const DEFAULT_CACHE_BYTES: usize = 100 * 1024 * 1024;
+
+    pub fn new(computer: Box<dyn RowComputer>, cache_bytes: usize) -> Gram {
+        let len = computer.len();
+        let diag = (0..len).map(|i| computer.diag(i)).collect();
+        Gram {
+            cache: RowCache::with_budget(cache_bytes, len),
+            computer,
+            diag,
+            len,
+        }
+    }
+
+    /// Number of examples ℓ.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// `K[i, i]` (precomputed).
+    #[inline]
+    pub fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    /// Borrow row `i` (computing/caching on miss).
+    pub fn row(&mut self, i: usize) -> &[f32] {
+        let computer = &self.computer;
+        self.cache
+            .get_or_compute(i, self.len, None, |out| computer.compute_row(i, out))
+    }
+
+    /// Borrow rows `i` and `j` simultaneously (`i != j`).
+    ///
+    /// Soundness: rows live in individually boxed slices whose storage
+    /// never moves; fetching `j` pins `i` so it cannot be evicted between
+    /// the two lookups, and the returned borrows tie to `&mut self` so no
+    /// further cache mutation can occur while they live.
+    pub fn rows_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        assert_ne!(i, j, "rows_pair needs two distinct rows");
+        {
+            let computer = &self.computer;
+            self.cache
+                .get_or_compute(i, self.len, Some(j), |out| computer.compute_row(i, out));
+            let computer = &self.computer;
+            self.cache
+                .get_or_compute(j, self.len, Some(i), |out| computer.compute_row(j, out));
+        }
+        let (pi, li) = self.cache.row_ptr(i).expect("row i resident");
+        let (pj, lj) = self.cache.row_ptr(j).expect("row j resident");
+        unsafe {
+            (
+                std::slice::from_raw_parts(pi, li),
+                std::slice::from_raw_parts(pj, lj),
+            )
+        }
+    }
+
+    /// Single entry `K[i, j]`, served from a resident row when possible.
+    pub fn entry(&mut self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return self.diag[i];
+        }
+        if let Some((p, l)) = self.cache.row_ptr(i) {
+            debug_assert!(j < l);
+            return unsafe { *p.add(j) } as f64;
+        }
+        if let Some((p, l)) = self.cache.row_ptr(j) {
+            debug_assert!(i < l);
+            return unsafe { *p.add(i) } as f64;
+        }
+        self.computer.entry(i, j)
+    }
+
+    /// Is row `i` currently cached? (used by WSS cache-affinity heuristics)
+    pub fn is_cached(&self, i: usize) -> bool {
+        self.cache.contains(i)
+    }
+
+    /// Raw borrow of a *resident* row for callers that must keep reading
+    /// the matrix (diag/entry) while holding the row. Safety contract as
+    /// in [`Gram::rows_pair`]: row storage is individually boxed and only
+    /// `get_or_compute` (i.e. [`Gram::row`]/[`Gram::rows_pair`]) can evict;
+    /// `diag`/`entry` never mutate the cache.
+    pub(crate) fn resident_row(&self, i: usize) -> Option<&'static [f32]> {
+        self.cache
+            .row_ptr(i)
+            .map(|(p, l)| unsafe { std::slice::from_raw_parts(p, l) })
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Direct access to the underlying computer (runtime benches).
+    pub fn computer(&self) -> &dyn RowComputer {
+        self.computer.as_ref()
+    }
+}
+
+/// Fully materialized Gram matrix — test oracle and reference-solver
+/// substrate for small ℓ.
+#[derive(Debug, Clone)]
+pub struct DenseGram {
+    n: usize,
+    k: Vec<f64>,
+}
+
+impl DenseGram {
+    /// Materialize from a computer (O(ℓ²) memory — small problems only).
+    pub fn materialize(computer: &dyn RowComputer) -> DenseGram {
+        let n = computer.len();
+        let mut k = vec![0f64; n * n];
+        let mut row = vec![0f32; n];
+        for i in 0..n {
+            computer.compute_row(i, &mut row);
+            for j in 0..n {
+                k[i * n + j] = row[j] as f64;
+            }
+        }
+        DenseGram { n, k }
+    }
+
+    /// Build directly from an explicit matrix (tests).
+    pub fn from_matrix(n: usize, k: Vec<f64>) -> DenseGram {
+        assert_eq!(k.len(), n * n);
+        DenseGram { n, k }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.k[i * self.n + j]
+    }
+
+    /// `(K α)_i`.
+    pub fn mat_vec_at(&self, alpha: &[f64], i: usize) -> f64 {
+        let row = &self.k[i * self.n..(i + 1) * self.n];
+        row.iter().zip(alpha).map(|(&k, &a)| k * a).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::kernel::function::KernelFunction;
+    use crate::kernel::native::NativeRowComputer;
+    use crate::util::prng::Pcg;
+    use std::sync::Arc;
+
+    fn gram(n: usize, cache_rows_bytes: usize) -> Gram {
+        let mut rng = Pcg::new(7);
+        let mut ds = Dataset::with_dim(3);
+        for _ in 0..n {
+            ds.push(
+                &[rng.normal() as f32, rng.normal() as f32, rng.normal() as f32],
+                1,
+            );
+        }
+        let nc = NativeRowComputer::new(Arc::new(ds), KernelFunction::Rbf { gamma: 0.5 });
+        Gram::new(Box::new(nc), cache_rows_bytes)
+    }
+
+    #[test]
+    fn rows_pair_returns_consistent_rows() {
+        let mut g = gram(32, 1 << 20);
+        let (ri, rj) = g.rows_pair(3, 9);
+        assert_eq!(ri.len(), 32);
+        assert_eq!(rj.len(), 32);
+        // symmetry through the two borrows
+        assert!((ri[9] - rj[3]).abs() < 1e-6);
+        let d9 = rj[9];
+        assert!((d9 - 1.0).abs() < 1e-6, "diagonal via row j");
+    }
+
+    #[test]
+    fn rows_pair_with_tiny_cache_still_works() {
+        // capacity 2 rows: i must stay pinned while j is computed
+        let mut g = gram(16, 1);
+        for _ in 0..10 {
+            let (ri, rj) = g.rows_pair(1, 2);
+            assert!((ri[2] - rj[1]).abs() < 1e-6);
+            let (ra, rb) = g.rows_pair(5, 6);
+            assert!((ra[6] - rb[5]).abs() < 1e-6);
+        }
+        assert!(g.cache_stats().evictions > 0);
+    }
+
+    #[test]
+    fn entry_matches_row_and_uses_cache() {
+        let mut g = gram(24, 1 << 20);
+        let want = {
+            let (ri, _) = g.rows_pair(4, 5);
+            ri[11] as f64
+        };
+        assert!((g.entry(4, 11) - want).abs() < 1e-7);
+        assert_eq!(g.entry(4, 4), 1.0);
+        // entry for uncached pair falls back to direct eval
+        assert!((g.entry(20, 21) - g.entry(21, 20)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_gram_matches_cached_gram() {
+        let mut g = gram(12, 1 << 20);
+        let dense = {
+            // rebuild an identical computer
+            let mut rng = Pcg::new(7);
+            let mut ds = Dataset::with_dim(3);
+            for _ in 0..12 {
+                ds.push(
+                    &[rng.normal() as f32, rng.normal() as f32, rng.normal() as f32],
+                    1,
+                );
+            }
+            let nc =
+                NativeRowComputer::new(Arc::new(ds), KernelFunction::Rbf { gamma: 0.5 });
+            DenseGram::materialize(&nc)
+        };
+        for i in 0..12 {
+            let row = g.row(i).to_vec();
+            for j in 0..12 {
+                assert!((row[j] as f64 - dense.at(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mat_vec_hand_computed() {
+        let d = DenseGram::from_matrix(2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(d.mat_vec_at(&[1.0, -1.0], 0), -1.0);
+        assert_eq!(d.mat_vec_at(&[1.0, -1.0], 1), -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn rows_pair_rejects_same_index() {
+        let mut g = gram(8, 1 << 20);
+        g.rows_pair(3, 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Kernel substrate: Mercer kernel functions, the native (Rust) Gram-row
+//! computer, the PJRT-backed computer (see [`crate::runtime`]), the LRU
+//! row cache, and the [`matrix::Gram`] facade the solver talks to.
+
+pub mod cache;
+pub mod function;
+pub mod matrix;
+pub mod native;
+
+pub use cache::RowCache;
+pub use function::KernelFunction;
+pub use matrix::{DenseGram, Gram, RowComputer};
+pub use native::NativeRowComputer;

@@ -1,0 +1,163 @@
+//! Native (pure-Rust) Gram row computer — the fallback when PJRT
+//! artifacts are absent and the numerics/performance comparator for the
+//! runtime path (bench_kernel_throughput).
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+
+use super::function::KernelFunction;
+use super::matrix::RowComputer;
+
+/// Computes kernel rows directly from the dataset.
+///
+/// For RBF the row loop uses the `‖a‖²+‖b‖²−2a·b` decomposition with
+/// precomputed squared norms, turning each row into one pass of dot
+/// products — the same structure the Pallas kernel uses on the MXU.
+pub struct NativeRowComputer {
+    data: Arc<Dataset>,
+    kernel: KernelFunction,
+    /// Precomputed ‖x_i‖² (used by the RBF fast path).
+    sqnorms: Vec<f64>,
+}
+
+impl NativeRowComputer {
+    pub fn new(data: Arc<Dataset>, kernel: KernelFunction) -> NativeRowComputer {
+        let sqnorms = (0..data.len())
+            .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
+            .collect();
+        NativeRowComputer { data, kernel, sqnorms }
+    }
+
+    pub fn kernel(&self) -> KernelFunction {
+        self.kernel
+    }
+}
+
+impl RowComputer for NativeRowComputer {
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn compute_row(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len());
+        let xi = self.data.row(i);
+        match self.kernel {
+            KernelFunction::Rbf { gamma } => {
+                let ni = self.sqnorms[i];
+                let d = self.data.dim();
+                for (j, o) in out.iter_mut().enumerate() {
+                    let xj = self.data.row(j);
+                    // dot product: the compiler auto-vectorizes this loop
+                    let mut dot = 0.0f64;
+                    for k in 0..d {
+                        dot += xi[k] as f64 * xj[k] as f64;
+                    }
+                    let d2 = (ni + self.sqnorms[j] - 2.0 * dot).max(0.0);
+                    *o = (-gamma * d2).exp() as f32;
+                }
+            }
+            k => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = k.eval(xi, self.data.row(j)) as f32;
+                }
+            }
+        }
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.kernel.eval_self(self.data.row(i))
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.kernel.eval(self.data.row(i), self.data.row(j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn random_ds(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg::new(seed);
+        let mut ds = Dataset::with_dim(d);
+        let mut row = vec![0f32; d];
+        for _ in 0..n {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+        }
+        Arc::new(ds)
+    }
+
+    #[test]
+    fn rbf_row_matches_pairwise_eval() {
+        let ds = random_ds(50, 7, 1);
+        let k = KernelFunction::Rbf { gamma: 0.8 };
+        let nc = NativeRowComputer::new(ds.clone(), k);
+        let mut row = vec![0f32; 50];
+        nc.compute_row(17, &mut row);
+        for j in 0..50 {
+            let direct = k.eval(ds.row(17), ds.row(j)) as f32;
+            assert!((row[j] - direct).abs() < 1e-6, "j={j}: {} vs {direct}", row[j]);
+        }
+        assert!((row[17] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entry_and_diag_consistent_with_row() {
+        let ds = random_ds(20, 3, 2);
+        let nc = NativeRowComputer::new(ds, KernelFunction::Rbf { gamma: 2.0 });
+        let mut row = vec![0f32; 20];
+        nc.compute_row(5, &mut row);
+        assert!((nc.entry(5, 11) - row[11] as f64).abs() < 1e-6);
+        assert_eq!(nc.diag(5), 1.0);
+    }
+
+    #[test]
+    fn linear_kernel_rows() {
+        let ds = random_ds(10, 4, 3);
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Linear);
+        let mut row = vec![0f32; 10];
+        nc.compute_row(0, &mut row);
+        for j in 0..10 {
+            let want: f64 = ds
+                .row(0)
+                .iter()
+                .zip(ds.row(j))
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!((row[j] as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_symmetry_property() {
+        crate::util::quickcheck::forall(
+            "gram-symmetry",
+            10,
+            |g| {
+                let n = 8 + g.below(24);
+                let d = 1 + g.below(6);
+                (random_ds(n, d, g.next_u64()), g.range(0.05, 3.0))
+            },
+            |(ds, gamma)| {
+                let nc =
+                    NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: *gamma });
+                let n = ds.len();
+                let mut ri = vec![0f32; n];
+                let mut rj = vec![0f32; n];
+                for i in 0..n.min(6) {
+                    nc.compute_row(i, &mut ri);
+                    for j in 0..n.min(6) {
+                        nc.compute_row(j, &mut rj);
+                        if (ri[j] - rj[i]).abs() > 1e-6 {
+                            return Err(format!("K[{i},{j}]={} K[{j},{i}]={}", ri[j], rj[i]));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

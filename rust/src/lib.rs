@@ -1,0 +1,33 @@
+//! # pasmo — Planning-ahead SMO (PA-SMO) SVM training system
+//!
+//! A reproduction of T. Glasmachers, *"The Planning-ahead SMO Algorithm"*:
+//! a three-layer Rust + JAX/Pallas system in which the Rust coordinator owns
+//! the sequential-minimal-optimization loop (working-set selection, step
+//! policy, shrinking, kernel cache) and the compute hot spot — RBF Gram row
+//! evaluation — is AOT-compiled from a Pallas kernel to HLO and executed
+//! through PJRT (`runtime`), with a native Rust path as fallback/comparator.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`solver`] — the paper's contribution: SMO (Alg. 1), the planning-ahead
+//!   step (eqs. 7/8, Algs. 2 & 4), PA-aware working-set selection (Alg. 3)
+//!   and the complete PA-SMO driver (Alg. 5), plus shrinking and telemetry.
+//! * [`kernel`] — kernel functions, the LRU row cache and Gram abstractions.
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
+//! * [`data`] — LIBSVM IO and the synthetic dataset suite standing in for
+//!   the paper's 22 benchmark datasets.
+//! * [`svm`] — user-facing train / predict / cross-validation / grid search.
+//! * [`stats`] — Wilcoxon signed-rank test and the histogram machinery the
+//!   paper's evaluation uses.
+//! * [`coordinator`] — experiment drivers regenerating every table/figure.
+//! * [`util`] — substrates that would normally come from crates.io (PRNG,
+//!   CLI parsing, JSON, property testing, timing) built in-repo because the
+//!   build environment is offline.
+
+pub mod coordinator;
+pub mod data;
+pub mod kernel;
+pub mod runtime;
+pub mod solver;
+pub mod stats;
+pub mod svm;
+pub mod util;

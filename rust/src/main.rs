@@ -1,0 +1,285 @@
+//! `pasmo` — command-line launcher for the PA-SMO training system.
+//!
+//! Subcommands:
+//! * `datasets` — list the benchmark suite (paper Table 1).
+//! * `train` — train an SVM (native or PJRT kernel path) and save a model.
+//! * `predict` — evaluate a saved model on a LIBSVM file.
+//! * `gridsearch` — (C, γ) grid search with cross-validation.
+//! * `experiment <id>` — regenerate a paper table/figure:
+//!   `table1 | table2 | fig2 | fig3 | fig4 | wss | heuristic | all`.
+//! * `info` — environment / artifact status.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use pasmo::coordinator::experiments::{self, ExpOptions};
+use pasmo::coordinator::report::Report;
+use pasmo::data::{libsvm, suite, Dataset};
+use pasmo::runtime::engine::PjrtEngine;
+use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::svm::predict::accuracy;
+use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+use pasmo::svm::SvmModel;
+use pasmo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("datasets") => cmd_datasets(),
+        Some("train") => cmd_train(args),
+        Some("predict") => cmd_predict(args),
+        Some("gridsearch") => cmd_gridsearch(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "pasmo — planning-ahead SMO SVM training system\n\
+         \n\
+         usage: pasmo <command> [options]\n\
+         \n\
+         commands:\n\
+           datasets                          list the benchmark suite\n\
+           train      --dataset NAME | --libsvm FILE [--c C --gamma G]\n\
+                      [--solver smo|pasmo|pasmo-multi:N] [--eps E]\n\
+                      [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
+           predict    --model model.json --libsvm FILE\n\
+           gridsearch --dataset NAME [--len N] [--folds K]\n\
+           experiment table1|table2|fig2|fig3|fig4|wss|heuristic|all\n\
+                      [--perms N --scale S --max-len N --full\n\
+                       --datasets a,b,c --eps E --seed S --out report.md]\n\
+           info                              environment / artifact status"
+    );
+}
+
+fn load_dataset(args: &Args) -> Result<(Arc<Dataset>, Option<suite::DatasetSpec>)> {
+    if let Some(name) = args.get("dataset") {
+        let spec = suite::find(name)
+            .with_context(|| format!("unknown dataset {name:?} (see `pasmo datasets`)"))?;
+        let len = args.get_parse_or("len", spec.paper_len.min(2000));
+        let seed = args.get_parse_or("seed", 42u64);
+        Ok((Arc::new(spec.generate(len, seed)), Some(spec)))
+    } else if let Some(file) = args.get("libsvm") {
+        let ds = libsvm::read(Path::new(file), None)?;
+        Ok((Arc::new(ds), None))
+    } else {
+        bail!("need --dataset NAME or --libsvm FILE");
+    }
+}
+
+fn solver_choice(args: &Args) -> Result<SolverChoice> {
+    let s = args.get_or("solver", "pasmo");
+    Ok(match s.as_str() {
+        "smo" => SolverChoice::Smo,
+        "pasmo" => SolverChoice::Pasmo,
+        other => {
+            if let Some(n) = other.strip_prefix("pasmo-multi:") {
+                SolverChoice::PasmoMulti(n.parse().context("bad N in pasmo-multi:N")?)
+            } else {
+                bail!("unknown solver {other:?} (smo | pasmo | pasmo-multi:N)");
+            }
+        }
+    })
+}
+
+fn cmd_datasets() -> Result<()> {
+    use pasmo::util::table::{Align, Table};
+    let mut t = Table::new(&["name", "ℓ(paper)", "C", "γ", "SV(paper)", "BSV(paper)"])
+        .align(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for s in suite::suite() {
+        t.add_row(vec![
+            s.name.into(),
+            s.paper_len.to_string(),
+            format!("{}", s.c),
+            format!("{}", s.gamma),
+            s.paper_sv.to_string(),
+            s.paper_bsv.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (ds, spec) = load_dataset(args)?;
+    let c = args.get_parse_or("c", spec.as_ref().map(|s| s.c).unwrap_or(1.0));
+    let gamma = args.get_parse_or("gamma", spec.as_ref().map(|s| s.gamma).unwrap_or(0.5));
+    let mut cfg = TrainConfig::new(c, gamma).with_solver(solver_choice(args)?);
+    cfg.solver_config.eps = args.get_parse_or("eps", 1e-3);
+
+    let (model, res) = if args.get("runtime") == Some("pjrt") {
+        let engine = Rc::new(PjrtEngine::open_default().context(
+            "open PJRT artifacts (run `make artifacts`, or set PASMO_ARTIFACTS)",
+        )?);
+        let computer = PjrtRowComputer::new(engine, ds.clone(), gamma)?;
+        train_with_computer(&ds, &cfg, Box::new(computer))
+    } else {
+        train(&ds, &cfg)
+    };
+
+    println!(
+        "trained on ℓ={} d={} | C={c} γ={gamma} solver={:?}\n\
+         iterations={} time={:.3}s objective={:.6} gap={:.2e} converged={}\n\
+         SV={} BSV={} free/bounded/planning steps = {}/{}/{}\n\
+         train accuracy = {:.4}",
+        ds.len(),
+        ds.dim(),
+        cfg.solver,
+        res.iterations,
+        res.wall_time_s,
+        res.objective,
+        res.gap,
+        res.converged,
+        res.sv,
+        res.bsv,
+        res.telemetry.free_steps,
+        res.telemetry.bounded_steps,
+        res.telemetry.planning_steps,
+        accuracy(&model, &ds),
+    );
+    if let Some(out) = args.get("out") {
+        model.save(Path::new(out))?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("need --model model.json")?;
+    let file = args.get("libsvm").context("need --libsvm FILE")?;
+    let model = SvmModel::load(Path::new(model_path))?;
+    let ds = libsvm::read(Path::new(file), Some(model.support.dim()))?;
+    let acc = accuracy(&model, &ds);
+    println!(
+        "predicted {} examples with {} SVs: accuracy = {acc:.4}",
+        ds.len(),
+        model.n_sv()
+    );
+    Ok(())
+}
+
+fn cmd_gridsearch(args: &Args) -> Result<()> {
+    use pasmo::svm::gridsearch::{grid_search, log_grid};
+    let (ds, spec) = load_dataset(args)?;
+    let folds = args.get_parse_or("folds", 4usize);
+    let base = TrainConfig::new(1.0, 1.0);
+    let res = grid_search(
+        &ds,
+        &log_grid(10.0, -1, 3),
+        &log_grid(10.0, -3, 1),
+        folds,
+        args.get_parse_or("seed", 42u64),
+        &base,
+    );
+    for p in &res.evaluated {
+        println!("C={:<8} γ={:<8} cv-acc={:.4}", p.c, p.gamma, p.cv_accuracy);
+    }
+    println!(
+        "\nbest: C={} γ={} cv-acc={:.4}  (paper used C={} γ={})",
+        res.best.c,
+        res.best.gamma,
+        res.best.cv_accuracy,
+        spec.as_ref().map(|s| s.c).unwrap_or(f64::NAN),
+        spec.as_ref().map(|s| s.gamma).unwrap_or(f64::NAN),
+    );
+    Ok(())
+}
+
+fn exp_options(args: &Args) -> ExpOptions {
+    let mut o = ExpOptions::default();
+    o.scale = args.get_parse_or("scale", o.scale);
+    o.max_len = args.get_parse_or("max-len", o.max_len);
+    o.perms = args.get_parse_or("perms", o.perms);
+    o.eps = args.get_parse_or("eps", o.eps);
+    o.seed = args.get_parse_or("seed", o.seed);
+    o.full = args.flag("full");
+    o.threads = args.get_parse_or("threads", o.threads);
+    if let Some(list) = args.get("datasets") {
+        o.datasets = list.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    o
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("need an experiment id (table1|table2|fig2|fig3|fig4|wss|heuristic|all)")?;
+    let opts = exp_options(args);
+    let mut report = Report::new(false);
+    match which {
+        "table1" => report.section(experiments::table1(&opts)),
+        "table2" => report.section(experiments::table2(&opts)),
+        "fig2" => report.section(experiments::fig2()),
+        "fig3" => report.section(experiments::fig3(&opts)),
+        "fig4" => report.section(experiments::fig4(&opts)),
+        "wss" => report.section(experiments::wss_ablation(&opts)),
+        "heuristic" => report.section(experiments::heuristic_step(&opts)),
+        "all" => {
+            report.section(experiments::table1(&opts));
+            report.section(experiments::table2(&opts));
+            report.section(experiments::fig2());
+            report.section(experiments::fig3(&opts));
+            report.section(experiments::fig4(&opts));
+            report.section(experiments::wss_ablation(&opts));
+            report.section(experiments::heuristic_step(&opts));
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    if let Some(out) = args.get("out") {
+        report.save(Path::new(out))?;
+        println!("\nreport saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("pasmo {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    match PjrtEngine::open_default() {
+        Ok(engine) => {
+            println!(
+                "PJRT: platform={} devices={}",
+                engine.client.platform_name(),
+                engine.client.device_count()
+            );
+            println!("artifacts ({}):", engine.manifest.dir.display());
+            for (name, a) in &engine.manifest.artifacts {
+                println!("  {name}: entry={} q={} l={} d={}", a.entry, a.q, a.l, a.d);
+            }
+        }
+        Err(e) => println!("PJRT artifacts unavailable: {e} (run `make artifacts`)"),
+    }
+    Ok(())
+}

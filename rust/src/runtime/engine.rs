@@ -1,0 +1,150 @@
+//! PJRT engine: compile and execute the AOT HLO-text artifacts.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. One compiled executable per artifact;
+//! artifacts are compiled lazily on first use and memoized.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// A PJRT CPU engine bound to one artifacts directory.
+pub struct PjrtEngine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    execs: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    /// Open the artifacts directory (must contain MANIFEST.json).
+    pub fn open(dir: &Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtEngine { client, manifest, execs: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$PASMO_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<PjrtEngine> {
+        let dir = std::env::var("PASMO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        PjrtEngine::open(Path::new(&dir))
+    }
+
+    /// Compile (or fetch memoized) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let exe = self.compile(meta)?;
+        let rc = std::rc::Rc::new(exe);
+        self.execs.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {}", meta.name))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload buffer")
+    }
+
+    /// Execute an artifact on device-resident buffers and read back the
+    /// single (tuple-wrapped) f32 output.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let out = exe.execute_b(args).with_context(|| format!("execute {name}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("read back result literal")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let inner = lit.to_tuple1().context("unwrap result tuple")?;
+        inner.to_vec::<f32>().context("result to f32 vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("MANIFEST.json").exists().then_some(dir)
+    }
+
+    /// End-to-end load path: HLO text -> PJRT compile -> execute, numerics
+    /// vs the native Rust kernel. Skipped (not failed) when artifacts are
+    /// absent so `cargo test` works before `make artifacts`.
+    #[test]
+    fn gram_artifact_executes_with_correct_numerics() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let eng = PjrtEngine::open(&dir).unwrap();
+        let meta = eng.manifest.gram_artifact_for(2).unwrap().clone();
+        let (q, l, d) = (meta.q, meta.l, meta.d);
+
+        // random padded inputs
+        let mut rng = crate::util::prng::Pcg::new(77);
+        let mut xq = vec![0f32; q * d];
+        let mut x = vec![0f32; l * d];
+        for v in xq.iter_mut().take(q * 2) {
+            *v = rng.normal() as f32;
+        }
+        for v in x.iter_mut().take(l * 2) {
+            *v = rng.normal() as f32;
+        }
+        let gamma = 0.5f32;
+        let name = meta.name.clone();
+        let bq = eng.upload(&xq, &[q, d]).unwrap();
+        let bx = eng.upload(&x, &[l, d]).unwrap();
+        let bg = eng.upload(&[gamma], &[1, 1]).unwrap();
+        let out = eng.execute_f32(&name, &[&bq, &bx, &bg]).unwrap();
+        assert_eq!(out.len(), q * l);
+
+        // compare a scattering of entries against direct evaluation
+        for (qi, li) in [(0usize, 0usize), (1, 7), (2, 100), (3, 2047)] {
+            let mut d2 = 0f64;
+            for k in 0..d {
+                let diff = xq[qi * d + k] as f64 - x[li * d + k] as f64;
+                d2 += diff * diff;
+            }
+            let want = (-(gamma as f64) * d2).exp();
+            let got = out[qi * l + li] as f64;
+            assert!((got - want).abs() < 1e-5, "({qi},{li}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let eng = PjrtEngine::open(&dir).unwrap();
+        assert!(eng.executable("nope").is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! PJRT-backed Gram row computer and decision function.
+//!
+//! The dataset is padded to the artifact's (L-chunk, D) shape once,
+//! uploaded once, and stays device-resident; each `compute_row` call only
+//! uploads the tiny query block and reads back one row per chunk. This is
+//! the production hot path of the three-layer design — Python is not
+//! involved at any point here.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::dataset::Dataset;
+use crate::kernel::matrix::RowComputer;
+
+use super::engine::PjrtEngine;
+
+/// Zero-pad `row` (length `dim`) into width-`d` layout at position `q`.
+fn place_padded(dst: &mut [f32], q: usize, d: usize, row: &[f32]) {
+    let base = q * d;
+    dst[base..base + row.len()].copy_from_slice(row);
+    dst[base + row.len()..base + d].iter_mut().for_each(|v| *v = 0.0);
+}
+
+/// RBF Gram rows served by the AOT gram artifact.
+pub struct PjrtRowComputer {
+    engine: Rc<PjrtEngine>,
+    data: Arc<Dataset>,
+    gamma: f64,
+    artifact: String,
+    q: usize,
+    chunk_l: usize,
+    d: usize,
+    /// Device-resident dataset chunks, each `[chunk_l, d]`.
+    chunks: Vec<xla::PjRtBuffer>,
+    /// Device-resident `[1,1]` gamma.
+    gamma_buf: xla::PjRtBuffer,
+    /// Precomputed ‖x_i‖² for `entry()`.
+    sqnorms: Vec<f64>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compilation/execution and
+// every `PjrtRowComputer` instance is used by exactly one solver thread at
+// a time (the coordinator creates one per worker). The raw pointers inside
+// xla wrappers are never shared across threads concurrently.
+unsafe impl Send for PjrtRowComputer {}
+
+impl PjrtRowComputer {
+    /// Build the device-resident view of `data` for RBF width `gamma`.
+    pub fn new(engine: Rc<PjrtEngine>, data: Arc<Dataset>, gamma: f64) -> Result<Self> {
+        let meta = engine
+            .manifest
+            .gram_artifact_for(data.dim())
+            .with_context(|| {
+                format!("no gram artifact for feature dim {}", data.dim())
+            })?
+            .clone();
+        let (q, chunk_l, d) = (meta.q, meta.l, meta.d);
+        let n = data.len();
+        let n_chunks = n.div_ceil(chunk_l);
+        anyhow::ensure!(n_chunks > 0, "empty dataset");
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut host = vec![0f32; chunk_l * d];
+        for c in 0..n_chunks {
+            host.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..chunk_l {
+                let idx = c * chunk_l + r;
+                if idx < n {
+                    place_padded(&mut host, r, d, data.row(idx));
+                }
+            }
+            chunks.push(engine.upload(&host, &[chunk_l, d])?);
+        }
+        let gamma_buf = engine.upload(&[gamma as f32], &[1, 1])?;
+        let sqnorms = (0..n)
+            .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
+            .collect();
+        Ok(PjrtRowComputer {
+            artifact: meta.name.clone(),
+            engine,
+            data,
+            gamma,
+            q,
+            chunk_l,
+            d,
+            chunks,
+            gamma_buf,
+            sqnorms,
+        })
+    }
+
+    /// Number of device chunks (introspection for benches).
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+impl RowComputer for PjrtRowComputer {
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn compute_row(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len());
+        // Query block: row i replicated Q times (single-row fetch).
+        let mut xq = vec![0f32; self.q * self.d];
+        for qslot in 0..self.q {
+            place_padded(&mut xq, qslot, self.d, self.data.row(i));
+        }
+        let bq = self
+            .engine
+            .upload(&xq, &[self.q, self.d])
+            .expect("upload query block");
+        let n = self.data.len();
+        for (c, chunk) in self.chunks.iter().enumerate() {
+            let res = self
+                .engine
+                .execute_f32(&self.artifact, &[&bq, chunk, &self.gamma_buf])
+                .expect("execute gram artifact");
+            let lo = c * self.chunk_l;
+            let hi = ((c + 1) * self.chunk_l).min(n);
+            // row 0 of the [Q, chunk_l] output
+            out[lo..hi].copy_from_slice(&res[..hi - lo]);
+        }
+    }
+
+    fn diag(&self, _i: usize) -> f64 {
+        1.0 // RBF
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        // Single entries are cheaper on the host than a device round-trip.
+        let (a, b) = (self.data.row(i), self.data.row(j));
+        let mut dot = 0f64;
+        for k in 0..a.len() {
+            dot += a[k] as f64 * b[k] as f64;
+        }
+        let d2 = (self.sqnorms[i] + self.sqnorms[j] - 2.0 * dot).max(0.0);
+        (-self.gamma * d2).exp()
+    }
+}
+
+/// Batched decision function via the AOT decision artifact:
+/// `f(X_q) = Σ_chunks K(X_q, SV_chunk)·coef_chunk + b`.
+pub struct PjrtDecision {
+    engine: Rc<PjrtEngine>,
+    artifact: String,
+    q: usize,
+    d: usize,
+    sv_chunks: Vec<xla::PjRtBuffer>,
+    coef_chunks: Vec<xla::PjRtBuffer>,
+    bias: f64,
+    zero_bias: xla::PjRtBuffer,
+    gamma_buf: xla::PjRtBuffer,
+    dim: usize,
+}
+
+impl PjrtDecision {
+    /// Stage support vectors + signed coefficients on device.
+    pub fn new(
+        engine: Rc<PjrtEngine>,
+        support: &Dataset,
+        coef: &[f64],
+        bias: f64,
+        gamma: f64,
+    ) -> Result<PjrtDecision> {
+        assert_eq!(support.len(), coef.len());
+        let meta = engine
+            .manifest
+            .decision_artifact_for(support.dim())
+            .with_context(|| {
+                format!("no decision artifact for feature dim {}", support.dim())
+            })?
+            .clone();
+        let (q, chunk_l, d) = (meta.q, meta.l, meta.d);
+        let n = support.len();
+        let n_chunks = n.div_ceil(chunk_l).max(1);
+        let mut sv_chunks = Vec::new();
+        let mut coef_chunks = Vec::new();
+        let mut host = vec![0f32; chunk_l * d];
+        let mut chost = vec![0f32; chunk_l];
+        for c in 0..n_chunks {
+            host.iter_mut().for_each(|v| *v = 0.0);
+            chost.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..chunk_l {
+                let idx = c * chunk_l + r;
+                if idx < n {
+                    place_padded(&mut host, r, d, support.row(idx));
+                    chost[r] = coef[idx] as f32;
+                }
+            }
+            sv_chunks.push(engine.upload(&host, &[chunk_l, d])?);
+            coef_chunks.push(engine.upload(&chost, &[chunk_l])?);
+        }
+        let zero_bias = engine.upload(&[0f32], &[1])?;
+        let gamma_buf = engine.upload(&[gamma as f32], &[1, 1])?;
+        Ok(PjrtDecision {
+            artifact: meta.name.clone(),
+            engine,
+            q,
+            d,
+            sv_chunks,
+            coef_chunks,
+            bias,
+            zero_bias,
+            gamma_buf,
+            dim: support.dim(),
+        })
+    }
+
+    /// Decision values for a batch of query rows.
+    pub fn decide(&self, queries: &Dataset) -> Result<Vec<f64>> {
+        assert_eq!(queries.dim(), self.dim);
+        let n = queries.len();
+        let mut out = vec![self.bias; n];
+        let mut xq = vec![0f32; self.q * self.d];
+        let mut base = 0usize;
+        while base < n {
+            let batch = (n - base).min(self.q);
+            xq.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..batch {
+                place_padded(&mut xq, r, self.d, queries.row(base + r));
+            }
+            let bq = self.engine.upload(&xq, &[self.q, self.d])?;
+            for (sv, coef) in self.sv_chunks.iter().zip(&self.coef_chunks) {
+                let scores = self.engine.execute_f32(
+                    &self.artifact,
+                    &[&bq, sv, coef, &self.zero_bias, &self.gamma_buf],
+                )?;
+                for r in 0..batch {
+                    out[base + r] += scores[r] as f64;
+                }
+            }
+            base += batch;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::function::KernelFunction;
+    use crate::kernel::native::NativeRowComputer;
+    use crate::util::prng::Pcg;
+    use std::path::Path;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("MANIFEST.json").exists().then_some(dir)
+    }
+
+    fn random_ds(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg::new(seed);
+        let mut ds = Dataset::with_dim(d);
+        let mut row = vec![0f32; d];
+        for _ in 0..n {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+        }
+        Arc::new(ds)
+    }
+
+    /// The central cross-layer test: PJRT rows == native rows.
+    #[test]
+    fn pjrt_rows_match_native_rows() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Rc::new(PjrtEngine::open(&dir).unwrap());
+        // deliberately non-multiple of the chunk length to exercise padding
+        let ds = random_ds(2500, 7, 5);
+        let gamma = 0.8;
+        let pjrt = PjrtRowComputer::new(engine, ds.clone(), gamma).unwrap();
+        assert_eq!(pjrt.n_chunks(), 2);
+        let native = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
+        let mut rp = vec![0f32; ds.len()];
+        let mut rn = vec![0f32; ds.len()];
+        for &i in &[0usize, 1, 1024, 2047, 2048, 2499] {
+            pjrt.compute_row(i, &mut rp);
+            native.compute_row(i, &mut rn);
+            for j in 0..ds.len() {
+                assert!(
+                    (rp[j] - rn[j]).abs() < 1e-4,
+                    "row {i}, col {j}: pjrt {} vs native {}",
+                    rp[j],
+                    rn[j]
+                );
+            }
+            assert!((rp[i] - 1.0).abs() < 1e-5);
+        }
+        assert!((pjrt.entry(3, 77) - native.entry(3, 77)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pjrt_decision_matches_native_model() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = Rc::new(PjrtEngine::open(&dir).unwrap());
+        let sv = random_ds(300, 5, 9);
+        let mut rng = Pcg::new(10);
+        let coef: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let bias = 0.25;
+        let gamma = 0.4;
+        let dec = PjrtDecision::new(engine, &sv, &coef, bias, gamma).unwrap();
+        let queries = random_ds(33, 5, 11);
+        let got = dec.decide(&queries).unwrap();
+        let kf = KernelFunction::Rbf { gamma };
+        for (r, &g) in got.iter().enumerate() {
+            let mut want = bias;
+            for s in 0..sv.len() {
+                want += coef[s] * kf.eval(sv.row(s), queries.row(r));
+            }
+            assert!((g - want).abs() < 1e-3, "query {r}: {g} vs {want}");
+        }
+    }
+}

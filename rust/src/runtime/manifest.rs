@@ -1,0 +1,172 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub entry: String,
+    pub arg_names: Vec<String>,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+    /// Query block size Q.
+    pub q: usize,
+    /// Data chunk length L.
+    pub l: usize,
+    /// Padded feature dimension D.
+    pub d: usize,
+}
+
+/// Parsed MANIFEST.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `MANIFEST.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("MANIFEST.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        anyhow::ensure!(
+            v.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
+            "unsupported manifest format"
+        );
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing artifacts object")?;
+        for (name, meta) in arts {
+            let gets = |k: &str| -> Result<&Json> {
+                meta.get(k).with_context(|| format!("{name}: missing {k}"))
+            };
+            let shapes: Vec<Vec<usize>> = gets("arg_shapes")?
+                .as_arr()
+                .context("arg_shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|n| n.as_usize())
+                        .collect()
+                })
+                .collect();
+            let names: Vec<String> = gets("arg_names")?
+                .as_arr()
+                .context("arg_names")?
+                .iter()
+                .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                .collect();
+            let out_shape: Vec<usize> = gets("out_shape")?
+                .as_arr()
+                .context("out_shape")?
+                .iter()
+                .filter_map(|n| n.as_usize())
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(gets("file")?.as_str().context("file")?),
+                    entry: gets("entry")?.as_str().context("entry")?.to_string(),
+                    arg_names: names,
+                    arg_shapes: shapes,
+                    out_shape,
+                    q: gets("q")?.as_usize().context("q")?,
+                    l: gets("l")?.as_usize().context("l")?,
+                    d: gets("d")?.as_usize().context("d")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// The gram_rows artifact with the smallest padded D ≥ `dim` (prefer
+    /// the smallest query block — the solver fetches single rows).
+    pub fn gram_artifact_for(&self, dim: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .filter(|a| a.entry == "gram_rows" && a.d >= dim)
+            .min_by_key(|a| (a.d, a.q))
+    }
+
+    /// The decision-function artifact with D ≥ `dim`.
+    pub fn decision_artifact_for(&self, dim: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .filter(|a| a.entry == "decision_function" && a.d >= dim)
+            .min_by_key(|a| (a.d, a.q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let doc = r#"{
+          "format": "hlo-text", "return_tuple": true,
+          "artifacts": {
+            "gram_q4_l2048_d64": {"entry": "gram_rows", "file": "g64.hlo.txt",
+              "arg_names": ["xq","x","gamma"],
+              "arg_shapes": [[4,64],[2048,64],[1,1]], "out_shape": [4,2048],
+              "q": 4, "l": 2048, "d": 64},
+            "gram_q4_l2048_d256": {"entry": "gram_rows", "file": "g256.hlo.txt",
+              "arg_names": ["xq","x","gamma"],
+              "arg_shapes": [[4,256],[2048,256],[1,1]], "out_shape": [4,2048],
+              "q": 4, "l": 2048, "d": 256},
+            "decision_q16_l2048_d64": {"entry": "decision_function", "file": "d.hlo.txt",
+              "arg_names": ["xq","x","coef","bias","gamma"],
+              "arg_shapes": [[16,64],[2048,64],[2048],[1],[1,1]], "out_shape": [16],
+              "q": 16, "l": 2048, "d": 64}
+          }
+        }"#;
+        std::fs::write(dir.join("MANIFEST.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_artifacts() {
+        let dir = std::env::temp_dir().join("pasmo-manifest-test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.gram_artifact_for(2).unwrap().d, 64);
+        assert_eq!(m.gram_artifact_for(64).unwrap().d, 64);
+        assert_eq!(m.gram_artifact_for(65).unwrap().d, 256);
+        assert!(m.gram_artifact_for(300).is_none());
+        assert_eq!(m.decision_artifact_for(10).unwrap().q, 16);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration sanity: if `make artifacts` ran, the real manifest
+        // must parse and expose the standard artifact set.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("MANIFEST.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.gram_artifact_for(2).is_some());
+            assert!(m.decision_artifact_for(2).is_some());
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = std::env::temp_dir().join("pasmo-manifest-missing");
+        std::fs::create_dir_all(&dir).ok();
+        std::fs::remove_file(dir.join("MANIFEST.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,4 @@
+//! PJRT runtime: load AOT HLO-text artifacts and serve Gram rows.
+pub mod manifest;
+pub mod engine;
+pub mod gram;

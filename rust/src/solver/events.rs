@@ -1,0 +1,171 @@
+//! Solver telemetry: step-kind counts, the planning-step ratio stream
+//! feeding Figure 3, and optional objective/gap traces.
+//!
+//! Telemetry is opt-in per field so the hot loop pays nothing when a
+//! stream is disabled (Table 2 timing runs disable everything).
+
+/// What happened in one iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Free SMO step (interior Newton).
+    SmoFree,
+    /// SMO step clipped at the box.
+    SmoAtBound,
+    /// Planning-ahead step (Algorithm 4 took the planned μ).
+    Planning,
+}
+
+/// Which streams to record.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TelemetryConfig {
+    /// Record μ/μ*−1 for every planning step (Figure 3).
+    pub planning_ratios: bool,
+    /// Record (iteration, objective) every `trace_every` iterations.
+    pub objective_trace: bool,
+    /// Record (iteration, gap) every `trace_every` iterations.
+    pub gap_trace: bool,
+    /// Record the [`StepKind`] of every iteration (used by the Lemma-3
+    /// double-step tests and the Fig. 1 trace example).
+    pub kind_trace: bool,
+    /// Trace sampling period (0 = every iteration).
+    pub trace_every: usize,
+}
+
+impl TelemetryConfig {
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig::default()
+    }
+
+    pub fn fig3() -> TelemetryConfig {
+        TelemetryConfig { planning_ratios: true, ..Default::default() }
+    }
+
+    pub fn full(trace_every: usize) -> TelemetryConfig {
+        TelemetryConfig {
+            planning_ratios: true,
+            objective_trace: true,
+            gap_trace: true,
+            kind_trace: true,
+            trace_every,
+        }
+    }
+}
+
+/// Collected telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    pub config: TelemetryConfig,
+    pub free_steps: u64,
+    pub bounded_steps: u64,
+    pub planning_steps: u64,
+    /// Planning attempts that reverted to a SMO step (box/degeneracy).
+    pub planning_reverted: u64,
+    /// μ/μ*−1 per planning step (Figure 3 input).
+    pub planning_ratios: Vec<f64>,
+    /// (iteration, f(α)) samples.
+    pub objective_trace: Vec<(u64, f64)>,
+    /// (iteration, KKT gap) samples.
+    pub gap_trace: Vec<(u64, f64)>,
+    /// Per-iteration step kinds (only when `config.kind_trace`).
+    pub kind_trace: Vec<StepKind>,
+}
+
+impl Telemetry {
+    pub fn new(config: TelemetryConfig) -> Telemetry {
+        Telemetry { config, ..Default::default() }
+    }
+
+    #[inline]
+    pub fn count_step(&mut self, kind: StepKind) {
+        match kind {
+            StepKind::SmoFree => self.free_steps += 1,
+            StepKind::SmoAtBound => self.bounded_steps += 1,
+            StepKind::Planning => self.planning_steps += 1,
+        }
+        if self.config.kind_trace {
+            self.kind_trace.push(kind);
+        }
+    }
+
+    /// Record a planning step of size `mu` against Newton size `mu_star`.
+    #[inline]
+    pub fn record_planning_ratio(&mut self, mu: f64, mu_star: f64) {
+        if self.config.planning_ratios && mu_star != 0.0 && mu_star.is_finite() {
+            self.planning_ratios.push(mu / mu_star - 1.0);
+        }
+    }
+
+    #[inline]
+    fn due(&self, iter: u64) -> bool {
+        let every = self.config.trace_every.max(1) as u64;
+        iter % every == 0
+    }
+
+    #[inline]
+    pub fn record_objective(&mut self, iter: u64, f: impl FnOnce() -> f64) {
+        if self.config.objective_trace && self.due(iter) {
+            let v = f();
+            self.objective_trace.push((iter, v));
+        }
+    }
+
+    #[inline]
+    pub fn record_gap(&mut self, iter: u64, gap: impl FnOnce() -> f64) {
+        if self.config.gap_trace && self.due(iter) {
+            let v = gap();
+            self.gap_trace.push((iter, v));
+        }
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.free_steps + self.bounded_steps + self.planning_steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_by_kind() {
+        let mut t = Telemetry::new(TelemetryConfig::off());
+        t.count_step(StepKind::SmoFree);
+        t.count_step(StepKind::SmoFree);
+        t.count_step(StepKind::SmoAtBound);
+        t.count_step(StepKind::Planning);
+        assert_eq!((t.free_steps, t.bounded_steps, t.planning_steps), (2, 1, 1));
+        assert_eq!(t.total_steps(), 4);
+    }
+
+    #[test]
+    fn ratios_only_when_enabled() {
+        let mut off = Telemetry::new(TelemetryConfig::off());
+        off.record_planning_ratio(1.2, 1.0);
+        assert!(off.planning_ratios.is_empty());
+        let mut on = Telemetry::new(TelemetryConfig::fig3());
+        on.record_planning_ratio(1.2, 1.0);
+        assert_eq!(on.planning_ratios.len(), 1);
+        assert!((on.planning_ratios[0] - 0.2).abs() < 1e-12);
+        // degenerate newton sizes are skipped
+        on.record_planning_ratio(1.0, 0.0);
+        on.record_planning_ratio(1.0, f64::INFINITY);
+        assert_eq!(on.planning_ratios.len(), 1);
+    }
+
+    #[test]
+    fn traces_sample_at_period() {
+        let mut t = Telemetry::new(TelemetryConfig::full(10));
+        for iter in 0..25 {
+            t.record_objective(iter, || iter as f64);
+            t.record_gap(iter, || 1.0);
+        }
+        assert_eq!(t.objective_trace.len(), 3); // 0, 10, 20
+        assert_eq!(t.gap_trace.len(), 3);
+    }
+
+    #[test]
+    fn disabled_traces_do_not_evaluate_closure() {
+        let mut t = Telemetry::new(TelemetryConfig::off());
+        t.record_objective(0, || panic!("must not be called"));
+    }
+}

@@ -1,0 +1,36 @@
+//! The paper's contribution: SMO and planning-ahead SMO solvers for the
+//! dual SVM training problem (paper eq. 1)
+//!
+//! ```text
+//! maximize f(α) = yᵀα − ½ αᵀKα
+//! s.t.     Σ αᵢ = 0,   Lᵢ ≤ αᵢ ≤ Uᵢ,  Lᵢ = min(0, yᵢC), Uᵢ = max(0, yᵢC)
+//! ```
+//!
+//! Module map:
+//! * [`state`] — α/gradient/active-set bookkeeping and feasibility.
+//! * [`step`] — the 1-D sub-problem (eq. 2), gains (eqs. 4/7) and the
+//!   planning-ahead step size (eq. 8); pure math, heavily unit-tested.
+//! * [`wss`] — working-set selection: max-violating-pair, second-order
+//!   (Fan et al.), and the PA-aware selection of Algorithm 3.
+//! * [`smo`] — Algorithm 1 (the LIBSVM-equivalent baseline).
+//! * [`pasmo`] — Algorithms 2/4/5: the planning-ahead solver, including
+//!   the multiple-planning-ahead variant (§7.4).
+//! * [`shrink`] — shrinking heuristic + gradient reconstruction.
+//! * [`events`] — telemetry (step-kind counts, μ/μ* ratios for Fig. 3,
+//!   objective/gap traces).
+//! * [`reference`] — independent dense projected-gradient solver used as
+//!   a ground-truth oracle in tests.
+
+pub mod events;
+pub mod pasmo;
+pub mod reference;
+pub mod shrink;
+pub mod smo;
+pub mod state;
+pub mod step;
+pub mod wss;
+
+pub use events::{StepKind, Telemetry, TelemetryConfig};
+pub use pasmo::PasmoSolver;
+pub use smo::{SmoSolver, SolveResult, SolverConfig, StepPolicy, WssKind};
+pub use state::SolverState;

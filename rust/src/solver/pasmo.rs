@@ -1,0 +1,357 @@
+//! The planning-ahead SMO algorithm — the paper's contribution.
+//!
+//! Implements the complete PA-SMO solver (paper Algorithm 5), composed of:
+//! * the planning-ahead update step (Algorithm 4): if the previous
+//!   iteration performed a *free* SMO step, compute the planning-ahead
+//!   step size μ (eq. 8) assuming the previous working set `B^(t−1)` will
+//!   be selected next; revert to the plain SMO step (eq. 2) if either the
+//!   current or the planned step would end at the box boundary;
+//! * the PA-aware working-set selection (Algorithm 3): after a planning
+//!   step whose relative size left the guaranteed-progress band
+//!   `[1−η, 1+η]`, select with the *exact* SMO gain `g` instead of `ĝ`,
+//!   and in both post-planning branches offer `B^(t−2)` as a candidate —
+//!   together these guarantee positive double-step gain (Lemma 3);
+//! * the multiple-planning-ahead variant (§7.4): plan with the `N` most
+//!   recent working sets and take the largest double-step gain, offering
+//!   all of them to the selection.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::kernel::matrix::Gram;
+
+use super::events::StepKind;
+use super::smo::{SolveResult, SolverConfig, SolverCore};
+use super::step::{PlanningSystem, SubProblem};
+use super::wss::{GainKind, Selection};
+
+/// The PA-SMO solver (Algorithm 5).
+pub struct PasmoSolver {
+    pub config: SolverConfig,
+}
+
+/// Outcome of a planning attempt against one candidate next working set.
+#[derive(Debug, Clone, Copy)]
+struct Plan {
+    mu: f64,
+    gain: f64,
+}
+
+impl PasmoSolver {
+    pub fn new(config: SolverConfig) -> PasmoSolver {
+        PasmoSolver { config }
+    }
+
+    /// Try to plan ahead on the current working set `sel` assuming `b2`
+    /// is selected next (paper §4). Returns `None` — meaning *revert to
+    /// the SMO step* — if the 2×2 system is degenerate or either step
+    /// would end at the box boundary (Algorithm 2's guard).
+    fn plan_with(
+        core: &mut SolverCore,
+        sel: Selection,
+        sp1: &SubProblem,
+        b2: (usize, usize),
+    ) -> Option<Plan> {
+        let (i1, j1) = (sel.i, sel.j);
+        let (i2, j2) = b2;
+        // Same working set (as a set): det(Q) = 0, nothing to plan.
+        if (i1 == i2 && j1 == j2) || (i1 == j2 && j1 == i2) {
+            return None;
+        }
+        let g = &mut *core.gram;
+        let st = &core.state;
+        let q22 = g.diag(i2) - 2.0 * g.entry(i2, j2) + g.diag(j2);
+        // Q12 = v1ᵀ K v2 — the 4 cross entries of the ≤4×4 minor. The rows
+        // of B¹ are resident (fetched by selection); B² rows were resident
+        // last iteration, so these are almost always cache hits.
+        let q12 =
+            g.entry(i1, i2) - g.entry(i1, j2) - g.entry(j1, i2) + g.entry(j1, j2);
+        let w2 = st.grad[i2] - st.grad[j2];
+        let ps = PlanningSystem { w1: sp1.l, w2, q11: sp1.q, q12, q22 };
+        let mu = ps.planning_step()?;
+        // Current step must stay strictly inside the box (else: SMO step).
+        if !(mu > sp1.lo && mu < sp1.hi) {
+            return None;
+        }
+        // The planned second step, evaluated at the post-step-1 point
+        // (B¹ and B² may share indices, so shift the affected α first).
+        let mu2 = ps.second_step(mu);
+        let shift = |n: usize| -> f64 {
+            let mut a = st.alpha[n];
+            if n == i1 {
+                a += mu;
+            }
+            if n == j1 {
+                a -= mu;
+            }
+            a
+        };
+        let (a_i2, a_j2) = (shift(i2), shift(j2));
+        let lo2 = (st.lower[i2] - a_i2).max(a_j2 - st.upper[j2]);
+        let hi2 = (st.upper[i2] - a_i2).min(a_j2 - st.lower[j2]);
+        if !(mu2 > lo2 && mu2 < hi2) {
+            return None;
+        }
+        Some(Plan { mu, gain: ps.double_step_gain(mu) })
+    }
+
+    /// Solve the classification dual with PA-SMO.
+    pub fn solve(&self, labels: &[i8], c: f64, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::new(labels, c, gram, self.config);
+        self.run(core, started)
+    }
+
+    /// Solve a general dual problem (ε-SVR, one-class, warm starts) from
+    /// an explicit [`crate::solver::state::SolverState`].
+    pub fn solve_state(
+        &self,
+        state: crate::solver::state::SolverState,
+        gram: &mut Gram,
+    ) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::from_state(state, gram, self.config);
+        self.run(core, started)
+    }
+
+    fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
+        let eta = self.config.eta;
+        let n_cand = self.config.planning_candidates.max(1);
+        // Recent working sets, most recent first: history[0] = B^(t−1).
+        let mut history: VecDeque<(usize, usize)> = VecDeque::new();
+        // p = "previous iteration performed a SMO step" (Algorithm 5).
+        let mut p = true;
+        // Did the previous iteration perform a *free* SMO step? (Alg. 4)
+        let mut prev_free_smo = false;
+        // μ^(t−1)/μ* of the most recent planning step.
+        let mut prev_ratio = 1.0f64;
+
+        let converged = loop {
+            if let Some(done) = core.check_stop_and_shrink() {
+                break done;
+            }
+            // ---- Working-set selection (Algorithm 3 / Algorithm 5) ----
+            let extras: Vec<(usize, usize)> = if self.config.ablation_wss_only {
+                // §7.2 ablation: always offer B^(t−2) under ĝ, never plan.
+                history.iter().skip(1).take(1).copied().collect()
+            } else if p {
+                Vec::new()
+            } else {
+                // Offer the set(s) assumed during planning: B^(t−2) … .
+                history.iter().skip(1).take(n_cand).copied().collect()
+            };
+            let kind = if self.config.ablation_wss_only
+                || p
+                || (prev_ratio >= 1.0 - eta && prev_ratio <= 1.0 + eta)
+            {
+                GainKind::Approx
+            } else {
+                GainKind::Exact
+            };
+            let Some(sel) = core.select(kind, &extras) else {
+                break true;
+            };
+            core.iterations += 1;
+
+            let sp = core.subproblem(sel.i, sel.j);
+            let mu_star = sp.newton_step();
+
+            // ---- Update step (Algorithm 4) ----
+            let plan = if prev_free_smo && !self.config.ablation_wss_only {
+                let mut best: Option<Plan> = None;
+                for &b2 in history.iter().take(n_cand) {
+                    if let Some(pl) = Self::plan_with(&mut core, sel, &sp, b2) {
+                        if best.map(|b| pl.gain > b.gain).unwrap_or(true) {
+                            best = Some(pl);
+                        }
+                    }
+                }
+                if best.is_none() && !history.is_empty() {
+                    core.telemetry.planning_reverted += 1;
+                }
+                best
+            } else {
+                None
+            };
+
+            match plan {
+                Some(pl) => {
+                    core.apply_and_update(sel.i, sel.j, pl.mu);
+                    core.telemetry.count_step(StepKind::Planning);
+                    core.telemetry.record_planning_ratio(pl.mu, mu_star);
+                    prev_ratio = if mu_star.is_finite() && mu_star != 0.0 {
+                        pl.mu / mu_star
+                    } else {
+                        1.0
+                    };
+                    p = false;
+                    prev_free_smo = false;
+                }
+                None => {
+                    let (_, free) = core.smo_step(sel);
+                    p = true;
+                    prev_free_smo = free;
+                }
+            }
+            if core.telemetry.config.objective_trace {
+                let obj = core.state.objective();
+                let it = core.iterations;
+                core.telemetry.record_objective(it, || obj);
+            }
+            history.push_front((sel.i, sel.j));
+            history.truncate(n_cand + 2);
+        };
+        core.finish(converged, started)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::events::TelemetryConfig;
+    use crate::solver::smo::tests::{make_gram, random_problem};
+    use crate::solver::smo::SmoSolver;
+    use crate::util::prng::Pcg;
+
+    fn full_trace_cfg() -> SolverConfig {
+        SolverConfig {
+            telemetry: TelemetryConfig::full(1),
+            shrinking: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_and_matches_smo_objective() {
+        for seed in [1u64, 5, 9] {
+            let ds = random_problem(80, seed);
+            let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+            let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+            let smo = SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut g1);
+            let pa = PasmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut g2);
+            assert!(pa.converged, "seed {seed}");
+            assert!(pa.gap <= 1e-3 + 1e-9, "seed {seed}: {}", pa.gap);
+            let rel = (pa.objective - smo.objective).abs() / (1.0 + smo.objective.abs());
+            assert!(rel < 2e-3, "seed {seed}: {} vs {}", pa.objective, smo.objective);
+        }
+    }
+
+    #[test]
+    fn planning_steps_occur_on_oscillation_prone_problems() {
+        // large C + overlapping classes => many free steps => planning
+        let ds = random_problem(60, 3);
+        let mut gram = make_gram(&ds, 2.0, 1 << 22);
+        let res = PasmoSolver::new(full_trace_cfg()).solve(ds.labels(), 1e4, &mut gram);
+        assert!(res.converged);
+        assert!(
+            res.telemetry.planning_steps > 0,
+            "no planning steps: {:?}",
+            res.telemetry
+        );
+    }
+
+    #[test]
+    fn lemma3_double_step_gain_is_positive() {
+        // For every planning step at iteration t, f(t+1) >= f(t-1):
+        // the planning step plus the following step never lose ground.
+        let ds = random_problem(50, 7);
+        let mut gram = make_gram(&ds, 1.5, 1 << 22);
+        let res = PasmoSolver::new(full_trace_cfg()).solve(ds.labels(), 100.0, &mut gram);
+        let kinds = &res.telemetry.kind_trace;
+        let objs: Vec<f64> = res.telemetry.objective_trace.iter().map(|&(_, f)| f).collect();
+        assert_eq!(kinds.len(), objs.len());
+        let mut planning_seen = 0;
+        for t in 0..kinds.len() {
+            if kinds[t] == StepKind::Planning && t + 1 < objs.len() {
+                planning_seen += 1;
+                let before = if t == 0 { 0.0 } else { objs[t - 1] };
+                assert!(
+                    objs[t + 1] >= before - 1e-9,
+                    "double step lost ground at t={t}: {} -> {}",
+                    before,
+                    objs[t + 1]
+                );
+            }
+        }
+        assert!(planning_seen > 0, "test vacuous: no planning steps");
+    }
+
+    #[test]
+    fn final_objective_never_worse_than_smo_across_seeds() {
+        // the paper's headline claim, in miniature
+        let mut rng = Pcg::new(123);
+        for _ in 0..5 {
+            let seed = rng.next_u64();
+            let ds = random_problem(40, seed);
+            let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+            let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+            let smo =
+                SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut g1);
+            let pa =
+                PasmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut g2);
+            assert!(
+                pa.objective >= smo.objective - 1e-3 * (1.0 + smo.objective.abs()),
+                "seed {seed}: PA {} < SMO {}",
+                pa.objective,
+                smo.objective
+            );
+        }
+    }
+
+    #[test]
+    fn multi_planning_variant_converges() {
+        for n in [2usize, 3, 5] {
+            let ds = random_problem(60, 11);
+            let mut gram = make_gram(&ds, 1.0, 1 << 22);
+            let cfg = SolverConfig { planning_candidates: n, ..Default::default() };
+            let res = PasmoSolver::new(cfg).solve(ds.labels(), 50.0, &mut gram);
+            assert!(res.converged, "N={n}");
+            assert!(res.gap <= 1e-3 + 1e-9, "N={n}");
+        }
+    }
+
+    #[test]
+    fn feasibility_invariants_hold_throughout() {
+        use crate::util::quickcheck::forall;
+        forall(
+            "pasmo-feasible-solutions",
+            8,
+            |g| (16 + g.below(48), g.next_u64(), 10f64.powf(g.range(-1.0, 3.0))),
+            |&(n, seed, c)| {
+                let ds = random_problem(n, seed);
+                let mut gram = make_gram(&ds, 1.0, 1 << 22);
+                let res = PasmoSolver::new(SolverConfig::default())
+                    .solve(ds.labels(), c, &mut gram);
+                let sum: f64 = res.alpha.iter().sum();
+                if sum.abs() > 1e-8 {
+                    return Err(format!("equality constraint violated: {sum}"));
+                }
+                for (i, &a) in res.alpha.iter().enumerate() {
+                    let y = ds.label(i) as f64;
+                    let (lo, hi) = ((y * c).min(0.0), (y * c).max(0.0));
+                    if a < lo - 1e-9 || a > hi + 1e-9 {
+                        return Err(format!("box violated at {i}: {a} not in [{lo},{hi}]"));
+                    }
+                }
+                if !res.converged {
+                    return Err("did not converge".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_pasmo_matches_unshrunk_objective() {
+        let ds = random_problem(120, 17);
+        let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+        let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+        let on = PasmoSolver::new(SolverConfig { shrinking: true, ..Default::default() })
+            .solve(ds.labels(), 1.0, &mut g1);
+        let off = PasmoSolver::new(SolverConfig { shrinking: false, ..Default::default() })
+            .solve(ds.labels(), 1.0, &mut g2);
+        assert!(on.converged && off.converged);
+        let rel = (on.objective - off.objective).abs() / (1.0 + off.objective.abs());
+        assert!(rel < 2e-3, "{} vs {}", on.objective, off.objective);
+    }
+}

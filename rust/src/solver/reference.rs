@@ -1,0 +1,195 @@
+//! Independent ground-truth solver for tests: projected gradient ascent
+//! on the dual with *exact* projection onto `{Σα = 0} ∩ box` by bisection
+//! on the hyperplane multiplier.
+//!
+//! Deliberately shares no code or algorithmic structure with the SMO
+//! family, so agreement between the two is strong evidence of
+//! correctness. O(ℓ²) per iteration — small problems only.
+
+use crate::kernel::matrix::DenseGram;
+
+/// Exact Euclidean projection of `v` onto `{x | Σx = 0, lo ≤ x ≤ hi}`.
+///
+/// The projection is `x_i(λ) = clamp(v_i − λ, lo_i, hi_i)` where λ solves
+/// `Σ x(λ) = 0`; the sum is continuous and non-increasing in λ, so
+/// bisection converges unconditionally.
+pub fn project(v: &[f64], lo: &[f64], hi: &[f64]) -> Vec<f64> {
+    let sum_at = |lambda: f64| -> f64 {
+        v.iter()
+            .zip(lo.iter().zip(hi))
+            .map(|(&vi, (&l, &h))| (vi - lambda).clamp(l, h))
+            .sum()
+    };
+    // Bracket λ: for very negative λ all coordinates sit at hi (sum ≥ 0),
+    // for very positive λ at lo (sum ≤ 0).
+    let spread = v
+        .iter()
+        .map(|x| x.abs())
+        .fold(0.0f64, f64::max)
+        .max(hi.iter().map(|x| x.abs()).fold(0.0f64, f64::max))
+        + 1.0;
+    let (mut a, mut b) = (-spread * 2.0, spread * 2.0);
+    for _ in 0..200 {
+        let mid = 0.5 * (a + b);
+        if sum_at(mid) > 0.0 {
+            a = mid;
+        } else {
+            b = mid;
+        }
+    }
+    let lambda = 0.5 * (a + b);
+    v.iter()
+        .zip(lo.iter().zip(hi))
+        .map(|(&vi, (&l, &h))| (vi - lambda).clamp(l, h))
+        .collect()
+}
+
+/// Result of the reference solve.
+#[derive(Debug, Clone)]
+pub struct ReferenceResult {
+    pub alpha: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Maximize `f(α) = yᵀα − ½ αᵀKα` over the feasible region by projected
+/// gradient ascent with a conservative `1/L` step size.
+pub fn solve_reference(
+    k: &DenseGram,
+    labels: &[i8],
+    c: f64,
+    max_iters: usize,
+    tol: f64,
+) -> ReferenceResult {
+    let n = k.len();
+    assert_eq!(labels.len(), n);
+    let y: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+    let lo: Vec<f64> = y.iter().map(|&yi| (yi * c).min(0.0)).collect();
+    let hi: Vec<f64> = y.iter().map(|&yi| (yi * c).max(0.0)).collect();
+    // Lipschitz bound on ∇f: L ≤ max_i Σ_j |K_ij| (row-sum norm).
+    let l_bound = (0..n)
+        .map(|i| (0..n).map(|j| k.at(i, j).abs()).sum::<f64>())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let step = 1.0 / l_bound;
+
+    let mut alpha = vec![0.0f64; n];
+    let objective = |a: &[f64]| -> f64 {
+        let mut f = 0.0;
+        for i in 0..n {
+            f += y[i] * a[i] - 0.5 * a[i] * k.mat_vec_at(a, i);
+        }
+        f
+    };
+    let mut last_f = objective(&alpha);
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        // gradient G = y − Kα
+        let v: Vec<f64> = (0..n)
+            .map(|i| alpha[i] + step * (y[i] - k.mat_vec_at(&alpha, i)))
+            .collect();
+        alpha = project(&v, &lo, &hi);
+        if it % 50 == 49 {
+            let f = objective(&alpha);
+            let converged = (f - last_f).abs() <= tol * (1.0 + f.abs());
+            last_f = f;
+            if converged {
+                break;
+            }
+        }
+    }
+    ReferenceResult { objective: objective(&alpha), alpha, iterations: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::matrix::Gram;
+    use crate::kernel::{KernelFunction, NativeRowComputer};
+    use crate::solver::pasmo::PasmoSolver;
+    use crate::solver::smo::tests::random_problem;
+    use crate::solver::smo::{SmoSolver, SolverConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn projection_is_feasible_and_idempotent() {
+        let v = vec![3.0, -1.0, 0.5, 2.0];
+        let lo = vec![0.0, -1.0, 0.0, -2.0];
+        let hi = vec![1.0, 0.0, 2.0, 0.0];
+        let p = project(&v, &lo, &hi);
+        let sum: f64 = p.iter().sum();
+        assert!(sum.abs() < 1e-9, "sum={sum}");
+        for i in 0..4 {
+            assert!(p[i] >= lo[i] - 1e-12 && p[i] <= hi[i] + 1e-12);
+        }
+        let p2 = project(&p, &lo, &hi);
+        for i in 0..4 {
+            assert!((p[i] - p2[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn projection_of_feasible_point_is_identity() {
+        let v = vec![0.5, -0.5];
+        let lo = vec![0.0, -1.0];
+        let hi = vec![1.0, 0.0];
+        let p = project(&v, &lo, &hi);
+        assert!((p[0] - 0.5).abs() < 1e-9 && (p[1] + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reference_matches_hand_solvable_2x2() {
+        // K = I, y = (1, -1), C large: f = a0 - a1 - 0.5(a0²+a1²),
+        // unconstrained optimum a = (1, -1), feasible, f* = 1.
+        let k = DenseGram::from_matrix(2, vec![1.0, 0.0, 0.0, 1.0]);
+        let res = solve_reference(&k, &[1, -1], 100.0, 20_000, 1e-12);
+        assert!((res.alpha[0] - 1.0).abs() < 1e-4, "{:?}", res.alpha);
+        assert!((res.alpha[1] + 1.0).abs() < 1e-4);
+        assert!((res.objective - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn smo_and_pasmo_match_reference_on_random_problems() {
+        for seed in [2u64, 4] {
+            let ds = random_problem(24, seed);
+            let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.8 });
+            let dense = DenseGram::materialize(&nc);
+            let c = 5.0;
+            let reference = solve_reference(&dense, ds.labels(), c, 200_000, 1e-14);
+
+            let cfg = SolverConfig { eps: 1e-6, ..Default::default() };
+            let mut g1 = Gram::new(
+                Box::new(NativeRowComputer::new(
+                    ds.clone(),
+                    KernelFunction::Rbf { gamma: 0.8 },
+                )),
+                1 << 22,
+            );
+            let smo = SmoSolver::new(cfg).solve(ds.labels(), c, &mut g1);
+            let mut g2 = Gram::new(
+                Box::new(NativeRowComputer::new(
+                    ds.clone(),
+                    KernelFunction::Rbf { gamma: 0.8 },
+                )),
+                1 << 22,
+            );
+            let pa = PasmoSolver::new(cfg).solve(ds.labels(), c, &mut g2);
+
+            let tol = 1e-4 * (1.0 + reference.objective.abs());
+            assert!(
+                (smo.objective - reference.objective).abs() < tol,
+                "seed {seed}: SMO {} vs ref {}",
+                smo.objective,
+                reference.objective
+            );
+            assert!(
+                (pa.objective - reference.objective).abs() < tol,
+                "seed {seed}: PA {} vs ref {}",
+                pa.objective,
+                reference.objective
+            );
+            let _ = Arc::strong_count(&ds);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Shrinking heuristic and gradient reconstruction (paper §2; Joachims).
+//!
+//! Variables confidently bounded in the final solution are removed from
+//! the active set, so working-set selection, the stopping check and the
+//! gradient update only touch the (usually small) interesting subset.
+//! Before declaring convergence the gradient is reconstructed for the
+//! shrunk indices and the full problem re-checked.
+
+use crate::kernel::matrix::Gram;
+
+use super::state::SolverState;
+
+/// Shrink bounded, confidently non-violating variables out of the active
+/// set, given the current violating-pair extremes `m = max G over I_up`,
+/// `big_m = min G over I_down`. Returns the number of newly shrunk indices.
+///
+/// Criteria (a variable is shrunk only if it can serve *neither* as the
+/// `i` nor the `j` of any violating pair):
+/// * `α_n = U_n` (not in `I_up`): only usable as `j`; useless if `G_n ≥ m`.
+/// * `α_n = L_n` (not in `I_down`): only usable as `i`; useless if `G_n ≤ big_m`.
+/// * free variables are never shrunk.
+pub fn shrink(state: &mut SolverState, m: f64, big_m: f64) -> usize {
+    if !m.is_finite() || !big_m.is_finite() {
+        return 0;
+    }
+    let mut removed = 0usize;
+    let mut idx = 0usize;
+    while idx < state.active.len() {
+        let n = state.active[idx];
+        let at_upper = !state.in_up(n);
+        let at_lower = !state.in_down(n);
+        let useless = if at_upper && at_lower {
+            // fixed variable (C degenerate); always removable
+            true
+        } else if at_upper {
+            state.grad[n] >= m
+        } else if at_lower {
+            state.grad[n] <= big_m
+        } else {
+            false
+        };
+        if useless && state.active.len() > 2 {
+            state.active.swap_remove(idx);
+            state.is_active[n] = false;
+            removed += 1;
+        } else {
+            idx += 1;
+        }
+    }
+    removed
+}
+
+/// Reactivate all variables and reconstruct their gradients:
+/// `G_n = y_n − Σ_j α_j K_{jn}` for previously inactive `n`. The sum runs
+/// over support vectors only; their rows come through the Gram cache.
+pub fn unshrink_and_reconstruct(state: &mut SolverState, gram: &mut Gram) {
+    let n_total = state.len();
+    if state.active.len() == n_total {
+        return;
+    }
+    // Start inactive gradients from y_n.
+    let inactive: Vec<usize> = (0..n_total).filter(|&n| !state.is_active[n]).collect();
+    for &n in &inactive {
+        state.grad[n] = state.y[n];
+    }
+    // Subtract α_j K_jn contributions from every support vector j.
+    for j in 0..n_total {
+        let aj = state.alpha[j];
+        if aj == 0.0 {
+            continue;
+        }
+        let row = gram.row(j);
+        for &n in &inactive {
+            state.grad[n] -= aj * row[n] as f64;
+        }
+    }
+    state.active = (0..n_total).collect();
+    state.is_active.iter_mut().for_each(|b| *b = true);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::kernel::function::KernelFunction;
+    use crate::kernel::native::NativeRowComputer;
+    use crate::util::prng::Pcg;
+    use std::sync::Arc;
+
+    fn problem(n: usize, seed: u64) -> (SolverState, Gram, Arc<Dataset>) {
+        let mut rng = Pcg::new(seed);
+        let mut ds = Dataset::with_dim(3);
+        for k in 0..n {
+            let y = if k % 2 == 0 { 1 } else { -1 };
+            ds.push(
+                &[rng.normal() as f32, rng.normal() as f32, rng.normal() as f32],
+                y,
+            );
+        }
+        let ds = Arc::new(ds);
+        let labels: Vec<i8> = ds.labels().to_vec();
+        let state = SolverState::new(&labels, 1.0);
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.7 });
+        (state, Gram::new(Box::new(nc), 1 << 20), ds)
+    }
+
+    #[test]
+    fn shrinks_only_confident_bounded_variables() {
+        let (mut state, _, _) = problem(6, 1);
+        // construct: index 0 at upper bound with G >= m, index 1 free,
+        // index 2 at lower bound with G <= M.
+        state.alpha[0] = state.upper[0];
+        state.grad[0] = 5.0;
+        state.alpha[2] = state.lower[2];
+        state.grad[2] = -5.0;
+        let before = state.active.len();
+        let removed = shrink(&mut state, 1.0, -1.0);
+        assert_eq!(removed, 2);
+        assert_eq!(state.active.len(), before - 2);
+        assert!(!state.is_active[0]);
+        assert!(!state.is_active[2]);
+        assert!(state.is_active[1]);
+    }
+
+    #[test]
+    fn free_variables_never_shrunk() {
+        let (mut state, _, _) = problem(4, 2);
+        // index 1 has y=-1 => bounds [-1, 0]; put it strictly inside.
+        state.alpha[1] = 0.5 * (state.lower[1] + state.upper[1]) - 0.25;
+        assert!(state.in_up(1) && state.in_down(1), "test setup: must be free");
+        state.grad[1] = 100.0;
+        shrink(&mut state, 0.0, 0.0);
+        assert!(state.is_active[1]);
+    }
+
+    #[test]
+    fn keeps_at_least_two_active() {
+        let (mut state, _, _) = problem(4, 3);
+        for n in 0..4 {
+            state.alpha[n] = state.upper[n]; // everyone at a bound
+            state.grad[n] = 10.0;
+        }
+        shrink(&mut state, 0.0, 0.0);
+        assert!(state.active.len() >= 2);
+    }
+
+    #[test]
+    fn reconstruction_matches_full_recompute() {
+        let (mut state, mut gram, ds) = problem(12, 4);
+        // random feasible alpha (pairs to keep sum zero)
+        let mut rng = Pcg::new(9);
+        for k in 0..6 {
+            let a = rng.range(0.0, 0.8);
+            let (i, j) = (2 * k, 2 * k + 1); // +1 and -1 labels
+            state.alpha[i] = a;
+            state.alpha[j] = -a;
+        }
+        // set the true gradient everywhere
+        for n in 0..12 {
+            let mut s = state.y[n];
+            for j in 0..12 {
+                s -= state.alpha[j] * gram.entry(j, n);
+            }
+            state.grad[n] = s;
+        }
+        // shrink half of the indices arbitrarily, corrupt their gradients
+        for n in 0..6 {
+            state.is_active[n] = false;
+            state.grad[n] = f64::NAN;
+        }
+        state.active = (6..12).collect();
+        unshrink_and_reconstruct(&mut state, &mut gram);
+        assert_eq!(state.active.len(), 12);
+        for n in 0..12 {
+            let mut want = state.y[n];
+            for j in 0..12 {
+                want -= state.alpha[j] * gram.entry(j, n);
+            }
+            assert!(
+                (state.grad[n] - want).abs() < 1e-6,
+                "n={n}: {} vs {want}",
+                state.grad[n]
+            );
+        }
+        let _ = ds;
+    }
+
+    #[test]
+    fn unshrink_on_fully_active_state_is_noop() {
+        let (mut state, mut gram, _) = problem(5, 5);
+        let grad_before = state.grad.clone();
+        unshrink_and_reconstruct(&mut state, &mut gram);
+        assert_eq!(state.grad, grad_before);
+    }
+}

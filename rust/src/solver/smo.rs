@@ -1,0 +1,489 @@
+//! Algorithm 1: the canonical (greedy) SMO solver — the paper's baseline,
+//! equivalent to LIBSVM 2.84's solver with second-order working-set
+//! selection — plus the shared iteration core reused by PA-SMO.
+
+use std::time::Instant;
+
+use crate::kernel::cache::CacheStats;
+use crate::kernel::matrix::Gram;
+
+use super::events::{StepKind, Telemetry, TelemetryConfig};
+use super::shrink;
+use super::state::SolverState;
+use super::step::{OverStep, SubProblem, TAU};
+use super::wss::{self, GainKind, Selection};
+
+/// Working-set selection flavour for the baseline solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WssKind {
+    /// First-order most-violating pair.
+    MaxViolating,
+    /// Second-order (Fan et al.) — the paper's baseline and default.
+    SecondOrder,
+}
+
+/// Step policy re-export (§7.3's over-relaxation ablation lives here).
+pub type StepPolicy = OverStep;
+
+/// Solver configuration shared by SMO and PA-SMO.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverConfig {
+    /// KKT stopping accuracy ε (paper uses 0.001).
+    pub eps: f64,
+    /// Hard iteration cap (0 = LIBSVM-style `max(10⁷, 100ℓ)`).
+    pub max_iter: u64,
+    /// Kernel cache budget in bytes.
+    pub cache_bytes: usize,
+    /// Enable the shrinking heuristic.
+    pub shrinking: bool,
+    /// Shrink check period (0 = `min(ℓ, 1000)`).
+    pub shrink_interval: usize,
+    /// Baseline working-set selection.
+    pub wss: WssKind,
+    /// Step-size policy for SMO steps (Newton or §7.3 over-relaxed).
+    pub step_policy: StepPolicy,
+    /// Telemetry streams.
+    pub telemetry: TelemetryConfig,
+    /// PA-SMO η (paper fixes 0.9; not a free hyper-parameter).
+    pub eta: f64,
+    /// PA-SMO: number of recent working sets used for planning (§7.4;
+    /// 1 = standard PA-SMO).
+    pub planning_candidates: usize,
+    /// §7.2 ablation: run PA-SMO's *working-set selection* modification
+    /// (offer `B^(t−2)`, ĝ scoring) but never take a planning step —
+    /// isolates how much of the speed-up comes from WSS vs planning.
+    pub ablation_wss_only: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            eps: 1e-3,
+            max_iter: 0,
+            cache_bytes: Gram::DEFAULT_CACHE_BYTES,
+            shrinking: true,
+            shrink_interval: 0,
+            wss: WssKind::SecondOrder,
+            step_policy: OverStep::Newton,
+            telemetry: TelemetryConfig::off(),
+            eta: 0.9,
+            planning_candidates: 1,
+            ablation_wss_only: false,
+        }
+    }
+}
+
+/// Outcome of a solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub alpha: Vec<f64>,
+    pub bias: f64,
+    pub iterations: u64,
+    /// Final dual objective f(α).
+    pub objective: f64,
+    /// Final (full) KKT gap.
+    pub gap: f64,
+    pub converged: bool,
+    pub sv: usize,
+    pub bsv: usize,
+    pub wall_time_s: f64,
+    pub telemetry: Telemetry,
+    pub cache_stats: CacheStats,
+}
+
+/// Shared per-iteration machinery for SMO-family solvers.
+pub(crate) struct SolverCore<'a> {
+    pub state: SolverState,
+    pub gram: &'a mut Gram,
+    pub config: SolverConfig,
+    pub telemetry: Telemetry,
+    pub iterations: u64,
+    shrink_counter: usize,
+    shrink_period: usize,
+    /// Set once the gradient has been reconstructed near convergence;
+    /// further shrinking is disabled to guarantee termination.
+    unshrunk: bool,
+    /// `argmax{Gᵢ | i ∈ I_up}` from the most recent stopping scan —
+    /// handed to WSS so the hot loop runs one O(active) scan, not two.
+    hint_argmax_up: Option<usize>,
+    /// Stopping quantities `(m, big_m, gap, argmax)` computed inside the
+    /// fused gradient-update loop of the previous iteration; when present
+    /// the stop check runs with zero additional scans.
+    cached_scan: Option<(f64, f64, f64, Option<usize>)>,
+}
+
+impl<'a> SolverCore<'a> {
+    pub fn new(labels: &[i8], c: f64, gram: &'a mut Gram, config: SolverConfig) -> Self {
+        Self::from_state(SolverState::new(labels, c), gram, config)
+    }
+
+    /// Build around an arbitrary (general-QP / warm-started) state.
+    pub fn from_state(state: SolverState, gram: &'a mut Gram, config: SolverConfig) -> Self {
+        assert_eq!(state.len(), gram.len(), "state/gram size mismatch");
+        let n = state.len();
+        let shrink_period = if config.shrink_interval > 0 {
+            config.shrink_interval
+        } else {
+            n.min(1000).max(1)
+        };
+        SolverCore {
+            state,
+            gram,
+            config,
+            telemetry: Telemetry::new(config.telemetry),
+            iterations: 0,
+            shrink_counter: shrink_period,
+            shrink_period,
+            unshrunk: false,
+            hint_argmax_up: None,
+            cached_scan: None,
+        }
+    }
+
+    pub fn max_iter(&self) -> u64 {
+        if self.config.max_iter > 0 {
+            self.config.max_iter
+        } else {
+            10_000_000u64.max(100 * self.state.len() as u64)
+        }
+    }
+
+    /// Stopping / shrinking bookkeeping run at the top of each iteration.
+    /// Returns `Some(converged)` if the loop should stop.
+    pub fn check_stop_and_shrink(&mut self) -> Option<bool> {
+        let (m, big_m, gap, argmax) = self
+            .cached_scan
+            .take()
+            .unwrap_or_else(|| self.state.kkt_scan());
+        self.hint_argmax_up = argmax;
+        self.telemetry.record_gap(self.iterations, || gap);
+        if gap <= self.config.eps {
+            // Converged on the active set: reconstruct and re-check on the
+            // full problem before declaring victory.
+            if self.state.active.len() < self.state.len() {
+                shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
+                self.unshrunk = true;
+                let (_, _, full_gap, full_argmax) = self.state.kkt_scan();
+                self.hint_argmax_up = full_argmax;
+                if full_gap <= self.config.eps {
+                    return Some(true);
+                }
+                // keep optimizing on the full set
+                return None;
+            }
+            return Some(true);
+        }
+        if self.config.shrinking && !self.unshrunk {
+            self.shrink_counter -= 1;
+            if self.shrink_counter == 0 {
+                self.shrink_counter = self.shrink_period;
+                shrink::shrink(&mut self.state, m, big_m);
+            }
+        }
+        if self.iterations >= self.max_iter() {
+            return Some(false);
+        }
+        None
+    }
+
+    /// Baseline working-set selection per config. Reuses the argmax from
+    /// the fused stopping scan when it is still valid.
+    pub fn select(&mut self, kind: GainKind, extra: &[(usize, usize)]) -> Option<Selection> {
+        match self.config.wss {
+            WssKind::MaxViolating => wss::select_max_violating(&self.state),
+            WssKind::SecondOrder => match self.hint_argmax_up.take() {
+                Some(i) if self.state.is_active[i] && self.state.in_up(i) => {
+                    wss::select_second_order_with_i(&self.state, self.gram, kind, extra, i)
+                }
+                _ => wss::select_second_order(&self.state, self.gram, kind, extra),
+            },
+        }
+    }
+
+    /// Build the 1-D sub-problem for a pair, fetching both rows.
+    /// Returns (sub-problem, q12-capable row data is left in cache).
+    pub fn subproblem(&mut self, i: usize, j: usize) -> SubProblem {
+        let (lo, hi) = self.state.step_bounds(i, j);
+        let kii = self.gram.diag(i);
+        let kjj = self.gram.diag(j);
+        let kij = self.gram.entry(i, j);
+        SubProblem {
+            l: self.state.grad[i] - self.state.grad[j],
+            q: kii - 2.0 * kij + kjj,
+            lo,
+            hi,
+        }
+    }
+
+    /// Apply step μ on (i, j) and update the active gradient:
+    /// `G_n ← G_n − μ (K_in − K_jn)`.
+    ///
+    /// The next iteration's stopping quantities (m, M, gap, argmax) are
+    /// computed inside the same loop — the updated gradient is already in
+    /// registers, so the stop check costs zero extra passes (perf pass,
+    /// EXPERIMENTS.md §Perf items 1+3).
+    pub fn apply_and_update(&mut self, i: usize, j: usize, mu: f64) {
+        if mu == 0.0 {
+            return;
+        }
+        self.state.apply_step(i, j, mu);
+        let (row_i, row_j) = self.gram.rows_pair(i, j);
+        let st = &mut self.state;
+        let mut m = f64::NEG_INFINITY;
+        let mut big_m = f64::INFINITY;
+        let mut argmax = None;
+        for &n in &st.active {
+            let g = st.grad[n] - mu * (row_i[n] as f64 - row_j[n] as f64);
+            st.grad[n] = g;
+            if g > m && st.alpha[n] < st.upper[n] {
+                m = g;
+                argmax = Some(n);
+            }
+            if g < big_m && st.alpha[n] > st.lower[n] {
+                big_m = g;
+            }
+        }
+        let gap = if m == f64::NEG_INFINITY || big_m == f64::INFINITY {
+            f64::NEG_INFINITY
+        } else {
+            m - big_m
+        };
+        self.cached_scan = Some((m, big_m, gap, argmax));
+    }
+
+    /// One plain SMO step (eq. 2 / configured policy) on the selected pair.
+    /// Returns (step size, was it a *free* SMO step).
+    pub fn smo_step(&mut self, sel: Selection) -> (f64, bool) {
+        let sp = self.subproblem(sel.i, sel.j);
+        let mu = self.config.step_policy.step(&sp);
+        let free = match self.config.step_policy {
+            OverStep::Newton => sp.is_free(),
+            // over-relaxed steps count as free if uncut
+            OverStep::OverRelaxed(_) => {
+                mu.is_finite() && mu > sp.lo && mu < sp.hi && sp.q > TAU
+            }
+        };
+        self.apply_and_update(sel.i, sel.j, mu);
+        self.telemetry.count_step(if free {
+            StepKind::SmoFree
+        } else {
+            StepKind::SmoAtBound
+        });
+        (mu, free)
+    }
+
+    pub fn finish(mut self, converged: bool, started: Instant) -> SolveResult {
+        // Always report on the full problem.
+        shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
+        let (_, _, gap) = self.state.kkt_gap_active();
+        let (sv, bsv) = self.state.sv_counts(1e-12);
+        SolveResult {
+            bias: self.state.bias(),
+            objective: self.state.objective(),
+            alpha: std::mem::take(&mut self.state.alpha),
+            iterations: self.iterations,
+            gap,
+            converged,
+            sv,
+            bsv,
+            wall_time_s: started.elapsed().as_secs_f64(),
+            telemetry: self.telemetry,
+            cache_stats: self.gram.cache_stats(),
+        }
+    }
+}
+
+/// Algorithm 1 — the baseline SMO solver.
+pub struct SmoSolver {
+    pub config: SolverConfig,
+}
+
+impl SmoSolver {
+    pub fn new(config: SolverConfig) -> SmoSolver {
+        SmoSolver { config }
+    }
+
+    /// Solve the classification dual for `labels`/`c` over the Gram view.
+    pub fn solve(&self, labels: &[i8], c: f64, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::new(labels, c, gram, self.config);
+        self.run(core, started)
+    }
+
+    /// Solve a general dual problem (ε-SVR, one-class, warm starts) from
+    /// an explicit [`SolverState`].
+    pub fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::from_state(state, gram, self.config);
+        self.run(core, started)
+    }
+
+    fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
+        let converged = loop {
+            if let Some(done) = core.check_stop_and_shrink() {
+                break done;
+            }
+            let Some(sel) = core.select(GainKind::Approx, &[]) else {
+                break true; // no violating pair on the active set
+            };
+            core.iterations += 1;
+            core.smo_step(sel);
+            let it = core.iterations;
+            // borrow dance: compute objective lazily only when tracing
+            if core.telemetry.config.objective_trace {
+                let obj = core.state.objective();
+                core.telemetry.record_objective(it, || obj);
+            }
+        };
+        core.finish(converged, started)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::kernel::function::KernelFunction;
+    use crate::kernel::native::NativeRowComputer;
+    use crate::util::prng::Pcg;
+    use std::sync::Arc;
+
+    pub(crate) fn make_gram(ds: &Arc<Dataset>, gamma: f64, cache: usize) -> Gram {
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
+        Gram::new(Box::new(nc), cache)
+    }
+
+    pub(crate) fn random_problem(n: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg::new(seed);
+        let mut ds = Dataset::with_dim(2);
+        for k in 0..n {
+            let y: i8 = if k % 2 == 0 { 1 } else { -1 };
+            let cx = if y == 1 { 0.8 } else { -0.8 };
+            ds.push(
+                &[(cx + rng.normal() * 0.9) as f32, (rng.normal() * 0.9) as f32],
+                y,
+            );
+        }
+        Arc::new(ds)
+    }
+
+    #[test]
+    fn solves_trivially_separable_pair() {
+        let ds = Arc::new(Dataset::new(1, vec![1.0, -1.0], vec![1, -1]));
+        let mut gram = make_gram(&ds, 0.5, 1 << 20);
+        let res = SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut gram);
+        assert!(res.converged);
+        assert!(res.gap <= 1e-3);
+        // symmetric problem: alpha = (a, -a) with a = l/q at optimum or bound
+        assert!((res.alpha[0] + res.alpha[1]).abs() < 1e-12);
+        assert!(res.alpha[0] > 0.0);
+        assert!(res.objective > 0.0);
+    }
+
+    #[test]
+    fn objective_is_monotonically_non_decreasing() {
+        let ds = random_problem(60, 3);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let cfg = SolverConfig {
+            telemetry: TelemetryConfig {
+                objective_trace: true,
+                trace_every: 1,
+                ..Default::default()
+            },
+            shrinking: false,
+            ..Default::default()
+        };
+        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        assert!(res.converged);
+        let trace = &res.telemetry.objective_trace;
+        assert!(trace.len() > 2);
+        for w in trace.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 - 1e-9,
+                "objective decreased: {} -> {}",
+                w[0].1,
+                w[1].1
+            );
+        }
+    }
+
+    #[test]
+    fn kkt_gap_below_eps_at_convergence() {
+        for seed in [1u64, 7, 13] {
+            let ds = random_problem(80, seed);
+            let mut gram = make_gram(&ds, 0.7, 1 << 22);
+            let res =
+                SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut gram);
+            assert!(res.converged, "seed {seed}");
+            assert!(res.gap <= 1e-3 + 1e-9, "seed {seed}: gap {}", res.gap);
+            // feasibility of the returned alpha
+            let sum: f64 = res.alpha.iter().sum();
+            assert!(sum.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shrinking_does_not_change_the_solution() {
+        let ds = random_problem(100, 11);
+        let mut g1 = make_gram(&ds, 1.2, 1 << 22);
+        let mut g2 = make_gram(&ds, 1.2, 1 << 22);
+        let on = SmoSolver::new(SolverConfig { shrinking: true, ..Default::default() })
+            .solve(ds.labels(), 1.5, &mut g1);
+        let off = SmoSolver::new(SolverConfig { shrinking: false, ..Default::default() })
+            .solve(ds.labels(), 1.5, &mut g2);
+        assert!(on.converged && off.converged);
+        assert!(
+            (on.objective - off.objective).abs() < 1e-3 * (1.0 + off.objective.abs()),
+            "{} vs {}",
+            on.objective,
+            off.objective
+        );
+    }
+
+    #[test]
+    fn max_violating_pair_wss_also_converges() {
+        let ds = random_problem(60, 5);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let cfg = SolverConfig { wss: WssKind::MaxViolating, ..Default::default() };
+        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        assert!(res.converged);
+        assert!(res.gap <= 1e-3 + 1e-9);
+    }
+
+    #[test]
+    fn over_relaxed_policy_converges_with_positive_gain() {
+        let ds = random_problem(60, 6);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let cfg = SolverConfig {
+            step_policy: OverStep::OverRelaxed(1.1),
+            ..Default::default()
+        };
+        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        assert!(res.converged);
+        assert!(res.gap <= 1e-3 + 1e-9);
+    }
+
+    #[test]
+    fn iteration_cap_reports_non_convergence() {
+        let ds = random_problem(100, 7);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let cfg = SolverConfig { max_iter: 3, ..Default::default() };
+        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        assert!(!res.converged);
+        assert!(res.iterations <= 4);
+    }
+
+    #[test]
+    fn free_and_bounded_steps_are_counted() {
+        let ds = random_problem(40, 8);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let cfg = SolverConfig {
+            telemetry: TelemetryConfig::fig3(),
+            ..Default::default()
+        };
+        let res = SmoSolver::new(cfg).solve(ds.labels(), 0.05, &mut gram);
+        // tiny C forces bounded steps
+        assert!(res.telemetry.bounded_steps > 0);
+        assert_eq!(res.telemetry.total_steps(), res.iterations);
+    }
+}

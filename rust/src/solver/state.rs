@@ -1,0 +1,297 @@
+//! Solver state: dual variables, gradient, box bounds and the active set.
+//!
+//! Conventions follow the paper exactly: labels enter through the bounds
+//! `Lᵢ = min(0, yᵢC)`, `Uᵢ = max(0, yᵢC)` (so α is *signed*: the decision
+//! coefficient is αᵢ itself, not yᵢαᵢ), the gradient is `G = ∇f = y − Kα`,
+//! and the index sets are `I_up = {i | αᵢ < Uᵢ}`, `I_down = {i | αᵢ > Lᵢ}`.
+
+/// Dual state for one training problem.
+///
+/// The solver actually handles the *general* box-and-hyperplane QP
+/// `max pᵀα − ½αᵀKα  s.t.  Σα = const, L ≤ α ≤ U` — classification is
+/// the special case `p = y`, `L/U` from `(y, C)`. ε-SVR and one-class
+/// SVM map onto the same state via [`SolverState::from_problem`]
+/// (see `svm::svr` / `svm::oneclass`).
+#[derive(Debug, Clone)]
+pub struct SolverState {
+    /// Linear term of the dual objective (`y` for classification).
+    pub y: Vec<f64>,
+    /// Dual variables (signed convention).
+    pub alpha: Vec<f64>,
+    /// Gradient `G = y − Kα`, maintained incrementally on the active set.
+    pub grad: Vec<f64>,
+    /// Lower bounds `Lᵢ`.
+    pub lower: Vec<f64>,
+    /// Upper bounds `Uᵢ`.
+    pub upper: Vec<f64>,
+    /// Active (unshrunk) original indices.
+    pub active: Vec<usize>,
+    /// Membership mirror of `active`.
+    pub is_active: Vec<bool>,
+}
+
+impl SolverState {
+    /// Fresh state at α = 0 (so `G = y`, no kernel evaluations — paper §2).
+    pub fn new(labels: &[i8], c: f64) -> SolverState {
+        assert!(c > 0.0, "C must be positive");
+        let n = labels.len();
+        let y: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+        let lower: Vec<f64> = y.iter().map(|&yi| (yi * c).min(0.0)).collect();
+        let upper: Vec<f64> = y.iter().map(|&yi| (yi * c).max(0.0)).collect();
+        SolverState {
+            grad: y.clone(),
+            alpha: vec![0.0; n],
+            y,
+            lower,
+            upper,
+            active: (0..n).collect(),
+            is_active: vec![true; n],
+        }
+    }
+
+    /// General dual problem with an explicit linear term, bounds and a
+    /// feasible warm start. `grad0` must equal `p − K α₀` (for `α₀ = 0`
+    /// pass `grad0 = p`).
+    pub fn from_problem(
+        linear: Vec<f64>,
+        lower: Vec<f64>,
+        upper: Vec<f64>,
+        alpha0: Vec<f64>,
+        grad0: Vec<f64>,
+    ) -> SolverState {
+        let n = linear.len();
+        assert!(
+            lower.len() == n && upper.len() == n && alpha0.len() == n && grad0.len() == n,
+            "problem vector lengths disagree"
+        );
+        for i in 0..n {
+            assert!(
+                lower[i] <= alpha0[i] && alpha0[i] <= upper[i],
+                "infeasible warm start at {i}"
+            );
+        }
+        SolverState {
+            y: linear,
+            alpha: alpha0,
+            grad: grad0,
+            lower,
+            upper,
+            active: (0..n).collect(),
+            is_active: vec![true; n],
+        }
+    }
+
+    /// Problem size ℓ.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// `i ∈ I_up(α)`?
+    #[inline]
+    pub fn in_up(&self, i: usize) -> bool {
+        self.alpha[i] < self.upper[i]
+    }
+
+    /// `i ∈ I_down(α)`?
+    #[inline]
+    pub fn in_down(&self, i: usize) -> bool {
+        self.alpha[i] > self.lower[i]
+    }
+
+    /// Step bounds `[L̃, Ũ]` for direction `v = e_i − e_j` (paper §2).
+    #[inline]
+    pub fn step_bounds(&self, i: usize, j: usize) -> (f64, f64) {
+        let lo = (self.lower[i] - self.alpha[i]).max(self.alpha[j] - self.upper[j]);
+        let hi = (self.upper[i] - self.alpha[i]).min(self.alpha[j] - self.lower[j]);
+        (lo, hi)
+    }
+
+    /// Apply the step `α ← α + μ(e_i − e_j)`, snapping to bounds to keep
+    /// the iterate exactly feasible under floating point.
+    pub fn apply_step(&mut self, i: usize, j: usize, mu: f64) {
+        self.alpha[i] += mu;
+        self.alpha[j] -= mu;
+        self.alpha[i] = self.alpha[i].clamp(self.lower[i], self.upper[i]);
+        self.alpha[j] = self.alpha[j].clamp(self.lower[j], self.upper[j]);
+    }
+
+    /// Dual objective from the maintained gradient in O(ℓ):
+    /// `f(α) = ½ (αᵀy + αᵀG)` since `G = y − Kα`.
+    pub fn objective(&self) -> f64 {
+        0.5 * self
+            .alpha
+            .iter()
+            .zip(self.y.iter().zip(&self.grad))
+            .map(|(&a, (&y, &g))| a * (y + g))
+            .sum::<f64>()
+    }
+
+    /// KKT gap over the *active* set:
+    /// `max{Gᵢ | i ∈ I_up} − min{Gⱼ | j ∈ I_down}` (paper step 4).
+    /// Returns `(m, big_m, gap)`; gap is −∞ if either set is empty.
+    pub fn kkt_gap_active(&self) -> (f64, f64, f64) {
+        let (m, big_m, gap, _) = self.kkt_scan();
+        (m, big_m, gap)
+    }
+
+    /// Single fused pass producing the stopping quantities *and* the
+    /// first-order WSS argmax `i = argmax{Gᵢ | i ∈ I_up}` — the hot loop
+    /// runs exactly one such scan per iteration (perf pass, EXPERIMENTS.md
+    /// §Perf). Returns `(m, big_m, gap, argmax_up)`.
+    pub fn kkt_scan(&self) -> (f64, f64, f64, Option<usize>) {
+        let mut m = f64::NEG_INFINITY;
+        let mut big_m = f64::INFINITY;
+        let mut argmax = None;
+        for &n in &self.active {
+            let g = self.grad[n];
+            if self.in_up(n) && g > m {
+                m = g;
+                argmax = Some(n);
+            }
+            if self.in_down(n) && g < big_m {
+                big_m = g;
+            }
+        }
+        if m == f64::NEG_INFINITY || big_m == f64::INFINITY {
+            (m, big_m, f64::NEG_INFINITY, argmax)
+        } else {
+            (m, big_m, m - big_m, argmax)
+        }
+    }
+
+    /// Bias from the KKT conditions: mean gradient over free SVs, falling
+    /// back to the midpoint of the violating-pair interval.
+    pub fn bias(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for i in 0..self.len() {
+            if self.in_up(i) && self.in_down(i) {
+                sum += self.grad[i];
+                count += 1;
+            }
+        }
+        if count > 0 {
+            sum / count as f64
+        } else {
+            let (m, big_m, _) = self.kkt_gap_active();
+            if m.is_finite() && big_m.is_finite() {
+                (m + big_m) / 2.0
+            } else {
+                0.0
+            }
+        }
+    }
+
+    /// Feasibility check for tests: box + equality constraint.
+    pub fn is_feasible(&self, tol: f64) -> bool {
+        let sum: f64 = self.alpha.iter().sum();
+        if sum.abs() > tol {
+            return false;
+        }
+        self.alpha
+            .iter()
+            .zip(self.lower.iter().zip(&self.upper))
+            .all(|(&a, (&lo, &hi))| a >= lo - tol && a <= hi + tol)
+    }
+
+    /// Support vector counts (total, bounded-at-box).
+    pub fn sv_counts(&self, tol: f64) -> (usize, usize) {
+        let mut sv = 0;
+        let mut bsv = 0;
+        for i in 0..self.len() {
+            if self.alpha[i].abs() > tol {
+                sv += 1;
+                if self.alpha[i] >= self.upper[i] - tol || self.alpha[i] <= self.lower[i] + tol
+                {
+                    bsv += 1;
+                }
+            }
+        }
+        (sv, bsv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_matches_paper() {
+        let s = SolverState::new(&[1, -1, 1], 2.0);
+        assert_eq!(s.alpha, vec![0.0; 3]);
+        assert_eq!(s.grad, vec![1.0, -1.0, 1.0]); // G(0) = y
+        assert_eq!(s.lower, vec![0.0, -2.0, 0.0]);
+        assert_eq!(s.upper, vec![2.0, 0.0, 2.0]);
+        assert!(s.is_feasible(0.0));
+        // at alpha=0 every +1 is in I_up only direction, -1 in I_down
+        assert!(s.in_up(0) && !s.in_down(0));
+        assert!(!s.in_up(1) || s.in_down(1));
+    }
+
+    #[test]
+    fn step_bounds_hand_computed() {
+        let mut s = SolverState::new(&[1, -1], 1.0);
+        // from zero: direction e0 - e1 can grow until alpha0 = 1 or alpha1 = -1
+        let (lo, hi) = s.step_bounds(0, 1);
+        assert_eq!((lo, hi), (0.0, 1.0));
+        s.apply_step(0, 1, 0.25);
+        let (lo, hi) = s.step_bounds(0, 1);
+        assert_eq!((lo, hi), (-0.25, 0.75));
+    }
+
+    #[test]
+    fn apply_step_keeps_feasibility_and_snaps() {
+        let mut s = SolverState::new(&[1, -1], 1.0);
+        s.apply_step(0, 1, 1.0 + 1e-16); // numerically slightly over
+        assert!(s.is_feasible(1e-12));
+        assert_eq!(s.alpha[0], 1.0);
+        assert_eq!(s.alpha[1], -1.0);
+    }
+
+    #[test]
+    fn objective_identity_vs_direct_computation() {
+        // 2-variable problem with explicit K
+        let k = [[1.0, 0.5], [0.5, 1.0]];
+        let mut s = SolverState::new(&[1, -1], 10.0);
+        let (a0, a1) = (0.7, -0.7);
+        s.alpha = vec![a0, a1];
+        // maintain G = y - K alpha by hand
+        s.grad = vec![
+            1.0 - (k[0][0] * a0 + k[0][1] * a1),
+            -1.0 - (k[1][0] * a0 + k[1][1] * a1),
+        ];
+        let direct = (1.0 * a0 + -1.0 * a1)
+            - 0.5
+                * (a0 * (k[0][0] * a0 + k[0][1] * a1) + a1 * (k[1][0] * a0 + k[1][1] * a1));
+        assert!((s.objective() - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kkt_gap_at_origin_is_two() {
+        // classic: at alpha=0, m = max G over I_up = 1 (a +1 example),
+        // M = min over I_down = -1 (a -1 example), gap = 2.
+        let s = SolverState::new(&[1, 1, -1, -1], 1.0);
+        let (m, big_m, gap) = s.kkt_gap_active();
+        assert_eq!((m, big_m, gap), (1.0, -1.0, 2.0));
+    }
+
+    #[test]
+    fn bias_prefers_free_svs() {
+        let mut s = SolverState::new(&[1, -1], 1.0);
+        s.alpha = vec![0.5, -0.5]; // both free
+        s.grad = vec![0.3, 0.1];
+        assert!((s.bias() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sv_counts_distinguish_bounded() {
+        let mut s = SolverState::new(&[1, 1, -1], 1.0);
+        s.alpha = vec![1.0, 0.5, -0.2];
+        let (sv, bsv) = s.sv_counts(1e-9);
+        assert_eq!((sv, bsv), (3, 1));
+    }
+}

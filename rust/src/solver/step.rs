@@ -1,0 +1,325 @@
+//! The 1-D SMO sub-problem and the planning-ahead step mathematics —
+//! pure functions implementing the paper's equations (2), (4), (6)–(8).
+//!
+//! All quantities follow the paper's notation for a working-set tuple
+//! `B = (i, j)` with direction `v_B = e_i − e_j`:
+//! `l = v_Bᵀ∇f(α) = G_i − G_j`, `q = v_BᵀKv_B = K_ii − 2K_ij + K_jj`.
+
+/// Numerical floor for vanishing curvature (LIBSVM's τ).
+pub const TAU: f64 = 1e-12;
+
+/// The 1-D sub-problem `max_μ  l·μ − ½ q·μ²  s.t. lo ≤ μ ≤ hi`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubProblem {
+    pub l: f64,
+    pub q: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl SubProblem {
+    /// Unconstrained Newton step `μ* = l/q` (paper eq. 2's interior case).
+    /// Degenerate curvature (`q ≤ TAU`): the objective is (sub-)linear in
+    /// this direction, so the maximizer is ±∞ by the sign of `l` (paper
+    /// Fig. 2 caption); `l = 0` gives `μ* = 0`.
+    pub fn newton_step(&self) -> f64 {
+        if self.q > TAU {
+            self.l / self.q
+        } else if self.l > 0.0 {
+            f64::INFINITY
+        } else if self.l < 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            0.0
+        }
+    }
+
+    /// The SMO step: Newton clipped to the feasible interval (eq. 2).
+    pub fn clipped_step(&self) -> f64 {
+        clamp(self.newton_step(), self.lo, self.hi)
+    }
+
+    /// Is the SMO step *free* (interior Newton step, paper §2)?
+    pub fn is_free(&self) -> bool {
+        let mu = self.newton_step();
+        mu.is_finite() && mu > self.lo && mu < self.hi
+    }
+
+    /// Gain of an arbitrary step size: `g(μ) = l·μ − ½ q·μ²`.
+    pub fn gain(&self, mu: f64) -> f64 {
+        self.l * mu - 0.5 * self.q * mu * mu
+    }
+}
+
+/// NaN-safe clamp that also tolerates `lo > hi` (empty direction set —
+/// can happen transiently for a bounded pair; collapses to lo).
+#[inline]
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.min(hi).max(lo)
+}
+
+/// The second-order working-set-selection gain `ĝ_B(α)` (paper eq. 3):
+/// `½ l² / q`, exact iff the step is unconstrained. Vanishing curvature
+/// with a nonzero linear term gives ∞ (paper's footnote-1 case handled
+/// without LIBSVM's τ-floor); we still expose a τ-floored variant for the
+/// LIBSVM-compatible selection path.
+pub fn newton_gain(l: f64, q: f64) -> f64 {
+    if q > TAU {
+        0.5 * l * l / q
+    } else if l != 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
+}
+
+/// LIBSVM-compatible gain with τ-floored denominator (finite, orderable).
+pub fn newton_gain_tau(l: f64, q: f64) -> f64 {
+    0.5 * l * l / q.max(TAU)
+}
+
+/// The 2×2 planning system of paper §4 for working sets B¹ (current) and
+/// B² (predicted next): `w_t = v_{B^t}ᵀ∇f(α⁰)`, `Q_st = v_{B^s}ᵀ K v_{B^t}`.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanningSystem {
+    pub w1: f64,
+    pub w2: f64,
+    pub q11: f64,
+    pub q12: f64,
+    pub q22: f64,
+}
+
+impl PlanningSystem {
+    /// `det(Q) = Q₁₁Q₂₂ − Q₁₂²` (≥ 0 for PSD K, barring rounding).
+    pub fn det(&self) -> f64 {
+        self.q11 * self.q22 - self.q12 * self.q12
+    }
+
+    /// Planning-ahead step size (paper eq. 8):
+    /// `μ¹ = (Q₂₂w₁ − Q₁₂w₂) / det(Q)`.
+    /// `None` when the system is degenerate (near-zero determinant or
+    /// vanishing Q₂₂) — callers fall back to the plain SMO step, exactly
+    /// as Algorithms 2/4 revert on infeasibility.
+    pub fn planning_step(&self) -> Option<f64> {
+        if self.q22 <= TAU {
+            return None;
+        }
+        let det = self.det();
+        if det <= TAU * self.q11.max(self.q22).max(1.0) {
+            return None;
+        }
+        Some((self.q22 * self.w1 - self.q12 * self.w2) / det)
+    }
+
+    /// The greedy second step given the first (paper eq. 6):
+    /// `μ² = w₂/Q₂₂ − (Q₁₂/Q₂₂)·μ¹`.
+    pub fn second_step(&self, mu1: f64) -> f64 {
+        debug_assert!(self.q22 > TAU);
+        (self.w2 - self.q12 * mu1) / self.q22
+    }
+
+    /// Double-step gain as a function of μ¹ (paper eq. 7):
+    /// `g(μ¹) = −½·det(Q)/Q₂₂·(μ¹)² + (Q₂₂w₁ − Q₁₂w₂)/Q₂₂·μ¹ + ½·w₂²/Q₂₂`.
+    pub fn double_step_gain(&self, mu1: f64) -> f64 {
+        debug_assert!(self.q22 > TAU);
+        -0.5 * self.det() / self.q22 * mu1 * mu1
+            + (self.q22 * self.w1 - self.q12 * self.w2) / self.q22 * mu1
+            + 0.5 * self.w2 * self.w2 / self.q22
+    }
+}
+
+/// Step-size policy for the update step — the §7.3 ablation knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverStep {
+    /// Plain truncated Newton (eq. 2).
+    Newton,
+    /// The "heretical" fixed over-relaxation `μ = clip(factor · l/q)`
+    /// (§7.3 uses 1.1; any factor in (0,2) keeps positive gain, Fig. 2).
+    OverRelaxed(f64),
+}
+
+impl OverStep {
+    /// Apply the policy to a sub-problem.
+    pub fn step(&self, sp: &SubProblem) -> f64 {
+        match *self {
+            OverStep::Newton => sp.clipped_step(),
+            OverStep::OverRelaxed(f) => {
+                let newton = sp.newton_step();
+                if newton.is_finite() {
+                    clamp(f * newton, sp.lo, sp.hi)
+                } else {
+                    sp.clipped_step()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn newton_and_clipping_hand_computed() {
+        let sp = SubProblem { l: 2.0, q: 4.0, lo: -1.0, hi: 10.0 };
+        assert_eq!(sp.newton_step(), 0.5);
+        assert_eq!(sp.clipped_step(), 0.5);
+        assert!(sp.is_free());
+        let sp = SubProblem { hi: 0.25, ..sp };
+        assert_eq!(sp.clipped_step(), 0.25);
+        assert!(!sp.is_free());
+    }
+
+    #[test]
+    fn degenerate_curvature_cases() {
+        let sp = SubProblem { l: 1.0, q: 0.0, lo: -2.0, hi: 3.0 };
+        assert_eq!(sp.newton_step(), f64::INFINITY);
+        assert_eq!(sp.clipped_step(), 3.0); // linear ascent to the bound
+        let sp = SubProblem { l: -1.0, ..sp };
+        assert_eq!(sp.clipped_step(), -2.0);
+        let sp = SubProblem { l: 0.0, ..sp };
+        assert_eq!(sp.clipped_step(), 0.0);
+    }
+
+    #[test]
+    fn newton_gain_matches_gain_at_newton_step() {
+        let sp = SubProblem { l: 3.0, q: 1.5, lo: -100.0, hi: 100.0 };
+        let mu = sp.newton_step();
+        assert!((sp.gain(mu) - newton_gain(sp.l, sp.q)).abs() < 1e-12);
+        // eq. (4) equivalent form: 0.5 * q * mu^2
+        assert!((newton_gain(sp.l, sp.q) - 0.5 * sp.q * mu * mu).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gain_is_positive_iff_relative_step_in_zero_two() {
+        // Paper Fig. 2: positive progress iff mu/mu* in (0, 2).
+        let sp = SubProblem { l: 2.0, q: 1.0, lo: -1e9, hi: 1e9 };
+        let mu_star = sp.newton_step();
+        for (ratio, positive) in [
+            (0.1, true),
+            (0.5, true),
+            (1.0, true),
+            (1.9, true),
+            (2.0, false),
+            (2.1, false),
+            (-0.1, false),
+            (0.0, false),
+        ] {
+            let g = sp.gain(ratio * mu_star);
+            assert_eq!(g > 0.0, positive, "ratio={ratio}, g={g}");
+        }
+    }
+
+    #[test]
+    fn eta_band_gain_bound() {
+        // For mu/mu* in [1-eta, 1+eta], gain >= (1-eta^2) * newton gain.
+        let eta = 0.9;
+        let sp = SubProblem { l: 1.7, q: 0.6, lo: -1e9, hi: 1e9 };
+        let gstar = newton_gain(sp.l, sp.q);
+        let mu_star = sp.newton_step();
+        for k in 0..=20 {
+            let ratio = (1.0 - eta) + 2.0 * eta * (k as f64 / 20.0);
+            let g = sp.gain(ratio * mu_star);
+            assert!(
+                g >= (1.0 - eta * eta) * gstar - 1e-12,
+                "ratio={ratio}: {g} < {}",
+                (1.0 - eta * eta) * gstar
+            );
+        }
+    }
+
+    #[test]
+    fn planning_step_recovers_exact_2d_optimum() {
+        // Solve max w.mu - 0.5 mu^T Q mu exactly and compare: the planned
+        // first step followed by the greedy second step must land on the
+        // unconstrained optimizer of the 2-variable problem.
+        let ps = PlanningSystem { w1: 1.0, w2: 0.5, q11: 2.0, q12: 0.8, q22: 1.5 };
+        let mu1 = ps.planning_step().unwrap();
+        let mu2 = ps.second_step(mu1);
+        // optimum: Q [mu1 mu2]^T = [w1 w2]^T
+        assert!((ps.q11 * mu1 + ps.q12 * mu2 - ps.w1).abs() < 1e-12);
+        assert!((ps.q12 * mu1 + ps.q22 * mu2 - ps.w2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn double_step_gain_formula_matches_quadratic_form() {
+        forall(
+            "double-step-gain-eq7",
+            200,
+            |g| PlanningSystem {
+                w1: g.normal() * 2.0,
+                w2: g.normal() * 2.0,
+                // random PSD 2x2: A^T A
+                q11: 0.0,
+                q12: 0.0,
+                q22: 0.0,
+            }
+            .into_psd(g),
+            |ps| {
+                if ps.q22 <= TAU || ps.det() <= 1e-9 {
+                    return Ok(()); // degenerate draws are skipped
+                }
+                for mu1 in [-1.5, -0.3, 0.0, 0.4, 1.0, 2.5] {
+                    let mu2 = ps.second_step(mu1);
+                    let direct = ps.w1 * mu1 + ps.w2 * mu2
+                        - 0.5
+                            * (ps.q11 * mu1 * mu1
+                                + 2.0 * ps.q12 * mu1 * mu2
+                                + ps.q22 * mu2 * mu2);
+                    let via_eq7 = ps.double_step_gain(mu1);
+                    if (direct - via_eq7).abs() > 1e-9 * (1.0 + direct.abs()) {
+                        return Err(format!("mu1={mu1}: {direct} vs {via_eq7}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn planning_step_maximizes_double_gain() {
+        let ps = PlanningSystem { w1: -0.7, w2: 1.9, q11: 3.0, q12: -1.1, q22: 2.0 };
+        let mu_opt = ps.planning_step().unwrap();
+        let g_opt = ps.double_step_gain(mu_opt);
+        for d in [-0.5, -0.1, 0.1, 0.5] {
+            assert!(ps.double_step_gain(mu_opt + d) < g_opt + 1e-12);
+        }
+        // and it beats the greedy (Newton-first) choice whenever Q12 != 0
+        let greedy = ps.w1 / ps.q11;
+        assert!(g_opt >= ps.double_step_gain(greedy) - 1e-12);
+    }
+
+    #[test]
+    fn planning_degenerate_returns_none() {
+        // identical working sets: Q12 = Q11 = Q22 -> det = 0
+        let ps = PlanningSystem { w1: 1.0, w2: 1.0, q11: 2.0, q12: 2.0, q22: 2.0 };
+        assert!(ps.planning_step().is_none());
+        let ps = PlanningSystem { q22: 0.0, ..ps };
+        assert!(ps.planning_step().is_none());
+    }
+
+    #[test]
+    fn over_relaxed_policy() {
+        let sp = SubProblem { l: 2.0, q: 1.0, lo: -10.0, hi: 10.0 };
+        assert_eq!(OverStep::Newton.step(&sp), 2.0);
+        assert!((OverStep::OverRelaxed(1.1).step(&sp) - 2.2).abs() < 1e-12);
+        // clipping still applies
+        let sp = SubProblem { hi: 2.1, ..sp };
+        assert_eq!(OverStep::OverRelaxed(1.1).step(&sp), 2.1);
+        // degenerate curvature falls back to the SMO step
+        let sp = SubProblem { l: 1.0, q: 0.0, lo: -1.0, hi: 1.0 };
+        assert_eq!(OverStep::OverRelaxed(1.1).step(&sp), 1.0);
+    }
+
+    impl PlanningSystem {
+        /// Test helper: fill Q with a random PSD matrix AᵀA.
+        fn into_psd(mut self, g: &mut crate::util::prng::Pcg) -> PlanningSystem {
+            let (a, b, c, d) = (g.normal(), g.normal(), g.normal(), g.normal());
+            self.q11 = a * a + c * c;
+            self.q12 = a * b + c * d;
+            self.q22 = b * b + d * d;
+            self
+        }
+    }
+}

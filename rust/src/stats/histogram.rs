@@ -1,0 +1,154 @@
+//! Log-resolution histogram for Figure 3.
+//!
+//! The paper plots histograms of `μ/μ* − 1` using the symmetric
+//! parameterization `t ↦ sign(t)·(10^{t²/2} − 1)` on the x-axis (high
+//! resolution around the Newton step, log growth outward) and a log count
+//! axis. We bin in `t`-space: the inverse map is
+//! `t(r) = sign(r)·sqrt(2·log10(1 + |r|))`.
+
+/// Fixed-bin histogram in the paper's Figure-3 parameterization, with an
+/// explicit overflow bin on each side ("the rightmost bin counts all
+/// steps which exceed the scale").
+#[derive(Debug, Clone)]
+pub struct Fig3Histogram {
+    /// Bin edges in t-space (len = bins + 1), symmetric around 0.
+    pub t_max: f64,
+    pub bins: usize,
+    counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub total: u64,
+}
+
+/// Forward map of the paper's x-axis: t -> relative step offset r.
+pub fn t_to_ratio(t: f64) -> f64 {
+    t.signum() * (10f64.powf(t * t / 2.0) - 1.0)
+}
+
+/// Inverse map: relative step offset r = μ/μ* − 1 -> t.
+pub fn ratio_to_t(r: f64) -> f64 {
+    r.signum() * (2.0 * (1.0 + r.abs()).log10()).sqrt()
+}
+
+impl Fig3Histogram {
+    /// `t_max = 3` covers ratios up to ~10^4.5 − 1, matching the paper's
+    /// scale; larger offsets land in the overflow bin.
+    pub fn new(bins: usize, t_max: f64) -> Fig3Histogram {
+        assert!(bins >= 2 && t_max > 0.0);
+        Fig3Histogram {
+            t_max,
+            bins,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    /// Record one planning step's `μ/μ* − 1`.
+    pub fn record(&mut self, ratio_minus_one: f64) {
+        self.total += 1;
+        let t = ratio_to_t(ratio_minus_one);
+        if t < -self.t_max {
+            self.underflow += 1;
+            return;
+        }
+        if t >= self.t_max {
+            self.overflow += 1;
+            return;
+        }
+        let idx = ((t + self.t_max) / (2.0 * self.t_max) * self.bins as f64) as usize;
+        self.counts[idx.min(self.bins - 1)] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bin center in t-space.
+    pub fn t_center(&self, bin: usize) -> f64 {
+        -self.t_max + (bin as f64 + 0.5) / self.bins as f64 * 2.0 * self.t_max
+    }
+
+    /// Render an ASCII sketch (log-scaled bar lengths), one line per
+    /// non-empty bin: `t-center  ratio  count  bar`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        out.push_str("   t-center     mu/mu*-1        count\n");
+        if self.underflow > 0 {
+            out.push_str(&format!("   < -{:<8.2} (underflow) {:>10}\n", self.t_max, self.underflow));
+        }
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let bar_len = (((c as f64).ln_1p() / (max as f64).ln_1p()) * 40.0) as usize;
+            out.push_str(&format!(
+                "   {:>8.2}  {:>12.4}  {:>10}  {}\n",
+                self.t_center(b),
+                t_to_ratio(self.t_center(b)),
+                c,
+                "#".repeat(bar_len.max(1))
+            ));
+        }
+        if self.overflow > 0 {
+            out.push_str(&format!("   > +{:<8.2} (overflow)  {:>10}\n", self.t_max, self.overflow));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameterization_round_trips() {
+        for r in [-0.99, -0.5, 0.0, 0.1, 1.0, 100.0, 1e4] {
+            let t = ratio_to_t(r);
+            assert!((t_to_ratio(t) - r).abs() < 1e-9 * (1.0 + r.abs()), "r={r}");
+        }
+    }
+
+    #[test]
+    fn newton_step_lands_in_central_bin() {
+        let mut h = Fig3Histogram::new(40, 3.0);
+        h.record(0.0);
+        let central = h.counts()[20]; // t=0 is at the center boundary -> bin 20
+        assert_eq!(central, 1);
+    }
+
+    #[test]
+    fn overflow_counts_extreme_steps() {
+        let mut h = Fig3Histogram::new(10, 2.0);
+        h.record(1e9); // far beyond scale
+        h.record(-1e9);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.total, 2);
+    }
+
+    #[test]
+    fn asymmetric_mass_shows_up_on_the_right() {
+        let mut h = Fig3Histogram::new(20, 3.0);
+        for i in 0..100 {
+            h.record(0.05 + i as f64 * 0.1); // enlarged steps only
+        }
+        let left: u64 = h.counts()[..10].iter().sum();
+        let right: u64 = h.counts()[10..].iter().sum();
+        assert_eq!(left, 0);
+        assert_eq!(right + h.overflow, 100);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let mut h = Fig3Histogram::new(8, 2.0);
+        for _ in 0..5 {
+            h.record(0.1);
+        }
+        let s = h.render();
+        assert!(s.contains('5'), "{s}");
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,10 @@
+//! Statistics substrate: summary statistics, the paired Wilcoxon
+//! signed-rank test (the paper's significance machinery for Table 2),
+//! and the log-scale histogram used by Figure 3.
+
+pub mod histogram;
+pub mod summary;
+pub mod wilcoxon;
+
+pub use summary::Summary;
+pub use wilcoxon::{wilcoxon_signed_rank, WilcoxonOutcome};

@@ -1,0 +1,222 @@
+//! Paired Wilcoxon signed-rank test — the significance test behind the
+//! ">" markers in the paper's Table 2 ("paired Wilcoxon rank sum test,
+//! p = 0.05 over 100 permutations of the datasets").
+//!
+//! Implementation: exact null distribution by dynamic programming for
+//! n ≤ 25 (no ties across |differences| assumed; ties get average ranks
+//! and fall back to the normal approximation), normal approximation with
+//! tie correction and continuity correction otherwise.
+
+/// Test outcome for paired samples (a vs b).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WilcoxonOutcome {
+    /// Number of non-zero differences actually used.
+    pub n_used: usize,
+    /// Signed-rank statistic W+ (sum of ranks of positive differences a>b).
+    pub w_plus: f64,
+    /// Two-sided p-value.
+    pub p_two_sided: f64,
+    /// One-sided p-value for the alternative "a > b".
+    pub p_greater: f64,
+    /// One-sided p-value for the alternative "a < b".
+    pub p_less: f64,
+}
+
+impl WilcoxonOutcome {
+    /// The paper's table marker at level `alpha`:
+    /// `Some(true)` = a significantly greater, `Some(false)` = b greater.
+    pub fn significantly_greater(&self, alpha: f64) -> Option<bool> {
+        if self.p_greater <= alpha {
+            Some(true)
+        } else if self.p_less <= alpha {
+            Some(false)
+        } else {
+            None
+        }
+    }
+}
+
+/// Run the paired test on equal-length samples. Zero differences are
+/// dropped (standard Wilcoxon practice). Returns None if fewer than 3
+/// usable pairs remain.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Option<WilcoxonOutcome> {
+    assert_eq!(a.len(), b.len(), "paired test needs equal lengths");
+    let mut diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| x - y)
+        .filter(|d| *d != 0.0)
+        .collect();
+    let n = diffs.len();
+    if n < 3 {
+        return None;
+    }
+    // Rank |d| ascending with average ranks for ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| diffs[i].abs().partial_cmp(&diffs[j].abs()).unwrap());
+    let mut ranks = vec![0f64; n];
+    let mut has_ties = false;
+    let mut tie_correction = 0.0f64; // Σ (t³ - t) over tie groups
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && diffs[order[j + 1]].abs() == diffs[order[i]].abs() {
+            j += 1;
+        }
+        let avg_rank = (i + j + 2) as f64 / 2.0; // ranks are 1-based
+        for k in i..=j {
+            ranks[order[k]] = avg_rank;
+        }
+        let t = (j - i + 1) as f64;
+        if t > 1.0 {
+            has_ties = true;
+            tie_correction += t * t * t - t;
+        }
+        i = j + 1;
+    }
+    let w_plus: f64 = (0..n).filter(|&k| diffs[k] > 0.0).map(|k| ranks[k]).sum();
+
+    let (p_greater, p_less) = if n <= 25 && !has_ties {
+        exact_p(w_plus, n)
+    } else {
+        normal_p(w_plus, n, tie_correction)
+    };
+    let p_two = (2.0 * p_greater.min(p_less)).min(1.0);
+    diffs.clear();
+    Some(WilcoxonOutcome {
+        n_used: n,
+        w_plus,
+        p_two_sided: p_two,
+        p_greater,
+        p_less,
+    })
+}
+
+/// Exact null distribution of W+ by DP: counts[w] = #subsets of {1..n}
+/// with sum w. P(W+ >= w) etc. under the symmetric null.
+fn exact_p(w_plus: f64, n: usize) -> (f64, f64) {
+    let max_w = n * (n + 1) / 2;
+    let mut counts = vec![0f64; max_w + 1];
+    counts[0] = 1.0;
+    for r in 1..=n {
+        for w in (r..=max_w).rev() {
+            counts[w] += counts[w - r];
+        }
+    }
+    let total: f64 = counts.iter().sum(); // = 2^n
+    let w = w_plus.round() as usize;
+    let p_ge: f64 = counts[w..].iter().sum::<f64>() / total;
+    let p_le: f64 = counts[..=w].iter().sum::<f64>() / total;
+    // alternative "a > b" means large W+ -> p_greater = P(W+ >= w)
+    (p_ge, p_le)
+}
+
+/// Normal approximation with tie and continuity correction.
+fn normal_p(w_plus: f64, n: usize, tie_correction: f64) -> (f64, f64) {
+    let nf = n as f64;
+    let mean = nf * (nf + 1.0) / 4.0;
+    let var = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_correction / 48.0;
+    let sd = var.sqrt().max(1e-12);
+    let z_greater = (w_plus - mean - 0.5) / sd;
+    let z_less = (w_plus - mean + 0.5) / sd;
+    (1.0 - phi(z_greater), phi(z_less))
+}
+
+/// Standard normal CDF via erf (Abramowitz-Stegun 7.1.26, |err| < 1.5e-7).
+pub fn phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn clearly_greater_sample_is_significant() {
+        let a: Vec<f64> = (0..20).map(|i| 10.0 + i as f64).collect();
+        let b: Vec<f64> = (0..20).map(|i| 1.0 + 0.1 * i as f64).collect();
+        let out = wilcoxon_signed_rank(&a, &b).unwrap();
+        assert!(out.p_greater < 0.001, "{out:?}");
+        assert_eq!(out.significantly_greater(0.05), Some(true));
+        // symmetric call flips the verdict
+        let out2 = wilcoxon_signed_rank(&b, &a).unwrap();
+        assert_eq!(out2.significantly_greater(0.05), Some(false));
+    }
+
+    #[test]
+    fn identical_samples_give_none() {
+        let a = vec![1.0; 10];
+        assert!(wilcoxon_signed_rank(&a, &a).is_none());
+    }
+
+    #[test]
+    fn exact_matches_known_small_case() {
+        // n=5, all differences positive -> W+ = 15, P(W+ >= 15) = 1/32.
+        let a = vec![2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 1.5, 2.0, 2.5, 3.0];
+        let out = wilcoxon_signed_rank(&a, &b).unwrap();
+        assert_eq!(out.w_plus, 15.0);
+        assert!((out.p_greater - 1.0 / 32.0).abs() < 1e-12, "{out:?}");
+        assert!((out.p_two_sided - 2.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_and_normal_agree_for_moderate_n() {
+        // Construct n=20 with distinct |d|, compute both ways.
+        let mut rng = Pcg::new(3);
+        let a: Vec<f64> = (0..20).map(|i| i as f64 + rng.uniform() * 0.3).collect();
+        let b: Vec<f64> = a.iter().map(|x| x - 0.4 - 0.01 * x).collect();
+        let out = wilcoxon_signed_rank(&a, &b).unwrap(); // exact branch
+        let (pg_n, pl_n) = normal_p(out.w_plus, out.n_used, 0.0);
+        assert!((out.p_greater - pg_n).abs() < 0.02, "{} vs {pg_n}", out.p_greater);
+        assert!((out.p_less - pl_n).abs() < 0.02);
+    }
+
+    #[test]
+    fn null_distribution_rejects_at_nominal_rate() {
+        // Property: under H0 (paired samples from the same distribution)
+        // the test should reject ~5% of the time at alpha = 0.05.
+        let mut rng = Pcg::new(42);
+        let trials = 400;
+        let mut rejections = 0;
+        for _ in 0..trials {
+            let a: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+            if let Some(out) = wilcoxon_signed_rank(&a, &b) {
+                if out.p_two_sided <= 0.05 {
+                    rejections += 1;
+                }
+            }
+        }
+        let rate = rejections as f64 / trials as f64;
+        assert!(rate < 0.12, "type-I rate {rate} too high");
+    }
+
+    #[test]
+    fn phi_sanity() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-7);
+        assert!((phi(1.96) - 0.975).abs() < 1e-3);
+        assert!(phi(-6.0) < 1e-8);
+    }
+
+    #[test]
+    fn zero_differences_are_dropped() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 2.0, 2.0, 3.0, 4.0, 5.0];
+        let out = wilcoxon_signed_rank(&a, &b).unwrap();
+        assert_eq!(out.n_used, 4);
+    }
+}

@@ -1,0 +1,67 @@
+//! k-fold cross-validation (the model-selection machinery behind the
+//! paper's Table-1 grid search).
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::data::splits::kfold;
+
+use super::predict::accuracy;
+use super::train::{train, TrainConfig};
+
+/// Result of a cross-validation run.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    pub fold_accuracies: Vec<f64>,
+    pub mean_accuracy: f64,
+}
+
+/// k-fold cross-validated accuracy of `cfg` on `data`.
+pub fn cross_validate(data: &Dataset, cfg: &TrainConfig, k: usize, seed: u64) -> CvResult {
+    let folds = kfold(data.len(), k, seed);
+    let mut fold_accuracies = Vec::with_capacity(k);
+    for (train_idx, test_idx) in folds {
+        let train_set = Arc::new(data.subset(&train_idx));
+        let test_set = data.subset(&test_idx);
+        let (model, _) = train(&train_set, cfg);
+        fold_accuracies.push(accuracy(&model, &test_set));
+    }
+    let mean_accuracy = fold_accuracies.iter().sum::<f64>() / k as f64;
+    CvResult { fold_accuracies, mean_accuracy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::data::synth::surrogate::{surrogate, SurrogateSpec};
+
+    #[test]
+    fn cv_on_separable_data_is_accurate() {
+        let ds = chessboard(240, 4, 5);
+        let cfg = TrainConfig::new(100.0, 0.5);
+        let cv = cross_validate(&ds, &cfg, 4, 1);
+        assert_eq!(cv.fold_accuracies.len(), 4);
+        assert!(cv.mean_accuracy > 0.75, "{:?}", cv);
+    }
+
+    #[test]
+    fn cv_detects_hopeless_configurations() {
+        // label noise 50% => accuracy ~ 0.5 regardless of config
+        let spec = SurrogateSpec { label_noise: 0.5, ..Default::default() };
+        let ds = surrogate(160, &spec, 3);
+        let cfg = TrainConfig::new(1.0, 0.1);
+        let cv = cross_validate(&ds, &cfg, 4, 2);
+        assert!(cv.mean_accuracy < 0.72, "noise should cap accuracy: {:?}", cv);
+    }
+
+    #[test]
+    fn folds_use_disjoint_test_data() {
+        // indirectly: fold accuracies vary but mean is stable across seeds
+        let ds = chessboard(160, 4, 6);
+        let cfg = TrainConfig::new(10.0, 0.5);
+        let a = cross_validate(&ds, &cfg, 4, 1).mean_accuracy;
+        let b = cross_validate(&ds, &cfg, 4, 99).mean_accuracy;
+        assert!((a - b).abs() < 0.25);
+    }
+}

@@ -1,0 +1,111 @@
+//! Grid search over (C, γ) on cross-validation accuracy — how the paper
+//! selected the Table-1 hyper-parameters ("grid search on the
+//! cross-validation error to ensure … the resulting classifiers
+//! generalize reasonably well").
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+
+use super::crossval::cross_validate;
+use super::train::TrainConfig;
+
+/// One evaluated grid point.
+#[derive(Debug, Clone, Copy)]
+pub struct GridPoint {
+    pub c: f64,
+    pub gamma: f64,
+    pub cv_accuracy: f64,
+}
+
+/// Result of a grid search.
+#[derive(Debug, Clone)]
+pub struct GridSearchResult {
+    pub evaluated: Vec<GridPoint>,
+    pub best: GridPoint,
+}
+
+/// Exhaustive grid search with `k`-fold CV. Ties break toward smaller C
+/// then smaller γ (prefer the smoother machine).
+pub fn grid_search(
+    data: &Dataset,
+    cs: &[f64],
+    gammas: &[f64],
+    k: usize,
+    seed: u64,
+    base: &TrainConfig,
+) -> GridSearchResult {
+    assert!(!cs.is_empty() && !gammas.is_empty());
+    let mut evaluated = Vec::with_capacity(cs.len() * gammas.len());
+    for &c in cs {
+        for &gamma in gammas {
+            let cfg = TrainConfig {
+                c,
+                kernel: KernelFunction::Rbf { gamma },
+                ..*base
+            };
+            let cv = cross_validate(data, &cfg, k, seed);
+            evaluated.push(GridPoint { c, gamma, cv_accuracy: cv.mean_accuracy });
+        }
+    }
+    let best = *evaluated
+        .iter()
+        .max_by(|a, b| {
+            (a.cv_accuracy, -a.c, -a.gamma)
+                .partial_cmp(&(b.cv_accuracy, -b.c, -b.gamma))
+                .unwrap()
+        })
+        .unwrap();
+    GridSearchResult { evaluated, best }
+}
+
+/// The standard logarithmic grid `base^lo .. base^hi`.
+pub fn log_grid(base: f64, lo: i32, hi: i32) -> Vec<f64> {
+    (lo..=hi).map(|e| base.powi(e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+
+    #[test]
+    fn log_grid_values() {
+        assert_eq!(log_grid(10.0, -1, 1), vec![0.1, 1.0, 10.0]);
+        assert_eq!(log_grid(2.0, 0, 2), vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn finds_a_sensible_region_on_chessboard() {
+        let ds = chessboard(200, 4, 7);
+        let base = TrainConfig::new(1.0, 1.0);
+        let res = grid_search(
+            &ds,
+            &[1.0, 100.0],
+            &[0.005, 0.5],
+            3,
+            1,
+            &base,
+        );
+        assert_eq!(res.evaluated.len(), 4);
+        // the wide-kernel tiny-C corner should not win on chessboard
+        assert!(res.best.cv_accuracy >= 0.6, "{:?}", res.best);
+        assert!(
+            !(res.best.c == 1.0 && res.best.gamma == 0.005),
+            "degenerate corner won: {:?}",
+            res.best
+        );
+    }
+
+    #[test]
+    fn evaluates_full_grid() {
+        let ds = chessboard(100, 4, 8);
+        let base = TrainConfig::new(1.0, 1.0);
+        let res = grid_search(&ds, &[0.1, 1.0, 10.0], &[0.1, 1.0], 3, 2, &base);
+        assert_eq!(res.evaluated.len(), 6);
+        let best_in_list = res
+            .evaluated
+            .iter()
+            .any(|p| p.c == res.best.c && p.gamma == res.best.gamma);
+        assert!(best_in_list);
+    }
+}

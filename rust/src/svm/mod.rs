@@ -1,0 +1,15 @@
+//! High-level SVM API: classification train / predict / cross-validation
+//! / grid search, plus ε-SVR, one-class SVM and Platt probability
+//! calibration — all driven by the same PA-SMO solver core.
+pub mod crossval;
+pub mod gridsearch;
+pub mod model;
+pub mod multiclass;
+pub mod oneclass;
+pub mod platt;
+pub mod predict;
+pub mod svr;
+pub mod train;
+
+pub use model::SvmModel;
+pub use train::{train, SolverChoice, TrainConfig};

@@ -1,0 +1,216 @@
+//! The trained SVM model: support vectors, signed dual coefficients, bias.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+use crate::util::json::Json;
+
+/// A trained binary SVM classifier.
+///
+/// In the paper's signed-α convention the decision function is
+/// `f(x) = Σ_s coef_s · k(x_s, x) + b` with `coef_s = α_s` (the label sign
+/// is already inside α).
+#[derive(Debug, Clone)]
+pub struct SvmModel {
+    pub kernel: KernelFunction,
+    /// Support vectors (rows with α ≠ 0).
+    pub support: Dataset,
+    /// Signed dual coefficients, aligned with `support` rows.
+    pub coef: Vec<f64>,
+    pub bias: f64,
+}
+
+impl SvmModel {
+    /// Build from a full training set and its dual solution, keeping only
+    /// the support vectors.
+    pub fn from_solution(
+        data: &Dataset,
+        alpha: &[f64],
+        bias: f64,
+        kernel: KernelFunction,
+        tol: f64,
+    ) -> SvmModel {
+        assert_eq!(data.len(), alpha.len());
+        let mut support = Dataset::with_dim(data.dim());
+        let mut coef = Vec::new();
+        for i in 0..data.len() {
+            if alpha[i].abs() > tol {
+                support.push(data.row(i), data.label(i));
+                coef.push(alpha[i]);
+            }
+        }
+        SvmModel { kernel, support, coef, bias }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Decision value `f(x)`.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        let mut f = self.bias;
+        for s in 0..self.support.len() {
+            f += self.coef[s] * self.kernel.eval(self.support.row(s), x);
+        }
+        f
+    }
+
+    /// Predicted label (±1; 0-decision maps to +1, LIBSVM convention).
+    pub fn predict(&self, x: &[f32]) -> i8 {
+        if self.decision(x) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Serialize to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::collections::BTreeMap;
+        let mut obj = BTreeMap::new();
+        let (kname, gamma, coef0, degree) = match self.kernel {
+            KernelFunction::Rbf { gamma } => ("rbf", gamma, 0.0, 0),
+            KernelFunction::Linear => ("linear", 0.0, 0.0, 0),
+            KernelFunction::Poly { gamma, coef0, degree } => ("poly", gamma, coef0, degree),
+            KernelFunction::Sigmoid { gamma, coef0 } => ("sigmoid", gamma, coef0, 0),
+        };
+        obj.insert("kernel".into(), Json::Str(kname.into()));
+        obj.insert("gamma".into(), Json::Num(gamma));
+        obj.insert("coef0".into(), Json::Num(coef0));
+        obj.insert("degree".into(), Json::Num(degree as f64));
+        obj.insert("bias".into(), Json::Num(self.bias));
+        obj.insert("dim".into(), Json::Num(self.support.dim() as f64));
+        obj.insert(
+            "coef".into(),
+            Json::Arr(self.coef.iter().map(|&c| Json::Num(c)).collect()),
+        );
+        obj.insert(
+            "labels".into(),
+            Json::Arr(
+                self.support
+                    .labels()
+                    .iter()
+                    .map(|&y| Json::Num(y as f64))
+                    .collect(),
+            ),
+        );
+        let mut rows = Vec::new();
+        for i in 0..self.support.len() {
+            rows.push(Json::Arr(
+                self.support.row(i).iter().map(|&v| Json::Num(v as f64)).collect(),
+            ));
+        }
+        obj.insert("sv".into(), Json::Arr(rows));
+        std::fs::write(path, Json::Obj(obj).to_string())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Load from a JSON file written by [`SvmModel::save`].
+    pub fn load(path: &Path) -> Result<SvmModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse model: {e}"))?;
+        let get = |k: &str| v.get(k).with_context(|| format!("missing field {k}"));
+        let gamma = get("gamma")?.as_f64().context("gamma")?;
+        let coef0 = get("coef0")?.as_f64().context("coef0")?;
+        let degree = get("degree")?.as_f64().context("degree")? as u32;
+        let kernel = match get("kernel")?.as_str().context("kernel")? {
+            "rbf" => KernelFunction::Rbf { gamma },
+            "linear" => KernelFunction::Linear,
+            "poly" => KernelFunction::Poly { gamma, coef0, degree },
+            "sigmoid" => KernelFunction::Sigmoid { gamma, coef0 },
+            other => anyhow::bail!("unknown kernel {other:?}"),
+        };
+        let bias = get("bias")?.as_f64().context("bias")?;
+        let dim = get("dim")?.as_usize().context("dim")?;
+        let coef: Vec<f64> = get("coef")?
+            .as_arr()
+            .context("coef")?
+            .iter()
+            .filter_map(|j| j.as_f64())
+            .collect();
+        let labels: Vec<i8> = get("labels")?
+            .as_arr()
+            .context("labels")?
+            .iter()
+            .filter_map(|j| j.as_f64())
+            .map(|y| if y > 0.0 { 1 } else { -1 })
+            .collect();
+        let mut support = Dataset::with_dim(dim);
+        let rows = get("sv")?.as_arr().context("sv")?;
+        anyhow::ensure!(rows.len() == coef.len() && rows.len() == labels.len());
+        let mut buf = vec![0f32; dim];
+        for (r, row) in rows.iter().enumerate() {
+            let vals = row.as_arr().context("sv row")?;
+            anyhow::ensure!(vals.len() == dim, "sv row arity");
+            for (k, jv) in vals.iter().enumerate() {
+                buf[k] = jv.as_f64().context("sv value")? as f32;
+            }
+            support.push(&buf, labels[r]);
+        }
+        Ok(SvmModel { kernel, support, coef, bias })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> SvmModel {
+        let data = Dataset::new(2, vec![1.0, 0.0, -1.0, 0.0, 0.0, 5.0], vec![1, -1, 1]);
+        SvmModel::from_solution(
+            &data,
+            &[0.8, -0.8, 0.0],
+            0.1,
+            KernelFunction::Rbf { gamma: 0.5 },
+            1e-12,
+        )
+    }
+
+    #[test]
+    fn keeps_only_support_vectors() {
+        let m = toy_model();
+        assert_eq!(m.n_sv(), 2);
+        assert_eq!(m.coef, vec![0.8, -0.8]);
+    }
+
+    #[test]
+    fn decision_hand_computed() {
+        let m = toy_model();
+        // at x = (1, 0): k(sv0, x) = 1, k(sv1, x) = exp(-0.5*4) = e^-2
+        let want = 0.8 * 1.0 - 0.8 * (-2.0f64).exp() + 0.1;
+        assert!((m.decision(&[1.0, 0.0]) - want).abs() < 1e-12);
+        assert_eq!(m.predict(&[1.0, 0.0]), 1);
+        assert_eq!(m.predict(&[-1.0, 0.0]), -1);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let m = toy_model();
+        let dir = std::env::temp_dir().join("pasmo-model-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let l = SvmModel::load(&path).unwrap();
+        assert_eq!(l.n_sv(), m.n_sv());
+        assert_eq!(l.kernel, m.kernel);
+        for x in [[0.3f32, -0.7], [2.0, 1.0]] {
+            assert!((l.decision(&x) - m.decision(&x)).abs() < 1e-9);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = std::env::temp_dir().join("pasmo-model-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"kernel\": \"rbf\"}").unwrap();
+        assert!(SvmModel::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

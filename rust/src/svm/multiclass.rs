@@ -1,0 +1,189 @@
+//! One-vs-one multiclass classification (LIBSVM's scheme): train
+//! k(k−1)/2 binary PA-SMO machines and combine them by majority vote.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+
+use super::model::SvmModel;
+use super::train::{train, TrainConfig};
+
+/// A multiclass dataset: dense features with arbitrary integer labels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MulticlassDataset {
+    dim: usize,
+    features: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl MulticlassDataset {
+    pub fn with_dim(dim: usize) -> MulticlassDataset {
+        assert!(dim > 0);
+        MulticlassDataset { dim, features: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: &[f32], y: i32) {
+        assert_eq!(x.len(), self.dim);
+        self.features.extend_from_slice(x);
+        self.labels.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// Distinct classes, sorted.
+    pub fn classes(&self) -> Vec<i32> {
+        self.labels.iter().copied().collect::<BTreeSet<_>>().into_iter().collect()
+    }
+}
+
+/// A one-vs-one multiclass model.
+#[derive(Debug, Clone)]
+pub struct OvoModel {
+    pub classes: Vec<i32>,
+    /// Binary machine per (a, b) class pair, a < b (index order of
+    /// `pair_index`); positive decision votes for `a`.
+    pub machines: Vec<SvmModel>,
+    pairs: Vec<(i32, i32)>,
+}
+
+impl OvoModel {
+    /// Majority vote over all pairwise machines (ties → smaller class id,
+    /// LIBSVM convention).
+    pub fn predict(&self, x: &[f32]) -> i32 {
+        let mut votes = vec![0usize; self.classes.len()];
+        for (m, &(a, b)) in self.machines.iter().zip(&self.pairs) {
+            let winner = if m.decision(x) >= 0.0 { a } else { b };
+            let idx = self.classes.iter().position(|&c| c == winner).unwrap();
+            votes[idx] += 1;
+        }
+        let best = votes.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i));
+        self.classes[best.map(|(i, _)| i).unwrap_or(0)]
+    }
+
+    /// Accuracy on a multiclass dataset.
+    pub fn accuracy(&self, data: &MulticlassDataset) -> f64 {
+        if data.is_empty() {
+            return f64::NAN;
+        }
+        let correct = (0..data.len())
+            .filter(|&i| self.predict(data.row(i)) == data.label(i))
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+/// Train a one-vs-one model; `cfg` is applied to every pairwise machine.
+pub fn train_ovo(data: &MulticlassDataset, cfg: &TrainConfig) -> OvoModel {
+    let classes = data.classes();
+    assert!(classes.len() >= 2, "need at least two classes");
+    let mut machines = Vec::new();
+    let mut pairs = Vec::new();
+    for ai in 0..classes.len() {
+        for bi in ai + 1..classes.len() {
+            let (a, b) = (classes[ai], classes[bi]);
+            let mut sub = Dataset::with_dim(data.dim());
+            for i in 0..data.len() {
+                if data.label(i) == a {
+                    sub.push(data.row(i), 1);
+                } else if data.label(i) == b {
+                    sub.push(data.row(i), -1);
+                }
+            }
+            let (model, _) = train(&Arc::new(sub), cfg);
+            machines.push(model);
+            pairs.push((a, b));
+        }
+    }
+    OvoModel { classes, machines, pairs }
+}
+
+/// Synthetic k-class Gaussian blobs on a circle (test/demo generator).
+pub fn blobs(n: usize, k: usize, radius: f64, sd: f64, seed: u64) -> MulticlassDataset {
+    use crate::util::prng::Pcg;
+    assert!(k >= 2);
+    let mut rng = Pcg::new(seed);
+    let mut ds = MulticlassDataset::with_dim(2);
+    for _ in 0..n {
+        let c = rng.below(k);
+        let theta = 2.0 * std::f64::consts::PI * c as f64 / k as f64;
+        ds.push(
+            &[
+                (radius * theta.cos() + rng.normal() * sd) as f32,
+                (radius * theta.sin() + rng.normal() * sd) as f32,
+            ],
+            c as i32,
+        );
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_and_pairs_enumeration() {
+        let ds = blobs(90, 3, 4.0, 0.5, 1);
+        assert_eq!(ds.classes(), vec![0, 1, 2]);
+        let model = train_ovo(&ds, &TrainConfig::new(10.0, 0.5));
+        assert_eq!(model.machines.len(), 3); // 3 choose 2
+    }
+
+    #[test]
+    fn separable_blobs_classified_accurately() {
+        let train_set = blobs(240, 4, 6.0, 0.4, 2);
+        let test_set = blobs(200, 4, 6.0, 0.4, 3);
+        let model = train_ovo(&train_set, &TrainConfig::new(10.0, 0.3));
+        let acc = model.accuracy(&test_set);
+        assert!(acc > 0.95, "accuracy {acc}");
+    }
+
+    #[test]
+    fn predicts_the_nearest_blob_center() {
+        let train_set = blobs(300, 3, 5.0, 0.4, 4);
+        let model = train_ovo(&train_set, &TrainConfig::new(10.0, 0.3));
+        for c in 0..3 {
+            let theta = 2.0 * std::f64::consts::PI * c as f64 / 3.0;
+            let x = [(5.0 * theta.cos()) as f32, (5.0 * theta.sin()) as f32];
+            assert_eq!(model.predict(&x), c as i32, "center of class {c}");
+        }
+    }
+
+    #[test]
+    fn binary_case_degenerates_to_single_machine() {
+        let ds = blobs(100, 2, 4.0, 0.5, 5);
+        let model = train_ovo(&ds, &TrainConfig::new(5.0, 0.5));
+        assert_eq!(model.machines.len(), 1);
+        assert!(model.accuracy(&ds) > 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two classes")]
+    fn single_class_rejected() {
+        let mut ds = MulticlassDataset::with_dim(2);
+        ds.push(&[0.0, 0.0], 7);
+        ds.push(&[1.0, 1.0], 7);
+        train_ovo(&ds, &TrainConfig::new(1.0, 1.0));
+    }
+}

@@ -1,0 +1,174 @@
+//! Platt scaling: probability calibration for SVM decision values.
+//!
+//! Fits `P(y=1|f) = 1/(1+exp(A·f+B))` by regularized maximum likelihood
+//! (Lin, Lin & Weng's robust Newton variant of Platt's algorithm).
+
+use crate::data::dataset::Dataset;
+
+use super::model::SvmModel;
+use super::predict::decision_values;
+
+/// Fitted sigmoid parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlattScaler {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl PlattScaler {
+    /// Calibrated probability of the positive class for decision value `f`.
+    pub fn prob(&self, f: f64) -> f64 {
+        let z = self.a * f + self.b;
+        // numerically stable logistic
+        if z >= 0.0 {
+            (-z).exp() / (1.0 + (-z).exp())
+        } else {
+            1.0 / (1.0 + z.exp())
+        }
+    }
+
+    /// Fit from decision values and ±1 labels (Newton with backtracking).
+    pub fn fit(decisions: &[f64], labels: &[i8]) -> PlattScaler {
+        assert_eq!(decisions.len(), labels.len());
+        let n = labels.len();
+        let n_pos = labels.iter().filter(|&&y| y == 1).count() as f64;
+        let n_neg = n as f64 - n_pos;
+        // Regularized targets (Platt's prior correction).
+        let t_pos = (n_pos + 1.0) / (n_pos + 2.0);
+        let t_neg = 1.0 / (n_neg + 2.0);
+        let t: Vec<f64> = labels
+            .iter()
+            .map(|&y| if y == 1 { t_pos } else { t_neg })
+            .collect();
+
+        let (mut a, mut b) = (0.0f64, ((n_neg + 1.0) / (n_pos + 1.0)).ln());
+        let objective = |a: f64, b: f64| -> f64 {
+            let mut obj = 0.0;
+            for i in 0..n {
+                let z = a * decisions[i] + b;
+                // -[t log p + (1-t) log(1-p)] in stable form
+                obj += if z >= 0.0 {
+                    t[i] * z + (1.0 + (-z).exp()).ln()
+                } else {
+                    (t[i] - 1.0) * z + (1.0 + z.exp()).ln()
+                };
+            }
+            obj
+        };
+        let mut fval = objective(a, b);
+        for _ in 0..100 {
+            // gradient and Hessian
+            let (mut g1, mut g2, mut h11, mut h22, mut h12) = (0.0, 0.0, 1e-12, 1e-12, 0.0);
+            for i in 0..n {
+                let z = a * decisions[i] + b;
+                let p = if z >= 0.0 {
+                    (-z).exp() / (1.0 + (-z).exp())
+                } else {
+                    1.0 / (1.0 + z.exp())
+                };
+                let d1 = t[i] - p;
+                let d2 = p * (1.0 - p);
+                g1 += decisions[i] * d1;
+                g2 += d1;
+                h11 += decisions[i] * decisions[i] * d2;
+                h22 += d2;
+                h12 += decisions[i] * d2;
+            }
+            if g1.abs() < 1e-10 && g2.abs() < 1e-10 {
+                break;
+            }
+            // Newton direction: Δ = −H⁻¹∇F (dF/dz = t − p, so ∇F = (g1, g2)).
+            let det = h11 * h22 - h12 * h12;
+            let da = -(h22 * g1 - h12 * g2) / det;
+            let db = -(h11 * g2 - h12 * g1) / det;
+            let gd = g1 * da + g2 * db; // directional derivative (< 0)
+            // backtracking (Armijo) line search
+            let mut step = 1.0;
+            loop {
+                let (na, nb) = (a + step * da, b + step * db);
+                let nf = objective(na, nb);
+                if nf <= fval + 1e-4 * step * gd + 1e-12 {
+                    a = na;
+                    b = nb;
+                    fval = nf;
+                    break;
+                }
+                step *= 0.5;
+                if step < 1e-10 {
+                    return PlattScaler { a, b };
+                }
+            }
+        }
+        PlattScaler { a, b }
+    }
+
+    /// Fit against a model's decision values on a calibration set.
+    pub fn fit_model(model: &SvmModel, calibration: &Dataset) -> PlattScaler {
+        let d = decision_values(model, calibration);
+        PlattScaler::fit(&d, calibration.labels())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn synthetic(n: usize, sep: f64, seed: u64) -> (Vec<f64>, Vec<i8>) {
+        let mut rng = Pcg::new(seed);
+        let mut d = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let label: i8 = if rng.bernoulli(0.5) { 1 } else { -1 };
+            d.push(label as f64 * sep + rng.normal());
+            y.push(label);
+        }
+        (d, y)
+    }
+
+    #[test]
+    fn probabilities_are_monotone_and_calibrated_in_sign() {
+        let (d, y) = synthetic(2000, 1.5, 1);
+        let s = PlattScaler::fit(&d, &y);
+        assert!(s.prob(3.0) > 0.9, "{:?} p(3)={}", s, s.prob(3.0));
+        assert!(s.prob(-3.0) < 0.1);
+        assert!((s.prob(0.0) - 0.5).abs() < 0.1);
+        // monotone increasing in f (A must be negative)
+        assert!(s.a < 0.0);
+        let mut prev = 0.0;
+        for k in -10..=10 {
+            let p = s.prob(k as f64 * 0.5);
+            assert!(p >= prev - 1e-12);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn well_separated_data_gives_sharp_sigmoid() {
+        let (d1, y1) = synthetic(1000, 0.5, 2);
+        let (d2, y2) = synthetic(1000, 4.0, 2);
+        let s1 = PlattScaler::fit(&d1, &y1);
+        let s2 = PlattScaler::fit(&d2, &y2);
+        assert!(s2.a.abs() > s1.a.abs(), "sharper separation => steeper sigmoid");
+    }
+
+    #[test]
+    fn probabilities_in_unit_interval_even_for_extreme_inputs() {
+        let (d, y) = synthetic(500, 2.0, 3);
+        let s = PlattScaler::fit(&d, &y);
+        for f in [-1e6, -1.0, 0.0, 1.0, 1e6] {
+            let p = s.prob(f);
+            assert!((0.0..=1.0).contains(&p), "p({f}) = {p}");
+        }
+    }
+
+    #[test]
+    fn degenerate_single_class_does_not_blow_up() {
+        let d = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![1i8, 1, 1, 1];
+        let s = PlattScaler::fit(&d, &y);
+        // prior correction keeps probabilities strictly inside (0, 1)
+        let p = s.prob(2.5);
+        assert!(p > 0.5 && p < 1.0, "p = {p}");
+    }
+}

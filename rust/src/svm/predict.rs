@@ -1,0 +1,88 @@
+//! Batch prediction and evaluation metrics.
+
+use crate::data::dataset::Dataset;
+
+use super::model::SvmModel;
+
+/// Decision values for every row of `data`.
+pub fn decision_values(model: &SvmModel, data: &Dataset) -> Vec<f64> {
+    (0..data.len()).map(|i| model.decision(data.row(i))).collect()
+}
+
+/// Predicted labels for every row.
+pub fn predict_all(model: &SvmModel, data: &Dataset) -> Vec<i8> {
+    (0..data.len()).map(|i| model.predict(data.row(i))).collect()
+}
+
+/// Classification accuracy against the dataset's labels.
+pub fn accuracy(model: &SvmModel, data: &Dataset) -> f64 {
+    if data.is_empty() {
+        return f64::NAN;
+    }
+    let correct = (0..data.len())
+        .filter(|&i| model.predict(data.row(i)) == data.label(i))
+        .count();
+    correct as f64 / data.len() as f64
+}
+
+/// Confusion counts (tp, fp, tn, fn) with +1 as the positive class.
+pub fn confusion(model: &SvmModel, data: &Dataset) -> (usize, usize, usize, usize) {
+    let (mut tp, mut fp, mut tn, mut fnn) = (0, 0, 0, 0);
+    for i in 0..data.len() {
+        match (model.predict(data.row(i)), data.label(i)) {
+            (1, 1) => tp += 1,
+            (1, -1) => fp += 1,
+            (-1, -1) => tn += 1,
+            (-1, 1) => fnn += 1,
+            _ => unreachable!(),
+        }
+    }
+    (tp, fp, tn, fnn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::function::KernelFunction;
+
+    fn linear_stump() -> SvmModel {
+        // A linear-kernel "model" implementing f(x) = x0: one SV at (1, 0)
+        // with coef 1 and no bias.
+        let sv = Dataset::new(2, vec![1.0, 0.0], vec![1]);
+        SvmModel { kernel: KernelFunction::Linear, support: sv, coef: vec![1.0], bias: 0.0 }
+    }
+
+    fn quadrant_data() -> Dataset {
+        Dataset::new(
+            2,
+            vec![2.0, 0.0, -3.0, 1.0, 0.5, -1.0, -0.1, 0.0],
+            vec![1, -1, 1, -1],
+        )
+    }
+
+    #[test]
+    fn accuracy_and_confusion_hand_checked() {
+        let m = linear_stump();
+        let d = quadrant_data();
+        assert_eq!(predict_all(&m, &d), vec![1, -1, 1, -1]);
+        assert_eq!(accuracy(&m, &d), 1.0);
+        assert_eq!(confusion(&m, &d), (2, 0, 2, 0));
+    }
+
+    #[test]
+    fn decision_values_match_model() {
+        let m = linear_stump();
+        let d = quadrant_data();
+        let vals = decision_values(&m, &d);
+        for (got, want) in vals.iter().zip([2.0, -3.0, 0.5, -0.1]) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn empty_dataset_gives_nan_accuracy() {
+        let m = linear_stump();
+        let d = Dataset::with_dim(2);
+        assert!(accuracy(&m, &d).is_nan());
+    }
+}

@@ -1,0 +1,230 @@
+//! ε-support-vector regression on the PA-SMO solver.
+//!
+//! The ε-SVR dual maps exactly onto the paper's general problem form by
+//! doubling the variables: with `γ_i = α_i ∈ [0, C]` and
+//! `γ_{ℓ+i} = −α*_i ∈ [−C, 0]`, the dual becomes
+//!
+//! ```text
+//! max  pᵀγ − ½ γᵀ K̃ γ,   p_i = y_i − ε,  p_{ℓ+i} = y_i + ε,
+//! s.t. Σγ = 0,  K̃_{ab} = K_{a mod ℓ, b mod ℓ},
+//! ```
+//!
+//! which is solved unchanged by SMO / PA-SMO via
+//! [`SolverState::from_problem`] — a direct demonstration of the paper's
+//! "the method is widely applicable" conclusion. The regression
+//! coefficient of example `i` is `γ_i + γ_{ℓ+i} = α_i − α*_i`.
+
+use std::sync::Arc;
+
+use crate::data::regression::RegressionDataset;
+use crate::kernel::function::KernelFunction;
+use crate::kernel::matrix::{Gram, RowComputer};
+use crate::solver::pasmo::PasmoSolver;
+use crate::solver::smo::{SmoSolver, SolveResult, SolverConfig};
+use crate::solver::state::SolverState;
+
+use super::train::SolverChoice;
+
+/// Row computer for the doubled ε-SVR Gram matrix K̃ (2ℓ × 2ℓ).
+struct DoubledRowComputer {
+    inner: Box<dyn RowComputer>,
+    l: usize,
+}
+
+impl RowComputer for DoubledRowComputer {
+    fn len(&self) -> usize {
+        2 * self.l
+    }
+    fn compute_row(&self, a: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), 2 * self.l);
+        let (lo, hi) = out.split_at_mut(self.l);
+        self.inner.compute_row(a % self.l, lo);
+        hi.copy_from_slice(lo);
+    }
+    fn diag(&self, a: usize) -> f64 {
+        self.inner.diag(a % self.l)
+    }
+    fn entry(&self, a: usize, b: usize) -> f64 {
+        self.inner.entry(a % self.l, b % self.l)
+    }
+}
+
+/// ε-SVR training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SvrConfig {
+    pub c: f64,
+    /// Tube half-width ε (insensitive-loss zone).
+    pub epsilon: f64,
+    pub kernel: KernelFunction,
+    pub solver: SolverChoice,
+    pub solver_config: SolverConfig,
+}
+
+impl SvrConfig {
+    pub fn new(c: f64, epsilon: f64, gamma: f64) -> SvrConfig {
+        SvrConfig {
+            c,
+            epsilon,
+            kernel: KernelFunction::Rbf { gamma },
+            solver: SolverChoice::Pasmo,
+            solver_config: SolverConfig::default(),
+        }
+    }
+}
+
+/// A trained ε-SVR model.
+#[derive(Debug, Clone)]
+pub struct SvrModel {
+    pub kernel: KernelFunction,
+    /// Support rows (|α_i − α*_i| > 0).
+    pub support: Vec<Vec<f32>>,
+    pub coef: Vec<f64>,
+    pub bias: f64,
+}
+
+impl SvrModel {
+    /// Predicted target `f(x) = Σ coef_s k(x_s, x) + b`.
+    pub fn predict(&self, x: &[f32]) -> f64 {
+        let mut f = self.bias;
+        for (sv, &c) in self.support.iter().zip(&self.coef) {
+            f += c * self.kernel.eval(sv, x);
+        }
+        f
+    }
+
+    /// Root-mean-square error over a dataset.
+    pub fn rmse(&self, data: &RegressionDataset) -> f64 {
+        let mut se = 0.0;
+        for i in 0..data.len() {
+            let e = self.predict(data.row(i)) - data.target(i);
+            se += e * e;
+        }
+        (se / data.len().max(1) as f64).sqrt()
+    }
+}
+
+/// Train ε-SVR on `data`. Returns the model plus solver diagnostics
+/// (iterations etc. refer to the doubled 2ℓ problem).
+pub fn train_svr(
+    data: &RegressionDataset,
+    inner: Box<dyn RowComputer>,
+    cfg: &SvrConfig,
+) -> (SvrModel, SolveResult) {
+    let l = data.len();
+    assert_eq!(inner.len(), l, "computer/data size mismatch");
+    let doubled = DoubledRowComputer { inner, l };
+    let mut gram = Gram::new(Box::new(doubled), cfg.solver_config.cache_bytes);
+
+    // Linear term, bounds, zero start (grad0 = p).
+    let mut p = Vec::with_capacity(2 * l);
+    let mut lower = Vec::with_capacity(2 * l);
+    let mut upper = Vec::with_capacity(2 * l);
+    for i in 0..l {
+        p.push(data.target(i) - cfg.epsilon);
+        lower.push(0.0);
+        upper.push(cfg.c);
+    }
+    for i in 0..l {
+        p.push(data.target(i) + cfg.epsilon);
+        lower.push(-cfg.c);
+        upper.push(0.0);
+    }
+    let state =
+        SolverState::from_problem(p.clone(), lower, upper, vec![0.0; 2 * l], p);
+
+    let result = match cfg.solver {
+        SolverChoice::Smo => SmoSolver::new(cfg.solver_config).solve_state(state, &mut gram),
+        SolverChoice::Pasmo => {
+            PasmoSolver::new(cfg.solver_config).solve_state(state, &mut gram)
+        }
+        SolverChoice::PasmoMulti(n) => {
+            let mut sc = cfg.solver_config;
+            sc.planning_candidates = n.max(1);
+            PasmoSolver::new(sc).solve_state(state, &mut gram)
+        }
+    };
+
+    let mut support = Vec::new();
+    let mut coef = Vec::new();
+    for i in 0..l {
+        let c = result.alpha[i] + result.alpha[l + i];
+        if c.abs() > 1e-12 {
+            support.push(data.row(i).to_vec());
+            coef.push(c);
+        }
+    }
+    let model = SvrModel { kernel: cfg.kernel, support, coef, bias: result.bias };
+    (model, result)
+}
+
+/// Convenience: train with the native kernel path over a regression set.
+pub fn train_svr_native(data: &RegressionDataset, cfg: &SvrConfig) -> (SvrModel, SolveResult) {
+    // Reuse the classification NativeRowComputer via a feature-only view.
+    let mut ds = crate::data::dataset::Dataset::with_dim(data.dim());
+    for i in 0..data.len() {
+        ds.push(data.row(i), 1); // labels unused by the kernel
+    }
+    let nc = crate::kernel::native::NativeRowComputer::new(Arc::new(ds), cfg.kernel);
+    train_svr(data, Box::new(nc), cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::regression::{linear_target, sinc};
+
+    #[test]
+    fn fits_the_sinc_function() {
+        let train = sinc(300, 0.05, 1);
+        let test = sinc(200, 0.0, 2);
+        let cfg = SvrConfig::new(10.0, 0.05, 0.5);
+        let (model, res) = train_svr_native(&train, &cfg);
+        assert!(res.converged);
+        let rmse = model.rmse(&test);
+        assert!(rmse < 0.12, "sinc rmse {rmse}");
+        // the ε-tube sparsifies: not every point is a support vector
+        assert!(model.coef.len() < train.len(), "no sparsity: {}", model.coef.len());
+    }
+
+    #[test]
+    fn smo_and_pasmo_agree_on_svr() {
+        let train = sinc(150, 0.1, 3);
+        let base = SvrConfig::new(5.0, 0.1, 0.5);
+        let smo = SvrConfig { solver: SolverChoice::Smo, ..base };
+        let pa = SvrConfig { solver: SolverChoice::Pasmo, ..base };
+        let (_, r1) = train_svr_native(&train, &smo);
+        let (_, r2) = train_svr_native(&train, &pa);
+        assert!(r1.converged && r2.converged);
+        let rel = (r1.objective - r2.objective).abs() / (1.0 + r1.objective.abs());
+        assert!(rel < 2e-3, "{} vs {}", r1.objective, r2.objective);
+    }
+
+    #[test]
+    fn equality_constraint_holds_on_doubled_problem() {
+        let train = linear_target(80, 2, 0.05, 4);
+        let cfg = SvrConfig::new(2.0, 0.05, 0.3);
+        let (_, res) = train_svr_native(&train, &cfg);
+        let sum: f64 = res.alpha.iter().sum();
+        assert!(sum.abs() < 1e-8, "Σγ = {sum}");
+        // box feasibility of both halves
+        for i in 0..80 {
+            assert!(res.alpha[i] >= -1e-9 && res.alpha[i] <= 2.0 + 1e-9);
+            assert!(res.alpha[80 + i] >= -2.0 - 1e-9 && res.alpha[80 + i] <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn wider_tube_means_fewer_support_vectors() {
+        let train = sinc(200, 0.05, 5);
+        let narrow = SvrConfig::new(10.0, 0.01, 0.5);
+        let wide = SvrConfig::new(10.0, 0.3, 0.5);
+        let (m1, _) = train_svr_native(&train, &narrow);
+        let (m2, _) = train_svr_native(&train, &wide);
+        assert!(
+            m2.coef.len() < m1.coef.len(),
+            "ε=0.3 SVs {} !< ε=0.01 SVs {}",
+            m2.coef.len(),
+            m1.coef.len()
+        );
+    }
+}

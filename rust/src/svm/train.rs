@@ -1,0 +1,134 @@
+//! High-level training entry point: dataset + config → model + solver
+//! diagnostics.
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+use crate::kernel::matrix::{Gram, RowComputer};
+use crate::kernel::native::NativeRowComputer;
+use crate::solver::pasmo::PasmoSolver;
+use crate::solver::smo::{SmoSolver, SolveResult, SolverConfig};
+
+use super::model::SvmModel;
+
+/// Which solver drives training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Algorithm 1 (baseline SMO, second-order WSS).
+    Smo,
+    /// Algorithm 5 (PA-SMO) — the paper's recommended default.
+    Pasmo,
+    /// Multiple-planning-ahead PA-SMO with N recent working sets (§7.4).
+    PasmoMulti(usize),
+}
+
+/// Training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub c: f64,
+    pub kernel: KernelFunction,
+    pub solver: SolverChoice,
+    pub solver_config: SolverConfig,
+}
+
+impl TrainConfig {
+    /// The paper's defaults: RBF kernel, PA-SMO, ε = 10⁻³.
+    pub fn new(c: f64, gamma: f64) -> TrainConfig {
+        TrainConfig {
+            c,
+            kernel: KernelFunction::Rbf { gamma },
+            solver: SolverChoice::Pasmo,
+            solver_config: SolverConfig::default(),
+        }
+    }
+
+    pub fn with_solver(mut self, solver: SolverChoice) -> TrainConfig {
+        self.solver = solver;
+        self
+    }
+}
+
+/// Run the configured solver over an existing Gram view.
+pub fn solve_with_gram(
+    labels: &[i8],
+    cfg: &TrainConfig,
+    gram: &mut Gram,
+) -> SolveResult {
+    let mut sc = cfg.solver_config;
+    match cfg.solver {
+        SolverChoice::Smo => SmoSolver::new(sc).solve(labels, cfg.c, gram),
+        SolverChoice::Pasmo => {
+            sc.planning_candidates = 1;
+            PasmoSolver::new(sc).solve(labels, cfg.c, gram)
+        }
+        SolverChoice::PasmoMulti(n) => {
+            sc.planning_candidates = n.max(1);
+            PasmoSolver::new(sc).solve(labels, cfg.c, gram)
+        }
+    }
+}
+
+/// Train on a dataset using the native (Rust) kernel path.
+pub fn train(data: &Arc<Dataset>, cfg: &TrainConfig) -> (SvmModel, SolveResult) {
+    let computer = NativeRowComputer::new(data.clone(), cfg.kernel);
+    train_with_computer(data, cfg, Box::new(computer))
+}
+
+/// Train with a caller-supplied row computer (e.g. the PJRT-backed one
+/// from [`crate::runtime::gram::PjrtRowComputer`]).
+pub fn train_with_computer(
+    data: &Arc<Dataset>,
+    cfg: &TrainConfig,
+    computer: Box<dyn RowComputer>,
+) -> (SvmModel, SolveResult) {
+    let mut gram = Gram::new(computer, cfg.solver_config.cache_bytes);
+    let result = solve_with_gram(data.labels(), cfg, &mut gram);
+    let model = SvmModel::from_solution(data, &result.alpha, result.bias, cfg.kernel, 1e-12);
+    (model, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::predict::accuracy;
+
+    #[test]
+    fn trains_a_working_classifier_on_chessboard() {
+        let ds = Arc::new(chessboard(300, 4, 1));
+        let cfg = TrainConfig::new(100.0, 0.5);
+        let (model, res) = train(&ds, &cfg);
+        assert!(res.converged);
+        assert!(model.n_sv() > 0);
+        let train_acc = accuracy(&model, &ds);
+        assert!(train_acc > 0.9, "train accuracy {train_acc}");
+    }
+
+    #[test]
+    fn smo_and_pasmo_produce_equivalent_models() {
+        let ds = Arc::new(chessboard(200, 4, 2));
+        let base = TrainConfig::new(10.0, 0.5);
+        let (m1, r1) = train(&ds, &base.with_solver(SolverChoice::Smo));
+        let (m2, r2) = train(&ds, &base.with_solver(SolverChoice::Pasmo));
+        assert!(r1.converged && r2.converged);
+        let rel = (r1.objective - r2.objective).abs() / (1.0 + r1.objective.abs());
+        assert!(rel < 2e-3, "{} vs {}", r1.objective, r2.objective);
+        // decisions agree on most points
+        let mut agree = 0;
+        for i in 0..ds.len() {
+            if m1.predict(ds.row(i)) == m2.predict(ds.row(i)) {
+                agree += 1;
+            }
+        }
+        assert!(agree as f64 / ds.len() as f64 > 0.97);
+    }
+
+    #[test]
+    fn multi_planning_choice_works() {
+        let ds = Arc::new(chessboard(150, 4, 3));
+        let cfg = TrainConfig::new(50.0, 0.5).with_solver(SolverChoice::PasmoMulti(3));
+        let (_, res) = train(&ds, &cfg);
+        assert!(res.converged);
+    }
+}

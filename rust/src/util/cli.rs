@@ -1,0 +1,134 @@
+//! Minimal command-line argument parser (replaces `clap`, offline build).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch is done by the caller on positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (used by tests).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag (`--flag` present, or `--flag true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Typed option parse with default; panics with a clear message on
+    /// malformed input (CLI surface, so fail fast and loud).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {v:?}: bad value ({e:?})")),
+        }
+    }
+
+    /// Subcommand = first positional.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("experiment table2 --perms 20 --dataset chess-board-1000");
+        assert_eq!(a.command(), Some("experiment"));
+        assert_eq!(a.positional[1], "table2");
+        assert_eq!(a.get("perms"), Some("20"));
+        assert_eq!(a.get("dataset"), Some("chess-board-1000"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --c=10 --gamma=0.5");
+        assert_eq!(a.get_parse_or("c", 0.0), 10.0);
+        assert_eq!(a.get_parse_or("gamma", 0.0), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag_and_flag_before_positional() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        // NB: `--verbose run` would consume `run` as a value; callers put
+        // flags last or use `--verbose=true`. Document via this test:
+        let b = parse("--full run");
+        assert_eq!(b.get("full"), Some("run"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_parse_or("eps", 1e-3), 1e-3);
+        assert_eq!(a.get_or("out", "report.md"), "report.md");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad value")]
+    fn malformed_number_panics() {
+        let a = parse("x --eps abc");
+        let _: f64 = a.get_parse_or("eps", 0.0);
+    }
+}

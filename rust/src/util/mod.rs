@@ -1,0 +1,8 @@
+//! In-repo substrates replacing crates.io dependencies (offline build).
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod table;
+pub mod timer;

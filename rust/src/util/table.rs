@@ -1,0 +1,150 @@
+//! Plain-text / markdown table rendering for experiment reports.
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder producing aligned monospace output (and markdown).
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set alignment per column (defaults to Right; first column often Left).
+    pub fn align(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned monospace text.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_cell = |s: &str, width: usize, a: Align| -> String {
+            let pad = width.saturating_sub(s.chars().count());
+            match a {
+                Align::Left => format!("{s}{}", " ".repeat(pad)),
+                Align::Right => format!("{}{s}", " ".repeat(pad)),
+            }
+        };
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| fmt_cell(h, w[i], self.aligns[i]))
+            .collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+        out.push_str(&w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| fmt_cell(c, w[i], self.aligns[i]))
+                .collect();
+            out.push_str(line.join("  ").trim_end());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        let seps: Vec<&str> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => ":---",
+                Align::Right => "---:",
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", seps.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` significant-ish decimals, trimming noise.
+pub fn fnum(x: f64, digits: usize) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x != 0.0 && x.abs() < 10f64.powi(-(digits as i32)) {
+        return format!("{x:.*e}", digits);
+    }
+    format!("{x:.*}", digits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["dataset", "iters"]).align(&[Align::Left, Align::Right]);
+        t.add_row(vec!["banana".into(), "23295".into()]);
+        t.add_row(vec!["x".into(), "1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("dataset"));
+        assert!(lines[2].starts_with("banana"));
+        assert!(lines[3].trim_end().ends_with("1"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fnum_behaviour() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(0.0, 2), "0.00");
+        assert!(fnum(1e-9, 3).contains('e'));
+    }
+}

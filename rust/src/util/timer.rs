@@ -1,0 +1,137 @@
+//! Timing utilities and a micro-bench harness (replaces `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` are `harness = false` binaries
+//! built on [`bench`] / [`Stopwatch`]; they print the rows/series of the
+//! paper table or figure they regenerate.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.0.elapsed();
+        self.0 = Instant::now();
+        e
+    }
+}
+
+/// Result of a micro-benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    /// Human-readable line, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (± {:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+            fmt_duration(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up, then sample `samples` timed repetitions and
+/// report mean/std/min. The closure's return value is black-boxed to keep
+/// the optimizer honest.
+pub fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup: one call, plus enough to cover ~50ms for tiny closures.
+    let w = Stopwatch::start();
+    black_box(f());
+    let one = w.secs().max(1e-9);
+    let warmups = ((0.05 / one) as usize).clamp(0, 50);
+    for _ in 0..warmups {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t = Stopwatch::start();
+        black_box(f());
+        times.push(t.secs());
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / n;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+    }
+}
+
+/// Optimizer barrier (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 10, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s > 0.0 && r.mean_s < 0.1);
+        assert!(r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert!(fmt_duration(3e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let e1 = sw.restart();
+        assert!(e1.as_millis() >= 2);
+        assert!(sw.secs() < 1.0);
+    }
+}

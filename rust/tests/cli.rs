@@ -1,0 +1,119 @@
+//! CLI integration tests: drive the `pasmo` binary end to end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn pasmo() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pasmo"))
+}
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasmo-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = pasmo().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("usage: pasmo"));
+    assert!(text.contains("experiment"));
+}
+
+#[test]
+fn datasets_lists_the_suite() {
+    let out = pasmo().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["banana", "chess-board-100000", "spam-database"] {
+        assert!(text.contains(name), "{name} missing from:\n{text}");
+    }
+}
+
+#[test]
+fn train_save_predict_round_trip() {
+    let dir = tmpdir();
+    let model = dir.join("model.json");
+    let out = pasmo()
+        .args([
+            "train", "--dataset", "chess-board-1000", "--len", "300", "--solver",
+            "pasmo", "--out",
+        ])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=true"), "{text}");
+    assert!(model.exists());
+
+    // write a small libsvm test file from the same generator family
+    let test_path = dir.join("test.libsvm");
+    let ds = pasmo::data::synth::chessboard(100, 4, 99);
+    pasmo::data::libsvm::write(&ds, &test_path).unwrap();
+
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .args(["--libsvm"])
+        .arg(&test_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy"), "{text}");
+    // parse the accuracy and demand something sane
+    let acc: f64 = text
+        .split("accuracy = ")
+        .nth(1)
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(acc > 0.8, "accuracy {acc}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn experiment_fig2_writes_report() {
+    let dir = tmpdir();
+    let report = dir.join("fig2.md");
+    let out = pasmo()
+        .args(["experiment", "fig2", "--out"])
+        .arg(&report)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&report).unwrap();
+    assert!(text.contains("Figure 2"));
+    assert!(text.contains("η-band"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_experiment_fails_cleanly() {
+    let out = pasmo().args(["experiment", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+}
+
+#[test]
+fn train_rejects_unknown_dataset() {
+    let out = pasmo().args(["train", "--dataset", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}
+
+#[test]
+fn info_reports_environment() {
+    let out = pasmo().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pasmo 0.1.0"));
+}

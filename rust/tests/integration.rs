@@ -1,0 +1,162 @@
+//! Integration tests across modules: data → kernel → solver → svm →
+//! runtime, at realistic (small) scales.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use pasmo::data::suite;
+use pasmo::data::synth::chessboard;
+use pasmo::kernel::matrix::{DenseGram, Gram};
+use pasmo::kernel::{KernelFunction, NativeRowComputer};
+use pasmo::runtime::engine::PjrtEngine;
+use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::solver::reference::solve_reference;
+use pasmo::solver::smo::{SolverConfig, WssKind};
+use pasmo::svm::predict::accuracy;
+use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/MANIFEST.json")
+        .exists()
+}
+
+/// Every dataset family in the suite trains to convergence at small scale
+/// with both solvers, and PA-SMO's objective is never (meaningfully) worse.
+#[test]
+fn suite_smoke_all_families_converge() {
+    for name in ["banana", "twonorm", "ringnorm", "waveform", "tic-tac-toe", "chess-board-1000"] {
+        let spec = suite::find(name).unwrap();
+        let ds = Arc::new(spec.generate(180, 11));
+        let base = TrainConfig::new(spec.c, spec.gamma);
+        let (_, smo) = train(&ds, &base.with_solver(SolverChoice::Smo));
+        let (_, pa) = train(&ds, &base.with_solver(SolverChoice::Pasmo));
+        assert!(smo.converged, "{name}: SMO did not converge");
+        assert!(pa.converged, "{name}: PA-SMO did not converge");
+        assert!(
+            pa.objective >= smo.objective - 1e-3 * (1.0 + smo.objective.abs()),
+            "{name}: PA objective {} below SMO {}",
+            pa.objective,
+            smo.objective
+        );
+    }
+}
+
+/// The paper's headline in miniature: on the chess-board problem PA-SMO
+/// needs no more iterations than SMO (usually fewer).
+#[test]
+fn pasmo_reduces_iterations_on_chessboard() {
+    let mut wins = 0usize;
+    let mut total_smo = 0u64;
+    let mut total_pa = 0u64;
+    for seed in 0..5u64 {
+        let ds = Arc::new(chessboard(400, 4, seed));
+        let base = TrainConfig::new(1e6, 0.5);
+        let (_, smo) = train(&ds, &base.with_solver(SolverChoice::Smo));
+        let (_, pa) = train(&ds, &base.with_solver(SolverChoice::Pasmo));
+        assert!(smo.converged && pa.converged, "seed {seed}");
+        total_smo += smo.iterations;
+        total_pa += pa.iterations;
+        if pa.iterations <= smo.iterations {
+            wins += 1;
+        }
+    }
+    assert!(
+        total_pa < total_smo,
+        "PA-SMO total iterations {total_pa} not below SMO {total_smo}"
+    );
+    assert!(wins >= 3, "PA-SMO won only {wins}/5 runs");
+}
+
+/// Cross-check all four solver configurations against the independent
+/// dense projected-gradient oracle on one problem.
+#[test]
+fn all_solver_variants_agree_with_oracle() {
+    let ds = Arc::new(chessboard(80, 4, 3));
+    let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+    let dense = DenseGram::materialize(&nc);
+    let oracle = solve_reference(&dense, ds.labels(), 10.0, 300_000, 1e-14);
+    let tol = 1e-3 * (1.0 + oracle.objective.abs());
+
+    for (label, choice) in [
+        ("smo", SolverChoice::Smo),
+        ("pasmo", SolverChoice::Pasmo),
+        ("multi3", SolverChoice::PasmoMulti(3)),
+    ] {
+        let cfg = TrainConfig::new(10.0, 0.5).with_solver(choice);
+        let (_, res) = train(&ds, &cfg);
+        assert!(
+            (res.objective - oracle.objective).abs() < tol,
+            "{label}: {} vs oracle {}",
+            res.objective,
+            oracle.objective
+        );
+    }
+    // first-order WSS too
+    let mut cfg = TrainConfig::new(10.0, 0.5).with_solver(SolverChoice::Smo);
+    cfg.solver_config = SolverConfig { wss: WssKind::MaxViolating, ..Default::default() };
+    let (_, res) = train(&ds, &cfg);
+    assert!((res.objective - oracle.objective).abs() < tol, "mvp wss");
+}
+
+/// PJRT-backed training produces the same model quality as native.
+#[test]
+fn pjrt_and_native_training_agree() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ds = Arc::new(chessboard(300, 4, 7));
+    let cfg = TrainConfig::new(1e4, 0.5);
+    let (m_native, r_native) = train(&ds, &cfg);
+    let engine = Rc::new(PjrtEngine::open_default().unwrap());
+    let computer = PjrtRowComputer::new(engine, ds.clone(), 0.5).unwrap();
+    let (m_pjrt, r_pjrt) = train_with_computer(&ds, &cfg, Box::new(computer));
+    assert!(r_native.converged && r_pjrt.converged);
+    let rel =
+        (r_native.objective - r_pjrt.objective).abs() / (1.0 + r_native.objective.abs());
+    assert!(rel < 5e-3, "objectives differ: {} vs {}", r_native.objective, r_pjrt.objective);
+    let test = chessboard(500, 4, 8);
+    let (a1, a2) = (accuracy(&m_native, &test), accuracy(&m_pjrt, &test));
+    assert!((a1 - a2).abs() < 0.05, "accuracies differ: {a1} vs {a2}");
+}
+
+/// Solving the same permuted problem twice is bit-identical (determinism
+/// underpins the paired experiment design).
+#[test]
+fn solves_are_deterministic() {
+    let ds = Arc::new(chessboard(200, 4, 9));
+    let cfg = TrainConfig::new(100.0, 0.5);
+    let (_, r1) = train(&ds, &cfg);
+    let (_, r2) = train(&ds, &cfg);
+    assert_eq!(r1.iterations, r2.iterations);
+    assert_eq!(r1.objective, r2.objective);
+    assert_eq!(r1.sv, r2.sv);
+}
+
+/// Tiny C forces all support vectors to the box bound; huge C leaves them
+/// free — the SV/BSV accounting matches the regime.
+#[test]
+fn c_regime_controls_bounded_svs() {
+    let ds = Arc::new(chessboard(200, 4, 10));
+    let (_, small_c) = train(&ds, &TrainConfig::new(1e-3, 0.5));
+    let (_, large_c) = train(&ds, &TrainConfig::new(1e6, 0.5));
+    assert!(small_c.bsv * 10 >= small_c.sv * 9, "tiny C: nearly all bounded");
+    assert!(large_c.bsv * 10 <= large_c.sv * 5, "huge C: mostly free SVs");
+}
+
+/// Gram facade consistency on a real training run: cache statistics add
+/// up and the solver touched the cache.
+#[test]
+fn cache_statistics_are_consistent() {
+    let ds = Arc::new(chessboard(300, 4, 12));
+    let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+    let mut gram = Gram::new(Box::new(nc), 4 << 20);
+    let res = pasmo::solver::pasmo::PasmoSolver::new(SolverConfig::default())
+        .solve(ds.labels(), 1e6, &mut gram);
+    assert!(res.converged);
+    let s = res.cache_stats;
+    assert!(s.hits > 0, "no cache hits in a full solve?");
+    assert!(s.misses > 0);
+    assert!(s.hits + s.misses >= 2 * res.iterations, "each iteration touches 2 rows");
+}
