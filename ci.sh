@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# CI gate for the pasmo workspace. Mirrors the tier-1 verify
+# (`cargo build --release && cargo test -q`) and adds the guards that
+# keep the offline build honest:
+#   1. cargo fmt --check        (skipped when rustfmt is not installed)
+#   2. cargo build --release    (tier-1, default features = native path)
+#   3. cargo test -q            (tier-1)
+#   4. cargo build --no-default-features
+#                               (the native path must never grow a hard
+#                                external dependency)
+#   4b. cargo build --benches   (bench targets are not covered by build/test)
+#   5. cargo build --features pjrt
+#                               (the gated runtime module must keep
+#                                compiling against the vendor/xla stub)
+#   6. cargo test -q --features pjrt
+#                               (runtime unit tests + the pjrt smoke test)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+step() { printf '\n==== %s ====\n' "$*"; }
+
+if cargo fmt --version >/dev/null 2>&1; then
+    step "cargo fmt --check"
+    cargo fmt --check
+else
+    step "cargo fmt --check (SKIPPED: rustfmt not installed)"
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+step "cargo build --no-default-features"
+cargo build --no-default-features
+
+step "cargo build --benches"
+cargo build --benches
+
+step "cargo build --benches --features pjrt"
+cargo build --benches --features pjrt
+
+step "cargo build --features pjrt"
+cargo build --features pjrt
+
+step "cargo test -q --features pjrt"
+cargo test -q --features pjrt
+
+step "OK"

@@ -3,16 +3,14 @@
 //!
 //! Reports rows/s and effective GFLOP/s (2·ℓ·d flops per row for the dot
 //! products, plus the exp). This is the L1/L3 boundary the perf pass
-//! optimizes.
+//! optimizes. The PJRT columns appear only when built with
+//! `--features pjrt` *and* artifacts are present.
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use pasmo::data::dataset::Dataset;
 use pasmo::kernel::matrix::RowComputer;
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
-use pasmo::runtime::engine::PjrtEngine;
-use pasmo::runtime::gram::PjrtRowComputer;
 use pasmo::util::prng::Pcg;
 use pasmo::util::timer::bench;
 
@@ -31,13 +29,66 @@ fn flops(n: usize, d: usize) -> f64 {
     (n * (2 * d + 4)) as f64 // per full row
 }
 
+fn report(r: &pasmo::util::timer::BenchResult, n: usize, d: usize) {
+    println!(
+        "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s",
+        r.line(),
+        1.0 / r.mean_s,
+        flops(n, d) / r.mean_s / 1e9
+    );
+}
+
+/// One engine shared across all dataset sizes, so the per-artifact
+/// executable memoization is exercised instead of recompiling per size.
+#[cfg(feature = "pjrt")]
+type Engine = Option<std::rc::Rc<pasmo::runtime::engine::PjrtEngine>>;
+#[cfg(not(feature = "pjrt"))]
+type Engine = ();
+
+#[cfg(feature = "pjrt")]
+fn open_engine() -> Engine {
+    match pasmo::runtime::engine::PjrtEngine::open_default() {
+        Ok(e) => Some(std::rc::Rc::new(e)),
+        Err(_) => {
+            println!("(PJRT artifacts missing — native only; run `make artifacts`)\n");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_engine() -> Engine {
+    println!("(built without the `pjrt` feature — native only)\n");
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(engine: &Engine, ds: &Arc<Dataset>, n: usize, d: usize, out: &mut [f32]) {
+    use pasmo::runtime::gram::PjrtRowComputer;
+
+    let Some(engine) = engine else {
+        return; // banner already printed by open_engine
+    };
+    match PjrtRowComputer::new(engine.clone(), ds.clone(), 0.5) {
+        Ok(pjrt) => {
+            let mut i = 0usize;
+            let r = bench(&format!("pjrt    l={n:<6} d={d:<4}"), 10, || {
+                i = (i + 17) % n;
+                pjrt.compute_row(i, out);
+                out[0]
+            });
+            report(&r, n, d);
+        }
+        Err(e) => println!("pjrt    l={n:<6} d={d:<4}: unavailable ({e})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_engine: &Engine, _ds: &Arc<Dataset>, _n: usize, _d: usize, _out: &mut [f32]) {}
+
 fn main() {
     println!("==== bench_kernel_throughput ====");
     println!("gram-row evaluation: native Rust vs PJRT artifact (DESIGN.md P1)\n");
-    let engine = PjrtEngine::open_default().ok().map(Rc::new);
-    if engine.is_none() {
-        println!("(PJRT artifacts missing — native only; run `make artifacts`)\n");
-    }
+    let engine = open_engine();
 
     for &(n, d) in &[(1000usize, 2usize), (4096, 16), (4096, 64), (16384, 64), (8192, 200)] {
         let ds = random_ds(n, d, 42);
@@ -49,32 +100,8 @@ fn main() {
             native.compute_row(i, &mut out);
             out[0]
         });
-        println!(
-            "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s",
-            r.line(),
-            1.0 / r.mean_s,
-            flops(n, d) / r.mean_s / 1e9
-        );
-
-        if let Some(engine) = &engine {
-            match PjrtRowComputer::new(engine.clone(), ds.clone(), 0.5) {
-                Ok(pjrt) => {
-                    let mut i = 0usize;
-                    let r = bench(&format!("pjrt    l={n:<6} d={d:<4}"), 10, || {
-                        i = (i + 17) % n;
-                        pjrt.compute_row(i, &mut out);
-                        out[0]
-                    });
-                    println!(
-                        "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s",
-                        r.line(),
-                        1.0 / r.mean_s,
-                        flops(n, d) / r.mean_s / 1e9
-                    );
-                }
-                Err(e) => println!("pjrt    l={n:<6} d={d:<4}: unavailable ({e})"),
-            }
-        }
+        report(&r, n, d);
+        bench_pjrt(&engine, &ds, n, d, &mut out);
         println!();
     }
 }

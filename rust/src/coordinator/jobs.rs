@@ -73,11 +73,22 @@ pub fn run_permutations(
 
     results
         .into_iter()
-        .map(|m| {
+        .enumerate()
+        .map(|(ci, m)| {
             m.into_inner()
                 .unwrap()
                 .into_iter()
-                .map(|r| r.expect("permutation run missing"))
+                .enumerate()
+                .map(|(p, r)| {
+                    r.unwrap_or_else(|| {
+                        panic!(
+                            "permutation run missing: config #{ci} {:?} on permutation \
+                             #{p}/{perms} (seed {seed}) — a worker exited before \
+                             completing this (config, permutation) pair",
+                            configs[ci]
+                        )
+                    })
+                })
                 .collect()
         })
         .collect()

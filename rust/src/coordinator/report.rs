@@ -3,7 +3,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Collects report sections, mirroring them to stdout.
 pub struct Report {

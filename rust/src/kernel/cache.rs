@@ -154,9 +154,12 @@ impl RowCache {
         }
     }
 
-    /// Invalidate everything (dataset changed).
+    /// Invalidate everything (dataset changed). Also resets the LRU clock
+    /// and the statistics so hit-rate reports never bleed across datasets.
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.clock = 0;
+        self.stats = CacheStats::default();
     }
 }
 
@@ -243,5 +246,31 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert!(!c.contains(0));
+    }
+
+    #[test]
+    fn clear_resets_stats_and_clock() {
+        let mut c = RowCache::with_capacity_rows(2);
+        c.get_or_compute(0, 4, None, fill(0.0));
+        c.get_or_compute(0, 4, None, fill(0.0)); // hit
+        c.get_or_compute(1, 4, None, fill(1.0));
+        c.get_or_compute(2, 4, None, fill(2.0)); // eviction
+        assert_ne!(c.stats(), CacheStats::default(), "test setup: stats non-trivial");
+
+        c.clear();
+        assert_eq!(c.stats(), CacheStats::default(), "stats must not bleed across datasets");
+        assert_eq!(c.stats().hit_rate(), 0.0);
+
+        // The cleared cache behaves exactly like a fresh one: same
+        // accesses, same counters, same LRU decisions.
+        let mut fresh = RowCache::with_capacity_rows(2);
+        for cache in [&mut c, &mut fresh] {
+            cache.get_or_compute(5, 4, None, fill(5.0));
+            cache.get_or_compute(6, 4, None, fill(6.0));
+            cache.get_or_compute(5, 4, None, fill(5.0)); // touch 5; 6 is LRU
+            cache.get_or_compute(7, 4, None, fill(7.0)); // evicts 6
+        }
+        assert_eq!(c.stats(), fresh.stats());
+        assert!(c.contains(5) && c.contains(7) && !c.contains(6));
     }
 }

@@ -1,6 +1,7 @@
 //! Kernel substrate: Mercer kernel functions, the native (Rust) Gram-row
-//! computer, the PJRT-backed computer (see [`crate::runtime`]), the LRU
-//! row cache, and the [`matrix::Gram`] facade the solver talks to.
+//! computer, the PJRT-backed computer (`crate::runtime`, behind the
+//! `pjrt` feature), the LRU row cache, and the [`matrix::Gram`] facade
+//! the solver talks to.
 
 pub mod cache;
 pub mod function;

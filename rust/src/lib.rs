@@ -12,7 +12,10 @@
 //!   step (eqs. 7/8, Algs. 2 & 4), PA-aware working-set selection (Alg. 3)
 //!   and the complete PA-SMO driver (Alg. 5), plus shrinking and telemetry.
 //! * [`kernel`] — kernel functions, the LRU row cache and Gram abstractions.
-//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
+//! * `runtime` — PJRT engine loading `artifacts/*.hlo.txt`. Compiled only
+//!   with the `pjrt` cargo feature (off by default so the crate builds
+//!   offline with zero external dependencies); the default build uses the
+//!   native Rust kernel path.
 //! * [`data`] — LIBSVM IO and the synthetic dataset suite standing in for
 //!   the paper's 22 benchmark datasets.
 //! * [`svm`] — user-facing train / predict / cross-validation / grid search.
@@ -20,12 +23,13 @@
 //!   paper's evaluation uses.
 //! * [`coordinator`] — experiment drivers regenerating every table/figure.
 //! * [`util`] — substrates that would normally come from crates.io (PRNG,
-//!   CLI parsing, JSON, property testing, timing) built in-repo because the
-//!   build environment is offline.
+//!   CLI parsing, JSON, error handling, property testing, timing) built
+//!   in-repo because the build environment is offline.
 
 pub mod coordinator;
 pub mod data;
 pub mod kernel;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod solver;
 pub mod stats;

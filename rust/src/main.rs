@@ -10,20 +10,18 @@
 //! * `info` — environment / artifact status.
 
 use std::path::Path;
-use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
+use pasmo::bail;
 use pasmo::coordinator::experiments::{self, ExpOptions};
 use pasmo::coordinator::report::Report;
 use pasmo::data::{libsvm, suite, Dataset};
-use pasmo::runtime::engine::PjrtEngine;
-use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::solver::smo::SolveResult;
 use pasmo::svm::predict::accuracy;
-use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+use pasmo::svm::train::{train, SolverChoice, TrainConfig};
 use pasmo::svm::SvmModel;
 use pasmo::util::cli::Args;
+use pasmo::util::error::{Context, Result};
 
 fn main() {
     let args = Args::from_env();
@@ -135,11 +133,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.solver_config.eps = args.get_parse_or("eps", 1e-3);
 
     let (model, res) = if args.get("runtime") == Some("pjrt") {
-        let engine = Rc::new(PjrtEngine::open_default().context(
-            "open PJRT artifacts (run `make artifacts`, or set PASMO_ARTIFACTS)",
-        )?);
-        let computer = PjrtRowComputer::new(engine, ds.clone(), gamma)?;
-        train_with_computer(&ds, &cfg, Box::new(computer))
+        train_pjrt(&ds, &cfg, gamma)?
     } else {
         train(&ds, &cfg)
     };
@@ -169,6 +163,39 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("model saved to {out}");
     }
     Ok(())
+}
+
+/// Train over the PJRT kernel path (the `--runtime pjrt` flag).
+#[cfg(feature = "pjrt")]
+fn train_pjrt(
+    ds: &Arc<Dataset>,
+    cfg: &TrainConfig,
+    gamma: f64,
+) -> Result<(SvmModel, SolveResult)> {
+    use pasmo::runtime::engine::PjrtEngine;
+    use pasmo::runtime::gram::PjrtRowComputer;
+    use pasmo::svm::train::train_with_computer;
+    let engine = std::rc::Rc::new(PjrtEngine::open_default().context(
+        "open PJRT artifacts (run `make artifacts`, or set PASMO_ARTIFACTS)",
+    )?);
+    let computer = PjrtRowComputer::new(engine, ds.clone(), gamma)?;
+    Ok(train_with_computer(ds, cfg, Box::new(computer)))
+}
+
+/// Without the `pjrt` feature the runtime module is not compiled at all;
+/// requesting it is a clean CLI error, and everything else falls back to
+/// the native Rust kernel path.
+#[cfg(not(feature = "pjrt"))]
+fn train_pjrt(
+    _ds: &Arc<Dataset>,
+    _cfg: &TrainConfig,
+    _gamma: f64,
+) -> Result<(SvmModel, SolveResult)> {
+    bail!(
+        "--runtime pjrt requires a build with the `pjrt` feature \
+         (cargo build --features pjrt); rerun without --runtime for the \
+         native kernel path"
+    );
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
@@ -267,6 +294,13 @@ fn cmd_info() -> Result<()> {
         "threads available: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
     );
+    info_pjrt();
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn info_pjrt() {
+    use pasmo::runtime::engine::PjrtEngine;
     match PjrtEngine::open_default() {
         Ok(engine) => {
             println!(
@@ -281,5 +315,9 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("PJRT artifacts unavailable: {e} (run `make artifacts`)"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn info_pjrt() {
+    println!("PJRT: disabled at build time (native kernel path only; enable with `cargo build --features pjrt`)");
 }

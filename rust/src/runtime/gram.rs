@@ -9,7 +9,8 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::util::error::{Context, Result};
 
 use crate::data::dataset::Dataset;
 use crate::kernel::matrix::RowComputer;
@@ -59,7 +60,7 @@ impl PjrtRowComputer {
         let (q, chunk_l, d) = (meta.q, meta.l, meta.d);
         let n = data.len();
         let n_chunks = n.div_ceil(chunk_l);
-        anyhow::ensure!(n_chunks > 0, "empty dataset");
+        ensure!(n_chunks > 0, "empty dataset");
         let mut chunks = Vec::with_capacity(n_chunks);
         let mut host = vec![0f32; chunk_l * d];
         for c in 0..n_chunks {

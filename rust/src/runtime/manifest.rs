@@ -3,8 +3,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
-
+use crate::ensure;
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
 
 /// Metadata for one AOT artifact.
@@ -37,8 +37,8 @@ impl Manifest {
         let path = dir.join("MANIFEST.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
-        anyhow::ensure!(
+        let v = Json::parse(&text).map_err(|e| Error::msg(format!("parse manifest: {e}")))?;
+        ensure!(
             v.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
             "unsupported manifest format"
         );

@@ -2,7 +2,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Error, Result};
+use crate::{bail, ensure};
 
 use crate::data::dataset::Dataset;
 use crate::kernel::function::KernelFunction;
@@ -113,7 +114,7 @@ impl SvmModel {
     pub fn load(path: &Path) -> Result<SvmModel> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse model: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| Error::msg(format!("parse model: {e}")))?;
         let get = |k: &str| v.get(k).with_context(|| format!("missing field {k}"));
         let gamma = get("gamma")?.as_f64().context("gamma")?;
         let coef0 = get("coef0")?.as_f64().context("coef0")?;
@@ -123,7 +124,7 @@ impl SvmModel {
             "linear" => KernelFunction::Linear,
             "poly" => KernelFunction::Poly { gamma, coef0, degree },
             "sigmoid" => KernelFunction::Sigmoid { gamma, coef0 },
-            other => anyhow::bail!("unknown kernel {other:?}"),
+            other => bail!("unknown kernel {other:?}"),
         };
         let bias = get("bias")?.as_f64().context("bias")?;
         let dim = get("dim")?.as_usize().context("dim")?;
@@ -142,11 +143,14 @@ impl SvmModel {
             .collect();
         let mut support = Dataset::with_dim(dim);
         let rows = get("sv")?.as_arr().context("sv")?;
-        anyhow::ensure!(rows.len() == coef.len() && rows.len() == labels.len());
+        ensure!(
+            rows.len() == coef.len() && rows.len() == labels.len(),
+            "sv/coef/label counts disagree"
+        );
         let mut buf = vec![0f32; dim];
         for (r, row) in rows.iter().enumerate() {
             let vals = row.as_arr().context("sv row")?;
-            anyhow::ensure!(vals.len() == dim, "sv row arity");
+            ensure!(vals.len() == dim, "sv row arity");
             for (k, jv) in vals.iter().enumerate() {
                 buf[k] = jv.as_f64().context("sv value")? as f32;
             }

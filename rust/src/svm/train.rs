@@ -75,8 +75,10 @@ pub fn train(data: &Arc<Dataset>, cfg: &TrainConfig) -> (SvmModel, SolveResult) 
     train_with_computer(data, cfg, Box::new(computer))
 }
 
-/// Train with a caller-supplied row computer (e.g. the PJRT-backed one
-/// from [`crate::runtime::gram::PjrtRowComputer`]).
+/// Train with a caller-supplied row computer (e.g. the PJRT-backed
+/// `crate::runtime::gram::PjrtRowComputer`, available with the `pjrt`
+/// feature). [`train`] is the native-path shorthand — the default build
+/// always has that fallback.
 pub fn train_with_computer(
     data: &Arc<Dataset>,
     cfg: &TrainConfig,

@@ -1,0 +1,230 @@
+//! Minimal error substrate replacing `anyhow` (offline build).
+//!
+//! Provides the small slice of `anyhow`'s API surface the codebase uses:
+//! a chained [`Error`], a [`Result`] alias with a default error type, the
+//! [`Context`] extension trait (`.context(..)` / `.with_context(|| ..)`
+//! on both `Result` and `Option`), and the [`bail!`] / [`ensure!`]
+//! macros. `Display` renders the whole chain outermost-first
+//! (`open model.json: read /tmp/x: No such file or directory`), so
+//! `{e}` and `{e:#}` both show the full story.
+//!
+//! The macros are `#[macro_export]`ed at the crate root: import them with
+//! `use crate::{bail, ensure};` (or `use pasmo::{bail, ensure};` from the
+//! binary and integration tests).
+//!
+//! [`bail!`]: crate::bail
+//! [`ensure!`]: crate::ensure
+
+use std::fmt;
+
+/// A chained error: an innermost root message plus outer context frames.
+pub struct Error {
+    /// Context frames, outermost first.
+    frames: Vec<String>,
+    /// Root cause message.
+    message: String,
+}
+
+/// `anyhow::Result`-style alias: error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a root message.
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error { frames: Vec::new(), message: message.into() }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn wrap(mut self, context: impl Into<String>) -> Error {
+        self.frames.insert(0, context.into());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_message(&self) -> &str {
+        &self.message
+    }
+
+    /// All frames, outermost context first, root message last.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        self.frames
+            .iter()
+            .map(String::as_str)
+            .chain(std::iter::once(self.message.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for frame in &self.frames {
+            write!(f, "{frame}: ")?;
+        }
+        f.write_str(&self.message)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(message: String) -> Error {
+        Error::msg(message)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(message: &str) -> Error {
+        Error::msg(message)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` (any `Display`-able error) and `Option`.
+pub trait Context<T> {
+    /// Attach a context frame (eagerly evaluated).
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a context frame computed only on the error path.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context.to_string())),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f().to_string())),
+        }
+    }
+}
+
+/// Return early with an [`Error`] built from a format string
+/// (`anyhow::bail!` equivalent).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds
+/// (`anyhow::ensure!` equivalent).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err::<(), std::io::Error>(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn display_renders_chain_outermost_first() {
+        let e = Error::msg("root").wrap("inner ctx").wrap("outer ctx");
+        assert_eq!(e.to_string(), "outer ctx: inner ctx: root");
+        assert_eq!(format!("{e:#}"), "outer ctx: inner ctx: root");
+        assert_eq!(format!("{e:?}"), "outer ctx: inner ctx: root");
+        assert_eq!(e.root_message(), "root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer ctx", "inner ctx", "root"]);
+    }
+
+    #[test]
+    fn result_context_wraps_any_display_error() {
+        let r: Result<u32> = "12x".parse::<u32>().context("parse the count");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("parse the count: "), "{msg}");
+        assert!(msg.contains("invalid digit"), "{msg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: Result<u32> = Ok::<u32, Error>(7).with_context(|| -> String {
+            panic!("context closure must not run on Ok")
+        });
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context_turns_none_into_error() {
+        let r: Result<u32> = None.context("missing field");
+        assert_eq!(r.unwrap_err().to_string(), "missing field");
+        let r: Result<u32> = Some(3).context("unused");
+        assert_eq!(r.unwrap(), 3);
+    }
+
+    #[test]
+    fn io_errors_convert_via_question_mark() {
+        let msg = fails_io().unwrap_err().to_string();
+        assert!(msg.contains("gone"), "{msg}");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            ensure!(x != 13);
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative input -2");
+        assert_eq!(f(200).unwrap_err().to_string(), "too big: 200");
+        assert!(f(13).unwrap_err().to_string().contains("x != 13"));
+    }
+
+    #[test]
+    fn nested_context_through_result_flattens_text() {
+        fn inner() -> Result<()> {
+            bail!("root cause");
+        }
+        fn outer() -> Result<()> {
+            inner().context("outer step")?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "outer step: root cause");
+    }
+}

@@ -1,6 +1,7 @@
 //! In-repo substrates replacing crates.io dependencies (offline build).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

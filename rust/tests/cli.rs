@@ -1,16 +1,45 @@
 //! CLI integration tests: drive the `pasmo` binary end to end.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::Command;
 
 fn pasmo() -> Command {
     Command::new(env!("CARGO_BIN_EXE_pasmo"))
 }
 
-fn tmpdir() -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("pasmo-cli-{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+/// A per-test scratch directory, unique per (test, process) and removed
+/// when the test ends — stale model files from a previous or concurrent
+/// run can never mask a failure.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(test: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!(
+            "pasmo-cli-{test}-{}",
+            std::process::id()
+        ));
+        // A leftover directory (e.g. from a killed run with the same pid)
+        // is wiped so every test starts from a clean slate.
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl AsRef<Path> for TempDir {
+    fn as_ref(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
 }
 
 #[test]
@@ -34,8 +63,8 @@ fn datasets_lists_the_suite() {
 
 #[test]
 fn train_save_predict_round_trip() {
-    let dir = tmpdir();
-    let model = dir.join("model.json");
+    let dir = TempDir::new("train-save-predict");
+    let model = dir.path("model.json");
     let out = pasmo()
         .args([
             "train", "--dataset", "chess-board-1000", "--len", "300", "--solver",
@@ -54,7 +83,7 @@ fn train_save_predict_round_trip() {
     assert!(model.exists());
 
     // write a small libsvm test file from the same generator family
-    let test_path = dir.join("test.libsvm");
+    let test_path = dir.path("test.libsvm");
     let ds = pasmo::data::synth::chessboard(100, 4, 99);
     pasmo::data::libsvm::write(&ds, &test_path).unwrap();
 
@@ -77,13 +106,12 @@ fn train_save_predict_round_trip() {
         .parse()
         .unwrap();
     assert!(acc > 0.8, "accuracy {acc}");
-    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
 fn experiment_fig2_writes_report() {
-    let dir = tmpdir();
-    let report = dir.join("fig2.md");
+    let dir = TempDir::new("experiment-fig2");
+    let report = dir.path("fig2.md");
     let out = pasmo()
         .args(["experiment", "fig2", "--out"])
         .arg(&report)
@@ -93,7 +121,6 @@ fn experiment_fig2_writes_report() {
     let text = std::fs::read_to_string(&report).unwrap();
     assert!(text.contains("Figure 2"));
     assert!(text.contains("η-band"));
-    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,140 @@
+//! Offline stub of the subset of the `xla` PJRT binding that
+//! `pasmo::runtime` consumes.
+//!
+//! The build environment has no network access and no PJRT plugin, but the
+//! `pjrt` cargo feature must still *compile* so the runtime layer cannot
+//! silently rot. This crate mirrors the API shape of the real binding
+//! (`PjRtClient::cpu()` → compile HLO → `execute_b` → literal readback)
+//! and fails at the first runtime step — client creation — with a clear
+//! error. Swapping the `vendor/xla` path dependency for a real binding
+//! restores execution without touching `pasmo` itself.
+
+use std::fmt;
+
+/// Error type matching the binding's `Display`-able error.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: the offline `xla` stub cannot execute; link a real PJRT binding \
+             (replace the `vendor/xla` path dependency) to run artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. The stub has no PJRT plugin, so this is the
+    /// single point of failure for every runtime path.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("create PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile computation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("upload host buffer"))
+    }
+}
+
+/// Device-resident buffer (stub: unconstructible through public API).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("read back literal"))
+    }
+}
+
+/// Compiled executable (stub: unconstructible through public API).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+/// Host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("unwrap 1-tuple literal"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("literal to vec"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parsing HLO text requires the real binding's proto support.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("parse HLO text file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("PJRT"), "{msg}");
+    }
+
+    #[test]
+    fn proto_parsing_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
