@@ -9,6 +9,9 @@
 #                               (the native path must never grow a hard
 #                                external dependency)
 #   4b. cargo build --benches   (bench targets are not covered by build/test)
+#   4c. cargo build --examples  (the 5 root-level examples are real
+#                                [[example]] targets and must keep building)
+#   4d. run the quickstart example at tiny scale (end-to-end smoke)
 #   5. cargo build --features pjrt
 #                               (the gated runtime module must keep
 #                                compiling against the vendor/xla stub)
@@ -38,8 +41,17 @@ cargo build --no-default-features
 step "cargo build --benches"
 cargo build --benches
 
+step "cargo build --release --examples"
+cargo build --release --examples
+
+step "cargo run --release --example quickstart -- --len 200"
+cargo run --release --example quickstart -- --len 200
+
 step "cargo build --benches --features pjrt"
 cargo build --benches --features pjrt
+
+step "cargo build --examples --features pjrt"
+cargo build --examples --features pjrt
 
 step "cargo build --features pjrt"
 cargo build --features pjrt

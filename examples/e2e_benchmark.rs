@@ -6,8 +6,9 @@
 //!      permutations through the Rust coordinator (threaded fan-out),
 //!   3. verifies solution quality against the independent dense
 //!      projected-gradient reference on a subsample,
-//!   4. runs prediction through the AOT/PJRT decision artifact and checks
-//!      it against the native decision path,
+//!   4. (with `--features pjrt` and artifacts) runs prediction through
+//!      the AOT/PJRT decision artifact and checks it against the native
+//!      decision path,
 //!   5. prints the paper's headline metric (iterations/time, SMO vs PA,
 //!      Wilcoxon-marked) — the Table-2 shape.
 //!
@@ -15,21 +16,19 @@
 //! cargo run --release --example e2e_benchmark [-- --perms 10 --full]
 //! ```
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use pasmo::coordinator::experiments::{table2, ExpOptions};
 use pasmo::data::synth::chessboard;
+use pasmo::ensure;
 use pasmo::kernel::matrix::DenseGram;
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
-use pasmo::runtime::engine::PjrtEngine;
-use pasmo::runtime::gram::{PjrtDecision, PjrtRowComputer};
 use pasmo::solver::reference::solve_reference;
-use pasmo::svm::predict::decision_values;
-use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
+use pasmo::svm::{SolverChoice, Trainer};
 use pasmo::util::cli::Args;
+use pasmo::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse_from(std::env::args().skip(1));
     let mut opts = ExpOptions::default();
     opts.perms = args.get_parse_or("perms", 5usize);
@@ -47,9 +46,9 @@ fn main() -> anyhow::Result<()> {
     let nc = NativeRowComputer::new(small.clone(), KernelFunction::Rbf { gamma: 0.5 });
     let dense = DenseGram::materialize(&nc);
     let reference = solve_reference(&dense, small.labels(), 100.0, 200_000, 1e-14);
-    let cfg = TrainConfig::new(100.0, 0.5);
-    let (_, pa) = train(&small, &cfg.with_solver(SolverChoice::Pasmo));
-    let (_, smo) = train(&small, &cfg.with_solver(SolverChoice::Smo));
+    let base = Trainer::rbf(100.0, 0.5);
+    let pa = base.clone().solver(SolverChoice::Pasmo).train(&small).result;
+    let smo = base.solver(SolverChoice::Smo).train(&small).result;
     println!(
         "## Oracle check (chess-board ℓ=120, C=100)\n\
          reference objective  = {:.6}\n\
@@ -58,18 +57,31 @@ fn main() -> anyhow::Result<()> {
         reference.objective, smo.objective, pa.objective
     );
     let tol = 1e-3 * (1.0 + reference.objective.abs());
-    anyhow::ensure!((smo.objective - reference.objective).abs() < tol, "SMO off oracle");
-    anyhow::ensure!((pa.objective - reference.objective).abs() < tol, "PA-SMO off oracle");
+    ensure!((smo.objective - reference.objective).abs() < tol, "SMO off oracle");
+    ensure!((pa.objective - reference.objective).abs() < tol, "PA-SMO off oracle");
 
     // ---- (2)+(4) the PJRT layers: train + predict through artifacts ----
+    pjrt_layers()?;
+
+    println!("e2e_benchmark OK");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_layers() -> Result<()> {
+    use pasmo::runtime::engine::PjrtEngine;
+    use pasmo::runtime::gram::{PjrtDecision, PjrtRowComputer};
+    use pasmo::svm::predict::decision_values;
+    use std::rc::Rc;
+
     match PjrtEngine::open_default() {
         Ok(engine) => {
             let engine = Rc::new(engine);
             let ds = Arc::new(chessboard(600, 4, 4));
             let computer = PjrtRowComputer::new(engine.clone(), ds.clone(), 0.5)?;
             let t0 = std::time::Instant::now();
-            let (model, res) =
-                train_with_computer(&ds, &TrainConfig::new(1e4, 0.5), Box::new(computer));
+            let out = Trainer::rbf(1e4, 0.5).train_with_computer(&ds, Box::new(computer));
+            let (model, res) = (out.model, out.result);
             println!(
                 "## PJRT training path (chess-board ℓ=600)\n\
                  converged={} iterations={} time={:.3}s SV={}",
@@ -78,7 +90,7 @@ fn main() -> anyhow::Result<()> {
                 t0.elapsed().as_secs_f64(),
                 res.sv
             );
-            anyhow::ensure!(res.converged, "PJRT-path training failed to converge");
+            ensure!(res.converged, "PJRT-path training failed to converge");
 
             // decision artifact vs native decision
             let queries = chessboard(64, 4, 5);
@@ -100,13 +112,17 @@ fn main() -> anyhow::Result<()> {
                 .map(|(a, b)| (a - b).abs() / coef_scale.max(1.0 + b.abs()))
                 .fold(0.0f64, f64::max);
             println!("decision artifact vs native: max relative |Δf| = {max_rel:.2e}\n");
-            anyhow::ensure!(max_rel < 1e-4, "PJRT decision mismatch");
+            ensure!(max_rel < 1e-4, "PJRT decision mismatch");
         }
         Err(e) => {
             println!("## PJRT layers skipped ({e}); run `make artifacts`\n");
         }
     }
+    Ok(())
+}
 
-    println!("e2e_benchmark OK");
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_layers() -> Result<()> {
+    println!("## PJRT layers skipped (build with --features pjrt)\n");
     Ok(())
 }

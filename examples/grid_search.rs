@@ -1,35 +1,53 @@
 //! Model selection scenario: (C, γ) grid search with cross-validation on
 //! a Breiman benchmark — the §7 protocol that produced Table 1's
-//! hyper-parameters.
+//! hyper-parameters — run twice to show the warm-start session win:
+//! the seeded sweep answers the same grid in fewer solver iterations.
 //!
 //! ```sh
 //! cargo run --release --example grid_search
 //! ```
 
 use pasmo::data::synth::twonorm;
-use pasmo::svm::gridsearch::{grid_search, log_grid};
-use pasmo::svm::train::{SolverChoice, TrainConfig};
+use pasmo::ensure;
+use pasmo::svm::gridsearch::{grid_search, log_grid, WarmStart};
+use pasmo::svm::{SolverChoice, Trainer};
+use pasmo::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let ds = twonorm(600, 7);
     println!("grid search on twonorm (ℓ={}, d={})\n", ds.len(), ds.dim());
 
-    let base = TrainConfig::new(1.0, 1.0).with_solver(SolverChoice::Pasmo);
+    let base = Trainer::rbf(1.0, 1.0).solver(SolverChoice::Pasmo);
     let cs = log_grid(10.0, -2, 2);
     let gammas = log_grid(10.0, -3, 0);
-    let res = grid_search(&ds, &cs, &gammas, 4, 1, &base);
+    let cold = grid_search(&ds, &cs, &gammas, 4, 1, &base, WarmStart::Cold);
+    let warm = grid_search(&ds, &cs, &gammas, 4, 1, &base, WarmStart::Seeded);
 
-    println!("{:>10} {:>10} {:>8}", "C", "gamma", "cv-acc");
-    for p in &res.evaluated {
-        let mark = if p.c == res.best.c && p.gamma == res.best.gamma { "  <-- best" } else { "" };
-        println!("{:>10} {:>10} {:>8.4}{}", p.c, p.gamma, p.cv_accuracy, mark);
+    println!("{:>10} {:>10} {:>8} {:>12} {:>12}", "C", "gamma", "cv-acc", "iters(cold)", "iters(warm)");
+    for (p, w) in cold.evaluated.iter().zip(&warm.evaluated) {
+        let mark = if p.c == cold.best.c && p.gamma == cold.best.gamma { "  <-- best" } else { "" };
+        println!(
+            "{:>10} {:>10} {:>8.4} {:>12} {:>12}{}",
+            p.c, p.gamma, p.cv_accuracy, p.iterations, w.iterations, mark
+        );
     }
     println!(
         "\nbest: C={} γ={} cv-accuracy={:.4}\n\
-         (paper's Table 1 for twonorm: C=0.5, γ=0.02 — same order of magnitude)",
-        res.best.c, res.best.gamma, res.best.cv_accuracy
+         (paper's Table 1 for twonorm: C=0.5, γ=0.02 — same order of magnitude)\n\
+         total solver iterations: cold={} warm-started={}",
+        cold.best.c,
+        cold.best.gamma,
+        cold.best.cv_accuracy,
+        cold.total_iterations,
+        warm.total_iterations,
     );
-    anyhow::ensure!(res.best.cv_accuracy > 0.9, "twonorm should be very learnable");
+    ensure!(cold.best.cv_accuracy > 0.9, "twonorm should be very learnable");
+    ensure!(
+        warm.total_iterations < cold.total_iterations,
+        "warm-started grid should need fewer iterations ({} vs {})",
+        warm.total_iterations,
+        cold.total_iterations
+    );
     println!("grid_search OK");
     Ok(())
 }

@@ -11,11 +11,11 @@
 //! cargo run --release --example oscillation_trace
 //! ```
 
+use pasmo::ensure;
 use pasmo::kernel::matrix::{DenseGram, Gram, RowComputer};
 use pasmo::solver::events::TelemetryConfig;
-use pasmo::solver::pasmo::PasmoSolver;
-use pasmo::solver::smo::{SmoSolver, SolverConfig};
-use pasmo::solver::StepKind;
+use pasmo::solver::{Engine, EngineConfig, QpProblem, SolverChoice, SolverConfig, StepKind};
+use pasmo::util::error::Result;
 
 /// RowComputer over an explicit Gram matrix (the "two working sets"
 /// scenario needs exact control of the cross terms).
@@ -62,11 +62,9 @@ fn run(label: &str, pa: bool) -> (u64, Vec<(u64, f64)>, u64) {
         telemetry: TelemetryConfig::full(1),
         ..Default::default()
     };
-    let res = if pa {
-        PasmoSolver::new(cfg).solve(&labels, c, &mut gram)
-    } else {
-        SmoSolver::new(cfg).solve(&labels, c, &mut gram)
-    };
+    let choice = if pa { SolverChoice::Pasmo } else { SolverChoice::Smo };
+    let engine = EngineConfig::new(choice, cfg).build();
+    let res = engine.solve(&QpProblem::classification(&labels, c), &mut gram);
     println!(
         "{label:<8} iterations={:<4} planning={:<3} final f={:.10}",
         res.iterations, res.telemetry.planning_steps, res.objective
@@ -75,7 +73,7 @@ fn run(label: &str, pa: bool) -> (u64, Vec<(u64, f64)>, u64) {
     (res.iterations, res.telemetry.objective_trace.clone(), planning)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     println!("Figure-1 minimal oscillation scenario (3 variables, ε=1e-8)\n");
     let (it_smo, trace_smo, _) = run("SMO", false);
     let (it_pa, trace_pa, planning) = run("PA-SMO", true);
@@ -90,12 +88,12 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nSMO needed {it_smo} iterations; PA-SMO {it_pa} (with {planning} planned steps)."
     );
-    anyhow::ensure!(
+    ensure!(
         it_pa <= it_smo,
         "planning should not lose on the oscillation scenario"
     );
     // sanity: PA actually planned
-    anyhow::ensure!(planning > 0 || it_pa <= 4, "expected planning steps in the cone");
+    ensure!(planning > 0 || it_pa <= 4, "expected planning steps in the cone");
     let _ = StepKind::Planning;
     println!("oscillation_trace OK");
     Ok(())

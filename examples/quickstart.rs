@@ -1,47 +1,69 @@
 //! Quickstart: train a PA-SMO SVM on the chess-board problem and evaluate.
 //!
 //! ```sh
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart [-- --len 1000]
 //! ```
 //!
-//! Demonstrates the public API end to end: synthetic data → PA-SMO
-//! training (PJRT kernel path when artifacts exist, native fallback) →
-//! prediction → model save/load round trip.
+//! Demonstrates the public API end to end: synthetic data → `Trainer`
+//! (PJRT kernel path when built with `--features pjrt` and artifacts
+//! exist, native fallback) → prediction → model save/load round trip.
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use pasmo::data::synth::chessboard;
-use pasmo::runtime::engine::PjrtEngine;
-use pasmo::runtime::gram::PjrtRowComputer;
+use pasmo::ensure;
 use pasmo::svm::predict::accuracy;
-use pasmo::svm::train::{train, train_with_computer, SolverChoice, TrainConfig};
-use pasmo::svm::SvmModel;
+use pasmo::svm::{SolverChoice, SvmModel, Trainer, TrainOutcome};
+use pasmo::util::cli::Args;
+use pasmo::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    // The paper's hardest benchmark family, at quickstart size.
-    let train_set = Arc::new(chessboard(1000, 4, 1));
-    let test_set = chessboard(2000, 4, 2);
-
-    // Paper hyper-parameters for chess-board: C = 10⁶, γ = 0.5.
-    let cfg = TrainConfig::new(1e6, 0.5).with_solver(SolverChoice::Pasmo);
-
-    // Prefer the AOT/PJRT kernel path (the three-layer deployment shape);
-    // fall back to the native Rust kernel when artifacts are not built.
-    let (model, result) = match PjrtEngine::open_default() {
+/// Prefer the AOT/PJRT kernel path (the three-layer deployment shape);
+/// fall back to the native Rust kernel when artifacts are not built.
+#[cfg(feature = "pjrt")]
+fn train_preferring_pjrt(
+    trainer: &Trainer,
+    data: &Arc<pasmo::data::Dataset>,
+    gamma: f64,
+) -> Result<TrainOutcome> {
+    use pasmo::runtime::engine::PjrtEngine;
+    use pasmo::runtime::gram::PjrtRowComputer;
+    match PjrtEngine::open_default() {
         Ok(engine) => {
             println!("kernel path: PJRT ({} artifacts)", engine.manifest.artifacts.len());
-            let computer = PjrtRowComputer::new(Rc::new(engine), train_set.clone(), 0.5)?;
-            train_with_computer(&train_set, &cfg, Box::new(computer))
+            let computer = PjrtRowComputer::new(std::rc::Rc::new(engine), data.clone(), gamma)?;
+            Ok(trainer.train_with_computer(data, Box::new(computer)))
         }
         Err(e) => {
             println!("kernel path: native (PJRT unavailable: {e})");
-            train(&train_set, &cfg)
+            Ok(trainer.train(data))
         }
-    };
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn train_preferring_pjrt(
+    trainer: &Trainer,
+    data: &Arc<pasmo::data::Dataset>,
+    _gamma: f64,
+) -> Result<TrainOutcome> {
+    println!("kernel path: native (build with --features pjrt for the PJRT path)");
+    Ok(trainer.train(data))
+}
+
+fn main() -> Result<()> {
+    // The paper's hardest benchmark family; `--len` shrinks it for CI.
+    let args = Args::from_env();
+    let len: usize = args.get_parse_or("len", 1000);
+    let train_set = Arc::new(chessboard(len, 4, 1));
+    let test_set = chessboard(2 * len, 4, 2);
+
+    // Paper hyper-parameters for chess-board: C = 10⁶, γ = 0.5.
+    let trainer = Trainer::rbf(1e6, 0.5).solver(SolverChoice::Pasmo);
+
+    let TrainOutcome { model, result } = train_preferring_pjrt(&trainer, &train_set, 0.5)?;
 
     println!(
-        "\ntrained chess-board-1000 with PA-SMO:\n\
+        "\ntrained chess-board-{len} with PA-SMO:\n\
          iterations        = {}\n\
          planning steps    = {}\n\
          wall time         = {:.3}s\n\
@@ -66,11 +88,14 @@ fn main() -> anyhow::Result<()> {
     let path = std::env::temp_dir().join("pasmo-quickstart-model.json");
     model.save(&path)?;
     let reloaded = SvmModel::load(&path)?;
-    assert_eq!(reloaded.n_sv(), model.n_sv());
+    ensure!(reloaded.n_sv() == model.n_sv(), "model round trip changed the SV count");
     println!("model round-trip  = ok ({} SVs, {})", reloaded.n_sv(), path.display());
 
-    anyhow::ensure!(result.converged, "solver did not converge");
-    anyhow::ensure!(test_acc > 0.9, "unexpectedly poor accuracy {test_acc}");
+    ensure!(result.converged, "solver did not converge");
+    // The 4×4 chess-board needs a decent sample to generalize; at CI
+    // scale (`--len 200`) accept a looser floor.
+    let floor = if len >= 800 { 0.9 } else { 0.75 };
+    ensure!(test_acc > floor, "unexpectedly poor accuracy {test_acc} (floor {floor})");
     println!("\nquickstart OK");
     Ok(())
 }

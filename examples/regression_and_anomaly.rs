@@ -11,13 +11,15 @@ use std::sync::Arc;
 
 use pasmo::data::dataset::Dataset;
 use pasmo::data::regression::sinc;
+use pasmo::ensure;
 use pasmo::svm::oneclass::{train_one_class, OneClassConfig};
 use pasmo::svm::platt::PlattScaler;
 use pasmo::svm::svr::{train_svr_native, SvrConfig};
-use pasmo::svm::train::{train, TrainConfig};
+use pasmo::svm::Trainer;
+use pasmo::util::error::Result;
 use pasmo::util::prng::Pcg;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- ε-SVR on the sinc benchmark ----
     let train_set = sinc(400, 0.05, 1);
     let test_set = sinc(300, 0.0, 2);
@@ -33,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         svr.rmse(&test_set),
         cfg.epsilon
     );
-    anyhow::ensure!(res.converged && svr.rmse(&test_set) < 0.12);
+    ensure!(res.converged && svr.rmse(&test_set) < 0.12);
 
     // sample predictions along the curve
     println!("\n    x      sinc(x)   f(x)");
@@ -60,19 +62,19 @@ fn main() -> anyhow::Result<()> {
         oc.rho,
         oc_res.converged
     );
-    anyhow::ensure!(inlier && outlier && oc_res.converged);
+    ensure!(inlier && outlier && oc_res.converged);
 
     // ---- Platt scaling on a classifier ----
     let spec = pasmo::data::suite::find("twonorm").unwrap();
     let data = Arc::new(spec.generate(600, 3));
     let calib = spec.generate(400, 4);
-    let (model, _) = train(&data, &TrainConfig::new(spec.c, spec.gamma));
+    let model = Trainer::rbf(spec.c, spec.gamma).train(&data).model;
     let scaler = PlattScaler::fit_model(&model, &calib);
     println!("\nPlatt scaling on twonorm: A={:.4} B={:.4}", scaler.a, scaler.b);
     for f in [-2.0, -0.5, 0.0, 0.5, 2.0] {
         println!("  P(y=+1 | f={f:>4}) = {:.3}", scaler.prob(f));
     }
-    anyhow::ensure!(scaler.prob(2.0) > 0.8 && scaler.prob(-2.0) < 0.2);
+    ensure!(scaler.prob(2.0) > 0.8 && scaler.prob(-2.0) < 0.2);
 
     println!("\nregression_and_anomaly OK");
     Ok(())

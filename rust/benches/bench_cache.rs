@@ -9,6 +9,7 @@ use pasmo::kernel::matrix::Gram;
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
 use pasmo::solver::pasmo::PasmoSolver;
 use pasmo::solver::smo::SolverConfig;
+use pasmo::solver::{Engine, QpProblem};
 
 fn main() {
     println!("==== bench_cache ====");
@@ -28,7 +29,8 @@ fn main() {
         let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
         let mut gram = Gram::new(Box::new(nc), budget);
         let cfg = SolverConfig { cache_bytes: budget, ..Default::default() };
-        let res = PasmoSolver::new(cfg).solve(ds.labels(), 1e6, &mut gram);
+        let res =
+            PasmoSolver::new(cfg).solve(&QpProblem::classification(ds.labels(), 1e6), &mut gram);
         let s = res.cache_stats;
         println!(
             "{:>12} {:>9.3}s {:>10} {:>10} {:>10} {:>7.1}%",

@@ -10,19 +10,17 @@ use std::sync::Arc;
 use pasmo::data::synth::{chessboard, surrogate, SurrogateSpec};
 use pasmo::kernel::matrix::Gram;
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
-use pasmo::solver::pasmo::PasmoSolver;
-use pasmo::solver::smo::{SmoSolver, SolverConfig};
+use pasmo::solver::{Engine, EngineConfig, QpProblem, SolverChoice, SolverConfig};
 
 fn run(name: &str, ds: &Arc<pasmo::data::Dataset>, c: f64, gamma: f64, pa: bool, shrink: bool) {
     let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
     let mut gram = Gram::new(Box::new(nc), 100 << 20);
     let cfg = SolverConfig { shrinking: shrink, ..Default::default() };
+    let choice = if pa { SolverChoice::Pasmo } else { SolverChoice::Smo };
+    let engine = EngineConfig::new(choice, cfg).build();
+    let problem = QpProblem::classification(ds.labels(), c);
     let t0 = std::time::Instant::now();
-    let res = if pa {
-        PasmoSolver::new(cfg).solve(ds.labels(), c, &mut gram)
-    } else {
-        SmoSolver::new(cfg).solve(ds.labels(), c, &mut gram)
-    };
+    let res = engine.solve(&problem, &mut gram);
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "{name:<44} {:>8} iters  {:>8.3}s  {:>10.0} iters/s  (planning {})",

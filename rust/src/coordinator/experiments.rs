@@ -7,11 +7,12 @@
 use std::sync::Arc;
 
 use crate::data::suite::{self, DatasetSpec};
+use crate::solver::engine::SolverChoice;
 use crate::solver::events::TelemetryConfig;
 use crate::stats::histogram::Fig3Histogram;
 use crate::stats::summary::Summary;
 use crate::stats::wilcoxon::wilcoxon_signed_rank;
-use crate::svm::train::{train, SolverChoice, TrainConfig};
+use crate::svm::trainer::Trainer;
 use crate::util::table::{fnum, Align, Table};
 
 use super::jobs::{self, run_permutations};
@@ -82,10 +83,9 @@ impl ExpOptions {
         n
     }
 
-    fn base_config(&self, spec: &DatasetSpec) -> TrainConfig {
-        let mut cfg = TrainConfig::new(spec.c, spec.gamma);
-        cfg.solver_config.eps = self.eps;
-        cfg
+    /// The trainer template for a spec (paper (C, γ), CLI-set ε).
+    fn trainer(&self, spec: &DatasetSpec) -> Trainer {
+        Trainer::rbf(spec.c, spec.gamma).stop_eps(self.eps)
     }
 }
 
@@ -111,8 +111,7 @@ pub fn table1(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let cfg = opts.base_config(&spec);
-        let (_, res) = train(&ds, &cfg);
+        let res = opts.trainer(&spec).train(&ds).result;
         t.add_row(vec![
             spec.name.to_string(),
             n.to_string(),
@@ -144,10 +143,10 @@ pub fn table2(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let base = opts.base_config(&spec);
+        let base = opts.trainer(&spec);
         let cfgs = [
-            base.with_solver(SolverChoice::Smo),
-            base.with_solver(SolverChoice::Pasmo),
+            base.clone().solver(SolverChoice::Smo),
+            base.solver(SolverChoice::Pasmo),
         ];
         let res = run_permutations(&ds, &cfgs, opts.perms, opts.seed ^ 0xF00D, opts.threads);
         let (smo, pa) = (&res[0], &res[1]);
@@ -195,13 +194,13 @@ pub fn wss_ablation(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let base = opts.base_config(&spec);
-        let mut wss_only = base.with_solver(SolverChoice::Pasmo);
+        let base = opts.trainer(&spec);
+        let mut wss_only = base.clone().solver(SolverChoice::Pasmo);
         wss_only.solver_config.ablation_wss_only = true;
         let cfgs = [
-            base.with_solver(SolverChoice::Smo),
+            base.clone().solver(SolverChoice::Smo),
             wss_only,
-            base.with_solver(SolverChoice::Pasmo),
+            base.solver(SolverChoice::Pasmo),
         ];
         let res = run_permutations(&ds, &cfgs, opts.perms, opts.seed ^ 0xAB1A, opts.threads);
         t.add_row(vec![
@@ -231,9 +230,9 @@ pub fn fig3(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let mut cfg = opts.base_config(&spec).with_solver(SolverChoice::Pasmo);
-        cfg.solver_config.telemetry = TelemetryConfig::fig3();
-        let (_, res) = train(&ds, &cfg);
+        let mut trainer = opts.trainer(&spec).solver(SolverChoice::Pasmo);
+        trainer.solver_config.telemetry = TelemetryConfig::fig3();
+        let res = trainer.train(&ds).result;
         let mut h = Fig3Histogram::new(40, 3.0);
         for &r in &res.telemetry.planning_ratios {
             h.record(r);
@@ -261,14 +260,14 @@ pub fn heuristic_step(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let base = opts.base_config(&spec);
-        let mut over = base.with_solver(SolverChoice::Smo);
+        let base = opts.trainer(&spec);
+        let mut over = base.clone().solver(SolverChoice::Smo);
         over.solver_config.step_policy =
             crate::solver::step::OverStep::OverRelaxed(1.1);
         let cfgs = [
-            base.with_solver(SolverChoice::Smo),
+            base.clone().solver(SolverChoice::Smo),
             over,
-            base.with_solver(SolverChoice::Pasmo),
+            base.solver(SolverChoice::Pasmo),
         ];
         let res = run_permutations(&ds, &cfgs, opts.perms, opts.seed ^ 0x11E7, opts.threads);
         t.add_row(vec![
@@ -302,10 +301,10 @@ pub fn fig4(opts: &ExpOptions) -> String {
     for spec in opts.specs() {
         let n = opts.len_for(&spec);
         let ds = Arc::new(spec.generate(n, opts.seed));
-        let base = opts.base_config(&spec);
-        let cfgs: Vec<TrainConfig> = ns
+        let base = opts.trainer(&spec);
+        let cfgs: Vec<Trainer> = ns
             .iter()
-            .map(|&k| base.with_solver(SolverChoice::PasmoMulti(k)))
+            .map(|&k| base.clone().solver(SolverChoice::PasmoMulti(k)))
             .collect();
         let res = run_permutations(&ds, &cfgs, opts.perms, opts.seed ^ 0xF164, opts.threads);
         let t1 = Summary::of(&jobs::times(&res[0])).mean.max(1e-12);

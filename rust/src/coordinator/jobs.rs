@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::data::dataset::Dataset;
 use crate::data::splits::permutations;
-use crate::svm::train::{train, TrainConfig};
+use crate::svm::trainer::Trainer;
 
 /// One (solver, permutation) measurement.
 #[derive(Debug, Clone)]
@@ -26,17 +26,18 @@ pub struct RunMeasurement {
     pub planning_steps: u64,
 }
 
-/// Run `configs` over `perms` permutations of `base`. Returns
-/// `results[config][perm]` (paired across configs by permutation index).
+/// Run `trainers` over `perms` permutations of `base`. Returns
+/// `results[trainer][perm]` (paired across trainers by permutation
+/// index).
 pub fn run_permutations(
     base: &Arc<Dataset>,
-    configs: &[TrainConfig],
+    trainers: &[Trainer],
     perms: usize,
     seed: u64,
     threads: usize,
 ) -> Vec<Vec<RunMeasurement>> {
     let perm_list = permutations(base.len(), perms, seed);
-    let results: Vec<Mutex<Vec<Option<RunMeasurement>>>> = configs
+    let results: Vec<Mutex<Vec<Option<RunMeasurement>>>> = trainers
         .iter()
         .map(|_| Mutex::new(vec![None; perms]))
         .collect();
@@ -54,8 +55,8 @@ pub fn run_permutations(
                     break;
                 }
                 let permuted = Arc::new(base.permuted(&perm_list[p]));
-                for (ci, cfg) in configs.iter().enumerate() {
-                    let (_, res) = train(&permuted, cfg);
+                for (ci, trainer) in trainers.iter().enumerate() {
+                    let res = trainer.train(&permuted).result;
                     let m = RunMeasurement {
                         time_s: res.wall_time_s,
                         iterations: res.iterations,
@@ -82,10 +83,10 @@ pub fn run_permutations(
                 .map(|(p, r)| {
                     r.unwrap_or_else(|| {
                         panic!(
-                            "permutation run missing: config #{ci} {:?} on permutation \
+                            "permutation run missing: trainer #{ci} {:?} on permutation \
                              #{p}/{perms} (seed {seed}) — a worker exited before \
-                             completing this (config, permutation) pair",
-                            configs[ci]
+                             completing this (trainer, permutation) pair",
+                            trainers[ci]
                         )
                     })
                 })
@@ -109,15 +110,15 @@ pub fn objectives(ms: &[RunMeasurement]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::data::synth::chessboard;
-    use crate::svm::train::SolverChoice;
+    use crate::solver::engine::SolverChoice;
 
     #[test]
     fn paired_runs_cover_all_permutations_and_converge() {
         let ds = Arc::new(chessboard(120, 4, 1));
-        let base = TrainConfig::new(10.0, 0.5);
+        let base = Trainer::rbf(10.0, 0.5);
         let cfgs = [
-            base.with_solver(SolverChoice::Smo),
-            base.with_solver(SolverChoice::Pasmo),
+            base.clone().solver(SolverChoice::Smo),
+            base.solver(SolverChoice::Pasmo),
         ];
         let res = run_permutations(&ds, &cfgs, 4, 7, 2);
         assert_eq!(res.len(), 2);
@@ -136,7 +137,7 @@ mod tests {
     #[test]
     fn single_thread_and_multi_thread_agree_on_iterations() {
         let ds = Arc::new(chessboard(100, 4, 2));
-        let cfgs = [TrainConfig::new(10.0, 0.5).with_solver(SolverChoice::Smo)];
+        let cfgs = [Trainer::rbf(10.0, 0.5).solver(SolverChoice::Smo)];
         let a = run_permutations(&ds, &cfgs, 3, 5, 1);
         let b = run_permutations(&ds, &cfgs, 3, 5, 3);
         let ia: Vec<u64> = a[0].iter().map(|m| m.iterations).collect();

@@ -10,7 +10,10 @@
 //! Layer map (see DESIGN.md):
 //! * [`solver`] — the paper's contribution: SMO (Alg. 1), the planning-ahead
 //!   step (eqs. 7/8, Algs. 2 & 4), PA-aware working-set selection (Alg. 3)
-//!   and the complete PA-SMO driver (Alg. 5), plus shrinking and telemetry.
+//!   and the complete PA-SMO driver (Alg. 5), plus shrinking and telemetry —
+//!   all behind the [`solver::Engine`] trait over first-class
+//!   [`solver::QpProblem`] descriptions (built by the single
+//!   `solver::EngineConfig` factory).
 //! * [`kernel`] — kernel functions, the LRU row cache and Gram abstractions.
 //! * `runtime` — PJRT engine loading `artifacts/*.hlo.txt`. Compiled only
 //!   with the `pjrt` cargo feature (off by default so the crate builds
@@ -18,7 +21,9 @@
 //!   native Rust kernel path.
 //! * [`data`] — LIBSVM IO and the synthetic dataset suite standing in for
 //!   the paper's 22 benchmark datasets.
-//! * [`svm`] — user-facing train / predict / cross-validation / grid search.
+//! * [`svm`] — the user-facing API: the [`svm::Trainer`] builder (kernel, C,
+//!   per-class costs, solver choice, warm start → `TrainOutcome`), predict,
+//!   warm-started cross-validation / grid search, ε-SVR, one-class, OvO.
 //! * [`stats`] — Wilcoxon signed-rank test and the histogram machinery the
 //!   paper's evaluation uses.
 //! * [`coordinator`] — experiment drivers regenerating every table/figure.

@@ -16,10 +16,9 @@ use pasmo::bail;
 use pasmo::coordinator::experiments::{self, ExpOptions};
 use pasmo::coordinator::report::Report;
 use pasmo::data::{libsvm, suite, Dataset};
-use pasmo::solver::smo::SolveResult;
 use pasmo::svm::predict::accuracy;
-use pasmo::svm::train::{train, SolverChoice, TrainConfig};
-use pasmo::svm::SvmModel;
+use pasmo::svm::trainer::TrainOutcome;
+use pasmo::svm::{SolverChoice, SvmModel, Trainer};
 use pasmo::util::cli::Args;
 use pasmo::util::error::{Context, Result};
 
@@ -60,9 +59,10 @@ fn print_usage() {
            datasets                          list the benchmark suite\n\
            train      --dataset NAME | --libsvm FILE [--c C --gamma G]\n\
                       [--solver smo|pasmo|pasmo-multi:N] [--eps E]\n\
+                      [--w-pos W --w-neg W] (per-class cost multipliers)\n\
                       [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
            predict    --model model.json --libsvm FILE\n\
-           gridsearch --dataset NAME [--len N] [--folds K]\n\
+           gridsearch --dataset NAME [--len N] [--folds K] [--cold]\n\
            experiment table1|table2|fig2|fig3|fig4|wss|heuristic|all\n\
                       [--perms N --scale S --max-len N --full\n\
                        --datasets a,b,c --eps E --seed S --out report.md]\n\
@@ -129,13 +129,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (ds, spec) = load_dataset(args)?;
     let c = args.get_parse_or("c", spec.as_ref().map(|s| s.c).unwrap_or(1.0));
     let gamma = args.get_parse_or("gamma", spec.as_ref().map(|s| s.gamma).unwrap_or(0.5));
-    let mut cfg = TrainConfig::new(c, gamma).with_solver(solver_choice(args)?);
-    cfg.solver_config.eps = args.get_parse_or("eps", 1e-3);
+    let trainer = Trainer::rbf(c, gamma)
+        .solver(solver_choice(args)?)
+        .stop_eps(args.get_parse_or("eps", 1e-3))
+        .class_weights(
+            args.get_parse_or("w-pos", 1.0),
+            args.get_parse_or("w-neg", 1.0),
+        );
 
-    let (model, res) = if args.get("runtime") == Some("pjrt") {
-        train_pjrt(&ds, &cfg, gamma)?
+    let TrainOutcome { model, result: res } = if args.get("runtime") == Some("pjrt") {
+        train_pjrt(&ds, &trainer, gamma)?
     } else {
-        train(&ds, &cfg)
+        trainer.train(&ds)
     };
 
     println!(
@@ -145,7 +150,7 @@ fn cmd_train(args: &Args) -> Result<()> {
          train accuracy = {:.4}",
         ds.len(),
         ds.dim(),
-        cfg.solver,
+        trainer.solver,
         res.iterations,
         res.wall_time_s,
         res.objective,
@@ -167,30 +172,21 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 /// Train over the PJRT kernel path (the `--runtime pjrt` flag).
 #[cfg(feature = "pjrt")]
-fn train_pjrt(
-    ds: &Arc<Dataset>,
-    cfg: &TrainConfig,
-    gamma: f64,
-) -> Result<(SvmModel, SolveResult)> {
+fn train_pjrt(ds: &Arc<Dataset>, trainer: &Trainer, gamma: f64) -> Result<TrainOutcome> {
     use pasmo::runtime::engine::PjrtEngine;
     use pasmo::runtime::gram::PjrtRowComputer;
-    use pasmo::svm::train::train_with_computer;
     let engine = std::rc::Rc::new(PjrtEngine::open_default().context(
         "open PJRT artifacts (run `make artifacts`, or set PASMO_ARTIFACTS)",
     )?);
     let computer = PjrtRowComputer::new(engine, ds.clone(), gamma)?;
-    Ok(train_with_computer(ds, cfg, Box::new(computer)))
+    Ok(trainer.train_with_computer(ds, Box::new(computer)))
 }
 
 /// Without the `pjrt` feature the runtime module is not compiled at all;
 /// requesting it is a clean CLI error, and everything else falls back to
 /// the native Rust kernel path.
 #[cfg(not(feature = "pjrt"))]
-fn train_pjrt(
-    _ds: &Arc<Dataset>,
-    _cfg: &TrainConfig,
-    _gamma: f64,
-) -> Result<(SvmModel, SolveResult)> {
+fn train_pjrt(_ds: &Arc<Dataset>, _trainer: &Trainer, _gamma: f64) -> Result<TrainOutcome> {
     bail!(
         "--runtime pjrt requires a build with the `pjrt` feature \
          (cargo build --features pjrt); rerun without --runtime for the \
@@ -213,10 +209,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_gridsearch(args: &Args) -> Result<()> {
-    use pasmo::svm::gridsearch::{grid_search, log_grid};
+    use pasmo::svm::gridsearch::{grid_search, log_grid, WarmStart};
     let (ds, spec) = load_dataset(args)?;
     let folds = args.get_parse_or("folds", 4usize);
-    let base = TrainConfig::new(1.0, 1.0);
+    let warm = if args.flag("cold") { WarmStart::Cold } else { WarmStart::Seeded };
+    let base = Trainer::rbf(1.0, 1.0);
     let res = grid_search(
         &ds,
         &log_grid(10.0, -1, 3),
@@ -224,17 +221,24 @@ fn cmd_gridsearch(args: &Args) -> Result<()> {
         folds,
         args.get_parse_or("seed", 42u64),
         &base,
+        warm,
     );
     for p in &res.evaluated {
-        println!("C={:<8} γ={:<8} cv-acc={:.4}", p.c, p.gamma, p.cv_accuracy);
+        println!(
+            "C={:<8} γ={:<8} cv-acc={:.4} iters={}",
+            p.c, p.gamma, p.cv_accuracy, p.iterations
+        );
     }
     println!(
-        "\nbest: C={} γ={} cv-acc={:.4}  (paper used C={} γ={})",
+        "\nbest: C={} γ={} cv-acc={:.4}  (paper used C={} γ={})\n\
+         total solver iterations: {} ({})",
         res.best.c,
         res.best.gamma,
         res.best.cv_accuracy,
         spec.as_ref().map(|s| s.c).unwrap_or(f64::NAN),
         spec.as_ref().map(|s| s.gamma).unwrap_or(f64::NAN),
+        res.total_iterations,
+        if warm == WarmStart::Seeded { "warm-started; --cold to compare" } else { "cold" },
     );
     Ok(())
 }

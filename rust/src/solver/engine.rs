@@ -1,0 +1,131 @@
+//! The engine contract: one stable interface between problem
+//! descriptions ([`QpProblem`]) and the solver family.
+//!
+//! Everything above the solver layer — `svm::Trainer`, ε-SVR, one-class,
+//! the coordinator drivers — talks to a `dyn Engine` built by the single
+//! [`EngineConfig::build`] factory. Adding a solver (conjugate SMO,
+//! Frank-Wolfe, …) means implementing [`Engine`] and adding one factory
+//! arm; no caller changes.
+
+use crate::kernel::matrix::Gram;
+
+use super::pasmo::PasmoSolver;
+use super::problem::QpProblem;
+use super::smo::{SmoSolver, SolveResult, SolverConfig};
+use super::state::SolverState;
+
+/// Which member of the solver family drives training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Algorithm 1 (baseline SMO, second-order WSS).
+    Smo,
+    /// Algorithm 5 (PA-SMO) — the paper's recommended default.
+    Pasmo,
+    /// Multiple-planning-ahead PA-SMO with N recent working sets (§7.4).
+    /// `N = 0` is clamped to 1 (identical to [`SolverChoice::Pasmo`]).
+    PasmoMulti(usize),
+}
+
+/// A QP engine: anything that can drive the paper's general dual problem
+/// to an ε-approximate KKT point over a [`Gram`] view.
+pub trait Engine {
+    /// Engine name for reports and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Solve from an explicit, already-lowered state.
+    fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult;
+
+    /// Solve a problem description. This default is the crate's only
+    /// [`QpProblem::lower`] call: warm-start repair and gradient
+    /// reconstruction happen here for every task and engine alike.
+    fn solve(&self, problem: &QpProblem, gram: &mut Gram) -> SolveResult {
+        let state = problem.lower(gram);
+        self.solve_state(state, gram)
+    }
+}
+
+/// Complete engine specification: the algorithm plus its shared tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub solver: SolverChoice,
+    pub config: SolverConfig,
+}
+
+impl EngineConfig {
+    pub fn new(solver: SolverChoice, config: SolverConfig) -> EngineConfig {
+        EngineConfig { solver, config }
+    }
+
+    /// The single `SolverChoice` dispatch site in the crate. Centralizes
+    /// the `PasmoMulti(n)` → `planning_candidates = max(n, 1)` clamp.
+    pub fn build(&self) -> Box<dyn Engine> {
+        let mut cfg = self.config;
+        match self.solver {
+            SolverChoice::Smo => Box::new(SmoSolver::new(cfg)),
+            SolverChoice::Pasmo => {
+                cfg.planning_candidates = 1;
+                Box::new(PasmoSolver::new(cfg))
+            }
+            SolverChoice::PasmoMulti(n) => {
+                cfg.planning_candidates = n.max(1);
+                Box::new(PasmoSolver::new(cfg))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::smo::tests::{make_gram, random_problem};
+
+    #[test]
+    fn factory_names_the_right_engines() {
+        let cfg = SolverConfig::default();
+        assert_eq!(EngineConfig::new(SolverChoice::Smo, cfg).build().name(), "smo");
+        assert_eq!(EngineConfig::new(SolverChoice::Pasmo, cfg).build().name(), "pasmo");
+        assert_eq!(
+            EngineConfig::new(SolverChoice::PasmoMulti(4), cfg).build().name(),
+            "pasmo"
+        );
+    }
+
+    #[test]
+    fn pasmo_multi_zero_clamps_to_single_planning() {
+        // PasmoMulti(0) is documented to behave as PasmoMulti(1) == Pasmo:
+        // identical deterministic solve on the same problem.
+        let ds = random_problem(60, 5);
+        let problem = QpProblem::classification(ds.labels(), 10.0);
+        let cfg = SolverConfig::default();
+        let run = |choice: SolverChoice| {
+            let mut gram = make_gram(&ds, 1.0, 1 << 22);
+            EngineConfig::new(choice, cfg).build().solve(&problem, &mut gram)
+        };
+        let zero = run(SolverChoice::PasmoMulti(0));
+        let one = run(SolverChoice::PasmoMulti(1));
+        let pa = run(SolverChoice::Pasmo);
+        assert!(zero.converged && one.converged && pa.converged);
+        assert_eq!(zero.iterations, one.iterations);
+        assert_eq!(zero.objective, one.objective);
+        assert_eq!(zero.iterations, pa.iterations);
+        assert_eq!(zero.objective, pa.objective);
+    }
+
+    #[test]
+    fn engines_agree_through_the_trait_object() {
+        let ds = random_problem(50, 9);
+        let problem = QpProblem::classification(ds.labels(), 2.0);
+        let mut objectives = Vec::new();
+        for choice in [SolverChoice::Smo, SolverChoice::Pasmo, SolverChoice::PasmoMulti(3)] {
+            let mut gram = make_gram(&ds, 1.0, 1 << 22);
+            let engine = EngineConfig::new(choice, SolverConfig::default()).build();
+            let res = engine.solve(&problem, &mut gram);
+            assert!(res.converged, "{:?}", choice);
+            objectives.push(res.objective);
+        }
+        for &o in &objectives[1..] {
+            let rel = (o - objectives[0]).abs() / (1.0 + objectives[0].abs());
+            assert!(rel < 2e-3, "{objectives:?}");
+        }
+    }
+}

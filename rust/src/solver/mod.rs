@@ -20,9 +20,15 @@
 //!   objective/gap traces).
 //! * [`reference`] — independent dense projected-gradient solver used as
 //!   a ground-truth oracle in tests.
+//! * [`problem`] — first-class [`QpProblem`] description of the general
+//!   dual (linear term, per-index bounds, equality target, warm start).
+//! * [`engine`] — the [`Engine`] trait every solver implements, plus the
+//!   single [`SolverChoice`] → engine factory ([`EngineConfig`]).
 
+pub mod engine;
 pub mod events;
 pub mod pasmo;
+pub mod problem;
 pub mod reference;
 pub mod shrink;
 pub mod smo;
@@ -30,7 +36,9 @@ pub mod state;
 pub mod step;
 pub mod wss;
 
+pub use engine::{Engine, EngineConfig, SolverChoice};
 pub use events::{StepKind, Telemetry, TelemetryConfig};
 pub use pasmo::PasmoSolver;
+pub use problem::QpProblem;
 pub use smo::{SmoSolver, SolveResult, SolverConfig, StepPolicy, WssKind};
 pub use state::SolverState;

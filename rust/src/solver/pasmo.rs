@@ -20,8 +20,10 @@ use std::time::Instant;
 
 use crate::kernel::matrix::Gram;
 
+use super::engine::Engine;
 use super::events::StepKind;
 use super::smo::{SolveResult, SolverConfig, SolverCore};
+use super::state::SolverState;
 use super::step::{PlanningSystem, SubProblem};
 use super::wss::{GainKind, Selection};
 
@@ -93,25 +95,6 @@ impl PasmoSolver {
             return None;
         }
         Some(Plan { mu, gain: ps.double_step_gain(mu) })
-    }
-
-    /// Solve the classification dual with PA-SMO.
-    pub fn solve(&self, labels: &[i8], c: f64, gram: &mut Gram) -> SolveResult {
-        let started = Instant::now();
-        let core = SolverCore::new(labels, c, gram, self.config);
-        self.run(core, started)
-    }
-
-    /// Solve a general dual problem (ε-SVR, one-class, warm starts) from
-    /// an explicit [`crate::solver::state::SolverState`].
-    pub fn solve_state(
-        &self,
-        state: crate::solver::state::SolverState,
-        gram: &mut Gram,
-    ) -> SolveResult {
-        let started = Instant::now();
-        let core = SolverCore::from_state(state, gram, self.config);
-        self.run(core, started)
     }
 
     fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
@@ -205,11 +188,23 @@ impl PasmoSolver {
     }
 }
 
+impl Engine for PasmoSolver {
+    fn name(&self) -> &'static str {
+        "pasmo"
+    }
+
+    fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::from_state(state, gram, self.config);
+        self.run(core, started)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::solver::events::TelemetryConfig;
-    use crate::solver::smo::tests::{make_gram, random_problem};
+    use crate::solver::smo::tests::{make_gram, random_problem, solve_cls};
     use crate::solver::smo::SmoSolver;
     use crate::util::prng::Pcg;
 
@@ -227,8 +222,8 @@ mod tests {
             let ds = random_problem(80, seed);
             let mut g1 = make_gram(&ds, 1.0, 1 << 22);
             let mut g2 = make_gram(&ds, 1.0, 1 << 22);
-            let smo = SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut g1);
-            let pa = PasmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut g2);
+            let smo = solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 2.0, &mut g1);
+            let pa = solve_cls(&PasmoSolver::new(SolverConfig::default()), ds.labels(), 2.0, &mut g2);
             assert!(pa.converged, "seed {seed}");
             assert!(pa.gap <= 1e-3 + 1e-9, "seed {seed}: {}", pa.gap);
             let rel = (pa.objective - smo.objective).abs() / (1.0 + smo.objective.abs());
@@ -241,7 +236,7 @@ mod tests {
         // large C + overlapping classes => many free steps => planning
         let ds = random_problem(60, 3);
         let mut gram = make_gram(&ds, 2.0, 1 << 22);
-        let res = PasmoSolver::new(full_trace_cfg()).solve(ds.labels(), 1e4, &mut gram);
+        let res = solve_cls(&PasmoSolver::new(full_trace_cfg()), ds.labels(), 1e4, &mut gram);
         assert!(res.converged);
         assert!(
             res.telemetry.planning_steps > 0,
@@ -256,7 +251,7 @@ mod tests {
         // the planning step plus the following step never lose ground.
         let ds = random_problem(50, 7);
         let mut gram = make_gram(&ds, 1.5, 1 << 22);
-        let res = PasmoSolver::new(full_trace_cfg()).solve(ds.labels(), 100.0, &mut gram);
+        let res = solve_cls(&PasmoSolver::new(full_trace_cfg()), ds.labels(), 100.0, &mut gram);
         let kinds = &res.telemetry.kind_trace;
         let objs: Vec<f64> = res.telemetry.objective_trace.iter().map(|&(_, f)| f).collect();
         assert_eq!(kinds.len(), objs.len());
@@ -286,9 +281,9 @@ mod tests {
             let mut g1 = make_gram(&ds, 1.0, 1 << 22);
             let mut g2 = make_gram(&ds, 1.0, 1 << 22);
             let smo =
-                SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut g1);
+                solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 10.0, &mut g1);
             let pa =
-                PasmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut g2);
+                solve_cls(&PasmoSolver::new(SolverConfig::default()), ds.labels(), 10.0, &mut g2);
             assert!(
                 pa.objective >= smo.objective - 1e-3 * (1.0 + smo.objective.abs()),
                 "seed {seed}: PA {} < SMO {}",
@@ -304,7 +299,7 @@ mod tests {
             let ds = random_problem(60, 11);
             let mut gram = make_gram(&ds, 1.0, 1 << 22);
             let cfg = SolverConfig { planning_candidates: n, ..Default::default() };
-            let res = PasmoSolver::new(cfg).solve(ds.labels(), 50.0, &mut gram);
+            let res = solve_cls(&PasmoSolver::new(cfg), ds.labels(), 50.0, &mut gram);
             assert!(res.converged, "N={n}");
             assert!(res.gap <= 1e-3 + 1e-9, "N={n}");
         }
@@ -320,8 +315,7 @@ mod tests {
             |&(n, seed, c)| {
                 let ds = random_problem(n, seed);
                 let mut gram = make_gram(&ds, 1.0, 1 << 22);
-                let res = PasmoSolver::new(SolverConfig::default())
-                    .solve(ds.labels(), c, &mut gram);
+                let res = solve_cls(&PasmoSolver::new(SolverConfig::default()), ds.labels(), c, &mut gram);
                 let sum: f64 = res.alpha.iter().sum();
                 if sum.abs() > 1e-8 {
                     return Err(format!("equality constraint violated: {sum}"));
@@ -346,10 +340,8 @@ mod tests {
         let ds = random_problem(120, 17);
         let mut g1 = make_gram(&ds, 1.0, 1 << 22);
         let mut g2 = make_gram(&ds, 1.0, 1 << 22);
-        let on = PasmoSolver::new(SolverConfig { shrinking: true, ..Default::default() })
-            .solve(ds.labels(), 1.0, &mut g1);
-        let off = PasmoSolver::new(SolverConfig { shrinking: false, ..Default::default() })
-            .solve(ds.labels(), 1.0, &mut g2);
+        let on = solve_cls(&PasmoSolver::new(SolverConfig { shrinking: true, ..Default::default() }), ds.labels(), 1.0, &mut g1);
+        let off = solve_cls(&PasmoSolver::new(SolverConfig { shrinking: false, ..Default::default() }), ds.labels(), 1.0, &mut g2);
         assert!(on.converged && off.converged);
         let rel = (on.objective - off.objective).abs() / (1.0 + off.objective.abs());
         assert!(rel < 2e-3, "{} vs {}", on.objective, off.objective);

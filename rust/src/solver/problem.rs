@@ -1,0 +1,290 @@
+//! First-class description of the dual QP the solvers operate on.
+//!
+//! Every training task in the crate — C-SVC (optionally with per-class
+//! costs C₊/C₋), ε-SVR, one-class SVM — is an instance of the paper's
+//! general box-and-hyperplane problem
+//!
+//! ```text
+//! max  pᵀα − ½ αᵀKα   s.t.   Σαᵢ = s,   Lᵢ ≤ αᵢ ≤ Uᵢ.
+//! ```
+//!
+//! [`QpProblem`] captures `(p, L, U, s)` plus an optional warm-start α,
+//! and [`QpProblem::lower`] is the *single* site in the crate where a
+//! problem becomes a [`SolverState`]: it repairs the warm start onto the
+//! feasible set and reconstructs the gradient `G = p − Kα₀` from kernel
+//! rows (zero kernel evaluations when α₀ = 0, the paper-§2 cold start).
+
+use crate::kernel::matrix::Gram;
+
+use super::state::SolverState;
+
+/// A general dual QP instance, independent of any solver.
+#[derive(Debug, Clone)]
+pub struct QpProblem {
+    /// Linear term `p` (`y` for classification, `y ∓ ε` for SVR, 0 for
+    /// one-class).
+    pub linear: Vec<f64>,
+    /// Per-index lower bounds `L`.
+    pub lower: Vec<f64>,
+    /// Per-index upper bounds `U`.
+    pub upper: Vec<f64>,
+    /// Equality-constraint target `s = Σα` (0 for C-SVC and ε-SVR, 1 for
+    /// the one-class formulation).
+    pub equality_sum: f64,
+    /// Optional warm start. Need not be feasible for *this* problem's
+    /// box (e.g. α carried over from an adjacent grid point with a
+    /// different C): [`QpProblem::lower`] clamps and repairs it.
+    pub alpha0: Option<Vec<f64>>,
+}
+
+impl QpProblem {
+    /// C-SVC dual with the signed-α convention: `p = y`,
+    /// `Lᵢ = min(0, yᵢC)`, `Uᵢ = max(0, yᵢC)`.
+    pub fn classification(labels: &[i8], c: f64) -> QpProblem {
+        QpProblem::classification_weighted(labels, c, c)
+    }
+
+    /// C-SVC with per-class costs: positives are budgeted `C₊`,
+    /// negatives `C₋` — the standard recipe for imbalanced data. With
+    /// `c_pos == c_neg` this is exactly [`QpProblem::classification`].
+    pub fn classification_weighted(labels: &[i8], c_pos: f64, c_neg: f64) -> QpProblem {
+        assert!(c_pos > 0.0 && c_neg > 0.0, "class costs must be positive");
+        let linear: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+        let (mut lower, mut upper) = (Vec::with_capacity(labels.len()), Vec::with_capacity(labels.len()));
+        for &yi in &linear {
+            let c = if yi > 0.0 { c_pos } else { c_neg };
+            lower.push((yi * c).min(0.0));
+            upper.push((yi * c).max(0.0));
+        }
+        QpProblem { linear, lower, upper, equality_sum: 0.0, alpha0: None }
+    }
+
+    /// ε-SVR dual over the doubled variable vector `γ` (see `svm::svr`):
+    /// `p_i = y_i − ε`, `p_{ℓ+i} = y_i + ε`, `γ_i ∈ [0, C]`,
+    /// `γ_{ℓ+i} ∈ [−C, 0]`. The Gram view must be the doubled `K̃`.
+    pub fn svr(targets: &[f64], c: f64, epsilon: f64) -> QpProblem {
+        assert!(c > 0.0, "C must be positive");
+        let l = targets.len();
+        let mut linear = Vec::with_capacity(2 * l);
+        let mut lower = Vec::with_capacity(2 * l);
+        let mut upper = Vec::with_capacity(2 * l);
+        for &t in targets {
+            linear.push(t - epsilon);
+            lower.push(0.0);
+            upper.push(c);
+        }
+        for &t in targets {
+            linear.push(t + epsilon);
+            lower.push(-c);
+            upper.push(0.0);
+        }
+        QpProblem { linear, lower, upper, equality_sum: 0.0, alpha0: None }
+    }
+
+    /// One-class (ν) dual: `p = 0`, `αᵢ ∈ [0, 1/(νℓ)]`, `Σα = 1`, with
+    /// the LIBSVM-style feasible start filling α from the front.
+    pub fn one_class(l: usize, nu: f64) -> QpProblem {
+        assert!(l >= 2, "need at least two examples");
+        assert!(nu > 0.0 && nu <= 1.0, "nu must be in (0, 1]");
+        let ub = 1.0 / (nu * l as f64);
+        let mut alpha0 = vec![0.0f64; l];
+        let mut remaining = 1.0f64;
+        for a in alpha0.iter_mut() {
+            let v = remaining.min(ub);
+            *a = v;
+            remaining -= v;
+            if remaining <= 0.0 {
+                break;
+            }
+        }
+        QpProblem {
+            linear: vec![0.0; l],
+            lower: vec![0.0; l],
+            upper: vec![ub; l],
+            equality_sum: 1.0,
+            alpha0: Some(alpha0),
+        }
+    }
+
+    /// Builder: seed the solve from `alpha` (e.g. the solution of an
+    /// adjacent grid point). Infeasible seeds are repaired at lowering.
+    pub fn warm_start(mut self, alpha: Vec<f64>) -> QpProblem {
+        assert_eq!(alpha.len(), self.linear.len(), "warm start length mismatch");
+        self.alpha0 = Some(alpha);
+        self
+    }
+
+    /// Problem size ℓ.
+    pub fn len(&self) -> usize {
+        self.linear.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.linear.is_empty()
+    }
+
+    /// Lower the problem to a ready-to-iterate [`SolverState`] — the one
+    /// place where warm starts are made feasible and the initial
+    /// gradient is built. Kernel evaluations: one Gram row per non-zero
+    /// warm-start coefficient, none for a cold start.
+    pub fn lower(&self, gram: &mut Gram) -> SolverState {
+        let n = self.len();
+        assert_eq!(n, gram.len(), "problem/gram size mismatch");
+        let alpha0 = match &self.alpha0 {
+            None => vec![0.0; n],
+            Some(a) => self.repair(a),
+        };
+        let mut grad0 = self.linear.clone();
+        for (j, &aj) in alpha0.iter().enumerate() {
+            if aj == 0.0 {
+                continue;
+            }
+            let row = gram.row(j);
+            for (g, &k) in grad0.iter_mut().zip(row.iter()) {
+                *g -= aj * k as f64;
+            }
+        }
+        SolverState::from_problem(
+            self.linear.clone(),
+            self.lower.clone(),
+            self.upper.clone(),
+            alpha0,
+            grad0,
+        )
+    }
+
+    /// Project a candidate α onto the feasible set: clamp into the box,
+    /// then restore `Σα = s` by greedily spending per-index box slack.
+    /// Always succeeds when the box admits the equality constraint
+    /// (`ΣL ≤ s ≤ ΣU`), which every task constructor guarantees.
+    fn repair(&self, alpha: &[f64]) -> Vec<f64> {
+        let mut a: Vec<f64> = alpha
+            .iter()
+            .zip(self.lower.iter().zip(&self.upper))
+            .map(|(&v, (&lo, &hi))| v.clamp(lo, hi))
+            .collect();
+        let mut excess = a.iter().sum::<f64>() - self.equality_sum;
+        if excess.abs() <= 1e-12 {
+            return a;
+        }
+        for i in 0..a.len() {
+            if excess.abs() <= 1e-12 {
+                break;
+            }
+            if excess > 0.0 {
+                let give = (a[i] - self.lower[i]).min(excess);
+                a[i] -= give;
+                excess -= give;
+            } else {
+                let take = (self.upper[i] - a[i]).min(-excess);
+                a[i] += take;
+                excess += take;
+            }
+        }
+        debug_assert!(
+            excess.abs() <= 1e-9,
+            "box cannot satisfy the equality constraint (residual {excess})"
+        );
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::kernel::function::KernelFunction;
+    use crate::kernel::native::NativeRowComputer;
+    use std::sync::Arc;
+
+    fn gram_for(labels: &[i8]) -> Gram {
+        let mut ds = Dataset::with_dim(1);
+        for (i, &y) in labels.iter().enumerate() {
+            ds.push(&[i as f32], y);
+        }
+        let nc = NativeRowComputer::new(Arc::new(ds), KernelFunction::Rbf { gamma: 0.5 });
+        Gram::new(Box::new(nc), 1 << 20)
+    }
+
+    #[test]
+    fn classification_matches_solver_state_new() {
+        let labels = [1i8, -1, 1];
+        let p = QpProblem::classification(&labels, 2.0);
+        let mut g = gram_for(&labels);
+        let st = p.lower(&mut g);
+        let direct = SolverState::new(&labels, 2.0);
+        assert_eq!(st.y, direct.y);
+        assert_eq!(st.alpha, direct.alpha);
+        assert_eq!(st.grad, direct.grad);
+        assert_eq!(st.lower, direct.lower);
+        assert_eq!(st.upper, direct.upper);
+    }
+
+    #[test]
+    fn equal_class_weights_reduce_to_plain_classification() {
+        let labels = [1i8, -1, 1, -1];
+        let a = QpProblem::classification(&labels, 3.0);
+        let b = QpProblem::classification_weighted(&labels, 3.0, 3.0);
+        assert_eq!(a.lower, b.lower);
+        assert_eq!(a.upper, b.upper);
+        assert_eq!(a.linear, b.linear);
+    }
+
+    #[test]
+    fn weighted_bounds_scale_per_class() {
+        let labels = [1i8, -1];
+        let p = QpProblem::classification_weighted(&labels, 4.0, 0.5);
+        assert_eq!(p.lower, vec![0.0, -0.5]);
+        assert_eq!(p.upper, vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn one_class_start_is_feasible() {
+        let p = QpProblem::one_class(10, 0.3);
+        let a = p.alpha0.as_ref().unwrap();
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        let ub = 1.0 / (0.3 * 10.0);
+        assert!(a.iter().all(|&v| (0.0..=ub + 1e-12).contains(&v)));
+    }
+
+    #[test]
+    fn warm_start_gradient_is_p_minus_k_alpha() {
+        let labels = [1i8, -1, 1, -1];
+        let alpha = vec![0.5, -0.25, 0.0, -0.25];
+        let mut g = gram_for(&labels);
+        let p = QpProblem::classification(&labels, 1.0).warm_start(alpha.clone());
+        let st = p.lower(&mut g);
+        for i in 0..4 {
+            let mut want = labels[i] as f64;
+            for j in 0..4 {
+                want -= alpha[j] * g.entry(i, j);
+            }
+            assert!((st.grad[i] - want).abs() < 1e-6, "index {i}");
+        }
+    }
+
+    #[test]
+    fn repair_clamps_and_restores_equality() {
+        // Carry α from C = 2 into a problem with C = 1: clamping breaks
+        // Σα = 0, repair must restore it inside the new box.
+        let labels = [1i8, 1, -1, -1];
+        let stale = vec![2.0, 0.0, -1.0, -1.0];
+        let mut g = gram_for(&labels);
+        let p = QpProblem::classification(&labels, 1.0).warm_start(stale);
+        let st = p.lower(&mut g);
+        assert!(st.is_feasible(1e-9), "alpha {:?}", st.alpha);
+        let sum: f64 = st.alpha.iter().sum();
+        assert!(sum.abs() < 1e-9, "Σα = {sum}");
+    }
+
+    #[test]
+    fn feasible_warm_start_passes_through_unchanged() {
+        let labels = [1i8, -1];
+        let alpha = vec![0.25, -0.25];
+        let mut g = gram_for(&labels);
+        let p = QpProblem::classification(&labels, 1.0).warm_start(alpha.clone());
+        let st = p.lower(&mut g);
+        assert_eq!(st.alpha, alpha);
+    }
+}

@@ -108,7 +108,7 @@ mod tests {
     use crate::kernel::matrix::Gram;
     use crate::kernel::{KernelFunction, NativeRowComputer};
     use crate::solver::pasmo::PasmoSolver;
-    use crate::solver::smo::tests::random_problem;
+    use crate::solver::smo::tests::{random_problem, solve_cls};
     use crate::solver::smo::{SmoSolver, SolverConfig};
     use std::sync::Arc;
 
@@ -166,7 +166,7 @@ mod tests {
                 )),
                 1 << 22,
             );
-            let smo = SmoSolver::new(cfg).solve(ds.labels(), c, &mut g1);
+            let smo = solve_cls(&SmoSolver::new(cfg), ds.labels(), c, &mut g1);
             let mut g2 = Gram::new(
                 Box::new(NativeRowComputer::new(
                     ds.clone(),
@@ -174,7 +174,7 @@ mod tests {
                 )),
                 1 << 22,
             );
-            let pa = PasmoSolver::new(cfg).solve(ds.labels(), c, &mut g2);
+            let pa = solve_cls(&PasmoSolver::new(cfg), ds.labels(), c, &mut g2);
 
             let tol = 1e-4 * (1.0 + reference.objective.abs());
             assert!(

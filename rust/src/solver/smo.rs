@@ -7,6 +7,7 @@ use std::time::Instant;
 use crate::kernel::cache::CacheStats;
 use crate::kernel::matrix::Gram;
 
+use super::engine::Engine;
 use super::events::{StepKind, Telemetry, TelemetryConfig};
 use super::shrink;
 use super::state::SolverState;
@@ -113,10 +114,6 @@ pub(crate) struct SolverCore<'a> {
 }
 
 impl<'a> SolverCore<'a> {
-    pub fn new(labels: &[i8], c: f64, gram: &'a mut Gram, config: SolverConfig) -> Self {
-        Self::from_state(SolverState::new(labels, c), gram, config)
-    }
-
     /// Build around an arbitrary (general-QP / warm-started) state.
     pub fn from_state(state: SolverState, gram: &'a mut Gram, config: SolverConfig) -> Self {
         assert_eq!(state.len(), gram.len(), "state/gram size mismatch");
@@ -303,21 +300,6 @@ impl SmoSolver {
         SmoSolver { config }
     }
 
-    /// Solve the classification dual for `labels`/`c` over the Gram view.
-    pub fn solve(&self, labels: &[i8], c: f64, gram: &mut Gram) -> SolveResult {
-        let started = Instant::now();
-        let core = SolverCore::new(labels, c, gram, self.config);
-        self.run(core, started)
-    }
-
-    /// Solve a general dual problem (ε-SVR, one-class, warm starts) from
-    /// an explicit [`SolverState`].
-    pub fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult {
-        let started = Instant::now();
-        let core = SolverCore::from_state(state, gram, self.config);
-        self.run(core, started)
-    }
-
     fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
         let converged = loop {
             if let Some(done) = core.check_stop_and_shrink() {
@@ -339,14 +321,37 @@ impl SmoSolver {
     }
 }
 
+impl Engine for SmoSolver {
+    fn name(&self) -> &'static str {
+        "smo"
+    }
+
+    fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::from_state(state, gram, self.config);
+        self.run(core, started)
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
     use crate::data::dataset::Dataset;
     use crate::kernel::function::KernelFunction;
     use crate::kernel::native::NativeRowComputer;
+    use crate::solver::problem::QpProblem;
     use crate::util::prng::Pcg;
     use std::sync::Arc;
+
+    /// Classification shorthand used across the solver test suites.
+    pub(crate) fn solve_cls(
+        engine: &dyn Engine,
+        labels: &[i8],
+        c: f64,
+        gram: &mut Gram,
+    ) -> SolveResult {
+        engine.solve(&QpProblem::classification(labels, c), gram)
+    }
 
     pub(crate) fn make_gram(ds: &Arc<Dataset>, gamma: f64, cache: usize) -> Gram {
         let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
@@ -371,7 +376,7 @@ pub(crate) mod tests {
     fn solves_trivially_separable_pair() {
         let ds = Arc::new(Dataset::new(1, vec![1.0, -1.0], vec![1, -1]));
         let mut gram = make_gram(&ds, 0.5, 1 << 20);
-        let res = SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 10.0, &mut gram);
+        let res = solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 10.0, &mut gram);
         assert!(res.converged);
         assert!(res.gap <= 1e-3);
         // symmetric problem: alpha = (a, -a) with a = l/q at optimum or bound
@@ -393,7 +398,7 @@ pub(crate) mod tests {
             shrinking: false,
             ..Default::default()
         };
-        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
         assert!(res.converged);
         let trace = &res.telemetry.objective_trace;
         assert!(trace.len() > 2);
@@ -413,7 +418,7 @@ pub(crate) mod tests {
             let ds = random_problem(80, seed);
             let mut gram = make_gram(&ds, 0.7, 1 << 22);
             let res =
-                SmoSolver::new(SolverConfig::default()).solve(ds.labels(), 2.0, &mut gram);
+                solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 2.0, &mut gram);
             assert!(res.converged, "seed {seed}");
             assert!(res.gap <= 1e-3 + 1e-9, "seed {seed}: gap {}", res.gap);
             // feasibility of the returned alpha
@@ -427,10 +432,8 @@ pub(crate) mod tests {
         let ds = random_problem(100, 11);
         let mut g1 = make_gram(&ds, 1.2, 1 << 22);
         let mut g2 = make_gram(&ds, 1.2, 1 << 22);
-        let on = SmoSolver::new(SolverConfig { shrinking: true, ..Default::default() })
-            .solve(ds.labels(), 1.5, &mut g1);
-        let off = SmoSolver::new(SolverConfig { shrinking: false, ..Default::default() })
-            .solve(ds.labels(), 1.5, &mut g2);
+        let on = solve_cls(&SmoSolver::new(SolverConfig { shrinking: true, ..Default::default() }), ds.labels(), 1.5, &mut g1);
+        let off = solve_cls(&SmoSolver::new(SolverConfig { shrinking: false, ..Default::default() }), ds.labels(), 1.5, &mut g2);
         assert!(on.converged && off.converged);
         assert!(
             (on.objective - off.objective).abs() < 1e-3 * (1.0 + off.objective.abs()),
@@ -445,7 +448,7 @@ pub(crate) mod tests {
         let ds = random_problem(60, 5);
         let mut gram = make_gram(&ds, 1.0, 1 << 22);
         let cfg = SolverConfig { wss: WssKind::MaxViolating, ..Default::default() };
-        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
         assert!(res.converged);
         assert!(res.gap <= 1e-3 + 1e-9);
     }
@@ -458,7 +461,7 @@ pub(crate) mod tests {
             step_policy: OverStep::OverRelaxed(1.1),
             ..Default::default()
         };
-        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
         assert!(res.converged);
         assert!(res.gap <= 1e-3 + 1e-9);
     }
@@ -468,7 +471,7 @@ pub(crate) mod tests {
         let ds = random_problem(100, 7);
         let mut gram = make_gram(&ds, 1.0, 1 << 22);
         let cfg = SolverConfig { max_iter: 3, ..Default::default() };
-        let res = SmoSolver::new(cfg).solve(ds.labels(), 1.0, &mut gram);
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
         assert!(!res.converged);
         assert!(res.iterations <= 4);
     }
@@ -481,7 +484,7 @@ pub(crate) mod tests {
             telemetry: TelemetryConfig::fig3(),
             ..Default::default()
         };
-        let res = SmoSolver::new(cfg).solve(ds.labels(), 0.05, &mut gram);
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 0.05, &mut gram);
         // tiny C forces bounded steps
         assert!(res.telemetry.bounded_steps > 0);
         assert_eq!(res.telemetry.total_steps(), res.iterations);

@@ -1,5 +1,7 @@
 //! k-fold cross-validation (the model-selection machinery behind the
-//! paper's Table-1 grid search).
+//! paper's Table-1 grid search), with warm-start *sessions* that carry
+//! each fold's α across repeated evaluations — the mechanism grid search
+//! uses to seed adjacent grid points.
 
 use std::sync::Arc;
 
@@ -7,27 +9,78 @@ use crate::data::dataset::Dataset;
 use crate::data::splits::kfold;
 
 use super::predict::accuracy;
-use super::train::{train, TrainConfig};
+use super::trainer::Trainer;
 
 /// Result of a cross-validation run.
 #[derive(Debug, Clone)]
 pub struct CvResult {
     pub fold_accuracies: Vec<f64>,
     pub mean_accuracy: f64,
+    /// Total solver iterations across all folds (the warm-start metric).
+    pub total_iterations: u64,
 }
 
-/// k-fold cross-validated accuracy of `cfg` on `data`.
-pub fn cross_validate(data: &Dataset, cfg: &TrainConfig, k: usize, seed: u64) -> CvResult {
+/// Per-fold warm-start state carried between cross-validation runs of
+/// the *same* (data, k, seed) split — fold index f always sees the same
+/// training subset, so its last α is a valid seed for the next
+/// evaluation (e.g. the neighbouring grid point). Bounds changes (a
+/// different C) are repaired at lowering.
+#[derive(Debug, Clone, Default)]
+pub struct CvSession {
+    fold_alphas: Vec<Option<Vec<f64>>>,
+}
+
+impl CvSession {
+    pub fn new() -> CvSession {
+        CvSession::default()
+    }
+
+    fn seed(&self, fold: usize) -> Option<&Vec<f64>> {
+        self.fold_alphas.get(fold).and_then(|a| a.as_ref())
+    }
+
+    fn store(&mut self, fold: usize, alpha: Vec<f64>) {
+        if self.fold_alphas.len() <= fold {
+            self.fold_alphas.resize(fold + 1, None);
+        }
+        self.fold_alphas[fold] = Some(alpha);
+    }
+}
+
+/// k-fold cross-validated accuracy of `trainer` on `data` (cold start).
+pub fn cross_validate(data: &Dataset, trainer: &Trainer, k: usize, seed: u64) -> CvResult {
+    cross_validate_session(data, trainer, k, seed, &mut CvSession::new())
+}
+
+/// k-fold cross-validation seeding every fold from `session` and storing
+/// the resulting α back. An empty session degrades to a cold start.
+pub fn cross_validate_session(
+    data: &Dataset,
+    trainer: &Trainer,
+    k: usize,
+    seed: u64,
+    session: &mut CvSession,
+) -> CvResult {
     let folds = kfold(data.len(), k, seed);
     let mut fold_accuracies = Vec::with_capacity(k);
-    for (train_idx, test_idx) in folds {
+    let mut total_iterations = 0u64;
+    for (fold, (train_idx, test_idx)) in folds.into_iter().enumerate() {
         let train_set = Arc::new(data.subset(&train_idx));
         let test_set = data.subset(&test_idx);
-        let (model, _) = train(&train_set, cfg);
-        fold_accuracies.push(accuracy(&model, &test_set));
+        // The session is the only valid fold-level seed: a caller-set
+        // `warm_start` is sized for the full dataset, not this fold.
+        let mut fold_trainer = trainer.clone();
+        fold_trainer.warm_start = match session.seed(fold) {
+            Some(alpha) if alpha.len() == train_set.len() => Some(alpha.clone()),
+            _ => None,
+        };
+        let out = fold_trainer.train(&train_set);
+        total_iterations += out.result.iterations;
+        session.store(fold, out.result.alpha);
+        fold_accuracies.push(accuracy(&out.model, &test_set));
     }
     let mean_accuracy = fold_accuracies.iter().sum::<f64>() / k as f64;
-    CvResult { fold_accuracies, mean_accuracy }
+    CvResult { fold_accuracies, mean_accuracy, total_iterations }
 }
 
 #[cfg(test)]
@@ -39,10 +92,11 @@ mod tests {
     #[test]
     fn cv_on_separable_data_is_accurate() {
         let ds = chessboard(240, 4, 5);
-        let cfg = TrainConfig::new(100.0, 0.5);
-        let cv = cross_validate(&ds, &cfg, 4, 1);
+        let trainer = Trainer::rbf(100.0, 0.5);
+        let cv = cross_validate(&ds, &trainer, 4, 1);
         assert_eq!(cv.fold_accuracies.len(), 4);
         assert!(cv.mean_accuracy > 0.75, "{:?}", cv);
+        assert!(cv.total_iterations > 0);
     }
 
     #[test]
@@ -50,8 +104,8 @@ mod tests {
         // label noise 50% => accuracy ~ 0.5 regardless of config
         let spec = SurrogateSpec { label_noise: 0.5, ..Default::default() };
         let ds = surrogate(160, &spec, 3);
-        let cfg = TrainConfig::new(1.0, 0.1);
-        let cv = cross_validate(&ds, &cfg, 4, 2);
+        let trainer = Trainer::rbf(1.0, 0.1);
+        let cv = cross_validate(&ds, &trainer, 4, 2);
         assert!(cv.mean_accuracy < 0.72, "noise should cap accuracy: {:?}", cv);
     }
 
@@ -59,9 +113,37 @@ mod tests {
     fn folds_use_disjoint_test_data() {
         // indirectly: fold accuracies vary but mean is stable across seeds
         let ds = chessboard(160, 4, 6);
-        let cfg = TrainConfig::new(10.0, 0.5);
-        let a = cross_validate(&ds, &cfg, 4, 1).mean_accuracy;
-        let b = cross_validate(&ds, &cfg, 4, 99).mean_accuracy;
+        let trainer = Trainer::rbf(10.0, 0.5);
+        let a = cross_validate(&ds, &trainer, 4, 1).mean_accuracy;
+        let b = cross_validate(&ds, &trainer, 4, 99).mean_accuracy;
         assert!((a - b).abs() < 0.25);
+    }
+
+    #[test]
+    fn caller_level_warm_start_does_not_leak_into_folds() {
+        // A trainer seeded for the *full* dataset must still cross-validate:
+        // fold problems are smaller, so the stale seed is dropped per fold.
+        let ds = chessboard(120, 4, 8);
+        let trainer = Trainer::rbf(10.0, 0.5).warm_start(vec![0.0; ds.len()]);
+        let cv = cross_validate(&ds, &trainer, 4, 1);
+        assert_eq!(cv.fold_accuracies.len(), 4);
+    }
+
+    #[test]
+    fn session_reuse_cuts_iterations_on_the_same_configuration() {
+        let ds = chessboard(200, 4, 7);
+        let trainer = Trainer::rbf(50.0, 0.5);
+        let mut session = CvSession::new();
+        let first = cross_validate_session(&ds, &trainer, 4, 3, &mut session);
+        let second = cross_validate_session(&ds, &trainer, 4, 3, &mut session);
+        // Re-solving the identical problems from their own solutions is
+        // (nearly) free, and accuracy is unchanged.
+        assert!(
+            second.total_iterations < first.total_iterations / 4,
+            "warm {} !< cold {} / 4",
+            second.total_iterations,
+            first.total_iterations
+        );
+        assert!((first.mean_accuracy - second.mean_accuracy).abs() < 0.05);
     }
 }

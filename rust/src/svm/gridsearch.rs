@@ -2,12 +2,28 @@
 //! selected the Table-1 hyper-parameters ("grid search on the
 //! cross-validation error to ensure … the resulting classifiers
 //! generalize reasonably well").
+//!
+//! With [`WarmStart::Seeded`] the search threads one [`CvSession`]
+//! through the whole grid: every fold of every grid point starts from
+//! the α the same fold reached at the previous point. Adjacent points
+//! pose similar QPs, so the seeded sweep finishes the identical grid in
+//! measurably fewer total solver iterations (asserted in tests) while
+//! evaluating the same accuracies to within solver tolerance.
 
 use crate::data::dataset::Dataset;
 use crate::kernel::function::KernelFunction;
 
-use super::crossval::cross_validate;
-use super::train::TrainConfig;
+use super::crossval::{cross_validate_session, CvSession};
+use super::trainer::Trainer;
+
+/// Whether grid points seed their neighbours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmStart {
+    /// Every grid point solves from α = 0.
+    Cold,
+    /// α flows from grid point to grid point through a [`CvSession`].
+    Seeded,
+}
 
 /// One evaluated grid point.
 #[derive(Debug, Clone, Copy)]
@@ -15,6 +31,8 @@ pub struct GridPoint {
     pub c: f64,
     pub gamma: f64,
     pub cv_accuracy: f64,
+    /// Solver iterations this point's CV spent (all folds).
+    pub iterations: u64,
 }
 
 /// Result of a grid search.
@@ -22,6 +40,8 @@ pub struct GridPoint {
 pub struct GridSearchResult {
     pub evaluated: Vec<GridPoint>,
     pub best: GridPoint,
+    /// Solver iterations summed over the whole grid.
+    pub total_iterations: u64,
 }
 
 /// Exhaustive grid search with `k`-fold CV. Ties break toward smaller C
@@ -32,19 +52,27 @@ pub fn grid_search(
     gammas: &[f64],
     k: usize,
     seed: u64,
-    base: &TrainConfig,
+    base: &Trainer,
+    warm: WarmStart,
 ) -> GridSearchResult {
     assert!(!cs.is_empty() && !gammas.is_empty());
     let mut evaluated = Vec::with_capacity(cs.len() * gammas.len());
+    let mut session = CvSession::new();
+    let mut total_iterations = 0u64;
     for &c in cs {
         for &gamma in gammas {
-            let cfg = TrainConfig {
+            let trainer = base.clone().c(c).kernel(KernelFunction::Rbf { gamma });
+            if warm == WarmStart::Cold {
+                session = CvSession::new();
+            }
+            let cv = cross_validate_session(data, &trainer, k, seed, &mut session);
+            total_iterations += cv.total_iterations;
+            evaluated.push(GridPoint {
                 c,
-                kernel: KernelFunction::Rbf { gamma },
-                ..*base
-            };
-            let cv = cross_validate(data, &cfg, k, seed);
-            evaluated.push(GridPoint { c, gamma, cv_accuracy: cv.mean_accuracy });
+                gamma,
+                cv_accuracy: cv.mean_accuracy,
+                iterations: cv.total_iterations,
+            });
         }
     }
     let best = *evaluated
@@ -55,7 +83,7 @@ pub fn grid_search(
                 .unwrap()
         })
         .unwrap();
-    GridSearchResult { evaluated, best }
+    GridSearchResult { evaluated, best, total_iterations }
 }
 
 /// The standard logarithmic grid `base^lo .. base^hi`.
@@ -77,7 +105,7 @@ mod tests {
     #[test]
     fn finds_a_sensible_region_on_chessboard() {
         let ds = chessboard(200, 4, 7);
-        let base = TrainConfig::new(1.0, 1.0);
+        let base = Trainer::rbf(1.0, 1.0);
         let res = grid_search(
             &ds,
             &[1.0, 100.0],
@@ -85,6 +113,7 @@ mod tests {
             3,
             1,
             &base,
+            WarmStart::Cold,
         );
         assert_eq!(res.evaluated.len(), 4);
         // the wide-kernel tiny-C corner should not win on chessboard
@@ -99,13 +128,47 @@ mod tests {
     #[test]
     fn evaluates_full_grid() {
         let ds = chessboard(100, 4, 8);
-        let base = TrainConfig::new(1.0, 1.0);
-        let res = grid_search(&ds, &[0.1, 1.0, 10.0], &[0.1, 1.0], 3, 2, &base);
+        let base = Trainer::rbf(1.0, 1.0);
+        let res =
+            grid_search(&ds, &[0.1, 1.0, 10.0], &[0.1, 1.0], 3, 2, &base, WarmStart::Cold);
         assert_eq!(res.evaluated.len(), 6);
         let best_in_list = res
             .evaluated
             .iter()
             .any(|p| p.c == res.best.c && p.gamma == res.best.gamma);
         assert!(best_in_list);
+        assert_eq!(
+            res.total_iterations,
+            res.evaluated.iter().map(|p| p.iterations).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn warm_started_grid_uses_fewer_total_iterations() {
+        // The acceptance metric of the warm-start redesign: the same
+        // grid, the same folds, measurably fewer solver iterations.
+        let ds = chessboard(220, 4, 9);
+        let base = Trainer::rbf(1.0, 1.0);
+        let cs = [5.0, 10.0, 20.0];
+        let gammas = [0.3, 0.5, 0.8];
+        let cold = grid_search(&ds, &cs, &gammas, 3, 4, &base, WarmStart::Cold);
+        let warm = grid_search(&ds, &cs, &gammas, 3, 4, &base, WarmStart::Seeded);
+        assert!(
+            warm.total_iterations < cold.total_iterations,
+            "warm {} !< cold {}",
+            warm.total_iterations,
+            cold.total_iterations
+        );
+        // model selection is unchanged in quality: accuracies agree per point
+        for (a, b) in cold.evaluated.iter().zip(&warm.evaluated) {
+            assert!(
+                (a.cv_accuracy - b.cv_accuracy).abs() < 0.06,
+                "C={} γ={}: {} vs {}",
+                a.c,
+                a.gamma,
+                a.cv_accuracy,
+                b.cv_accuracy
+            );
+        }
     }
 }

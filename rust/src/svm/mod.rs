@@ -1,6 +1,9 @@
 //! High-level SVM API: classification train / predict / cross-validation
 //! / grid search, plus ε-SVR, one-class SVM and Platt probability
-//! calibration — all driven by the same PA-SMO solver core.
+//! calibration — all driven through the `solver::Engine` contract.
+//!
+//! The front door is [`Trainer`]: a builder over kernel, C, per-class
+//! costs, solver choice and warm start that yields a [`TrainOutcome`].
 pub mod crossval;
 pub mod gridsearch;
 pub mod model;
@@ -9,7 +12,8 @@ pub mod oneclass;
 pub mod platt;
 pub mod predict;
 pub mod svr;
-pub mod train;
+pub mod trainer;
 
+pub use crate::solver::engine::SolverChoice;
 pub use model::SvmModel;
-pub use train::{train, SolverChoice, TrainConfig};
+pub use trainer::{TrainOutcome, Trainer};

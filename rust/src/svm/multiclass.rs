@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::data::dataset::Dataset;
 
 use super::model::SvmModel;
-use super::train::{train, TrainConfig};
+use super::trainer::Trainer;
 
 /// A multiclass dataset: dense features with arbitrary integer labels.
 #[derive(Debug, Clone, PartialEq)]
@@ -93,8 +93,9 @@ impl OvoModel {
     }
 }
 
-/// Train a one-vs-one model; `cfg` is applied to every pairwise machine.
-pub fn train_ovo(data: &MulticlassDataset, cfg: &TrainConfig) -> OvoModel {
+/// Train a one-vs-one model; `trainer` is applied to every pairwise
+/// machine.
+pub fn train_ovo(data: &MulticlassDataset, trainer: &Trainer) -> OvoModel {
     let classes = data.classes();
     assert!(classes.len() >= 2, "need at least two classes");
     let mut machines = Vec::new();
@@ -110,8 +111,7 @@ pub fn train_ovo(data: &MulticlassDataset, cfg: &TrainConfig) -> OvoModel {
                     sub.push(data.row(i), -1);
                 }
             }
-            let (model, _) = train(&Arc::new(sub), cfg);
-            machines.push(model);
+            machines.push(trainer.train(&Arc::new(sub)).model);
             pairs.push((a, b));
         }
     }
@@ -146,7 +146,7 @@ mod tests {
     fn classes_and_pairs_enumeration() {
         let ds = blobs(90, 3, 4.0, 0.5, 1);
         assert_eq!(ds.classes(), vec![0, 1, 2]);
-        let model = train_ovo(&ds, &TrainConfig::new(10.0, 0.5));
+        let model = train_ovo(&ds, &Trainer::rbf(10.0, 0.5));
         assert_eq!(model.machines.len(), 3); // 3 choose 2
     }
 
@@ -154,7 +154,7 @@ mod tests {
     fn separable_blobs_classified_accurately() {
         let train_set = blobs(240, 4, 6.0, 0.4, 2);
         let test_set = blobs(200, 4, 6.0, 0.4, 3);
-        let model = train_ovo(&train_set, &TrainConfig::new(10.0, 0.3));
+        let model = train_ovo(&train_set, &Trainer::rbf(10.0, 0.3));
         let acc = model.accuracy(&test_set);
         assert!(acc > 0.95, "accuracy {acc}");
     }
@@ -162,7 +162,7 @@ mod tests {
     #[test]
     fn predicts_the_nearest_blob_center() {
         let train_set = blobs(300, 3, 5.0, 0.4, 4);
-        let model = train_ovo(&train_set, &TrainConfig::new(10.0, 0.3));
+        let model = train_ovo(&train_set, &Trainer::rbf(10.0, 0.3));
         for c in 0..3 {
             let theta = 2.0 * std::f64::consts::PI * c as f64 / 3.0;
             let x = [(5.0 * theta.cos()) as f32, (5.0 * theta.sin()) as f32];
@@ -173,7 +173,7 @@ mod tests {
     #[test]
     fn binary_case_degenerates_to_single_machine() {
         let ds = blobs(100, 2, 4.0, 0.5, 5);
-        let model = train_ovo(&ds, &TrainConfig::new(5.0, 0.5));
+        let model = train_ovo(&ds, &Trainer::rbf(5.0, 0.5));
         assert_eq!(model.machines.len(), 1);
         assert!(model.accuracy(&ds) > 0.9);
     }
@@ -184,6 +184,6 @@ mod tests {
         let mut ds = MulticlassDataset::with_dim(2);
         ds.push(&[0.0, 0.0], 7);
         ds.push(&[1.0, 1.0], 7);
-        train_ovo(&ds, &TrainConfig::new(1.0, 1.0));
+        train_ovo(&ds, &Trainer::rbf(1.0, 1.0));
     }
 }

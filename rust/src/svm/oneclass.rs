@@ -12,9 +12,9 @@ use crate::data::dataset::Dataset;
 use crate::kernel::function::KernelFunction;
 use crate::kernel::matrix::Gram;
 use crate::kernel::native::NativeRowComputer;
-use crate::solver::pasmo::PasmoSolver;
+use crate::solver::engine::{Engine, EngineConfig, SolverChoice};
+use crate::solver::problem::QpProblem;
 use crate::solver::smo::{SolveResult, SolverConfig};
-use crate::solver::state::SolverState;
 
 /// One-class SVM configuration.
 #[derive(Debug, Clone, Copy)]
@@ -23,6 +23,7 @@ pub struct OneClassConfig {
     /// the support-vector fraction.
     pub nu: f64,
     pub kernel: KernelFunction,
+    pub solver: SolverChoice,
     pub solver_config: SolverConfig,
 }
 
@@ -32,6 +33,7 @@ impl OneClassConfig {
         OneClassConfig {
             nu,
             kernel: KernelFunction::Rbf { gamma },
+            solver: SolverChoice::Pasmo,
             solver_config: SolverConfig::default(),
         }
     }
@@ -65,40 +67,13 @@ impl OneClassModel {
 /// Train a one-class SVM on (unlabeled) rows of `data`.
 pub fn train_one_class(data: &Arc<Dataset>, cfg: &OneClassConfig) -> (OneClassModel, SolveResult) {
     let l = data.len();
-    assert!(l >= 2, "need at least two examples");
-    let ub = 1.0 / (cfg.nu * l as f64);
-    // LIBSVM-style feasible start: fill α to Σα = 1 from the front.
-    let mut alpha0 = vec![0.0f64; l];
-    let mut remaining = 1.0f64;
-    for a in alpha0.iter_mut() {
-        let v = remaining.min(ub);
-        *a = v;
-        remaining -= v;
-        if remaining <= 0.0 {
-            break;
-        }
-    }
     let nc = NativeRowComputer::new(data.clone(), cfg.kernel);
     let mut gram = Gram::new(Box::new(nc), cfg.solver_config.cache_bytes);
-    // grad0 = −K α₀, via rows of the non-zero α (≈ νℓ of them).
-    let mut grad0 = vec![0.0f64; l];
-    for (j, &aj) in alpha0.iter().enumerate() {
-        if aj == 0.0 {
-            continue;
-        }
-        let row = gram.row(j);
-        for (n, g) in grad0.iter_mut().enumerate() {
-            *g -= aj * row[n] as f64;
-        }
-    }
-    let state = SolverState::from_problem(
-        vec![0.0; l],
-        vec![0.0; l],
-        vec![ub; l],
-        alpha0,
-        grad0,
-    );
-    let result = PasmoSolver::new(cfg.solver_config).solve_state(state, &mut gram);
+    // The ν-formulation lowering: Σα = 1 with a LIBSVM-style feasible
+    // start whose gradient needs ≈ νℓ kernel rows (built by `lower`).
+    let problem = QpProblem::one_class(l, cfg.nu);
+    let engine = EngineConfig::new(cfg.solver, cfg.solver_config).build();
+    let result = engine.solve(&problem, &mut gram);
 
     let mut support = Dataset::with_dim(data.dim());
     let mut coef = Vec::new();

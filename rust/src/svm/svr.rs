@@ -9,8 +9,8 @@
 //! s.t. Σγ = 0,  K̃_{ab} = K_{a mod ℓ, b mod ℓ},
 //! ```
 //!
-//! which is solved unchanged by SMO / PA-SMO via
-//! [`SolverState::from_problem`] — a direct demonstration of the paper's
+//! which is solved unchanged by any `Engine` via
+//! [`QpProblem::svr`] — a direct demonstration of the paper's
 //! "the method is widely applicable" conclusion. The regression
 //! coefficient of example `i` is `γ_i + γ_{ℓ+i} = α_i − α*_i`.
 
@@ -19,11 +19,9 @@ use std::sync::Arc;
 use crate::data::regression::RegressionDataset;
 use crate::kernel::function::KernelFunction;
 use crate::kernel::matrix::{Gram, RowComputer};
-use crate::solver::pasmo::PasmoSolver;
-use crate::solver::smo::{SmoSolver, SolveResult, SolverConfig};
-use crate::solver::state::SolverState;
-
-use super::train::SolverChoice;
+use crate::solver::engine::{Engine, EngineConfig, SolverChoice};
+use crate::solver::problem::QpProblem;
+use crate::solver::smo::{SolveResult, SolverConfig};
 
 /// Row computer for the doubled ε-SVR Gram matrix K̃ (2ℓ × 2ℓ).
 struct DoubledRowComputer {
@@ -115,34 +113,11 @@ pub fn train_svr(
     let doubled = DoubledRowComputer { inner, l };
     let mut gram = Gram::new(Box::new(doubled), cfg.solver_config.cache_bytes);
 
-    // Linear term, bounds, zero start (grad0 = p).
-    let mut p = Vec::with_capacity(2 * l);
-    let mut lower = Vec::with_capacity(2 * l);
-    let mut upper = Vec::with_capacity(2 * l);
-    for i in 0..l {
-        p.push(data.target(i) - cfg.epsilon);
-        lower.push(0.0);
-        upper.push(cfg.c);
-    }
-    for i in 0..l {
-        p.push(data.target(i) + cfg.epsilon);
-        lower.push(-cfg.c);
-        upper.push(0.0);
-    }
-    let state =
-        SolverState::from_problem(p.clone(), lower, upper, vec![0.0; 2 * l], p);
-
-    let result = match cfg.solver {
-        SolverChoice::Smo => SmoSolver::new(cfg.solver_config).solve_state(state, &mut gram),
-        SolverChoice::Pasmo => {
-            PasmoSolver::new(cfg.solver_config).solve_state(state, &mut gram)
-        }
-        SolverChoice::PasmoMulti(n) => {
-            let mut sc = cfg.solver_config;
-            sc.planning_candidates = n.max(1);
-            PasmoSolver::new(sc).solve_state(state, &mut gram)
-        }
-    };
+    // The ε-SVR lowering: one QpProblem over the doubled variables.
+    let targets: Vec<f64> = (0..l).map(|i| data.target(i)).collect();
+    let problem = QpProblem::svr(&targets, cfg.c, cfg.epsilon);
+    let engine = EngineConfig::new(cfg.solver, cfg.solver_config).build();
+    let result = engine.solve(&problem, &mut gram);
 
     let mut support = Vec::new();
     let mut coef = Vec::new();

@@ -1,0 +1,274 @@
+//! The one user-facing training entry point: a builder that assembles a
+//! [`QpProblem`], picks an [`Engine`] through the single `SolverChoice`
+//! factory, and returns the trained model plus solver diagnostics.
+//!
+//! ```no_run
+//! use pasmo::kernel::KernelFunction;
+//! use pasmo::solver::SolverChoice;
+//! use pasmo::svm::Trainer;
+//! # let data = std::sync::Arc::new(pasmo::data::synth::chessboard(100, 4, 1));
+//! let outcome = Trainer::new(KernelFunction::Rbf { gamma: 0.5 })
+//!     .c(100.0)
+//!     .solver(SolverChoice::Pasmo)
+//!     .stop_eps(1e-3)
+//!     .class_weights(2.0, 1.0) // C₊ = 200, C₋ = 100
+//!     .train(&data);
+//! println!("{} SVs in {} iterations", outcome.result.sv, outcome.result.iterations);
+//! ```
+
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+use crate::kernel::matrix::{Gram, RowComputer};
+use crate::kernel::native::NativeRowComputer;
+use crate::solver::engine::{Engine, EngineConfig, SolverChoice};
+use crate::solver::problem::QpProblem;
+use crate::solver::smo::{SolveResult, SolverConfig};
+
+use super::model::SvmModel;
+
+/// A trained classifier plus the solve diagnostics that produced it.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub model: SvmModel,
+    pub result: SolveResult,
+}
+
+/// Builder for C-SVC training runs (the general tasks — ε-SVR, one-class
+/// — construct their [`QpProblem`] directly; see `svm::svr` /
+/// `svm::oneclass`).
+#[derive(Debug, Clone)]
+pub struct Trainer {
+    pub kernel: KernelFunction,
+    pub c: f64,
+    /// Per-class cost multipliers `(w₊, w₋)`: positives are budgeted
+    /// `w₊·C`, negatives `w₋·C`. `(1, 1)` is the unweighted machine.
+    pub weights: (f64, f64),
+    pub solver: SolverChoice,
+    pub solver_config: SolverConfig,
+    /// Optional α seed for the next [`Trainer::train`] call (repaired to
+    /// feasibility at lowering — see [`QpProblem::lower`]).
+    pub warm_start: Option<Vec<f64>>,
+}
+
+impl Trainer {
+    /// A PA-SMO trainer with the paper's defaults (C = 1, ε = 10⁻³).
+    pub fn new(kernel: KernelFunction) -> Trainer {
+        Trainer {
+            kernel,
+            c: 1.0,
+            weights: (1.0, 1.0),
+            solver: SolverChoice::Pasmo,
+            solver_config: SolverConfig::default(),
+            warm_start: None,
+        }
+    }
+
+    /// Shorthand for the common case: RBF kernel at the given (C, γ).
+    pub fn rbf(c: f64, gamma: f64) -> Trainer {
+        Trainer::new(KernelFunction::Rbf { gamma }).c(c)
+    }
+
+    /// Regularization constant C.
+    pub fn c(mut self, c: f64) -> Trainer {
+        assert!(c > 0.0, "C must be positive");
+        self.c = c;
+        self
+    }
+
+    /// Replace the kernel function.
+    pub fn kernel(mut self, kernel: KernelFunction) -> Trainer {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Which engine drives training.
+    pub fn solver(mut self, solver: SolverChoice) -> Trainer {
+        self.solver = solver;
+        self
+    }
+
+    /// Kernel row-cache budget in bytes.
+    pub fn cache_bytes(mut self, bytes: usize) -> Trainer {
+        self.solver_config.cache_bytes = bytes;
+        self
+    }
+
+    /// KKT stopping accuracy ε.
+    pub fn stop_eps(mut self, eps: f64) -> Trainer {
+        self.solver_config.eps = eps;
+        self
+    }
+
+    /// Per-class cost multipliers (w₊, w₋) for imbalanced data.
+    pub fn class_weights(mut self, w_pos: f64, w_neg: f64) -> Trainer {
+        assert!(w_pos > 0.0 && w_neg > 0.0, "class weights must be positive");
+        self.weights = (w_pos, w_neg);
+        self
+    }
+
+    /// Seed the next solve from a previous solution's α.
+    pub fn warm_start(mut self, alpha: Vec<f64>) -> Trainer {
+        self.warm_start = Some(alpha);
+        self
+    }
+
+    /// Replace the full low-level solver configuration (telemetry,
+    /// shrinking, step policy, ablations …).
+    pub fn solver_config(mut self, config: SolverConfig) -> Trainer {
+        self.solver_config = config;
+        self
+    }
+
+    /// The dual problem this trainer poses for `labels` — the C-SVC
+    /// lowering site (weighted bounds + warm start).
+    pub fn problem(&self, labels: &[i8]) -> QpProblem {
+        let (w_pos, w_neg) = self.weights;
+        let p = QpProblem::classification_weighted(labels, w_pos * self.c, w_neg * self.c);
+        match &self.warm_start {
+            Some(alpha) => p.warm_start(alpha.clone()),
+            None => p,
+        }
+    }
+
+    /// The engine this trainer dispatches to.
+    pub fn engine(&self) -> Box<dyn Engine> {
+        EngineConfig::new(self.solver, self.solver_config).build()
+    }
+
+    /// Train on a dataset using the native (Rust) kernel path.
+    pub fn train(&self, data: &Arc<Dataset>) -> TrainOutcome {
+        let computer = NativeRowComputer::new(data.clone(), self.kernel);
+        self.train_with_computer(data, Box::new(computer))
+    }
+
+    /// Train with a caller-supplied row computer (e.g. the PJRT-backed
+    /// `crate::runtime::gram::PjrtRowComputer`, available with the `pjrt`
+    /// feature). [`Trainer::train`] is the native-path shorthand — the
+    /// default build always has that fallback.
+    pub fn train_with_computer(
+        &self,
+        data: &Arc<Dataset>,
+        computer: Box<dyn RowComputer>,
+    ) -> TrainOutcome {
+        let mut gram = Gram::new(computer, self.solver_config.cache_bytes);
+        let problem = self.problem(data.labels());
+        let result = self.engine().solve(&problem, &mut gram);
+        let model =
+            SvmModel::from_solution(data, &result.alpha, result.bias, self.kernel, 1e-12);
+        TrainOutcome { model, result }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::predict::accuracy;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn trains_a_working_classifier_on_chessboard() {
+        let ds = Arc::new(chessboard(300, 4, 1));
+        let out = Trainer::rbf(100.0, 0.5).train(&ds);
+        assert!(out.result.converged);
+        assert!(out.model.n_sv() > 0);
+        let train_acc = accuracy(&out.model, &ds);
+        assert!(train_acc > 0.9, "train accuracy {train_acc}");
+    }
+
+    #[test]
+    fn smo_and_pasmo_produce_equivalent_models() {
+        let ds = Arc::new(chessboard(200, 4, 2));
+        let base = Trainer::rbf(10.0, 0.5);
+        let o1 = base.clone().solver(SolverChoice::Smo).train(&ds);
+        let o2 = base.solver(SolverChoice::Pasmo).train(&ds);
+        assert!(o1.result.converged && o2.result.converged);
+        let rel = (o1.result.objective - o2.result.objective).abs()
+            / (1.0 + o1.result.objective.abs());
+        assert!(rel < 2e-3, "{} vs {}", o1.result.objective, o2.result.objective);
+        // decisions agree on most points
+        let mut agree = 0;
+        for i in 0..ds.len() {
+            if o1.model.predict(ds.row(i)) == o2.model.predict(ds.row(i)) {
+                agree += 1;
+            }
+        }
+        assert!(agree as f64 / ds.len() as f64 > 0.97);
+    }
+
+    #[test]
+    fn multi_planning_choice_works() {
+        let ds = Arc::new(chessboard(150, 4, 3));
+        let out = Trainer::rbf(50.0, 0.5).solver(SolverChoice::PasmoMulti(3)).train(&ds);
+        assert!(out.result.converged);
+    }
+
+    #[test]
+    fn equal_class_weights_match_the_unweighted_path_exactly() {
+        // Weighting with (1, 1) must be bit-identical to no weighting:
+        // same problem, same deterministic solver path.
+        let ds = Arc::new(chessboard(200, 4, 4));
+        let plain = Trainer::rbf(10.0, 0.5).train(&ds);
+        let weighted = Trainer::rbf(10.0, 0.5).class_weights(1.0, 1.0).train(&ds);
+        assert_eq!(plain.result.iterations, weighted.result.iterations);
+        assert_eq!(plain.result.objective, weighted.result.objective);
+        assert_eq!(plain.result.sv, weighted.result.sv);
+        assert_eq!(plain.result.alpha, weighted.result.alpha);
+    }
+
+    #[test]
+    fn class_weights_shift_the_decision_toward_the_costly_class() {
+        // Imbalanced blobs: 85% negatives. Upweighting the positive
+        // class must increase positive recall (the new scenario the
+        // QpProblem bounds unlock).
+        let mut rng = Pcg::new(9);
+        let mut ds = Dataset::with_dim(2);
+        for _ in 0..360 {
+            let y: i8 = if rng.below(100) < 15 { 1 } else { -1 };
+            let cx = if y == 1 { 0.9 } else { -0.3 };
+            ds.push(&[(cx + rng.normal() * 0.7) as f32, (rng.normal() * 0.7) as f32], y);
+        }
+        let ds = Arc::new(ds);
+        let recall = |out: &TrainOutcome| {
+            let mut tp = 0usize;
+            let mut pos = 0usize;
+            for i in 0..ds.len() {
+                if ds.label(i) == 1 {
+                    pos += 1;
+                    if out.model.predict(ds.row(i)) == 1 {
+                        tp += 1;
+                    }
+                }
+            }
+            tp as f64 / pos as f64
+        };
+        let plain = Trainer::rbf(1.0, 0.5).train(&ds);
+        let weighted = Trainer::rbf(1.0, 0.5).class_weights(8.0, 1.0).train(&ds);
+        assert!(plain.result.converged && weighted.result.converged);
+        assert!(
+            recall(&weighted) > recall(&plain),
+            "weighted recall {} !> plain recall {}",
+            recall(&weighted),
+            recall(&plain)
+        );
+    }
+
+    #[test]
+    fn warm_start_from_own_solution_converges_immediately() {
+        let ds = Arc::new(chessboard(200, 4, 5));
+        let cold = Trainer::rbf(10.0, 0.5).train(&ds);
+        assert!(cold.result.converged);
+        let warm = Trainer::rbf(10.0, 0.5)
+            .warm_start(cold.result.alpha.clone())
+            .train(&ds);
+        assert!(warm.result.converged);
+        assert!(
+            warm.result.iterations <= cold.result.iterations / 4,
+            "warm restart took {} iterations vs cold {}",
+            warm.result.iterations,
+            cold.result.iterations
+        );
+    }
+}

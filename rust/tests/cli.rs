@@ -131,6 +131,23 @@ fn unknown_experiment_fails_cleanly() {
 }
 
 #[test]
+fn train_accepts_per_class_cost_weights() {
+    let out = pasmo()
+        .args([
+            "train", "--dataset", "banana", "--len", "200", "--w-pos", "4", "--w-neg", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "weighted train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=true"), "{text}");
+}
+
+#[test]
 fn train_rejects_unknown_dataset() {
     let out = pasmo().args(["train", "--dataset", "bogus"]).output().unwrap();
     assert!(!out.status.success());

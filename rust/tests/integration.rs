@@ -5,11 +5,12 @@ use std::sync::Arc;
 
 use pasmo::data::suite;
 use pasmo::data::synth::chessboard;
-use pasmo::kernel::matrix::{DenseGram, Gram};
+use pasmo::kernel::matrix::{DenseGram, Gram, RowComputer};
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
 use pasmo::solver::reference::solve_reference;
 use pasmo::solver::smo::{SolverConfig, WssKind};
-use pasmo::svm::train::{train, SolverChoice, TrainConfig};
+use pasmo::solver::{Engine, PasmoSolver, QpProblem, SolverState};
+use pasmo::svm::{SolverChoice, Trainer};
 
 #[cfg(feature = "pjrt")]
 fn artifacts_available() -> bool {
@@ -25,9 +26,9 @@ fn suite_smoke_all_families_converge() {
     for name in ["banana", "twonorm", "ringnorm", "waveform", "tic-tac-toe", "chess-board-1000"] {
         let spec = suite::find(name).unwrap();
         let ds = Arc::new(spec.generate(180, 11));
-        let base = TrainConfig::new(spec.c, spec.gamma);
-        let (_, smo) = train(&ds, &base.with_solver(SolverChoice::Smo));
-        let (_, pa) = train(&ds, &base.with_solver(SolverChoice::Pasmo));
+        let base = Trainer::rbf(spec.c, spec.gamma);
+        let smo = base.clone().solver(SolverChoice::Smo).train(&ds).result;
+        let pa = base.solver(SolverChoice::Pasmo).train(&ds).result;
         assert!(smo.converged, "{name}: SMO did not converge");
         assert!(pa.converged, "{name}: PA-SMO did not converge");
         assert!(
@@ -48,9 +49,9 @@ fn pasmo_reduces_iterations_on_chessboard() {
     let mut total_pa = 0u64;
     for seed in 0..5u64 {
         let ds = Arc::new(chessboard(400, 4, seed));
-        let base = TrainConfig::new(1e6, 0.5);
-        let (_, smo) = train(&ds, &base.with_solver(SolverChoice::Smo));
-        let (_, pa) = train(&ds, &base.with_solver(SolverChoice::Pasmo));
+        let base = Trainer::rbf(1e6, 0.5);
+        let smo = base.clone().solver(SolverChoice::Smo).train(&ds).result;
+        let pa = base.solver(SolverChoice::Pasmo).train(&ds).result;
         assert!(smo.converged && pa.converged, "seed {seed}");
         total_smo += smo.iterations;
         total_pa += pa.iterations;
@@ -80,8 +81,7 @@ fn all_solver_variants_agree_with_oracle() {
         ("pasmo", SolverChoice::Pasmo),
         ("multi3", SolverChoice::PasmoMulti(3)),
     ] {
-        let cfg = TrainConfig::new(10.0, 0.5).with_solver(choice);
-        let (_, res) = train(&ds, &cfg);
+        let res = Trainer::rbf(10.0, 0.5).solver(choice).train(&ds).result;
         assert!(
             (res.objective - oracle.objective).abs() < tol,
             "{label}: {} vs oracle {}",
@@ -90,10 +90,143 @@ fn all_solver_variants_agree_with_oracle() {
         );
     }
     // first-order WSS too
-    let mut cfg = TrainConfig::new(10.0, 0.5).with_solver(SolverChoice::Smo);
-    cfg.solver_config = SolverConfig { wss: WssKind::MaxViolating, ..Default::default() };
-    let (_, res) = train(&ds, &cfg);
+    let trainer = Trainer::rbf(10.0, 0.5)
+        .solver(SolverChoice::Smo)
+        .solver_config(SolverConfig { wss: WssKind::MaxViolating, ..Default::default() });
+    let res = trainer.train(&ds).result;
     assert!((res.objective - oracle.objective).abs() < tol, "mvp wss");
+}
+
+/// API-parity: the `Trainer`/`QpProblem` path reproduces the seed
+/// `train` path — an explicit `SolverState::new` handed straight to
+/// PA-SMO — bit for bit (objective, iterations, SV counts) across the
+/// synthetic suite.
+#[test]
+fn trainer_path_reproduces_direct_state_path() {
+    for name in ["banana", "twonorm", "chess-board-1000"] {
+        let spec = suite::find(name).unwrap();
+        let ds = Arc::new(spec.generate(160, 5));
+        let new_path = Trainer::rbf(spec.c, spec.gamma).train(&ds).result;
+
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: spec.gamma });
+        let cfg = SolverConfig::default();
+        let mut gram = Gram::new(Box::new(nc), cfg.cache_bytes);
+        let old_path = PasmoSolver::new(cfg)
+            .solve_state(SolverState::new(ds.labels(), spec.c), &mut gram);
+
+        assert_eq!(new_path.iterations, old_path.iterations, "{name}");
+        assert_eq!(new_path.objective, old_path.objective, "{name}");
+        assert_eq!((new_path.sv, new_path.bsv), (old_path.sv, old_path.bsv), "{name}");
+        assert_eq!(new_path.alpha, old_path.alpha, "{name}");
+    }
+}
+
+/// API-parity for ε-SVR: `train_svr` (QpProblem::svr lowering)
+/// reproduces the seed's hand-built doubled `SolverState` exactly.
+#[test]
+fn svr_path_reproduces_direct_state_path() {
+    use pasmo::data::regression::sinc;
+    use pasmo::svm::svr::{train_svr_native, SvrConfig};
+
+    let data = sinc(120, 0.05, 3);
+    let cfg = SvrConfig::new(5.0, 0.1, 0.5);
+    let (_, new_path) = train_svr_native(&data, &cfg);
+
+    // The seed lowering, spelled out by hand over the doubled kernel.
+    let l = data.len();
+    let mut ds = pasmo::data::Dataset::with_dim(data.dim());
+    for i in 0..l {
+        ds.push(data.row(i), 1);
+    }
+    let ds = Arc::new(ds);
+    struct Doubled(NativeRowComputer, usize);
+    impl RowComputer for Doubled {
+        fn len(&self) -> usize {
+            2 * self.1
+        }
+        fn compute_row(&self, a: usize, out: &mut [f32]) {
+            let (lo, hi) = out.split_at_mut(self.1);
+            self.0.compute_row(a % self.1, lo);
+            hi.copy_from_slice(lo);
+        }
+        fn diag(&self, a: usize) -> f64 {
+            self.0.diag(a % self.1)
+        }
+        fn entry(&self, a: usize, b: usize) -> f64 {
+            self.0.entry(a % self.1, b % self.1)
+        }
+    }
+    let inner = NativeRowComputer::new(ds, KernelFunction::Rbf { gamma: 0.5 });
+    let mut gram = Gram::new(Box::new(Doubled(inner, l)), cfg.solver_config.cache_bytes);
+    let mut p = Vec::new();
+    let mut lower = Vec::new();
+    let mut upper = Vec::new();
+    for i in 0..l {
+        p.push(data.target(i) - cfg.epsilon);
+        lower.push(0.0);
+        upper.push(cfg.c);
+    }
+    for i in 0..l {
+        p.push(data.target(i) + cfg.epsilon);
+        lower.push(-cfg.c);
+        upper.push(0.0);
+    }
+    let state = SolverState::from_problem(p.clone(), lower, upper, vec![0.0; 2 * l], p);
+    let old_path = PasmoSolver::new(cfg.solver_config).solve_state(state, &mut gram);
+
+    assert_eq!(new_path.iterations, old_path.iterations);
+    assert_eq!(new_path.objective, old_path.objective);
+    assert_eq!((new_path.sv, new_path.bsv), (old_path.sv, old_path.bsv));
+}
+
+/// API-parity for one-class: `train_one_class` (QpProblem::one_class
+/// lowering) reproduces the seed's LIBSVM-style fill + hand-built
+/// gradient exactly.
+#[test]
+fn one_class_path_reproduces_direct_state_path() {
+    use pasmo::svm::oneclass::{train_one_class, OneClassConfig};
+    use pasmo::util::prng::Pcg;
+
+    let mut rng = Pcg::new(21);
+    let mut blob = pasmo::data::Dataset::with_dim(2);
+    for _ in 0..150 {
+        blob.push(&[rng.normal() as f32, rng.normal() as f32], 1);
+    }
+    let blob = Arc::new(blob);
+    let cfg = OneClassConfig::new(0.2, 0.5);
+    let (_, new_path) = train_one_class(&blob, &cfg);
+
+    let l = blob.len();
+    let ub = 1.0 / (cfg.nu * l as f64);
+    let mut alpha0 = vec![0.0f64; l];
+    let mut remaining = 1.0f64;
+    for a in alpha0.iter_mut() {
+        let v = remaining.min(ub);
+        *a = v;
+        remaining -= v;
+        if remaining <= 0.0 {
+            break;
+        }
+    }
+    let nc = NativeRowComputer::new(blob.clone(), cfg.kernel);
+    let mut gram = Gram::new(Box::new(nc), cfg.solver_config.cache_bytes);
+    let mut grad0 = vec![0.0f64; l];
+    for (j, &aj) in alpha0.iter().enumerate() {
+        if aj == 0.0 {
+            continue;
+        }
+        let row = gram.row(j);
+        for (n, g) in grad0.iter_mut().enumerate() {
+            *g -= aj * row[n] as f64;
+        }
+    }
+    let state =
+        SolverState::from_problem(vec![0.0; l], vec![0.0; l], vec![ub; l], alpha0, grad0);
+    let old_path = PasmoSolver::new(cfg.solver_config).solve_state(state, &mut gram);
+
+    assert_eq!(new_path.iterations, old_path.iterations);
+    assert_eq!(new_path.objective, old_path.objective);
+    assert_eq!((new_path.sv, new_path.bsv), (old_path.sv, old_path.bsv));
 }
 
 /// PJRT-backed training produces the same model quality as native.
@@ -103,7 +236,6 @@ fn pjrt_and_native_training_agree() {
     use pasmo::runtime::engine::PjrtEngine;
     use pasmo::runtime::gram::PjrtRowComputer;
     use pasmo::svm::predict::accuracy;
-    use pasmo::svm::train::train_with_computer;
     use std::rc::Rc;
 
     if !artifacts_available() {
@@ -111,17 +243,22 @@ fn pjrt_and_native_training_agree() {
         return;
     }
     let ds = Arc::new(chessboard(300, 4, 7));
-    let cfg = TrainConfig::new(1e4, 0.5);
-    let (m_native, r_native) = train(&ds, &cfg);
+    let trainer = Trainer::rbf(1e4, 0.5);
+    let native = trainer.train(&ds);
     let engine = Rc::new(PjrtEngine::open_default().unwrap());
     let computer = PjrtRowComputer::new(engine, ds.clone(), 0.5).unwrap();
-    let (m_pjrt, r_pjrt) = train_with_computer(&ds, &cfg, Box::new(computer));
-    assert!(r_native.converged && r_pjrt.converged);
-    let rel =
-        (r_native.objective - r_pjrt.objective).abs() / (1.0 + r_native.objective.abs());
-    assert!(rel < 5e-3, "objectives differ: {} vs {}", r_native.objective, r_pjrt.objective);
+    let pjrt = trainer.train_with_computer(&ds, Box::new(computer));
+    assert!(native.result.converged && pjrt.result.converged);
+    let rel = (native.result.objective - pjrt.result.objective).abs()
+        / (1.0 + native.result.objective.abs());
+    assert!(
+        rel < 5e-3,
+        "objectives differ: {} vs {}",
+        native.result.objective,
+        pjrt.result.objective
+    );
     let test = chessboard(500, 4, 8);
-    let (a1, a2) = (accuracy(&m_native, &test), accuracy(&m_pjrt, &test));
+    let (a1, a2) = (accuracy(&native.model, &test), accuracy(&pjrt.model, &test));
     assert!((a1 - a2).abs() < 0.05, "accuracies differ: {a1} vs {a2}");
 }
 
@@ -155,9 +292,9 @@ fn pjrt_engine_reports_clean_error_without_artifacts() {
 #[test]
 fn solves_are_deterministic() {
     let ds = Arc::new(chessboard(200, 4, 9));
-    let cfg = TrainConfig::new(100.0, 0.5);
-    let (_, r1) = train(&ds, &cfg);
-    let (_, r2) = train(&ds, &cfg);
+    let trainer = Trainer::rbf(100.0, 0.5);
+    let r1 = trainer.train(&ds).result;
+    let r2 = trainer.train(&ds).result;
     assert_eq!(r1.iterations, r2.iterations);
     assert_eq!(r1.objective, r2.objective);
     assert_eq!(r1.sv, r2.sv);
@@ -168,8 +305,8 @@ fn solves_are_deterministic() {
 #[test]
 fn c_regime_controls_bounded_svs() {
     let ds = Arc::new(chessboard(200, 4, 10));
-    let (_, small_c) = train(&ds, &TrainConfig::new(1e-3, 0.5));
-    let (_, large_c) = train(&ds, &TrainConfig::new(1e6, 0.5));
+    let small_c = Trainer::rbf(1e-3, 0.5).train(&ds).result;
+    let large_c = Trainer::rbf(1e6, 0.5).train(&ds).result;
     assert!(small_c.bsv * 10 >= small_c.sv * 9, "tiny C: nearly all bounded");
     assert!(large_c.bsv * 10 <= large_c.sv * 5, "huge C: mostly free SVs");
 }
@@ -181,8 +318,8 @@ fn cache_statistics_are_consistent() {
     let ds = Arc::new(chessboard(300, 4, 12));
     let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
     let mut gram = Gram::new(Box::new(nc), 4 << 20);
-    let res = pasmo::solver::pasmo::PasmoSolver::new(SolverConfig::default())
-        .solve(ds.labels(), 1e6, &mut gram);
+    let res = PasmoSolver::new(SolverConfig::default())
+        .solve(&QpProblem::classification(ds.labels(), 1e6), &mut gram);
     assert!(res.converged);
     let s = res.cache_stats;
     assert!(s.hits > 0, "no cache hits in a full solve?");
