@@ -12,6 +12,7 @@
 #   4c. cargo build --examples  (the 5 root-level examples are real
 #                                [[example]] targets and must keep building)
 #   4d. run the quickstart example at tiny scale (end-to-end smoke)
+#   4e. pasmo bench at tiny scale → BENCH_solver.json (perf trajectory)
 #   5. cargo build --features pjrt
 #                               (the gated runtime module must keep
 #                                compiling against the vendor/xla stub)
@@ -46,6 +47,12 @@ cargo build --release --examples
 
 step "cargo run --release --example quickstart -- --len 200"
 cargo run --release --example quickstart -- --len 200
+
+# Perf baseline artifact: tiny-scale solver bench (wall time, iterations,
+# kernel-entry counts, cache hit rates; shrink on vs off) written to the
+# repo root so successive PRs have a trajectory to compare against.
+step "pasmo bench --len 300 (writes ../BENCH_solver.json)"
+cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --out ../BENCH_solver.json
 
 step "cargo build --benches --features pjrt"
 cargo build --benches --features pjrt

@@ -90,6 +90,7 @@ fn main() {
     println!("gram-row evaluation: native Rust vs PJRT artifact (DESIGN.md P1)\n");
     let engine = open_engine();
 
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     for &(n, d) in &[(1000usize, 2usize), (4096, 16), (4096, 64), (16384, 64), (8192, 200)] {
         let ds = random_ds(n, d, 42);
         let native = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
@@ -101,6 +102,38 @@ fn main() {
             out[0]
         });
         report(&r, n, d);
+
+        // multi-threaded tiled rows (same bits, more cores)
+        let mt = NativeRowComputer::with_threads(
+            ds.clone(),
+            KernelFunction::Rbf { gamma: 0.5 },
+            threads,
+        );
+        let mut i = 0usize;
+        let r = bench(&format!("nat-t{threads:<2} l={n:<6} d={d:<4}"), 20, || {
+            i = (i + 17) % n;
+            mt.compute_row(i, &mut out);
+            out[0]
+        });
+        report(&r, n, d);
+
+        // shrink-aware gathered rows at a quarter of the columns: kernel
+        // work (and GFLOP/s denominator) scales with the active prefix
+        let cols: Vec<usize> = (0..n / 4).map(|p| (p * 3) % n).collect();
+        let mut short = vec![0f32; cols.len()];
+        let mut i = 0usize;
+        let r = bench(&format!("nat-¼   l={n:<6} d={d:<4}"), 20, || {
+            i = (i + 17) % n;
+            native.compute_cols(i, &cols, &mut short);
+            short[0]
+        });
+        println!(
+            "{}   {:>8.1} rows/s  {:>7.2} GFLOP/s (quarter rows)",
+            r.line(),
+            1.0 / r.mean_s,
+            flops(n / 4, d) / r.mean_s / 1e9
+        );
+
         bench_pjrt(&engine, &ds, n, d, &mut out);
         println!();
     }

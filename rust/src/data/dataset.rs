@@ -81,26 +81,30 @@ impl Dataset {
         (pos, self.labels.len() - pos)
     }
 
+    /// New dataset with rows gathered by `idx` (`idx[i]` = source row).
+    /// One up-front reservation and a bulk row copy per index — the
+    /// already-validated source rows need no per-row shape/label asserts,
+    /// which matters on the CV-split path where every fold of every grid
+    /// point re-materializes its subsets.
+    fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.dim);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &src in idx {
+            features.extend_from_slice(self.row(src));
+            labels.push(self.labels[src]);
+        }
+        Dataset { dim: self.dim, features, labels }
+    }
+
     /// New dataset with rows reordered by `perm` (perm[i] = source index).
     pub fn permuted(&self, perm: &[usize]) -> Dataset {
         assert_eq!(perm.len(), self.len());
-        let mut out = Dataset::with_dim(self.dim);
-        out.features.reserve(self.features.len());
-        out.labels.reserve(self.labels.len());
-        for &src in perm {
-            out.features.extend_from_slice(self.row(src));
-            out.labels.push(self.labels[src]);
-        }
-        out
+        self.gather(perm)
     }
 
     /// Subset by index list (used by CV splits).
     pub fn subset(&self, idx: &[usize]) -> Dataset {
-        let mut out = Dataset::with_dim(self.dim);
-        for &i in idx {
-            out.push(self.row(i), self.labels[i]);
-        }
-        out
+        self.gather(idx)
     }
 
     /// Squared Euclidean distance between rows i and j (f64 accumulate).
@@ -159,6 +163,24 @@ mod tests {
         let s = d.subset(&[0, 2]);
         assert_eq!(s.len(), 2);
         assert_eq!(s.row(1), d.row(2));
+    }
+
+    #[test]
+    fn subset_of_permuted_equals_composed_indexing() {
+        let d = Dataset::new(
+            2,
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0],
+            vec![1, -1, 1, -1, 1],
+        );
+        let perm = [4usize, 2, 0, 3, 1];
+        let idx = [1usize, 1, 4, 0];
+        let two_step = d.permuted(&perm).subset(&idx);
+        let composed: Vec<usize> = idx.iter().map(|&i| perm[i]).collect();
+        let direct = d.subset(&composed);
+        assert_eq!(two_step, direct);
+        // repeats are allowed in subsets
+        assert_eq!(two_step.row(0), two_step.row(1));
+        assert_eq!(two_step.row(0), d.row(2));
     }
 
     #[test]

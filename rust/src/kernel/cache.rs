@@ -5,8 +5,18 @@
 //! Rows are stored in individually boxed allocations, so map growth or
 //! eviction of *other* rows never moves a row's storage — this is what
 //! makes the pinned two-row borrow in [`super::matrix::Gram`] sound.
-//! Eviction scans for the least-recently-used entry; the scan is O(#rows)
-//! but only runs on a miss, which already paid an O(ℓ·d) row computation.
+//!
+//! Recency is tracked by an intrusive doubly-linked LRU list over a slab
+//! of entries: a hit is an O(1) unlink/relink and eviction pops from the
+//! tail in O(1) (plus at most one skip for the pinned row) — no O(#rows)
+//! victim scan, which matters now that short post-shrink rows let
+//! thousands of rows share the budget.
+//!
+//! Rows have *variable* length: with shrinking the active-set prefix gets
+//! shorter over a solve, rows computed later are shorter, and the byte
+//! accounting automatically lets more of them stay resident. A resident
+//! row satisfies a request for any length up to its own; a too-short row
+//! is dropped and recomputed at the requested length.
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -31,7 +41,8 @@ impl Hasher for IdentityHasher {
     }
 }
 
-type RowMap = HashMap<usize, Entry, BuildHasherDefault<IdentityHasher>>;
+/// Maps row index → slot in the entry slab.
+type SlotMap = HashMap<usize, usize, BuildHasherDefault<IdentityHasher>>;
 
 /// Cache statistics (exposed in experiment reports and the cache bench).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -52,66 +63,190 @@ impl CacheStats {
     }
 }
 
-struct Entry {
+/// Sentinel for "no slot" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+struct Node {
+    key: usize,
     row: Box<[f32]>,
-    last_use: u64,
+    /// Next-more-recent slot (NIL at the head).
+    prev: usize,
+    /// Next-less-recent slot (NIL at the tail).
+    next: usize,
 }
 
-/// LRU cache of kernel rows keyed by example index.
+/// LRU cache of kernel rows keyed by example index (position, once the
+/// Gram view is permuted).
 pub struct RowCache {
-    entries: RowMap,
-    capacity_rows: usize,
-    clock: u64,
+    map: SlotMap,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Most recently used slot.
+    head: usize,
+    /// Least recently used slot (eviction candidate).
+    tail: usize,
+    /// Byte budget over the resident rows (`Σ row_len · 4`).
+    budget_bytes: usize,
+    /// Hard cap on resident rows (row-count constructor; `usize::MAX`
+    /// for byte-budgeted caches).
+    max_rows: usize,
+    /// Budget expressed in full-length rows at construction time (for
+    /// reports; actual residency is byte-accurate).
+    nominal_rows: usize,
+    bytes_used: usize,
     stats: CacheStats,
 }
 
 impl RowCache {
-    /// Budgeted by bytes; each row costs `row_len * 4` bytes. At least two
-    /// rows are always allowed (the solver needs the working-set pair).
+    /// Budgeted by bytes; `row_len` is the full-length row used to report
+    /// the nominal row capacity. At least two rows are always allowed
+    /// (the solver needs the working-set pair resident together).
     pub fn with_budget(bytes: usize, row_len: usize) -> RowCache {
-        let capacity_rows = (bytes / (row_len.max(1) * std::mem::size_of::<f32>())).max(2);
-        RowCache::with_capacity_rows(capacity_rows)
+        let nominal = (bytes / (row_len.max(1) * std::mem::size_of::<f32>())).max(2);
+        RowCache::build(bytes, usize::MAX, nominal)
     }
 
-    /// Capacity in rows (>= 2 enforced).
+    /// Capacity in rows (>= 2 enforced), irrespective of row length.
     pub fn with_capacity_rows(capacity_rows: usize) -> RowCache {
+        let cap = capacity_rows.max(2);
+        RowCache::build(usize::MAX, cap, cap)
+    }
+
+    fn build(budget_bytes: usize, max_rows: usize, nominal_rows: usize) -> RowCache {
         RowCache {
-            entries: RowMap::default(),
-            capacity_rows: capacity_rows.max(2),
-            clock: 0,
+            map: SlotMap::default(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            budget_bytes,
+            max_rows,
+            nominal_rows,
+            bytes_used: 0,
             stats: CacheStats::default(),
         }
     }
 
     pub fn capacity_rows(&self) -> usize {
-        self.capacity_rows
+        self.nominal_rows
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.map.is_empty()
     }
 
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Bytes currently held by resident rows.
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
     /// Is row `i` resident (does not touch LRU order)?
     pub fn contains(&self, i: usize) -> bool {
-        self.entries.contains_key(&i)
+        self.map.contains_key(&i)
     }
 
     /// Raw pointer + length of a resident row. Used by `Gram::rows_pair`
     /// to hand out two row borrows; the storage is a stable boxed slice.
     pub(crate) fn row_ptr(&self, i: usize) -> Option<(*const f32, usize)> {
-        self.entries.get(&i).map(|e| (e.row.as_ptr(), e.row.len()))
+        self.map
+            .get(&i)
+            .map(|&s| (self.nodes[s].row.as_ptr(), self.nodes[s].row.len()))
     }
 
-    /// Get row `i`, computing it via `compute` on a miss. `pinned` is never
-    /// evicted by this call (pass the other working-set row).
+    // ---- intrusive LRU list primitives (all O(1)) ----
+
+    fn detach(&mut self, slot: usize) {
+        let (p, n) = (self.nodes[slot].prev, self.nodes[slot].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.nodes[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.nodes[n].prev = p;
+        }
+    }
+
+    fn push_front(&mut self, slot: usize) {
+        self.nodes[slot].prev = NIL;
+        self.nodes[slot].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if self.head != slot {
+            self.detach(slot);
+            self.push_front(slot);
+        }
+    }
+
+    fn remove_entry(&mut self, key: usize, slot: usize) {
+        self.detach(slot);
+        self.map.remove(&key);
+        self.bytes_used -= self.nodes[slot].row.len() * std::mem::size_of::<f32>();
+        self.nodes[slot].row = Vec::new().into_boxed_slice();
+        self.free.push(slot);
+    }
+
+    fn insert_entry(&mut self, key: usize, row: Box<[f32]>) -> usize {
+        self.bytes_used += row.len() * std::mem::size_of::<f32>();
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s] = Node { key, row, prev: NIL, next: NIL };
+                s
+            }
+            None => {
+                self.nodes.push(Node { key, row, prev: NIL, next: NIL });
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, slot);
+        self.push_front(slot);
+        slot
+    }
+
+    /// Evict LRU entries (skipping `pinned`) until `new_bytes` more fit
+    /// inside both budgets. The working pair is sacred: eviction never
+    /// drops residency below one row, so pinned + incoming always fit.
+    fn make_room(&mut self, new_bytes: usize, pinned: Option<usize>) {
+        while self.map.len() >= 2
+            && (self.bytes_used + new_bytes > self.budget_bytes
+                || self.map.len() + 1 > self.max_rows)
+        {
+            let mut victim = self.tail;
+            while victim != NIL && Some(self.nodes[victim].key) == pinned {
+                victim = self.nodes[victim].prev;
+            }
+            if victim == NIL {
+                break; // everything left is pinned
+            }
+            let key = self.nodes[victim].key;
+            self.remove_entry(key, victim);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Get row `i` with at least `row_len` valid entries, computing it via
+    /// `compute` on a miss (the computed row has exactly `row_len`
+    /// entries). A resident row longer than `row_len` is a hit; a shorter
+    /// one is dropped and recomputed. `pinned` is never evicted by this
+    /// call (pass the other working-set row).
     pub fn get_or_compute(
         &mut self,
         i: usize,
@@ -119,46 +254,102 @@ impl RowCache {
         pinned: Option<usize>,
         compute: impl FnOnce(&mut [f32]),
     ) -> &[f32] {
-        self.clock += 1;
-        let clock = self.clock;
-        // Hit path: single hash lookup; the raw-parts round trip works
-        // around the NLL borrow limitation (the storage is a boxed slice,
-        // stable for the lifetime of the entry).
-        if let Some(e) = self.entries.get_mut(&i) {
-            self.stats.hits += 1;
-            e.last_use = clock;
-            let (p, l) = (e.row.as_ptr(), e.row.len());
-            return unsafe { std::slice::from_raw_parts(p, l) };
-        }
-        self.stats.misses += 1;
-        if self.entries.len() >= self.capacity_rows {
-            self.evict_one(pinned, i);
-        }
-        let mut row = vec![0f32; row_len].into_boxed_slice();
-        compute(&mut row);
-        self.entries.insert(i, Entry { row, last_use: clock });
-        &self.entries[&i].row
-    }
-
-    /// Drop the least-recently-used entry, skipping `pinned` and `incoming`.
-    fn evict_one(&mut self, pinned: Option<usize>, incoming: usize) {
-        let victim = self
-            .entries
-            .iter()
-            .filter(|(&k, _)| Some(k) != pinned && k != incoming)
-            .min_by_key(|(_, e)| e.last_use)
-            .map(|(&k, _)| k);
-        if let Some(k) = victim {
-            self.entries.remove(&k);
+        if let Some(&slot) = self.map.get(&i) {
+            if self.nodes[slot].row.len() >= row_len {
+                self.stats.hits += 1;
+                self.touch(slot);
+                // Raw-parts round trip works around the NLL borrow
+                // limitation; the storage is a stable boxed slice.
+                let (p, l) = (self.nodes[slot].row.as_ptr(), self.nodes[slot].row.len());
+                return unsafe { std::slice::from_raw_parts(p, l) };
+            }
+            // Resident but shorter than the current active view (the
+            // active set grew back after an unshrink): recompute.
+            self.remove_entry(i, slot);
             self.stats.evictions += 1;
         }
+        self.stats.misses += 1;
+        self.make_room(row_len * std::mem::size_of::<f32>(), pinned);
+        let mut row = vec![0f32; row_len].into_boxed_slice();
+        compute(&mut row);
+        let slot = self.insert_entry(i, row);
+        let (p, l) = (self.nodes[slot].row.as_ptr(), self.nodes[slot].row.len());
+        unsafe { std::slice::from_raw_parts(p, l) }
     }
 
-    /// Invalidate everything (dataset changed). Also resets the LRU clock
-    /// and the statistics so hit-rate reports never bleed across datasets.
+    /// Mirror one position swap of the owning Gram view (see
+    /// [`RowCache::apply_swaps`]).
+    pub fn swap_index(&mut self, p: usize, q: usize) {
+        if p != q {
+            self.apply_swaps(&[(p, q)]);
+        }
+    }
+
+    /// Mirror a whole batch of position swaps (one shrink event's
+    /// compaction): re-key the rows stored *for* swapped positions and
+    /// swap the two columns of every pair inside every resident row. A
+    /// row long enough to hold only one of a pair's two columns cannot be
+    /// patched and is dropped (counted as an eviction).
+    ///
+    /// Cost: one traversal of the resident slots with all column swaps
+    /// applied per row in a tight inner loop — O(resident · swaps) column
+    /// writes but only O(resident + swaps) map/slot walks, instead of one
+    /// full traversal per swap. Only runs on shrink events, never in the
+    /// per-iteration hot path.
+    pub fn apply_swaps(&mut self, swaps: &[(usize, usize)]) {
+        if swaps.is_empty() {
+            return;
+        }
+        let mut dropped: Vec<usize> = Vec::new();
+        for (&key, &slot) in self.map.iter() {
+            let row = &mut self.nodes[slot].row;
+            let len = row.len();
+            for &(a, b) in swaps {
+                if a == b {
+                    continue;
+                }
+                let (lo, hi) = (a.min(b), a.max(b));
+                if len > hi {
+                    row.swap(lo, hi);
+                } else if len > lo {
+                    dropped.push(key);
+                    break;
+                }
+            }
+        }
+        for key in dropped {
+            let slot = self.map[&key];
+            self.remove_entry(key, slot);
+            self.stats.evictions += 1;
+        }
+        // Re-key sequentially — key movement composes exactly like the
+        // column swaps above (O(1) hash ops per swap, not per row).
+        for &(a, b) in swaps {
+            if a == b {
+                continue;
+            }
+            let sa = self.map.remove(&a);
+            let sb = self.map.remove(&b);
+            if let Some(s) = sa {
+                self.nodes[s].key = b;
+                self.map.insert(b, s);
+            }
+            if let Some(s) = sb {
+                self.nodes[s].key = a;
+                self.map.insert(a, s);
+            }
+        }
+    }
+
+    /// Invalidate everything (dataset changed). Also resets the
+    /// statistics so reports never bleed across datasets.
     pub fn clear(&mut self) {
-        self.entries.clear();
-        self.clock = 0;
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.bytes_used = 0;
         self.stats = CacheStats::default();
     }
 }
@@ -220,6 +411,106 @@ mod tests {
     }
 
     #[test]
+    fn byte_accounting_lets_short_rows_pack_denser() {
+        // Budget for exactly 4 full-length rows of 100 entries.
+        let mut c = RowCache::with_budget(4 * 100 * 4, 100);
+        for i in 0..4 {
+            c.get_or_compute(i, 100, None, fill(i as f32));
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.bytes_used(), 4 * 100 * 4);
+        // Half-length rows: twice as many fit in the same budget.
+        let mut c = RowCache::with_budget(4 * 100 * 4, 100);
+        for i in 0..8 {
+            c.get_or_compute(i, 50, None, fill(i as f32));
+        }
+        assert_eq!(c.len(), 8, "short rows must share the freed budget");
+        assert_eq!(c.stats().evictions, 0);
+        // one more full-length row now evicts several short ones
+        c.get_or_compute(100, 100, None, fill(0.5));
+        assert!(c.stats().evictions >= 2);
+        assert!(c.bytes_used() <= 4 * 100 * 4);
+    }
+
+    #[test]
+    fn too_short_resident_row_is_recomputed_at_new_length() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(7, 10, None, fill(1.0));
+        // request a longer view of the same row (post-unshrink)
+        let r = c.get_or_compute(7, 20, None, fill(2.0));
+        assert_eq!(r.len(), 20);
+        assert!(r.iter().all(|&x| x == 2.0));
+        // and a shorter request is served by the resident longer row
+        let r = c.get_or_compute(7, 5, None, fill(9.0));
+        assert_eq!(r.len(), 20, "longer resident row satisfies short reads");
+        assert!(r.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn swap_index_rekeys_rows_and_swaps_columns() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(0, 6, None, |r| {
+            for (j, x) in r.iter_mut().enumerate() {
+                *x = j as f32;
+            }
+        });
+        c.get_or_compute(1, 6, None, fill(10.0));
+        c.swap_index(0, 5);
+        // the row stored for index 0 is now keyed 5 …
+        assert!(!c.contains(0));
+        assert!(c.contains(5));
+        // … and its columns 0 and 5 are swapped, in every resident row
+        let r = c.get_or_compute(5, 6, None, |_| panic!("must be a hit"));
+        assert_eq!(r[0], 5.0);
+        assert_eq!(r[5], 0.0);
+        assert_eq!(r[3], 3.0);
+    }
+
+    #[test]
+    fn batched_swaps_match_sequential_swaps() {
+        // apply_swaps([a, b, c]) must equal swap_index(a); swap_index(b);
+        // swap_index(c) — same data, same keys, same drops.
+        let fill_idx = |r: &mut [f32]| {
+            for (j, x) in r.iter_mut().enumerate() {
+                *x = j as f32;
+            }
+        };
+        let swaps = [(0usize, 5usize), (1, 4), (0, 3), (2, 5)];
+        let mut batched = RowCache::with_capacity_rows(4);
+        let mut sequential = RowCache::with_capacity_rows(4);
+        for c in [&mut batched, &mut sequential] {
+            c.get_or_compute(0, 8, None, fill_idx);
+            c.get_or_compute(2, 8, None, fill_idx);
+            c.get_or_compute(5, 3, None, fill_idx); // too short: dropped
+        }
+        batched.apply_swaps(&swaps);
+        for &(p, q) in &swaps {
+            sequential.swap_index(p, q);
+        }
+        for key in 0..8 {
+            assert_eq!(batched.contains(key), sequential.contains(key), "key {key}");
+            if batched.contains(key) {
+                let a = batched.get_or_compute(key, 1, None, |_| panic!("hit"));
+                let a = a.to_vec();
+                let b = sequential.get_or_compute(key, 1, None, |_| panic!("hit"));
+                assert_eq!(a, b.to_vec(), "row data for key {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn swap_index_drops_rows_too_short_to_patch() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(0, 4, None, fill(0.0)); // holds columns 0..4
+        c.get_or_compute(1, 8, None, fill(1.0)); // holds columns 0..8
+        // swapping columns 2 and 6: row 0 has column 2 but not 6 → dropped,
+        // row 1 has both → patched in place.
+        c.swap_index(2, 6);
+        assert!(!c.contains(0));
+        assert!(c.contains(1));
+    }
+
+    #[test]
     fn behaves_like_oracle_map_under_random_access() {
         use crate::util::prng::Pcg;
         // Property: a cached read always returns exactly what the oracle
@@ -240,12 +531,55 @@ mod tests {
     }
 
     #[test]
+    fn intrusive_list_matches_naive_lru_model() {
+        use crate::util::prng::Pcg;
+        // The intrusive list must make exactly the decisions of a naive
+        // recency-ordered Vec model: same hits, same residents, same
+        // victims, over a long random access trace with pinning.
+        let mut c = RowCache::with_capacity_rows(6);
+        let mut model: Vec<usize> = Vec::new(); // most recent first
+        let mut rng = Pcg::new(42);
+        for step in 0..5000 {
+            let i = rng.below(24);
+            let pinned = if rng.bernoulli(0.3) {
+                model.first().copied().filter(|&p| p != i)
+            } else {
+                None
+            };
+            let model_hit = model.contains(&i);
+            if model_hit {
+                model.retain(|&k| k != i);
+            } else if model.len() >= 6 {
+                // evict least-recent not pinned
+                let victim = model
+                    .iter()
+                    .rev()
+                    .find(|&&k| Some(k) != pinned)
+                    .copied()
+                    .unwrap();
+                model.retain(|&k| k != victim);
+            }
+            model.insert(0, i);
+
+            let hits_before = c.stats().hits;
+            c.get_or_compute(i, 4, pinned, fill(i as f32));
+            let was_hit = c.stats().hits > hits_before;
+            assert_eq!(was_hit, model_hit, "step {step}: hit divergence on {i}");
+            for &k in &model {
+                assert!(c.contains(k), "step {step}: model row {k} missing");
+            }
+            assert_eq!(c.len(), model.len(), "step {step}");
+        }
+    }
+
+    #[test]
     fn clear_empties() {
         let mut c = RowCache::with_capacity_rows(4);
         c.get_or_compute(0, 4, None, fill(0.0));
         c.clear();
         assert!(c.is_empty());
         assert!(!c.contains(0));
+        assert_eq!(c.bytes_used(), 0);
     }
 
     #[test]

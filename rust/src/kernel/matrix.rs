@@ -7,6 +7,18 @@
 //!   * `entry(i, j)` — single kernel values for the planning-ahead 4×4
 //!     minor (served from resident rows when possible),
 //!   * `diag(i)` — `K_ii` for the second-order gain denominator.
+//!
+//! # The permuted active-prefix view
+//!
+//! The solver keeps its active variables as a contiguous prefix
+//! `[0, active_len)` of a permutation of the examples (LIBSVM's
+//! `swap_index` scheme). The Gram mirrors that view: all indices taken by
+//! `row`/`rows_pair`/`entry`/`diag` are *positions*; [`Gram::swap_index`]
+//! keeps the diagonal, the permutation and every cached row in lockstep
+//! with the solver's swaps, and [`Gram::set_active_len`] shortens the
+//! rows produced from then on to exactly the active prefix. Shorter rows
+//! cost proportionally less to compute *and* let proportionally more
+//! rows share the byte-accurate cache budget.
 
 use super::cache::{CacheStats, RowCache};
 
@@ -18,6 +30,31 @@ pub trait RowComputer: Send {
     fn len(&self) -> usize;
     /// Compute the full row `K[i, :]` into `out` (`out.len() == len()`).
     fn compute_row(&self, i: usize, out: &mut [f32]);
+    /// Compute the gathered row `out[p] = K[i, cols[p]]`
+    /// (`cols.len() == out.len()`). This is the shrink-aware hot path:
+    /// with an active prefix of the permutation as `cols`, only the
+    /// surviving columns are evaluated. The default computes the full row
+    /// and gathers — correct for any computer; native computers override
+    /// it with a direct tiled loop.
+    fn compute_cols(&self, i: usize, cols: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), out.len());
+        let mut full = vec![0f32; self.len()];
+        self.compute_row(i, &mut full);
+        for (o, &c) in out.iter_mut().zip(cols) {
+            *o = full[c];
+        }
+    }
+    /// Kernel entries actually *evaluated* by [`RowComputer::compute_cols`]
+    /// for a `requested`-column gather — the honest input to the
+    /// kernel-work meter. The default mirrors the default `compute_cols`
+    /// (a full row is computed, then gathered), so computers that do not
+    /// implement a direct gather never credit shrinking with savings they
+    /// do not deliver; direct-gather computers override this to
+    /// `requested`.
+    fn cols_cost(&self, requested: usize) -> usize {
+        let _ = requested;
+        self.len()
+    }
     /// `K[i, i]`.
     fn diag(&self, i: usize) -> f64;
     /// Single entry `K[i, j]` (direct evaluation; no caching).
@@ -28,8 +65,23 @@ pub trait RowComputer: Send {
 pub struct Gram {
     computer: Box<dyn RowComputer>,
     cache: RowCache,
+    /// `K[perm[p], perm[p]]` — permuted alongside the view.
     diag: Vec<f64>,
+    /// Position → original example index.
+    perm: Vec<usize>,
+    /// Original example index → position.
+    pos: Vec<usize>,
+    /// Rows computed from now on cover positions `[0, active_len)`.
+    active_len: usize,
     len: usize,
+    /// Has any swap been applied since construction / `reset_view`?
+    permuted: bool,
+    /// Kernel entries evaluated by cached-row computations, at the
+    /// computer's honest [`RowComputer::cols_cost`].
+    row_entries: u64,
+    /// Kernel entries evaluated outside cached rows (`entry` fallbacks,
+    /// reconstruction tails).
+    single_entries: u64,
 }
 
 impl Gram {
@@ -43,7 +95,13 @@ impl Gram {
             cache: RowCache::with_budget(cache_bytes, len),
             computer,
             diag,
+            perm: (0..len).collect(),
+            pos: (0..len).collect(),
+            active_len: len,
             len,
+            permuted: false,
+            row_entries: 0,
+            single_entries: 0,
         }
     }
 
@@ -56,17 +114,115 @@ impl Gram {
         self.len == 0
     }
 
-    /// `K[i, i]` (precomputed).
+    /// `K[perm[p], perm[p]]` (precomputed, permuted view).
     #[inline]
-    pub fn diag(&self, i: usize) -> f64 {
-        self.diag[i]
+    pub fn diag(&self, p: usize) -> f64 {
+        self.diag[p]
     }
 
-    /// Borrow row `i` (computing/caching on miss).
-    pub fn row(&mut self, i: usize) -> &[f32] {
+    /// Current active-prefix length (rows computed from now on cover
+    /// exactly this many positions).
+    pub fn active_len(&self) -> usize {
+        self.active_len
+    }
+
+    /// Shorten (or, after an unshrink, restore) the row view.
+    pub fn set_active_len(&mut self, len: usize) {
+        assert!(len <= self.len, "active length exceeds problem size");
+        self.active_len = len;
+    }
+
+    /// Is the view the identity permutation over the full problem?
+    pub fn is_identity_view(&self) -> bool {
+        !self.permuted
+    }
+
+    /// Restore the identity view for a fresh solve on this Gram. The
+    /// cache is always dropped — rows of a permuted view have their
+    /// columns in the old order, and even identity-view residency would
+    /// change which `entry` reads are served at f32 row precision, making
+    /// back-to-back solves diverge from a cold one. Resetting keeps every
+    /// solve bit-deterministic and the work counters per-solve.
+    pub fn reset_view(&mut self) {
+        self.active_len = self.len;
+        self.cache.clear();
+        self.row_entries = 0;
+        self.single_entries = 0;
+        if !self.permuted {
+            return;
+        }
+        // Un-permute the diagonal by gathering the values we already hold
+        // (diag[p] is K[perm[p], perm[p]]) — no kernel evaluations.
+        let mut diag = vec![0.0f64; self.len];
+        for p in 0..self.len {
+            diag[self.perm[p]] = self.diag[p];
+        }
+        self.diag = diag;
+        for i in 0..self.len {
+            self.perm[i] = i;
+            self.pos[i] = i;
+        }
+        self.permuted = false;
+    }
+
+    /// Swap two positions of the view: diagonal, permutation and every
+    /// cached row stay consistent. Must be mirrored by the owner of the
+    /// solver state (see `solver::shrink`).
+    pub fn swap_index(&mut self, p: usize, q: usize) {
+        if p != q {
+            self.apply_swaps(&[(p, q)]);
+        }
+    }
+
+    /// Apply one shrink event's whole swap batch. Diagonal/permutation
+    /// bookkeeping is O(1) per pair; the resident rows are patched in a
+    /// *single* cache traversal (`RowCache::apply_swaps`) instead of one
+    /// traversal per swap — compacting k variables costs
+    /// O(resident · k) column writes but only one slot walk.
+    pub fn apply_swaps(&mut self, swaps: &[(usize, usize)]) {
+        let mut any = false;
+        for &(p, q) in swaps {
+            if p == q {
+                continue;
+            }
+            any = true;
+            self.diag.swap(p, q);
+            let (a, b) = (self.perm[p], self.perm[q]);
+            self.perm.swap(p, q);
+            self.pos[a] = q;
+            self.pos[b] = p;
+        }
+        if !any {
+            return;
+        }
+        self.cache.apply_swaps(swaps);
+        self.permuted = true;
+    }
+
+    /// Ensure row `p` is resident covering the active prefix, metering
+    /// the computer's honest evaluation cost on a miss.
+    fn fetch(&mut self, p: usize, pinned: Option<usize>) {
+        debug_assert!(p < self.len);
+        let need = self.active_len;
+        let misses_before = self.cache.stats().misses;
         let computer = &self.computer;
-        self.cache
-            .get_or_compute(i, self.len, None, |out| computer.compute_row(i, out))
+        let cols = &self.perm[..need];
+        let orig = self.perm[p];
+        self.cache.get_or_compute(p, need, pinned, |out| {
+            computer.compute_cols(orig, cols, out)
+        });
+        if self.cache.stats().misses > misses_before {
+            self.row_entries += self.computer.cols_cost(need) as u64;
+        }
+    }
+
+    /// Borrow row `p` (computing/caching on miss). The returned slice
+    /// covers at least the active prefix; it may be longer if a wider row
+    /// is resident.
+    pub fn row(&mut self, p: usize) -> &[f32] {
+        self.fetch(p, None);
+        let (ptr, l) = self.cache.row_ptr(p).expect("row resident after fetch");
+        unsafe { std::slice::from_raw_parts(ptr, l) }
     }
 
     /// Borrow rows `i` and `j` simultaneously (`i != j`).
@@ -77,14 +233,8 @@ impl Gram {
     /// further cache mutation can occur while they live.
     pub fn rows_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
         assert_ne!(i, j, "rows_pair needs two distinct rows");
-        {
-            let computer = &self.computer;
-            self.cache
-                .get_or_compute(i, self.len, Some(j), |out| computer.compute_row(i, out));
-            let computer = &self.computer;
-            self.cache
-                .get_or_compute(j, self.len, Some(i), |out| computer.compute_row(j, out));
-        }
+        self.fetch(i, Some(j));
+        self.fetch(j, Some(i));
         let (pi, li) = self.cache.row_ptr(i).expect("row i resident");
         let (pj, lj) = self.cache.row_ptr(j).expect("row j resident");
         unsafe {
@@ -95,40 +245,74 @@ impl Gram {
         }
     }
 
-    /// Single entry `K[i, j]`, served from a resident row when possible.
-    pub fn entry(&mut self, i: usize, j: usize) -> f64 {
-        if i == j {
-            return self.diag[i];
+    /// Single entry `K[perm[p], perm[q]]`, served from a resident row
+    /// when possible.
+    pub fn entry(&mut self, p: usize, q: usize) -> f64 {
+        if p == q {
+            return self.diag[p];
         }
-        if let Some((p, l)) = self.cache.row_ptr(i) {
-            debug_assert!(j < l);
-            return unsafe { *p.add(j) } as f64;
+        if let Some((ptr, l)) = self.cache.row_ptr(p) {
+            if q < l {
+                return unsafe { *ptr.add(q) } as f64;
+            }
         }
-        if let Some((p, l)) = self.cache.row_ptr(j) {
-            debug_assert!(i < l);
-            return unsafe { *p.add(i) } as f64;
+        if let Some((ptr, l)) = self.cache.row_ptr(q) {
+            if p < l {
+                return unsafe { *ptr.add(p) } as f64;
+            }
         }
-        self.computer.entry(i, j)
+        self.single_entries += 1;
+        self.computer.entry(self.perm[p], self.perm[q])
     }
 
-    /// Is row `i` currently cached? (used by WSS cache-affinity heuristics)
-    pub fn is_cached(&self, i: usize) -> bool {
-        self.cache.contains(i)
+    /// Is row `p` currently cached? (used by WSS cache-affinity heuristics)
+    pub fn is_cached(&self, p: usize) -> bool {
+        self.cache.contains(p)
     }
 
-    /// Raw borrow of a *resident* row for callers that must keep reading
-    /// the matrix (diag/entry) while holding the row. Safety contract as
-    /// in [`Gram::rows_pair`]: row storage is individually boxed and only
-    /// `get_or_compute` (i.e. [`Gram::row`]/[`Gram::rows_pair`]) can evict;
-    /// `diag`/`entry` never mutate the cache.
-    pub(crate) fn resident_row(&self, i: usize) -> Option<&'static [f32]> {
+    /// Borrow of a *resident* row for callers that must keep reading the
+    /// immutable matrix surface (`diag`) while holding the row. The
+    /// borrow is tied to `&self`, so the compiler enforces the no-evict
+    /// contract: nothing that can evict (`row`/`rows_pair`/`entry`, all
+    /// `&mut self`) is callable while it lives. Current call sites:
+    /// `solver::wss::select_second_order_with_i` (WSS scan over row `i`)
+    /// and `Gram::tail_into` (gradient reconstruction fast path).
+    pub(crate) fn resident_row(&self, p: usize) -> Option<&[f32]> {
         self.cache
-            .row_ptr(i)
-            .map(|(p, l)| unsafe { std::slice::from_raw_parts(p, l) })
+            .row_ptr(p)
+            .map(|(ptr, l)| unsafe { std::slice::from_raw_parts(ptr, l) })
+    }
+
+    /// Fill `buf[k] = K[perm[p], perm[start + k]]` for the tail positions
+    /// `[start, len)` — gradient reconstruction after an unshrink. Served
+    /// from a resident full row when one exists; otherwise computed
+    /// directly *without* touching the cache (tail entries are read once,
+    /// caching them would only evict useful prefix rows).
+    pub fn tail_into(&mut self, p: usize, start: usize, buf: &mut [f32]) {
+        assert_eq!(buf.len(), self.len - start, "tail buffer length mismatch");
+        if let Some(row) = self.resident_row(p) {
+            if row.len() >= self.len {
+                buf.copy_from_slice(&row[start..self.len]);
+                return;
+            }
+        }
+        self.computer
+            .compute_cols(self.perm[p], &self.perm[start..], buf);
+        self.single_entries += self.computer.cols_cost(buf.len()) as u64;
     }
 
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Total kernel entries evaluated so far: the precomputed diagonal,
+    /// every cached-row computation (at the computer's honest
+    /// [`RowComputer::cols_cost`] — shrunk length for direct-gather
+    /// computers, full length for gather-by-full-row ones) and every
+    /// single-entry fallback. This is the solver's kernel-work meter —
+    /// the quantity shrinking is supposed to reduce.
+    pub fn kernel_entries(&self) -> u64 {
+        self.len as u64 + self.row_entries + self.single_entries
     }
 
     /// Direct access to the underlying computer (runtime benches).
@@ -269,6 +453,101 @@ mod tests {
                 assert!((row[j] as f64 - dense.at(i, j)).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn swapped_view_reads_the_permuted_matrix() {
+        let mut g = gram(10, 1 << 20);
+        // snapshot in the identity view
+        let full: Vec<Vec<f32>> = (0..10).map(|i| g.row(i).to_vec()).collect();
+        g.swap_index(2, 7);
+        assert!(!g.is_identity_view());
+        // diag follows the permutation
+        assert!((g.diag(2) - full[7][7] as f64).abs() < 1e-12);
+        // cached rows were patched: row at position 2 is old row 7 with
+        // columns 2 and 7 swapped
+        let r2 = g.row(2).to_vec();
+        assert_eq!(r2[2], full[7][7]);
+        assert_eq!(r2[7], full[7][2]);
+        assert_eq!(r2[4], full[7][4]);
+        // entry goes through the permutation too
+        assert!((g.entry(2, 3) - full[7][3] as f64).abs() < 1e-12);
+        // a double swap restores the original view
+        g.swap_index(2, 7);
+        let r2 = g.row(2).to_vec();
+        assert_eq!(r2, full[2]);
+    }
+
+    #[test]
+    fn shrunk_view_produces_short_rows_and_unshrink_recovers() {
+        let mut g = gram(12, 1 << 20);
+        let full: Vec<Vec<f32>> = (0..12).map(|i| g.row(i).to_vec()).collect();
+        g.set_active_len(5);
+        // uncached row is computed at prefix length only
+        let entries_before = g.kernel_entries();
+        let r = {
+            let mut g2 = gram(12, 1 << 20);
+            g2.set_active_len(5);
+            let r = g2.row(3).to_vec();
+            assert_eq!(r.len(), 5);
+            r
+        };
+        assert_eq!(&r[..], &full[3][..5]);
+        // cached full rows still satisfy the short view without recompute
+        let r3 = g.row(3);
+        assert_eq!(r3.len(), 12);
+        assert_eq!(g.kernel_entries(), entries_before);
+        // growing the view back forces longer rows again
+        g.set_active_len(12);
+        assert_eq!(g.row(6).len(), 12);
+    }
+
+    #[test]
+    fn tail_into_matches_full_row() {
+        let mut g = gram(14, 1 << 20);
+        let full = g.row(9).to_vec();
+        // resident full row: served by copy
+        let mut buf = vec![0f32; 14 - 6];
+        g.tail_into(9, 6, &mut buf);
+        assert_eq!(&buf[..], &full[6..]);
+        // non-resident row: computed directly, bypassing the cache
+        let mut g2 = gram(14, 2 * 14 * 4);
+        let mut buf2 = vec![0f32; 14 - 6];
+        g2.tail_into(9, 6, &mut buf2);
+        assert_eq!(&buf2[..], &full[6..]);
+        assert!(!g2.is_cached(9), "tail reads must not pollute the cache");
+    }
+
+    #[test]
+    fn reset_view_restores_identity() {
+        let mut g = gram(8, 1 << 20);
+        let full: Vec<Vec<f32>> = (0..8).map(|i| g.row(i).to_vec()).collect();
+        g.swap_index(1, 6);
+        g.set_active_len(3);
+        g.reset_view();
+        assert!(g.is_identity_view());
+        assert_eq!(g.active_len(), 8);
+        for i in 0..8 {
+            assert_eq!(g.row(i).to_vec(), full[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn kernel_entries_meter_counts_rows_and_singles() {
+        let mut g = gram(10, 1 << 20);
+        let base = g.kernel_entries();
+        assert_eq!(base, 10, "diagonal precompute");
+        g.row(0);
+        assert_eq!(g.kernel_entries(), base + 10);
+        g.entry(0, 5); // served from the resident row: free
+        assert_eq!(g.kernel_entries(), base + 10);
+        g.entry(7, 8); // neither row resident: one direct evaluation
+        assert_eq!(g.kernel_entries(), base + 11);
+        g.set_active_len(4);
+        let mut g2 = gram(10, 1 << 20);
+        g2.set_active_len(4);
+        g2.row(1);
+        assert_eq!(g2.kernel_entries(), 10 + 4, "short rows cost their length");
     }
 
     #[test]

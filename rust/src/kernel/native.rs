@@ -9,28 +9,171 @@ use crate::data::dataset::Dataset;
 use super::function::KernelFunction;
 use super::matrix::RowComputer;
 
+/// Minimum multiply-add work (entries × feature dim) before a row is
+/// split across threads. Spawning and joining scoped workers costs tens
+/// of microseconds, so low-dimensional or post-shrink short rows — whose
+/// whole computation is cheaper than a spawn — always run inline; the
+/// gate is on estimated flops, not entry count.
+const PAR_MIN_MADDS: usize = 1 << 16;
+
 /// Computes kernel rows directly from the dataset.
 ///
 /// For RBF the row loop uses the `‖a‖²+‖b‖²−2a·b` decomposition with
 /// precomputed squared norms, turning each row into one pass of dot
-/// products — the same structure the Pallas kernel uses on the MXU.
+/// products — the same structure the Pallas kernel uses on the MXU. The
+/// pass is tiled four output entries wide so `x_i` is loaded once per
+/// four dot products; each entry still accumulates its own f64 dot in
+/// index order, so tiled results are bit-identical to the scalar loop.
+///
+/// With `threads > 1` (see [`NativeRowComputer::with_threads`]) long rows
+/// are chunked across a `std::thread::scope` — entries are computed by
+/// exactly the same arithmetic regardless of the chunking, so threaded
+/// rows are bit-identical to single-threaded ones.
 pub struct NativeRowComputer {
     data: Arc<Dataset>,
     kernel: KernelFunction,
     /// Precomputed ‖x_i‖² (used by the RBF fast path).
     sqnorms: Vec<f64>,
+    /// Worker threads for row computation (1 = inline).
+    threads: usize,
 }
 
 impl NativeRowComputer {
     pub fn new(data: Arc<Dataset>, kernel: KernelFunction) -> NativeRowComputer {
+        NativeRowComputer::with_threads(data, kernel, 1)
+    }
+
+    /// Like [`NativeRowComputer::new`] with `threads` row-computation
+    /// workers (`0`/`1` = compute inline on the calling thread).
+    pub fn with_threads(
+        data: Arc<Dataset>,
+        kernel: KernelFunction,
+        threads: usize,
+    ) -> NativeRowComputer {
         let sqnorms = (0..data.len())
             .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
             .collect();
-        NativeRowComputer { data, kernel, sqnorms }
+        NativeRowComputer { data, kernel, sqnorms, threads: threads.max(1) }
     }
 
     pub fn kernel(&self) -> KernelFunction {
         self.kernel
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Fill `out` with kernel values of example `i` against the columns
+    /// named by `col(p)` (identity for full rows, the active permutation
+    /// for gathered rows).
+    fn fill<C: Fn(usize) -> usize + Sync>(&self, i: usize, col: C, out: &mut [f32]) {
+        let xi = self.data.row(i);
+        let m = out.len();
+        let work = m * self.data.dim().max(1);
+        let workers = if self.threads > 1 && work >= PAR_MIN_MADDS {
+            self.threads.min(m)
+        } else {
+            1
+        };
+        match self.kernel {
+            KernelFunction::Rbf { gamma } => {
+                let ni = self.sqnorms[i];
+                if workers <= 1 {
+                    rbf_tile(xi, &self.sqnorms, &self.data, ni, gamma, &col, 0, out);
+                } else {
+                    let chunk = m.div_ceil(workers);
+                    let data = &*self.data;
+                    let sqnorms = &self.sqnorms;
+                    let col = &col;
+                    std::thread::scope(|s| {
+                        for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                            let base = c * chunk;
+                            s.spawn(move || {
+                                rbf_tile(
+                                    xi, sqnorms, data, ni, gamma, col, base, out_chunk,
+                                );
+                            });
+                        }
+                    });
+                }
+            }
+            k => {
+                if workers <= 1 {
+                    for (p, o) in out.iter_mut().enumerate() {
+                        *o = k.eval(xi, self.data.row(col(p))) as f32;
+                    }
+                } else {
+                    let chunk = m.div_ceil(workers);
+                    let data = &*self.data;
+                    let col = &col;
+                    std::thread::scope(|s| {
+                        for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                            let base = c * chunk;
+                            s.spawn(move || {
+                                for (p, o) in out_chunk.iter_mut().enumerate() {
+                                    *o = k.eval(xi, data.row(col(base + p))) as f32;
+                                }
+                            });
+                        }
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The tiled RBF row loop: four output entries per step, `x_i` streamed
+/// once per tile. Every entry's dot product accumulates in feature order
+/// into its own f64, exactly like the scalar remainder loop — results
+/// are bit-identical to a one-entry-at-a-time evaluation (asserted by
+/// test), so tiling is purely a memory-locality optimization.
+#[allow(clippy::too_many_arguments)]
+fn rbf_tile<C: Fn(usize) -> usize>(
+    xi: &[f32],
+    sqnorms: &[f64],
+    data: &Dataset,
+    ni: f64,
+    gamma: f64,
+    col: &C,
+    base: usize,
+    out: &mut [f32],
+) {
+    let d = data.dim();
+    let m = out.len();
+    let mut p = 0usize;
+    while p + 4 <= m {
+        let j0 = col(base + p);
+        let j1 = col(base + p + 1);
+        let j2 = col(base + p + 2);
+        let j3 = col(base + p + 3);
+        let x0 = data.row(j0);
+        let x1 = data.row(j1);
+        let x2 = data.row(j2);
+        let x3 = data.row(j3);
+        let (mut d0, mut d1, mut d2, mut d3) = (0f64, 0f64, 0f64, 0f64);
+        for k in 0..d {
+            let v = xi[k] as f64;
+            d0 += v * x0[k] as f64;
+            d1 += v * x1[k] as f64;
+            d2 += v * x2[k] as f64;
+            d3 += v * x3[k] as f64;
+        }
+        out[p] = (-gamma * (ni + sqnorms[j0] - 2.0 * d0).max(0.0)).exp() as f32;
+        out[p + 1] = (-gamma * (ni + sqnorms[j1] - 2.0 * d1).max(0.0)).exp() as f32;
+        out[p + 2] = (-gamma * (ni + sqnorms[j2] - 2.0 * d2).max(0.0)).exp() as f32;
+        out[p + 3] = (-gamma * (ni + sqnorms[j3] - 2.0 * d3).max(0.0)).exp() as f32;
+        p += 4;
+    }
+    while p < m {
+        let j = col(base + p);
+        let xj = data.row(j);
+        let mut dot = 0f64;
+        for k in 0..d {
+            dot += xi[k] as f64 * xj[k] as f64;
+        }
+        out[p] = (-gamma * (ni + sqnorms[j] - 2.0 * dot).max(0.0)).exp() as f32;
+        p += 1;
     }
 }
 
@@ -41,28 +184,16 @@ impl RowComputer for NativeRowComputer {
 
     fn compute_row(&self, i: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.data.len());
-        let xi = self.data.row(i);
-        match self.kernel {
-            KernelFunction::Rbf { gamma } => {
-                let ni = self.sqnorms[i];
-                let d = self.data.dim();
-                for (j, o) in out.iter_mut().enumerate() {
-                    let xj = self.data.row(j);
-                    // dot product: the compiler auto-vectorizes this loop
-                    let mut dot = 0.0f64;
-                    for k in 0..d {
-                        dot += xi[k] as f64 * xj[k] as f64;
-                    }
-                    let d2 = (ni + self.sqnorms[j] - 2.0 * dot).max(0.0);
-                    *o = (-gamma * d2).exp() as f32;
-                }
-            }
-            k => {
-                for (j, o) in out.iter_mut().enumerate() {
-                    *o = k.eval(xi, self.data.row(j)) as f32;
-                }
-            }
-        }
+        self.fill(i, |p| p, out);
+    }
+
+    fn compute_cols(&self, i: usize, cols: &[usize], out: &mut [f32]) {
+        assert_eq!(cols.len(), out.len());
+        self.fill(i, |p| cols[p], out);
+    }
+
+    fn cols_cost(&self, requested: usize) -> usize {
+        requested // direct gather: only the requested columns are evaluated
     }
 
     fn diag(&self, i: usize) -> f64 {
@@ -90,6 +221,23 @@ mod tests {
         Arc::new(ds)
     }
 
+    /// The scalar reference: one entry at a time, f64 accumulation in
+    /// feature order — the contract the tiled loop must match bit for bit.
+    fn scalar_rbf_row(ds: &Dataset, gamma: f64, i: usize, out: &mut [f32]) {
+        let sq: Vec<f64> = (0..ds.len())
+            .map(|r| ds.row(r).iter().map(|&v| v as f64 * v as f64).sum())
+            .collect();
+        let xi = ds.row(i);
+        for (j, o) in out.iter_mut().enumerate() {
+            let xj = ds.row(j);
+            let mut dot = 0f64;
+            for k in 0..ds.dim() {
+                dot += xi[k] as f64 * xj[k] as f64;
+            }
+            *o = (-gamma * (sq[i] + sq[j] - 2.0 * dot).max(0.0)).exp() as f32;
+        }
+    }
+
     #[test]
     fn rbf_row_matches_pairwise_eval() {
         let ds = random_ds(50, 7, 1);
@@ -102,6 +250,74 @@ mod tests {
             assert!((row[j] - direct).abs() < 1e-6, "j={j}: {} vs {direct}", row[j]);
         }
         assert!((row[17] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tiled_rows_bit_identical_to_scalar_reference() {
+        // sizes exercising every remainder lane of the 4-wide tile
+        for (n, d, seed) in [(64, 5, 1u64), (65, 3, 2), (66, 11, 3), (67, 1, 4)] {
+            let ds = random_ds(n, d, seed);
+            let gamma = 0.7;
+            let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma });
+            let mut tiled = vec![0f32; n];
+            let mut scalar = vec![0f32; n];
+            for i in [0usize, n / 2, n - 1] {
+                nc.compute_row(i, &mut tiled);
+                scalar_rbf_row(&ds, gamma, i, &mut scalar);
+                for j in 0..n {
+                    assert_eq!(
+                        tiled[j].to_bits(),
+                        scalar[j].to_bits(),
+                        "n={n} i={i} j={j}: tiled {} vs scalar {}",
+                        tiled[j],
+                        scalar[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gathered_cols_bit_identical_to_full_row() {
+        let ds = random_ds(80, 6, 9);
+        let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 1.3 });
+        let mut full = vec![0f32; 80];
+        nc.compute_row(13, &mut full);
+        // an arbitrary permutation prefix with repeats and reversals
+        let cols: Vec<usize> = (0..80).rev().step_by(3).chain([13, 13, 0, 79]).collect();
+        let mut gathered = vec![0f32; cols.len()];
+        nc.compute_cols(13, &cols, &mut gathered);
+        for (p, &c) in cols.iter().enumerate() {
+            assert_eq!(gathered[p].to_bits(), full[c].to_bits(), "col {c}");
+        }
+    }
+
+    #[test]
+    fn threaded_rows_bit_identical_to_single_threaded() {
+        // ℓ·d = 700·100 clears the work-based threading threshold
+        let ds = random_ds(700, 100, 11);
+        let k = KernelFunction::Rbf { gamma: 0.4 };
+        let one = NativeRowComputer::new(ds.clone(), k);
+        let four = NativeRowComputer::with_threads(ds.clone(), k, 4);
+        assert_eq!(four.threads(), 4);
+        assert!(700 * 100 >= super::PAR_MIN_MADDS, "test must exercise the threaded path");
+        let mut a = vec![0f32; 700];
+        let mut b = vec![0f32; 700];
+        for i in [0usize, 350, 699] {
+            one.compute_row(i, &mut a);
+            four.compute_row(i, &mut b);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "row {i} diverges across thread counts"
+            );
+        }
+        // gathered rows too
+        let cols: Vec<usize> = (0..700).rev().collect();
+        let mut ga = vec![0f32; 700];
+        let mut gb = vec![0f32; 700];
+        one.compute_cols(3, &cols, &mut ga);
+        four.compute_cols(3, &cols, &mut gb);
+        assert!(ga.iter().zip(&gb).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]
@@ -128,6 +344,13 @@ mod tests {
                 .map(|(&a, &b)| a as f64 * b as f64)
                 .sum();
             assert!((row[j] as f64 - want).abs() < 1e-5);
+        }
+        // gathered linear rows go through the generic path
+        let cols = [9usize, 0, 4];
+        let mut g = vec![0f32; 3];
+        nc.compute_cols(0, &cols, &mut g);
+        for (p, &c) in cols.iter().enumerate() {
+            assert_eq!(g[p].to_bits(), row[c].to_bits());
         }
     }
 

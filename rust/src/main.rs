@@ -40,6 +40,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("predict") => cmd_predict(args),
         Some("gridsearch") => cmd_gridsearch(args),
+        Some("bench") => cmd_bench(args),
         Some("experiment") => cmd_experiment(args),
         Some("info") => cmd_info(),
         _ => {
@@ -60,9 +61,16 @@ fn print_usage() {
            train      --dataset NAME | --libsvm FILE [--c C --gamma G]\n\
                       [--solver smo|pasmo|pasmo-multi:N] [--eps E]\n\
                       [--w-pos W --w-neg W] (per-class cost multipliers)\n\
+                      [--threads N] (kernel-row worker threads)\n\
                       [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
            predict    --model model.json --libsvm FILE\n\
            gridsearch --dataset NAME [--len N] [--folds K] [--cold]\n\
+                      [--threads N]\n\
+           bench      [--datasets a,b,c] [--len N] [--seed S] [--threads N]\n\
+                      [--cache-rows R] [--shrink-interval I]\n\
+                      [--out BENCH_solver.json]\n\
+                      solver perf baseline: wall time, iterations, kernel\n\
+                      entries, cache hit rate — shrink on vs off\n\
            experiment table1|table2|fig2|fig3|fig4|wss|heuristic|all\n\
                       [--perms N --scale S --max-len N --full\n\
                        --datasets a,b,c --eps E --seed S --out report.md]\n\
@@ -132,6 +140,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let trainer = Trainer::rbf(c, gamma)
         .solver(solver_choice(args)?)
         .stop_eps(args.get_parse_or("eps", 1e-3))
+        .threads(args.get_parse_or("threads", 1usize))
         .class_weights(
             args.get_parse_or("w-pos", 1.0),
             args.get_parse_or("w-neg", 1.0),
@@ -213,7 +222,7 @@ fn cmd_gridsearch(args: &Args) -> Result<()> {
     let (ds, spec) = load_dataset(args)?;
     let folds = args.get_parse_or("folds", 4usize);
     let warm = if args.flag("cold") { WarmStart::Cold } else { WarmStart::Seeded };
-    let base = Trainer::rbf(1.0, 1.0);
+    let base = Trainer::rbf(1.0, 1.0).threads(args.get_parse_or("threads", 1usize));
     let res = grid_search(
         &ds,
         &log_grid(10.0, -1, 3),
@@ -240,6 +249,108 @@ fn cmd_gridsearch(args: &Args) -> Result<()> {
         res.total_iterations,
         if warm == WarmStart::Seeded { "warm-started; --cold to compare" } else { "cold" },
     );
+    Ok(())
+}
+
+/// Solver perf baseline (`pasmo bench`): wall time, iterations, kernel
+/// entries and cache hit rate per (dataset × solver × shrinking) cell,
+/// printed as a table and optionally written as `BENCH_solver.json` so
+/// future changes have a trajectory to compare against. The cache is
+/// deliberately sized in rows (default ℓ/4) so the kernel/cache layer is
+/// actually exercised — with LIBSVM's 100 MB default the tiny synthetic
+/// problems fit entirely and every run degenerates to one pass.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use pasmo::solver::SolverConfig;
+    use pasmo::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let len = args.get_parse_or("len", 600usize);
+    let seed = args.get_parse_or("seed", 42u64);
+    let threads = args.get_parse_or("threads", 1usize);
+    let cache_rows = args.get_parse_or("cache-rows", (len / 4).max(8));
+    let cache_bytes = cache_rows * len * std::mem::size_of::<f32>();
+    // 0 = the solver default min(ℓ, 1000); tiny-scale runs pass a smaller
+    // period so shrinking engages within their short solves.
+    let shrink_interval = args.get_parse_or("shrink-interval", 0usize);
+    let names: Vec<String> = match args.get("datasets") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => vec!["chess-board-1000".into(), "banana".into()],
+    };
+
+    println!("==== pasmo bench (solver baseline) ====");
+    println!(
+        "ℓ={len} seed={seed} threads={threads} cache={cache_rows} rows\n"
+    );
+    println!(
+        "{:<18} {:<6} {:>7} {:>9} {:>9} {:>14} {:>9}",
+        "dataset", "solver", "shrink", "time", "iters", "kernel-entries", "hit-rate"
+    );
+
+    let mut runs: Vec<Json> = Vec::new();
+    for name in &names {
+        let spec = suite::find(name)
+            .with_context(|| format!("unknown dataset {name:?} (see `pasmo datasets`)"))?;
+        let ds = Arc::new(spec.generate(len, seed));
+        for (solver_name, choice) in
+            [("smo", SolverChoice::Smo), ("pasmo", SolverChoice::Pasmo)]
+        {
+            for shrinking in [true, false] {
+                let trainer = Trainer::rbf(spec.c, spec.gamma)
+                    .solver(choice)
+                    .solver_config(SolverConfig {
+                        shrinking,
+                        threads,
+                        cache_bytes,
+                        shrink_interval,
+                        ..Default::default()
+                    });
+                let res = trainer.train(&ds).result;
+                println!(
+                    "{:<18} {:<6} {:>7} {:>8.3}s {:>9} {:>14} {:>8.1}%",
+                    name,
+                    solver_name,
+                    if shrinking { "on" } else { "off" },
+                    res.wall_time_s,
+                    res.iterations,
+                    res.kernel_entries,
+                    100.0 * res.cache_stats.hit_rate()
+                );
+                let mut obj = BTreeMap::new();
+                obj.insert("dataset".into(), Json::Str(name.clone()));
+                obj.insert("solver".into(), Json::Str(solver_name.into()));
+                obj.insert("shrinking".into(), Json::Bool(shrinking));
+                obj.insert("converged".into(), Json::Bool(res.converged));
+                obj.insert("wall_time_s".into(), Json::Num(res.wall_time_s));
+                obj.insert("iterations".into(), Json::Num(res.iterations as f64));
+                obj.insert("kernel_entries".into(), Json::Num(res.kernel_entries as f64));
+                obj.insert("objective".into(), Json::Num(res.objective));
+                obj.insert("sv".into(), Json::Num(res.sv as f64));
+                obj.insert("cache_hits".into(), Json::Num(res.cache_stats.hits as f64));
+                obj.insert("cache_misses".into(), Json::Num(res.cache_stats.misses as f64));
+                obj.insert(
+                    "cache_evictions".into(),
+                    Json::Num(res.cache_stats.evictions as f64),
+                );
+                obj.insert("cache_hit_rate".into(), Json::Num(res.cache_stats.hit_rate()));
+                runs.push(Json::Obj(obj));
+            }
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("solver".into()));
+    doc.insert("len".into(), Json::Num(len as f64));
+    doc.insert("seed".into(), Json::Num(seed as f64));
+    doc.insert("threads".into(), Json::Num(threads as f64));
+    doc.insert("cache_rows".into(), Json::Num(cache_rows as f64));
+    doc.insert("shrink_interval".into(), Json::Num(shrink_interval as f64));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let doc = Json::Obj(doc);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, doc.to_string())
+            .with_context(|| format!("write bench report {out}"))?;
+        println!("\nreport written to {out}");
+    }
     Ok(())
 }
 

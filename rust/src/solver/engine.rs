@@ -37,8 +37,11 @@ pub trait Engine {
 
     /// Solve a problem description. This default is the crate's only
     /// [`QpProblem::lower`] call: warm-start repair and gradient
-    /// reconstruction happen here for every task and engine alike.
+    /// reconstruction happen here for every task and engine alike. The
+    /// Gram view is reset first, so a Gram left permuted/shrunk by an
+    /// earlier solve is safe to reuse.
     fn solve(&self, problem: &QpProblem, gram: &mut Gram) -> SolveResult {
+        gram.reset_view();
         let state = problem.lower(gram);
         self.solve_state(state, gram)
     }
@@ -109,6 +112,26 @@ mod tests {
         assert_eq!(zero.objective, one.objective);
         assert_eq!(zero.iterations, pa.iterations);
         assert_eq!(zero.objective, pa.objective);
+    }
+
+    #[test]
+    fn gram_reuse_across_solves_resets_the_view() {
+        // A Gram left permuted/shrunk by one solve must behave exactly
+        // like a fresh Gram on the next solve (Engine::solve resets the
+        // view): deterministic bit-identical trajectories.
+        let ds = random_problem(90, 21);
+        let problem = QpProblem::classification(ds.labels(), 50.0);
+        let engine = EngineConfig::new(SolverChoice::Pasmo, SolverConfig::default()).build();
+        let mut shared = make_gram(&ds, 1.0, 1 << 22);
+        let first = engine.solve(&problem, &mut shared);
+        let second = engine.solve(&problem, &mut shared);
+        let mut fresh = make_gram(&ds, 1.0, 1 << 22);
+        let clean = engine.solve(&problem, &mut fresh);
+        assert!(first.converged && second.converged && clean.converged);
+        assert_eq!(first.alpha, clean.alpha);
+        assert_eq!(second.iterations, clean.iterations);
+        assert_eq!(second.objective, clean.objective);
+        assert_eq!(second.alpha, clean.alpha);
     }
 
     #[test]

@@ -101,6 +101,9 @@ impl PasmoSolver {
         let eta = self.config.eta;
         let n_cand = self.config.planning_candidates.max(1);
         // Recent working sets, most recent first: history[0] = B^(t−1).
+        // Stored in *original* coordinates — shrink swaps move positions
+        // between iterations, originals are stable — and mapped back to
+        // active positions (dropping shrunk pairs) at each use.
         let mut history: VecDeque<(usize, usize)> = VecDeque::new();
         // p = "previous iteration performed a SMO step" (Algorithm 5).
         let mut p = true;
@@ -113,15 +116,30 @@ impl PasmoSolver {
             if let Some(done) = core.check_stop_and_shrink() {
                 break done;
             }
+            // Map an original-coordinate pair to current active positions.
+            let to_pos = |st: &SolverState, (a, b): (usize, usize)| {
+                let (pa, pb) = (st.pos[a], st.pos[b]);
+                (pa < st.active_len && pb < st.active_len).then_some((pa, pb))
+            };
             // ---- Working-set selection (Algorithm 3 / Algorithm 5) ----
             let extras: Vec<(usize, usize)> = if self.config.ablation_wss_only {
                 // §7.2 ablation: always offer B^(t−2) under ĝ, never plan.
-                history.iter().skip(1).take(1).copied().collect()
+                history
+                    .iter()
+                    .skip(1)
+                    .take(1)
+                    .filter_map(|&pair| to_pos(&core.state, pair))
+                    .collect()
             } else if p {
                 Vec::new()
             } else {
                 // Offer the set(s) assumed during planning: B^(t−2) … .
-                history.iter().skip(1).take(n_cand).copied().collect()
+                history
+                    .iter()
+                    .skip(1)
+                    .take(n_cand)
+                    .filter_map(|&pair| to_pos(&core.state, pair))
+                    .collect()
             };
             let kind = if self.config.ablation_wss_only
                 || p
@@ -142,7 +160,10 @@ impl PasmoSolver {
             // ---- Update step (Algorithm 4) ----
             let plan = if prev_free_smo && !self.config.ablation_wss_only {
                 let mut best: Option<Plan> = None;
-                for &b2 in history.iter().take(n_cand) {
+                for k in 0..history.len().min(n_cand) {
+                    let Some(b2) = to_pos(&core.state, history[k]) else {
+                        continue; // candidate set was shrunk away
+                    };
                     if let Some(pl) = Self::plan_with(&mut core, sel, &sp, b2) {
                         if best.map(|b| pl.gain > b.gain).unwrap_or(true) {
                             best = Some(pl);
@@ -181,7 +202,7 @@ impl PasmoSolver {
                 let it = core.iterations;
                 core.telemetry.record_objective(it, || obj);
             }
-            history.push_front((sel.i, sel.j));
+            history.push_front((core.state.perm[sel.i], core.state.perm[sel.j]));
             history.truncate(n_cand + 2);
         };
         core.finish(converged, started)

@@ -127,6 +127,10 @@ impl QpProblem {
     /// place where warm starts are made feasible and the initial
     /// gradient is built. Kernel evaluations: one Gram row per non-zero
     /// warm-start coefficient, none for a cold start.
+    ///
+    /// Expects the Gram in its identity view (`Engine::solve` resets it);
+    /// the produced state starts fully active with the identity
+    /// permutation, and the two views then shrink in lockstep.
     pub fn lower(&self, gram: &mut Gram) -> SolverState {
         let n = self.len();
         assert_eq!(n, gram.len(), "problem/gram size mismatch");

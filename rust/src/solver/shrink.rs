@@ -3,79 +3,123 @@
 //! Variables confidently bounded in the final solution are removed from
 //! the active set, so working-set selection, the stopping check and the
 //! gradient update only touch the (usually small) interesting subset.
-//! Before declaring convergence the gradient is reconstructed for the
-//! shrunk indices and the full problem re-checked.
+//! Removal is *prefix compaction*: a shrunk variable is swapped behind
+//! the active prefix `[0, active_len)` (LIBSVM's `swap_index`), with the
+//! Gram view swapped in lockstep — so kernel rows computed afterwards
+//! cover only the surviving prefix and cost proportionally less, both to
+//! evaluate and in cache budget. Before declaring convergence the
+//! gradient is reconstructed for the shrunk tail and the full problem
+//! re-checked.
 
 use crate::kernel::matrix::Gram;
 
 use super::state::SolverState;
 
-/// Shrink bounded, confidently non-violating variables out of the active
-/// set, given the current violating-pair extremes `m = max G over I_up`,
-/// `big_m = min G over I_down`. Returns the number of newly shrunk indices.
-///
-/// Criteria (a variable is shrunk only if it can serve *neither* as the
-/// `i` nor the `j` of any violating pair):
-/// * `α_n = U_n` (not in `I_up`): only usable as `j`; useless if `G_n ≥ m`.
-/// * `α_n = L_n` (not in `I_down`): only usable as `i`; useless if `G_n ≤ big_m`.
+/// Can variable at position `p` serve as neither the `i` nor the `j` of
+/// any violating pair, given the extremes `m = max G over I_up`,
+/// `big_m = min G over I_down`?
+/// * `α_p = U_p` (not in `I_up`): only usable as `j`; useless if `G_p ≥ m`.
+/// * `α_p = L_p` (not in `I_down`): only usable as `i`; useless if `G_p ≤ big_m`.
 /// * free variables are never shrunk.
-pub fn shrink(state: &mut SolverState, m: f64, big_m: f64) -> usize {
+fn removable(state: &SolverState, p: usize, m: f64, big_m: f64) -> bool {
+    let at_upper = !state.in_up(p);
+    let at_lower = !state.in_down(p);
+    if at_upper && at_lower {
+        // fixed variable (C degenerate); always removable
+        true
+    } else if at_upper {
+        state.grad[p] >= m
+    } else if at_lower {
+        state.grad[p] <= big_m
+    } else {
+        false
+    }
+}
+
+/// Shrink bounded, confidently non-violating variables out of the active
+/// prefix, given the current violating-pair extremes. The state and the
+/// Gram view are compacted together with a two-pointer partition (the
+/// keepers end up in `[0, keepers)`, in-order relative to each other on
+/// the left side of the partition). At least two variables always stay
+/// active. Returns the number of newly shrunk indices.
+pub fn shrink(state: &mut SolverState, gram: &mut Gram, m: f64, big_m: f64) -> usize {
     if !m.is_finite() || !big_m.is_finite() {
         return 0;
     }
-    let mut removed = 0usize;
-    let mut idx = 0usize;
-    while idx < state.active.len() {
-        let n = state.active[idx];
-        let at_upper = !state.in_up(n);
-        let at_lower = !state.in_down(n);
-        let useless = if at_upper && at_lower {
-            // fixed variable (C degenerate); always removable
-            true
-        } else if at_upper {
-            state.grad[n] >= m
-        } else if at_lower {
-            state.grad[n] <= big_m
-        } else {
-            false
-        };
-        if useless && state.active.len() > 2 {
-            state.active.swap_remove(idx);
-            state.is_active[n] = false;
-            removed += 1;
-        } else {
-            idx += 1;
+    let al = state.active_len;
+    let mut keep: Vec<bool> = (0..al).map(|p| !removable(state, p, m, big_m)).collect();
+    let mut keepers = keep.iter().filter(|&&k| k).count();
+    if keepers < 2 {
+        // promote the lowest-position shrink candidates back to active
+        for k in keep.iter_mut() {
+            if keepers >= 2 {
+                break;
+            }
+            if !*k {
+                *k = true;
+                keepers += 1;
+            }
         }
     }
-    removed
+    if keepers == al {
+        return 0;
+    }
+    let mut lo = 0usize;
+    let mut hi = al;
+    let mut swaps: Vec<(usize, usize)> = Vec::new();
+    while lo < hi {
+        if keep[lo] {
+            lo += 1;
+            continue;
+        }
+        hi -= 1;
+        if !keep[hi] {
+            continue; // already on the correct (shrunk) side
+        }
+        state.swap(lo, hi);
+        swaps.push((lo, hi));
+        keep.swap(lo, hi);
+        lo += 1;
+    }
+    debug_assert_eq!(lo, keepers);
+    // Mirror the whole compaction into the Gram in one batch (single
+    // cache traversal instead of one per swap).
+    gram.apply_swaps(&swaps);
+    state.active_len = keepers;
+    gram.set_active_len(keepers);
+    al - keepers
 }
 
 /// Reactivate all variables and reconstruct their gradients:
-/// `G_n = y_n − Σ_j α_j K_{jn}` for previously inactive `n`. The sum runs
-/// over support vectors only; their rows come through the Gram cache.
+/// `G_p = y_p − Σ_q α_q K_{qp}` for tail positions `p ≥ active_len`. The
+/// sum runs over support vectors only; each contributes one *tail-only*
+/// gathered row (`Gram::tail_into`) — resident full rows are reused for
+/// free, and freshly computed tails never evict useful prefix rows.
 pub fn unshrink_and_reconstruct(state: &mut SolverState, gram: &mut Gram) {
-    let n_total = state.len();
-    if state.active.len() == n_total {
+    let n = state.len();
+    let start = state.active_len;
+    if start == n {
+        gram.set_active_len(n);
         return;
     }
-    // Start inactive gradients from y_n.
-    let inactive: Vec<usize> = (0..n_total).filter(|&n| !state.is_active[n]).collect();
-    for &n in &inactive {
-        state.grad[n] = state.y[n];
+    // Start tail gradients from y_p.
+    for p in start..n {
+        state.grad[p] = state.y[p];
     }
-    // Subtract α_j K_jn contributions from every support vector j.
-    for j in 0..n_total {
-        let aj = state.alpha[j];
-        if aj == 0.0 {
+    // Subtract α_q K_{qp} contributions from every support vector q.
+    let mut tail = vec![0f32; n - start];
+    for q in 0..n {
+        let aq = state.alpha[q];
+        if aq == 0.0 {
             continue;
         }
-        let row = gram.row(j);
-        for &n in &inactive {
-            state.grad[n] -= aj * row[n] as f64;
+        gram.tail_into(q, start, &mut tail);
+        for (p, &k) in (start..n).zip(tail.iter()) {
+            state.grad[p] -= aq * k as f64;
         }
     }
-    state.active = (0..n_total).collect();
-    state.is_active.iter_mut().for_each(|b| *b = true);
+    state.active_len = n;
+    gram.set_active_len(n);
 }
 
 #[cfg(test)]
@@ -104,44 +148,79 @@ mod tests {
         (state, Gram::new(Box::new(nc), 1 << 20), ds)
     }
 
+    /// Original indices currently in the active prefix.
+    fn active_originals(state: &SolverState) -> Vec<usize> {
+        state.perm[..state.active_len].to_vec()
+    }
+
     #[test]
     fn shrinks_only_confident_bounded_variables() {
-        let (mut state, _, _) = problem(6, 1);
+        let (mut state, mut gram, _) = problem(6, 1);
         // construct: index 0 at upper bound with G >= m, index 1 free,
         // index 2 at lower bound with G <= M.
         state.alpha[0] = state.upper[0];
         state.grad[0] = 5.0;
         state.alpha[2] = state.lower[2];
         state.grad[2] = -5.0;
-        let before = state.active.len();
-        let removed = shrink(&mut state, 1.0, -1.0);
+        let before = state.active_len;
+        let removed = shrink(&mut state, &mut gram, 1.0, -1.0);
         assert_eq!(removed, 2);
-        assert_eq!(state.active.len(), before - 2);
-        assert!(!state.is_active[0]);
-        assert!(!state.is_active[2]);
-        assert!(state.is_active[1]);
+        assert_eq!(state.active_len, before - 2);
+        assert_eq!(gram.active_len(), state.active_len);
+        let actives = active_originals(&state);
+        assert!(!actives.contains(&0));
+        assert!(!actives.contains(&2));
+        assert!(actives.contains(&1));
     }
 
     #[test]
     fn free_variables_never_shrunk() {
-        let (mut state, _, _) = problem(4, 2);
+        let (mut state, mut gram, _) = problem(4, 2);
         // index 1 has y=-1 => bounds [-1, 0]; put it strictly inside.
         state.alpha[1] = 0.5 * (state.lower[1] + state.upper[1]) - 0.25;
         assert!(state.in_up(1) && state.in_down(1), "test setup: must be free");
         state.grad[1] = 100.0;
-        shrink(&mut state, 0.0, 0.0);
-        assert!(state.is_active[1]);
+        shrink(&mut state, &mut gram, 0.0, 0.0);
+        assert!(active_originals(&state).contains(&1));
     }
 
     #[test]
     fn keeps_at_least_two_active() {
-        let (mut state, _, _) = problem(4, 3);
+        let (mut state, mut gram, _) = problem(4, 3);
         for n in 0..4 {
             state.alpha[n] = state.upper[n]; // everyone at a bound
             state.grad[n] = 10.0;
         }
-        shrink(&mut state, 0.0, 0.0);
-        assert!(state.active.len() >= 2);
+        shrink(&mut state, &mut gram, 0.0, 0.0);
+        assert!(state.active_len >= 2);
+    }
+
+    #[test]
+    fn shrunk_state_and_gram_stay_aligned() {
+        // After compaction, position (p, q) of the Gram must evaluate the
+        // kernel of exactly the original pair the state's permutation
+        // names — the lockstep-swap contract between shrink and the view.
+        let (mut state, mut gram, ds) = problem(10, 7);
+        for p in 0..10 {
+            if p % 3 == 0 {
+                state.alpha[p] = state.upper[p];
+                state.grad[p] = 5.0;
+            }
+        }
+        let removed = shrink(&mut state, &mut gram, 1.0, -1.0);
+        assert!(removed > 0, "test setup: something must shrink");
+        assert!(state.active_len >= 2);
+        let k = KernelFunction::Rbf { gamma: 0.7 };
+        for p in 0..state.len() {
+            for q in 0..state.len() {
+                let want = k.eval(ds.row(state.perm[p]), ds.row(state.perm[q]));
+                let got = gram.entry(p, q);
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "({p},{q}): gram {got} vs kernel {want}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -155,7 +234,7 @@ mod tests {
             state.alpha[i] = a;
             state.alpha[j] = -a;
         }
-        // set the true gradient everywhere
+        // set the true gradient everywhere (positional == original here)
         for n in 0..12 {
             let mut s = state.y[n];
             for j in 0..12 {
@@ -163,23 +242,34 @@ mod tests {
             }
             state.grad[n] = s;
         }
-        // shrink half of the indices arbitrarily, corrupt their gradients
-        for n in 0..6 {
-            state.is_active[n] = false;
-            state.grad[n] = f64::NAN;
+        // shrink half of the positions arbitrarily (mirrored swaps), then
+        // corrupt the inactive gradients
+        let mut al = 12;
+        for _ in 0..6 {
+            al -= 1;
+            let victim = al % 3; // deactivate some low positions via swaps
+            state.swap(victim, al);
+            gram.swap_index(victim, al);
         }
-        state.active = (6..12).collect();
+        state.active_len = al;
+        gram.set_active_len(al);
+        for p in al..12 {
+            state.grad[p] = f64::NAN;
+        }
         unshrink_and_reconstruct(&mut state, &mut gram);
-        assert_eq!(state.active.len(), 12);
-        for n in 0..12 {
-            let mut want = state.y[n];
-            for j in 0..12 {
-                want -= state.alpha[j] * gram.entry(j, n);
+        assert_eq!(state.active_len, 12);
+        assert_eq!(gram.active_len(), 12);
+        for p in 0..12 {
+            let mut want = state.y[p];
+            for q in 0..12 {
+                want -= state.alpha[q] * gram.entry(q, p);
             }
+            // f32 row evaluation vs f64 single-entry evaluation differ at
+            // float precision per term; 1e-5 covers the 12-term sum.
             assert!(
-                (state.grad[n] - want).abs() < 1e-6,
-                "n={n}: {} vs {want}",
-                state.grad[n]
+                (state.grad[p] - want).abs() < 1e-5,
+                "p={p}: {} vs {want}",
+                state.grad[p]
             );
         }
         let _ = ds;

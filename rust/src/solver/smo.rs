@@ -54,6 +54,10 @@ pub struct SolverConfig {
     /// (offer `B^(t−2)`, ĝ scoring) but never take a planning step —
     /// isolates how much of the speed-up comes from WSS vs planning.
     pub ablation_wss_only: bool,
+    /// Worker threads for kernel-row computation (0/1 = single-threaded).
+    /// Threaded rows are bit-identical to single-threaded ones, so the
+    /// solve path — and `SolveResult::alpha` — does not depend on this.
+    pub threads: usize,
 }
 
 impl Default for SolverConfig {
@@ -70,6 +74,7 @@ impl Default for SolverConfig {
             eta: 0.9,
             planning_candidates: 1,
             ablation_wss_only: false,
+            threads: 1,
         }
     }
 }
@@ -77,6 +82,8 @@ impl Default for SolverConfig {
 /// Outcome of a solve.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
+    /// Dual variables in *original* coordinates (shrink permutations are
+    /// undone before the result leaves the solver).
     pub alpha: Vec<f64>,
     pub bias: f64,
     pub iterations: u64,
@@ -90,6 +97,10 @@ pub struct SolveResult {
     pub wall_time_s: f64,
     pub telemetry: Telemetry,
     pub cache_stats: CacheStats,
+    /// Kernel entries evaluated by the Gram over this solve (diagonal +
+    /// row computations at their actual, possibly shrunk, lengths +
+    /// single-entry fallbacks) — the quantity shrinking reduces.
+    pub kernel_entries: u64,
 }
 
 /// Shared per-iteration machinery for SMO-family solvers.
@@ -104,12 +115,14 @@ pub(crate) struct SolverCore<'a> {
     /// Set once the gradient has been reconstructed near convergence;
     /// further shrinking is disabled to guarantee termination.
     unshrunk: bool,
-    /// `argmax{Gᵢ | i ∈ I_up}` from the most recent stopping scan —
-    /// handed to WSS so the hot loop runs one O(active) scan, not two.
+    /// `argmax{Gᵢ | i ∈ I_up}` from the most recent stopping scan, in
+    /// *original* coordinates (shrink swaps move positions, originals are
+    /// stable) — handed to WSS so the hot loop runs one O(active) scan,
+    /// not two.
     hint_argmax_up: Option<usize>,
-    /// Stopping quantities `(m, big_m, gap, argmax)` computed inside the
-    /// fused gradient-update loop of the previous iteration; when present
-    /// the stop check runs with zero additional scans.
+    /// Stopping quantities `(m, big_m, gap, argmax_original)` computed
+    /// inside the fused gradient-update loop of the previous iteration;
+    /// when present the stop check runs with zero additional scans.
     cached_scan: Option<(f64, f64, f64, Option<usize>)>,
 }
 
@@ -117,7 +130,12 @@ impl<'a> SolverCore<'a> {
     /// Build around an arbitrary (general-QP / warm-started) state.
     pub fn from_state(state: SolverState, gram: &'a mut Gram, config: SolverConfig) -> Self {
         assert_eq!(state.len(), gram.len(), "state/gram size mismatch");
+        assert!(
+            gram.is_identity_view(),
+            "Gram view is permuted by an earlier solve; call Gram::reset_view first"
+        );
         let n = state.len();
+        gram.set_active_len(n); // fresh state ⇒ fully active view
         let shrink_period = if config.shrink_interval > 0 {
             config.shrink_interval
         } else {
@@ -148,20 +166,23 @@ impl<'a> SolverCore<'a> {
     /// Stopping / shrinking bookkeeping run at the top of each iteration.
     /// Returns `Some(converged)` if the loop should stop.
     pub fn check_stop_and_shrink(&mut self) -> Option<bool> {
-        let (m, big_m, gap, argmax) = self
-            .cached_scan
-            .take()
-            .unwrap_or_else(|| self.state.kkt_scan());
+        let (m, big_m, gap, argmax) = match self.cached_scan.take() {
+            Some(scan) => scan,
+            None => {
+                let (m, big_m, gap, p) = self.state.kkt_scan();
+                (m, big_m, gap, p.map(|p| self.state.perm[p]))
+            }
+        };
         self.hint_argmax_up = argmax;
         self.telemetry.record_gap(self.iterations, || gap);
         if gap <= self.config.eps {
             // Converged on the active set: reconstruct and re-check on the
             // full problem before declaring victory.
-            if self.state.active.len() < self.state.len() {
+            if self.state.active_len < self.state.len() {
                 shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
                 self.unshrunk = true;
                 let (_, _, full_gap, full_argmax) = self.state.kkt_scan();
-                self.hint_argmax_up = full_argmax;
+                self.hint_argmax_up = full_argmax.map(|p| self.state.perm[p]);
                 if full_gap <= self.config.eps {
                     return Some(true);
                 }
@@ -174,7 +195,7 @@ impl<'a> SolverCore<'a> {
             self.shrink_counter -= 1;
             if self.shrink_counter == 0 {
                 self.shrink_counter = self.shrink_period;
-                shrink::shrink(&mut self.state, m, big_m);
+                shrink::shrink(&mut self.state, self.gram, m, big_m);
             }
         }
         if self.iterations >= self.max_iter() {
@@ -184,16 +205,20 @@ impl<'a> SolverCore<'a> {
     }
 
     /// Baseline working-set selection per config. Reuses the argmax from
-    /// the fused stopping scan when it is still valid.
+    /// the fused stopping scan when it is still valid (mapped back from
+    /// original coordinates — shrink swaps may have moved it).
     pub fn select(&mut self, kind: GainKind, extra: &[(usize, usize)]) -> Option<Selection> {
         match self.config.wss {
             WssKind::MaxViolating => wss::select_max_violating(&self.state),
-            WssKind::SecondOrder => match self.hint_argmax_up.take() {
-                Some(i) if self.state.is_active[i] && self.state.in_up(i) => {
-                    wss::select_second_order_with_i(&self.state, self.gram, kind, extra, i)
+            WssKind::SecondOrder => {
+                let hint = self.hint_argmax_up.take().map(|orig| self.state.pos[orig]);
+                match hint {
+                    Some(p) if p < self.state.active_len && self.state.in_up(p) => {
+                        wss::select_second_order_with_i(&self.state, self.gram, kind, extra, p)
+                    }
+                    _ => wss::select_second_order(&self.state, self.gram, kind, extra),
                 }
-                _ => wss::select_second_order(&self.state, self.gram, kind, extra),
-            },
+            }
         }
     }
 
@@ -215,28 +240,37 @@ impl<'a> SolverCore<'a> {
     /// Apply step μ on (i, j) and update the active gradient:
     /// `G_n ← G_n − μ (K_in − K_jn)`.
     ///
-    /// The next iteration's stopping quantities (m, M, gap, argmax) are
-    /// computed inside the same loop — the updated gradient is already in
-    /// registers, so the stop check costs zero extra passes (perf pass,
-    /// EXPERIMENTS.md §Perf items 1+3).
+    /// With prefix compaction this is a branch-light linear sweep over
+    /// four contiguous slices (gradient, bounds, two kernel rows) that
+    /// the compiler can vectorize — no index gather. The next iteration's
+    /// stopping quantities (m, M, gap, argmax) are computed inside the
+    /// same loop: the updated gradient is already in registers, so the
+    /// stop check costs zero extra passes (perf pass, EXPERIMENTS.md
+    /// §Perf items 1+3).
     pub fn apply_and_update(&mut self, i: usize, j: usize, mu: f64) {
         if mu == 0.0 {
             return;
         }
         self.state.apply_step(i, j, mu);
+        let al = self.state.active_len;
         let (row_i, row_j) = self.gram.rows_pair(i, j);
+        let (row_i, row_j) = (&row_i[..al], &row_j[..al]);
         let st = &mut self.state;
+        let grad = &mut st.grad[..al];
+        let alpha = &st.alpha[..al];
+        let lower = &st.lower[..al];
+        let upper = &st.upper[..al];
         let mut m = f64::NEG_INFINITY;
         let mut big_m = f64::INFINITY;
         let mut argmax = None;
-        for &n in &st.active {
-            let g = st.grad[n] - mu * (row_i[n] as f64 - row_j[n] as f64);
-            st.grad[n] = g;
-            if g > m && st.alpha[n] < st.upper[n] {
+        for n in 0..al {
+            let g = grad[n] - mu * (row_i[n] as f64 - row_j[n] as f64);
+            grad[n] = g;
+            if g > m && alpha[n] < upper[n] {
                 m = g;
                 argmax = Some(n);
             }
-            if g < big_m && st.alpha[n] > st.lower[n] {
+            if g < big_m && alpha[n] > lower[n] {
                 big_m = g;
             }
         }
@@ -245,7 +279,7 @@ impl<'a> SolverCore<'a> {
         } else {
             m - big_m
         };
-        self.cached_scan = Some((m, big_m, gap, argmax));
+        self.cached_scan = Some((m, big_m, gap, argmax.map(|p| st.perm[p])));
     }
 
     /// One plain SMO step (eq. 2 / configured policy) on the selected pair.
@@ -270,14 +304,14 @@ impl<'a> SolverCore<'a> {
     }
 
     pub fn finish(mut self, converged: bool, started: Instant) -> SolveResult {
-        // Always report on the full problem.
+        // Always report on the full problem, in original coordinates.
         shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
         let (_, _, gap) = self.state.kkt_gap_active();
         let (sv, bsv) = self.state.sv_counts(1e-12);
         SolveResult {
             bias: self.state.bias(),
             objective: self.state.objective(),
-            alpha: std::mem::take(&mut self.state.alpha),
+            alpha: self.state.alpha_original(),
             iterations: self.iterations,
             gap,
             converged,
@@ -286,6 +320,7 @@ impl<'a> SolverCore<'a> {
             wall_time_s: started.elapsed().as_secs_f64(),
             telemetry: self.telemetry,
             cache_stats: self.gram.cache_stats(),
+            kernel_entries: self.gram.kernel_entries(),
         }
     }
 }
@@ -444,6 +479,41 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn shrinking_solution_is_reported_in_original_coordinates() {
+        // Aggressive shrinking permutes the internal view many times; the
+        // reported alpha must still line up with the original examples —
+        // checked against the unshrunk run coordinate by coordinate.
+        let ds = random_problem(120, 19);
+        let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+        let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+        let tight = SolverConfig { eps: 1e-5, shrink_interval: 7, ..Default::default() };
+        let on = solve_cls(
+            &SmoSolver::new(SolverConfig { shrinking: true, ..tight }),
+            ds.labels(),
+            5.0,
+            &mut g1,
+        );
+        let off = solve_cls(
+            &SmoSolver::new(SolverConfig { shrinking: false, ..tight }),
+            ds.labels(),
+            5.0,
+            &mut g2,
+        );
+        assert!(on.converged && off.converged);
+        for i in 0..ds.len() {
+            assert!(
+                (on.alpha[i] - off.alpha[i]).abs() < 5e-2 * (1.0 + 5.0),
+                "alpha[{i}] diverges: shrunk {} vs full {}",
+                on.alpha[i],
+                off.alpha[i]
+            );
+            // sign structure must match the label bounds in original order
+            let y = ds.label(i) as f64;
+            assert!(on.alpha[i] * y >= -1e-9, "alpha[{i}] violates its box side");
+        }
+    }
+
+    #[test]
     fn max_violating_pair_wss_also_converges() {
         let ds = random_problem(60, 5);
         let mut gram = make_gram(&ds, 1.0, 1 << 22);
@@ -488,5 +558,25 @@ pub(crate) mod tests {
         // tiny C forces bounded steps
         assert!(res.telemetry.bounded_steps > 0);
         assert_eq!(res.telemetry.total_steps(), res.iterations);
+    }
+
+    #[test]
+    fn kernel_entries_are_reported_and_bounded_by_work() {
+        let ds = random_problem(80, 9);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let res = solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 2.0, &mut gram);
+        assert!(res.converged);
+        // at least the diagonal plus one row was evaluated …
+        assert!(res.kernel_entries >= 80 + 80);
+        // … and no more than every miss paying a full row, plus singles
+        // (subproblem entries, reconstruction tails bounded by ℓ² here)
+        let ceiling = (res.cache_stats.misses + res.cache_stats.evictions + 2) * 80
+            + 2 * 80 * 80
+            + 10 * res.iterations;
+        assert!(
+            res.kernel_entries <= ceiling,
+            "{} entries vs ceiling {ceiling}",
+            res.kernel_entries
+        );
     }
 }

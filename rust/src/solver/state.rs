@@ -4,6 +4,18 @@
 //! `Lᵢ = min(0, yᵢC)`, `Uᵢ = max(0, yᵢC)` (so α is *signed*: the decision
 //! coefficient is αᵢ itself, not yᵢαᵢ), the gradient is `G = ∇f = y − Kα`,
 //! and the index sets are `I_up = {i | αᵢ < Uᵢ}`, `I_down = {i | αᵢ > Lᵢ}`.
+//!
+//! # Active-prefix compaction
+//!
+//! The active (unshrunk) variables always occupy the contiguous prefix
+//! `[0, active_len)` of a permutation of the original indices (LIBSVM's
+//! `swap_index` scheme): shrinking swaps a variable to the end of the
+//! prefix and shortens it, so every downstream loop — stopping scan,
+//! working-set selection, the fused gradient update — is a branch-free
+//! linear sweep over contiguous slices instead of a gather through an
+//! index list. `perm[p]` maps a position back to its original index and
+//! `pos[i]` is the inverse; results leave the solver in original
+//! coordinates via [`SolverState::alpha_original`].
 
 /// Dual state for one training problem.
 ///
@@ -12,6 +24,11 @@
 /// the special case `p = y`, `L/U` from `(y, C)`. ε-SVR and one-class
 /// SVM map onto the same state via [`SolverState::from_problem`]
 /// (see `svm::svr` / `svm::oneclass`).
+///
+/// All vectors are stored in the *permuted* view: index `p` everywhere
+/// below is a position, and `y[p]`/`alpha[p]`/… refer to original
+/// variable `perm[p]`. A freshly constructed state is the identity
+/// permutation.
 #[derive(Debug, Clone)]
 pub struct SolverState {
     /// Linear term of the dual objective (`y` for classification).
@@ -24,10 +41,12 @@ pub struct SolverState {
     pub lower: Vec<f64>,
     /// Upper bounds `Uᵢ`.
     pub upper: Vec<f64>,
-    /// Active (unshrunk) original indices.
-    pub active: Vec<usize>,
-    /// Membership mirror of `active`.
-    pub is_active: Vec<bool>,
+    /// Position → original index.
+    pub perm: Vec<usize>,
+    /// Original index → position (inverse of `perm`).
+    pub pos: Vec<usize>,
+    /// Active variables are exactly the positions `[0, active_len)`.
+    pub active_len: usize,
 }
 
 impl SolverState {
@@ -44,8 +63,9 @@ impl SolverState {
             y,
             lower,
             upper,
-            active: (0..n).collect(),
-            is_active: vec![true; n],
+            perm: (0..n).collect(),
+            pos: (0..n).collect(),
+            active_len: n,
         }
     }
 
@@ -76,8 +96,9 @@ impl SolverState {
             grad: grad0,
             lower,
             upper,
-            active: (0..n).collect(),
-            is_active: vec![true; n],
+            perm: (0..n).collect(),
+            pos: (0..n).collect(),
+            active_len: n,
         }
     }
 
@@ -90,16 +111,44 @@ impl SolverState {
         self.y.is_empty()
     }
 
-    /// `i ∈ I_up(α)`?
-    #[inline]
-    pub fn in_up(&self, i: usize) -> bool {
-        self.alpha[i] < self.upper[i]
+    /// Swap two positions of the view (all state vectors plus the
+    /// permutation move in lockstep). The caller owning a `Gram` must
+    /// mirror this with `Gram::swap_index` — `solver::shrink` is the one
+    /// place that does.
+    pub fn swap(&mut self, p: usize, q: usize) {
+        if p == q {
+            return;
+        }
+        self.y.swap(p, q);
+        self.alpha.swap(p, q);
+        self.grad.swap(p, q);
+        self.lower.swap(p, q);
+        self.upper.swap(p, q);
+        let (a, b) = (self.perm[p], self.perm[q]);
+        self.perm.swap(p, q);
+        self.pos[a] = q;
+        self.pos[b] = p;
     }
 
-    /// `i ∈ I_down(α)`?
+    /// α in original coordinates (undoing the shrink permutation).
+    pub fn alpha_original(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            out[orig] = self.alpha[p];
+        }
+        out
+    }
+
+    /// `p ∈ I_up(α)`? (positional)
     #[inline]
-    pub fn in_down(&self, i: usize) -> bool {
-        self.alpha[i] > self.lower[i]
+    pub fn in_up(&self, p: usize) -> bool {
+        self.alpha[p] < self.upper[p]
+    }
+
+    /// `p ∈ I_down(α)`? (positional)
+    #[inline]
+    pub fn in_down(&self, p: usize) -> bool {
+        self.alpha[p] > self.lower[p]
     }
 
     /// Step bounds `[L̃, Ũ]` for direction `v = e_i − e_j` (paper §2).
@@ -120,7 +169,7 @@ impl SolverState {
     }
 
     /// Dual objective from the maintained gradient in O(ℓ):
-    /// `f(α) = ½ (αᵀy + αᵀG)` since `G = y − Kα`.
+    /// `f(α) = ½ (αᵀy + αᵀG)` since `G = y − Kα`. Permutation-invariant.
     pub fn objective(&self) -> f64 {
         0.5 * self
             .alpha
@@ -130,7 +179,7 @@ impl SolverState {
             .sum::<f64>()
     }
 
-    /// KKT gap over the *active* set:
+    /// KKT gap over the *active* prefix:
     /// `max{Gᵢ | i ∈ I_up} − min{Gⱼ | j ∈ I_down}` (paper step 4).
     /// Returns `(m, big_m, gap)`; gap is −∞ if either set is empty.
     pub fn kkt_gap_active(&self) -> (f64, f64, f64) {
@@ -141,18 +190,20 @@ impl SolverState {
     /// Single fused pass producing the stopping quantities *and* the
     /// first-order WSS argmax `i = argmax{Gᵢ | i ∈ I_up}` — the hot loop
     /// runs exactly one such scan per iteration (perf pass, EXPERIMENTS.md
-    /// §Perf). Returns `(m, big_m, gap, argmax_up)`.
+    /// §Perf). The scan is a linear sweep over the contiguous active
+    /// prefix. Returns `(m, big_m, gap, argmax_up)` with the argmax as a
+    /// *position*.
     pub fn kkt_scan(&self) -> (f64, f64, f64, Option<usize>) {
         let mut m = f64::NEG_INFINITY;
         let mut big_m = f64::INFINITY;
         let mut argmax = None;
-        for &n in &self.active {
-            let g = self.grad[n];
-            if self.in_up(n) && g > m {
+        for p in 0..self.active_len {
+            let g = self.grad[p];
+            if self.in_up(p) && g > m {
                 m = g;
-                argmax = Some(n);
+                argmax = Some(p);
             }
-            if self.in_down(n) && g < big_m {
+            if self.in_down(p) && g < big_m {
                 big_m = g;
             }
         }
@@ -226,6 +277,8 @@ mod tests {
         assert_eq!(s.grad, vec![1.0, -1.0, 1.0]); // G(0) = y
         assert_eq!(s.lower, vec![0.0, -2.0, 0.0]);
         assert_eq!(s.upper, vec![2.0, 0.0, 2.0]);
+        assert_eq!(s.perm, vec![0, 1, 2]);
+        assert_eq!(s.active_len, 3);
         assert!(s.is_feasible(0.0));
         // at alpha=0 every +1 is in I_up only direction, -1 in I_down
         assert!(s.in_up(0) && !s.in_down(0));
@@ -253,6 +306,36 @@ mod tests {
     }
 
     #[test]
+    fn swap_keeps_all_vectors_and_maps_in_lockstep() {
+        let mut s = SolverState::new(&[1, -1, 1, -1], 2.0);
+        s.alpha = vec![0.5, -0.25, 0.0, -0.25];
+        s.grad = vec![0.1, 0.2, 0.3, 0.4];
+        s.swap(0, 3);
+        assert_eq!(s.perm, vec![3, 1, 2, 0]);
+        assert_eq!(s.pos, vec![3, 1, 2, 0]);
+        assert_eq!(s.alpha, vec![-0.25, -0.25, 0.0, 0.5]);
+        assert_eq!(s.grad, vec![0.4, 0.2, 0.3, 0.1]);
+        assert_eq!(s.y[0], -1.0);
+        assert_eq!(s.lower[0], -2.0);
+        // swapping back restores identity
+        s.swap(3, 0);
+        assert_eq!(s.perm, vec![0, 1, 2, 3]);
+        assert_eq!(s.alpha, vec![0.5, -0.25, 0.0, -0.25]);
+        // self-swap is a no-op
+        s.swap(2, 2);
+        assert_eq!(s.perm, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn alpha_original_undoes_the_permutation() {
+        let mut s = SolverState::new(&[1, -1, 1], 1.0);
+        s.alpha = vec![0.1, -0.3, 0.2];
+        s.swap(0, 2);
+        s.swap(1, 2);
+        assert_eq!(s.alpha_original(), vec![0.1, -0.3, 0.2]);
+    }
+
+    #[test]
     fn objective_identity_vs_direct_computation() {
         // 2-variable problem with explicit K
         let k = [[1.0, 0.5], [0.5, 1.0]];
@@ -277,6 +360,20 @@ mod tests {
         let s = SolverState::new(&[1, 1, -1, -1], 1.0);
         let (m, big_m, gap) = s.kkt_gap_active();
         assert_eq!((m, big_m, gap), (1.0, -1.0, 2.0));
+    }
+
+    #[test]
+    fn kkt_scan_ignores_positions_beyond_the_active_prefix() {
+        let mut s = SolverState::new(&[1, 1, -1, -1], 1.0);
+        s.grad = vec![0.5, 9.0, -0.5, -9.0];
+        // move the extreme gradients out of the active prefix
+        s.swap(1, 3);
+        s.active_len = 2; // positions 0 and 1 = originals 0 and 3
+        let (m, big_m, gap, argmax) = s.kkt_scan();
+        assert_eq!(m, 0.5);
+        assert_eq!(big_m, -9.0);
+        assert_eq!(gap, 9.5);
+        assert_eq!(argmax, Some(0));
     }
 
     #[test]

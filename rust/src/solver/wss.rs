@@ -32,12 +32,12 @@ pub struct Selection {
     pub j: usize,
 }
 
-/// First-order selection: most violating pair over the active set.
+/// First-order selection: most violating pair over the active prefix.
 pub fn select_max_violating(state: &SolverState) -> Option<Selection> {
     let mut best_i: Option<usize> = None;
     let mut best_j: Option<usize> = None;
     let (mut gi, mut gj) = (f64::NEG_INFINITY, f64::INFINITY);
-    for &n in &state.active {
+    for n in 0..state.active_len {
         let g = state.grad[n];
         if state.in_up(n) && g > gi {
             gi = g;
@@ -85,10 +85,10 @@ pub fn select_second_order(
     kind: GainKind,
     extra: &[(usize, usize)],
 ) -> Option<Selection> {
-    // i = argmax G over I_up (active)
+    // i = argmax G over I_up (active prefix)
     let mut i = usize::MAX;
     let mut gi = f64::NEG_INFINITY;
-    for &n in &state.active {
+    for n in 0..state.active_len {
         if state.in_up(n) && state.grad[n] > gi {
             gi = state.grad[n];
             i = n;
@@ -113,14 +113,17 @@ pub fn select_second_order_with_i(
     let gi = state.grad[i];
 
     let kii = gram.diag(i);
-    // Pull row i through the cache, then hold a raw borrow so we can keep
-    // calling `gram.diag`/`gram.entry` (which never evict) during the scan.
+    // Pull row i through the cache, then hold a shared borrow of the
+    // resident row for the scan. The borrow ties to `&Gram`, so only the
+    // non-evicting read surface (`diag`) is reachable while it lives —
+    // the no-evict contract is compiler-enforced.
     gram.row(i);
     let row_i = gram.resident_row(i).expect("row i just fetched");
 
-    // j = argmax gain over I_down with positive violation
+    // j = argmax gain over I_down with positive violation — a linear
+    // sweep over the contiguous active prefix.
     let mut best: Option<(usize, f64)> = None;
-    for &n in &state.active {
+    for n in 0..state.active_len {
         if n == i || !state.in_down(n) {
             continue;
         }
@@ -139,10 +142,12 @@ pub fn select_second_order_with_i(
         None => return None,
     };
 
-    // Algorithm 3: candidate working sets from planning history. They are
+    // Algorithm 3: candidate working sets from planning history. Callers
+    // pass *active positions* (PA-SMO maps its original-coordinate
+    // history through `state.pos` and drops shrunk pairs). They are
     // scored with the same gain function and must be feasible directions.
     for &(a, b) in extra {
-        if a == b || !state.is_active[a] || !state.is_active[b] {
+        if a == b || a >= state.active_len || b >= state.active_len {
             continue;
         }
         if !state.in_up(a) || !state.in_down(b) {

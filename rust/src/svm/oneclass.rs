@@ -67,7 +67,7 @@ impl OneClassModel {
 /// Train a one-class SVM on (unlabeled) rows of `data`.
 pub fn train_one_class(data: &Arc<Dataset>, cfg: &OneClassConfig) -> (OneClassModel, SolveResult) {
     let l = data.len();
-    let nc = NativeRowComputer::new(data.clone(), cfg.kernel);
+    let nc = NativeRowComputer::with_threads(data.clone(), cfg.kernel, cfg.solver_config.threads);
     let mut gram = Gram::new(Box::new(nc), cfg.solver_config.cache_bytes);
     // The ν-formulation lowering: Σα = 1 with a LIBSVM-style feasible
     // start whose gradient needs ≈ νℓ kernel rows (built by `lower`).

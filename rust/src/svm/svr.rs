@@ -27,6 +27,12 @@ use crate::solver::smo::{SolveResult, SolverConfig};
 struct DoubledRowComputer {
     inner: Box<dyn RowComputer>,
     l: usize,
+    /// Reused mod-ℓ column buffer for the gathered path (kernel rows are
+    /// computed thousands of times under cache pressure; a fresh Vec per
+    /// row would be pure allocator traffic).
+    fold: std::cell::RefCell<Vec<usize>>,
+    /// Reused base-problem row for wide (> ℓ) gathers.
+    base_row: std::cell::RefCell<Vec<f32>>,
 }
 
 impl RowComputer for DoubledRowComputer {
@@ -38,6 +44,33 @@ impl RowComputer for DoubledRowComputer {
         let (lo, hi) = out.split_at_mut(self.l);
         self.inner.compute_row(a % self.l, lo);
         hi.copy_from_slice(lo);
+    }
+    fn compute_cols(&self, a: usize, cols: &[usize], out: &mut [f32]) {
+        if cols.len() > self.l {
+            // Wide prefix: the folded columns necessarily repeat mod ℓ, so
+            // one ℓ-length base row plus a gather costs at most half the
+            // per-column evaluation.
+            let mut base = self.base_row.borrow_mut();
+            base.resize(self.l, 0.0);
+            self.inner.compute_row(a % self.l, &mut base);
+            for (o, &c) in out.iter_mut().zip(cols) {
+                *o = base[c % self.l];
+            }
+        } else {
+            // Shrink-aware path: fold the doubled columns onto the base
+            // problem and gather directly — no full row.
+            let mut fold = self.fold.borrow_mut();
+            fold.clear();
+            fold.extend(cols.iter().map(|&c| c % self.l));
+            self.inner.compute_cols(a % self.l, &fold, out);
+        }
+    }
+    fn cols_cost(&self, requested: usize) -> usize {
+        if requested > self.l {
+            self.l
+        } else {
+            self.inner.cols_cost(requested)
+        }
     }
     fn diag(&self, a: usize) -> f64 {
         self.inner.diag(a % self.l)
@@ -110,7 +143,12 @@ pub fn train_svr(
 ) -> (SvrModel, SolveResult) {
     let l = data.len();
     assert_eq!(inner.len(), l, "computer/data size mismatch");
-    let doubled = DoubledRowComputer { inner, l };
+    let doubled = DoubledRowComputer {
+        inner,
+        l,
+        fold: std::cell::RefCell::new(Vec::new()),
+        base_row: std::cell::RefCell::new(Vec::new()),
+    };
     let mut gram = Gram::new(Box::new(doubled), cfg.solver_config.cache_bytes);
 
     // The ε-SVR lowering: one QpProblem over the doubled variables.
@@ -139,7 +177,11 @@ pub fn train_svr_native(data: &RegressionDataset, cfg: &SvrConfig) -> (SvrModel,
     for i in 0..data.len() {
         ds.push(data.row(i), 1); // labels unused by the kernel
     }
-    let nc = crate::kernel::native::NativeRowComputer::new(Arc::new(ds), cfg.kernel);
+    let nc = crate::kernel::native::NativeRowComputer::with_threads(
+        Arc::new(ds),
+        cfg.kernel,
+        cfg.solver_config.threads,
+    );
     train_svr(data, Box::new(nc), cfg)
 }
 

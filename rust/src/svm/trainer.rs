@@ -95,6 +95,15 @@ impl Trainer {
         self
     }
 
+    /// Worker threads for kernel-row computation (0/1 = single-threaded).
+    /// `SolveResult::alpha` is bit-identical across thread counts —
+    /// threaded rows use exactly the per-entry arithmetic of the scalar
+    /// path (see `kernel::native`).
+    pub fn threads(mut self, threads: usize) -> Trainer {
+        self.solver_config.threads = threads;
+        self
+    }
+
     /// KKT stopping accuracy ε.
     pub fn stop_eps(mut self, eps: f64) -> Trainer {
         self.solver_config.eps = eps;
@@ -139,7 +148,8 @@ impl Trainer {
 
     /// Train on a dataset using the native (Rust) kernel path.
     pub fn train(&self, data: &Arc<Dataset>) -> TrainOutcome {
-        let computer = NativeRowComputer::new(data.clone(), self.kernel);
+        let computer =
+            NativeRowComputer::with_threads(data.clone(), self.kernel, self.solver_config.threads);
         self.train_with_computer(data, Box::new(computer))
     }
 

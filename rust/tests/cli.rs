@@ -148,6 +148,77 @@ fn train_accepts_per_class_cost_weights() {
 }
 
 #[test]
+fn train_accepts_threads_flag() {
+    let out = pasmo()
+        .args(["train", "--dataset", "chess-board-1000", "--len", "300", "--threads", "2"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "threaded train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("converged=true"));
+}
+
+#[test]
+fn bench_writes_kernel_entry_trajectory_json() {
+    let dir = TempDir::new("bench-json");
+    let path = dir.path("BENCH_solver.json");
+    let out = pasmo()
+        .args([
+            "bench",
+            "--len",
+            "300",
+            "--datasets",
+            "chess-board-1000",
+            "--cache-rows",
+            "32",
+            "--shrink-interval",
+            "50",
+            "--out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc =
+        pasmo::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str(), Some("solver"));
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 4, "smo/pasmo × shrink on/off");
+    for r in runs {
+        assert_eq!(r.get("converged").unwrap().as_bool(), Some(true));
+    }
+    // The perf claim the artifact exists to track: with shrinking enabled
+    // the solver computes strictly fewer kernel entries.
+    for solver in ["smo", "pasmo"] {
+        let entries = |shrink: bool| {
+            runs.iter()
+                .find(|r| {
+                    r.get("solver").unwrap().as_str() == Some(solver)
+                        && r.get("shrinking").unwrap().as_bool() == Some(shrink)
+                })
+                .unwrap()
+                .get("kernel_entries")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(
+            entries(true) < entries(false),
+            "{solver}: shrink-on {} !< shrink-off {}",
+            entries(true),
+            entries(false)
+        );
+    }
+}
+
+#[test]
 fn train_rejects_unknown_dataset() {
     let out = pasmo().args(["train", "--dataset", "bogus"]).output().unwrap();
     assert!(!out.status.success());

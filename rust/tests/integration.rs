@@ -287,6 +287,144 @@ fn pjrt_engine_reports_clean_error_without_artifacts() {
     assert!(msg.contains("MANIFEST.json"), "unhelpful error: {msg}");
 }
 
+/// Property (quickcheck substrate): shrinking with prefix compaction —
+/// swapped state vectors, permuted Gram view, shortened kernel rows —
+/// returns the same alphas/bias/objective as a `shrinking: false` solve
+/// of the identical problem, within the reference-solver tolerance, in
+/// *original* coordinates.
+#[test]
+fn shrinking_with_prefix_compaction_matches_unshrunk_solutions() {
+    use pasmo::util::quickcheck::forall;
+    forall(
+        "shrink-prefix-equivalence",
+        6,
+        |g| (60 + g.below(60), g.next_u64(), 10f64.powf(g.range(-0.5, 2.0))),
+        |&(n, seed, c)| {
+            let ds = Arc::new(chessboard(n, 4, seed));
+            let solve = |shrinking: bool| {
+                Trainer::rbf(c, 0.5)
+                    .solver_config(SolverConfig {
+                        shrinking,
+                        shrink_interval: 5, // shrink aggressively
+                        eps: 1e-5,
+                        ..Default::default()
+                    })
+                    .train(&ds)
+                    .result
+            };
+            let on = solve(true);
+            let off = solve(false);
+            if !on.converged || !off.converged {
+                return Err("did not converge".into());
+            }
+            let obj_tol = 1e-3 * (1.0 + off.objective.abs());
+            if (on.objective - off.objective).abs() > obj_tol {
+                return Err(format!("objective {} vs {}", on.objective, off.objective));
+            }
+            let tol = 5e-2 * (1.0 + c);
+            if (on.bias - off.bias).abs() > tol {
+                return Err(format!("bias {} vs {}", on.bias, off.bias));
+            }
+            for i in 0..ds.len() {
+                if (on.alpha[i] - off.alpha[i]).abs() > tol {
+                    return Err(format!(
+                        "alpha[{i}] {} vs {}",
+                        on.alpha[i], off.alpha[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warm-started CvSession runs behave identically across shrink modes:
+/// the α each fold stores is in original coordinates (de-permuted), so a
+/// second pass over the same split re-converges almost for free whether
+/// or not the first pass shrank.
+#[test]
+fn warm_started_cv_sessions_agree_across_shrink_modes() {
+    use pasmo::svm::crossval::{cross_validate_session, CvSession};
+    let ds = chessboard(180, 4, 31);
+    let mut accuracies = Vec::new();
+    for shrinking in [true, false] {
+        let trainer = Trainer::rbf(50.0, 0.5).solver_config(SolverConfig {
+            shrinking,
+            shrink_interval: 9,
+            ..Default::default()
+        });
+        let mut session = CvSession::new();
+        let first = cross_validate_session(&ds, &trainer, 4, 3, &mut session);
+        let second = cross_validate_session(&ds, &trainer, 4, 3, &mut session);
+        assert!(
+            second.total_iterations < first.total_iterations / 4,
+            "shrinking={shrinking}: warm pass {} !< cold pass {} / 4 — \
+             fold alphas are not valid original-coordinate seeds",
+            second.total_iterations,
+            first.total_iterations
+        );
+        accuracies.push((first.mean_accuracy, second.mean_accuracy));
+    }
+    let (on, off) = (accuracies[0], accuracies[1]);
+    assert!((on.0 - off.0).abs() < 0.05, "first-pass accuracy: {on:?} vs {off:?}");
+    assert!((on.1 - off.1).abs() < 0.05, "second-pass accuracy: {on:?} vs {off:?}");
+}
+
+/// `--threads N` changes only who computes the kernel rows, never their
+/// bits: the whole solve trajectory and result are identical. The rows
+/// are wide (ℓ·d above the work threshold), so the threaded path really
+/// runs.
+#[test]
+fn threaded_kernel_rows_leave_the_solution_bit_identical() {
+    use pasmo::util::prng::Pcg;
+    let mut rng = Pcg::new(23);
+    let mut ds = pasmo::data::Dataset::with_dim(96);
+    let mut row = vec![0f32; 96];
+    for k in 0..700 {
+        let y: i8 = if k % 2 == 0 { 1 } else { -1 };
+        let shift = if y == 1 { 0.4 } else { -0.4 };
+        row.iter_mut()
+            .for_each(|v| *v = (shift + rng.normal() * 0.8) as f32);
+        ds.push(&row, y);
+    }
+    let ds = Arc::new(ds);
+    let single = Trainer::rbf(10.0, 0.02).train(&ds).result;
+    let multi = Trainer::rbf(10.0, 0.02).threads(4).train(&ds).result;
+    assert_eq!(single.iterations, multi.iterations);
+    assert_eq!(single.objective, multi.objective);
+    assert_eq!(single.bias, multi.bias);
+    assert_eq!(single.alpha, multi.alpha);
+}
+
+/// The point of shrink-aware rows: under cache pressure, a shrinking
+/// solve computes strictly fewer kernel entries than the same solve with
+/// shrinking disabled — rows get shorter as the active prefix contracts.
+#[test]
+fn shrinking_strictly_reduces_kernel_entries_under_cache_pressure() {
+    let ds = Arc::new(chessboard(500, 4, 13));
+    let cache = 32 * 500 * 4; // 32 full rows: eviction traffic is real
+    let run = |shrinking: bool| {
+        Trainer::rbf(1e6, 0.5)
+            .solver_config(SolverConfig {
+                shrinking,
+                shrink_interval: 100,
+                cache_bytes: cache,
+                ..Default::default()
+            })
+            .train(&ds)
+            .result
+    };
+    let on = run(true);
+    let off = run(false);
+    assert!(on.converged && off.converged);
+    assert!(
+        on.kernel_entries < off.kernel_entries,
+        "shrink-on computed {} kernel entries, shrink-off {}",
+        on.kernel_entries,
+        off.kernel_entries
+    );
+}
+
 /// Solving the same permuted problem twice is bit-identical (determinism
 /// underpins the paired experiment design).
 #[test]
