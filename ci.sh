@@ -13,6 +13,13 @@
 #                                [[example]] targets and must keep building)
 #   4d. run the quickstart example at tiny scale (end-to-end smoke)
 #   4e. pasmo bench at tiny scale → BENCH_solver.json (perf trajectory)
+#   4f. docs gate: RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+#                               (zero rustdoc warnings — missing docs on
+#                                any public item or a broken doc link
+#                                fails here) + cargo test --doc
+#   4g. pasmo experiment engine_shootout at tiny scale (the three-way
+#                                SMO / PA-SMO / CSMO comparison stays
+#                                runnable end to end)
 #   5. cargo build --features pjrt
 #                               (the gated runtime module must keep
 #                                compiling against the vendor/xla stub)
@@ -53,6 +60,18 @@ cargo run --release --example quickstart -- --len 200
 # repo root so successive PRs have a trajectory to compare against.
 step "pasmo bench --len 300 (writes ../BENCH_solver.json)"
 cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --out ../BENCH_solver.json
+
+# Docs gate: the public surface is fully documented (#![warn(missing_docs)]
+# promoted to an error here) and every doctest runs green.
+step "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+step "cargo test --doc"
+cargo test -q --doc
+
+# The three-way engine comparison stays runnable end to end.
+step "pasmo experiment engine_shootout (tiny scale)"
+cargo run --release -- experiment engine_shootout --datasets thyroid --perms 3 --max-len 150
 
 step "cargo build --benches --features pjrt"
 cargo build --benches --features pjrt

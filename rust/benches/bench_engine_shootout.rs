@@ -1,0 +1,17 @@
+//! Regenerates the engine shootout — SMO vs PA-SMO vs Conjugate SMO on
+//! paired permutations: iterations (with Wilcoxon '>' markers against
+//! the SMO baseline), runtime, and the cross-engine objective-parity
+//! column.
+
+mod common;
+
+fn main() {
+    common::banner(
+        "bench_engine_shootout",
+        "engine shootout (SMO vs PA-SMO vs CSMO iterations + time, Wilcoxon '>')",
+    );
+    let opts = common::bench_options();
+    let t0 = std::time::Instant::now();
+    println!("{}", pasmo::coordinator::experiments::engine_shootout(&opts));
+    println!("total: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -181,6 +181,68 @@ pub fn table2(opts: &ExpOptions) -> String {
     )
 }
 
+/// Engine shootout — SMO vs PA-SMO vs Conjugate SMO on the Table-2
+/// protocol: every engine trains on the *same* random permutations
+/// (measurements stay paired), Wilcoxon `>` markers compare each
+/// challenger against the SMO baseline on iterations, and the last
+/// column reports the worst relative objective deviation from SMO
+/// across all engines and permutations (the §7.1-style parity check —
+/// all three engines solve the same QP, so it must stay at solver
+/// tolerance).
+pub fn engine_shootout(opts: &ExpOptions) -> String {
+    let mut t = Table::new(&[
+        "dataset", "iters SMO", "", "iters PA", "", "iters CSMO", "t SMO", "t PA", "t CSMO",
+        "max |Δobj|",
+    ])
+    .align(&[
+        Align::Left, Align::Right, Align::Left, Align::Right, Align::Left, Align::Right,
+        Align::Right, Align::Right, Align::Right, Align::Right,
+    ]);
+    for spec in opts.specs() {
+        let n = opts.len_for(&spec);
+        let ds = Arc::new(spec.generate(n, opts.seed));
+        let base = opts.trainer(&spec);
+        let cfgs = [
+            base.clone().solver(SolverChoice::Smo),
+            base.clone().solver(SolverChoice::Pasmo),
+            base.solver(SolverChoice::ConjugateSmo),
+        ];
+        let res = run_permutations(&ds, &cfgs, opts.perms, opts.seed ^ 0x53D0, opts.threads);
+        let (smo, pa, cj) = (&res[0], &res[1], &res[2]);
+        let (is_, ip, ic) =
+            (jobs::iterations(smo), jobs::iterations(pa), jobs::iterations(cj));
+        let (ts, tp, tc) = (jobs::times(smo), jobs::times(pa), jobs::times(cj));
+        let os = jobs::objectives(smo);
+        let mut max_dev = 0.0f64;
+        for challenger in [jobs::objectives(pa), jobs::objectives(cj)] {
+            for (o, &b) in challenger.iter().zip(&os) {
+                max_dev = max_dev.max((o - b).abs() / (1.0 + b.abs()));
+            }
+        }
+        t.add_row(vec![
+            spec.name.to_string(),
+            fnum(Summary::of(&is_).mean, 0),
+            marker(&is_, &ip).to_string(),
+            fnum(Summary::of(&ip).mean, 0),
+            marker(&is_, &ic).to_string(),
+            fnum(Summary::of(&ic).mean, 0),
+            fnum(Summary::of(&ts).mean, 4),
+            fnum(Summary::of(&tp).mean, 4),
+            fnum(Summary::of(&tc).mean, 4),
+            format!("{max_dev:.1e}"),
+        ]);
+    }
+    format!(
+        "## Engine shootout — SMO vs PA-SMO vs Conjugate SMO ({} permutations, ε = {}, scale = {})\n\
+         '>' marks a paired-Wilcoxon-significant (p=0.05) iteration advantage over SMO;\n\
+         'max |Δobj|' is the worst relative objective deviation from SMO (engine parity).\n\n{}",
+        opts.perms,
+        opts.eps,
+        if opts.full { 1.0 } else { opts.scale },
+        t.render()
+    )
+}
+
 /// §7.2 — isolate the WSS change from planning: SMO vs SMO+Alg3-WSS
 /// (no planning) vs full PA-SMO, in iterations and time.
 pub fn wss_ablation(opts: &ExpOptions) -> String {
@@ -377,6 +439,15 @@ mod tests {
         let s = table2(&tiny_opts());
         assert!(s.contains("chess-board-1000"), "{s}");
         assert!(s.contains("time SMO"));
+    }
+
+    #[test]
+    fn engine_shootout_runs_three_engines_paired() {
+        let s = engine_shootout(&tiny_opts());
+        assert!(s.contains("Conjugate SMO"), "{s}");
+        assert!(s.contains("iters CSMO"), "{s}");
+        assert!(s.contains("chess-board-1000"), "{s}");
+        assert!(s.contains("thyroid"), "{s}");
     }
 
     #[test]

@@ -17,12 +17,19 @@ use crate::svm::trainer::Trainer;
 /// One (solver, permutation) measurement.
 #[derive(Debug, Clone)]
 pub struct RunMeasurement {
+    /// Wall-clock training time in seconds.
     pub time_s: f64,
+    /// Solver iterations.
     pub iterations: u64,
+    /// Final dual objective.
     pub objective: f64,
+    /// Did the solve converge (vs hit the iteration cap)?
     pub converged: bool,
+    /// Support vectors in the solution.
     pub sv: usize,
+    /// Bounded support vectors.
     pub bsv: usize,
+    /// Planning-ahead steps taken (0 for non-PA engines).
     pub planning_steps: u64,
 }
 
@@ -99,9 +106,11 @@ pub fn run_permutations(
 pub fn times(ms: &[RunMeasurement]) -> Vec<f64> {
     ms.iter().map(|m| m.time_s).collect()
 }
+/// Iteration counts as a paired-statistics column.
 pub fn iterations(ms: &[RunMeasurement]) -> Vec<f64> {
     ms.iter().map(|m| m.iterations as f64).collect()
 }
+/// Final objectives as a paired-statistics column.
 pub fn objectives(ms: &[RunMeasurement]) -> Vec<f64> {
     ms.iter().map(|m| m.objective).collect()
 }

@@ -12,6 +12,7 @@ pub struct Report {
 }
 
 impl Report {
+    /// Empty report; `quiet` suppresses the stdout echo.
     pub fn new(quiet: bool) -> Report {
         Report { sections: Vec::new(), quiet }
     }
@@ -25,6 +26,7 @@ impl Report {
         self.sections.push(text);
     }
 
+    /// Has no section been added yet?
     pub fn is_empty(&self) -> bool {
         self.sections.is_empty()
     }

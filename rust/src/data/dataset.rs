@@ -44,6 +44,7 @@ impl Dataset {
         self.labels.len()
     }
 
+    /// Is the dataset empty?
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }

@@ -16,6 +16,7 @@ use super::dataset::Dataset;
 /// One parsed sparse example.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparseExample {
+    /// Class label (±1, sign of the parsed value).
     pub label: i8,
     /// (0-based index, value), strictly increasing by index.
     pub entries: Vec<(usize, f32)>,

@@ -12,39 +12,47 @@ pub struct RegressionDataset {
 }
 
 impl RegressionDataset {
+    /// Empty dataset with a fixed feature dimension.
     pub fn with_dim(dim: usize) -> RegressionDataset {
         assert!(dim > 0);
         RegressionDataset { dim, features: Vec::new(), targets: Vec::new() }
     }
 
+    /// Append one example.
     pub fn push(&mut self, x: &[f32], y: f64) {
         assert_eq!(x.len(), self.dim);
         self.features.extend_from_slice(x);
         self.targets.push(y);
     }
 
+    /// Number of examples ℓ.
     pub fn len(&self) -> usize {
         self.targets.len()
     }
 
+    /// Is the dataset empty?
     pub fn is_empty(&self) -> bool {
         self.targets.is_empty()
     }
 
+    /// Feature dimension d.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Feature row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.features[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// Regression target of example `i`.
     #[inline]
     pub fn target(&self, i: usize) -> f64 {
         self.targets[i]
     }
 
+    /// All targets, in example order.
     pub fn targets(&self) -> &[f64] {
         &self.targets
     }

@@ -13,17 +13,27 @@ use super::synth::{banana, chessboard, ringnorm, surrogate, twonorm, waveform, S
 /// Which generator backs a dataset.
 #[derive(Debug, Clone)]
 pub enum Generator {
-    Chessboard { board: usize },
+    /// Glasmachers & Igel's chess-board problem on a `board × board` grid.
+    Chessboard {
+        /// Squares per side.
+        board: usize,
+    },
+    /// Breiman's twonorm (two offset Gaussians).
     Twonorm,
+    /// Breiman's ringnorm (nested Gaussians of different scale).
     Ringnorm,
+    /// Breiman's waveform (noisy convex wave combinations).
     Waveform,
+    /// Two noisy interleaved crescents.
     Banana,
+    /// Tuned surrogate for a UCI/Rätsch dataset (DESIGN.md §4).
     Surrogate(SurrogateSpec),
 }
 
 /// One row of the paper's Table 1 plus its generator.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// Dataset name as printed in Table 1 / `pasmo datasets`.
     pub name: &'static str,
     /// ℓ in the paper.
     pub paper_len: usize,
@@ -35,6 +45,7 @@ pub struct DatasetSpec {
     pub paper_sv: usize,
     /// Bounded support vectors reported in Table 1.
     pub paper_bsv: usize,
+    /// The generator standing in for the real dataset.
     pub generator: Generator,
 }
 

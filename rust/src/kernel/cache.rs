@@ -47,12 +47,16 @@ type SlotMap = HashMap<usize, usize, BuildHasherDefault<IdentityHasher>>;
 /// Cache statistics (exposed in experiment reports and the cache bench).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Requests served from a resident row.
     pub hits: u64,
+    /// Requests that had to compute the row.
     pub misses: u64,
+    /// Rows evicted to make room.
     pub evictions: u64,
 }
 
 impl CacheStats {
+    /// `hits / (hits + misses)`, 0 when nothing was requested.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -127,18 +131,23 @@ impl RowCache {
         }
     }
 
+    /// Nominal capacity in full-length rows (reporting only; residency
+    /// is byte-accurate).
     pub fn capacity_rows(&self) -> usize {
         self.nominal_rows
     }
 
+    /// Number of resident rows.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Is the cache empty?
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Statistics since construction or the last [`RowCache::clear`].
     pub fn stats(&self) -> CacheStats {
         self.stats
     }

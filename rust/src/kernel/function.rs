@@ -8,14 +8,29 @@
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum KernelFunction {
     /// `exp(-gamma ||x - z||^2)` — the paper's kernel.
-    Rbf { gamma: f64 },
+    Rbf {
+        /// Kernel width γ.
+        gamma: f64,
+    },
     /// `x . z`
     Linear,
     /// `(gamma x . z + coef0)^degree`
-    Poly { gamma: f64, coef0: f64, degree: u32 },
+    Poly {
+        /// Dot-product scale γ.
+        gamma: f64,
+        /// Additive offset.
+        coef0: f64,
+        /// Polynomial degree.
+        degree: u32,
+    },
     /// `tanh(gamma x . z + coef0)` — not PSD in general; exercises the
     /// solver's vanishing/negative-curvature handling.
-    Sigmoid { gamma: f64, coef0: f64 },
+    Sigmoid {
+        /// Dot-product scale γ.
+        gamma: f64,
+        /// Additive offset.
+        coef0: f64,
+    },
 }
 
 #[inline]

@@ -88,6 +88,8 @@ impl Gram {
     /// Default cache budget: 100 MB, LIBSVM's default.
     pub const DEFAULT_CACHE_BYTES: usize = 100 * 1024 * 1024;
 
+    /// A fresh identity-view Gram over `computer` with the given cache
+    /// byte budget (the diagonal is precomputed eagerly).
     pub fn new(computer: Box<dyn RowComputer>, cache_bytes: usize) -> Gram {
         let len = computer.len();
         let diag = (0..len).map(|i| computer.diag(i)).collect();
@@ -110,6 +112,7 @@ impl Gram {
         self.len
     }
 
+    /// Is the underlying dataset empty?
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -301,6 +304,7 @@ impl Gram {
         self.single_entries += self.computer.cols_cost(buf.len()) as u64;
     }
 
+    /// Row-cache statistics since construction / the last view reset.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
@@ -350,14 +354,17 @@ impl DenseGram {
         DenseGram { n, k }
     }
 
+    /// Number of examples ℓ.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Is the matrix 0×0?
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// `K[i, j]`.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.k[i * self.n + j]

@@ -39,6 +39,7 @@ pub struct NativeRowComputer {
 }
 
 impl NativeRowComputer {
+    /// Single-threaded computer over `data` with the given kernel.
     pub fn new(data: Arc<Dataset>, kernel: KernelFunction) -> NativeRowComputer {
         NativeRowComputer::with_threads(data, kernel, 1)
     }
@@ -56,10 +57,12 @@ impl NativeRowComputer {
         NativeRowComputer { data, kernel, sqnorms, threads: threads.max(1) }
     }
 
+    /// The kernel function this computer evaluates.
     pub fn kernel(&self) -> KernelFunction {
         self.kernel
     }
 
+    /// Configured row-computation worker threads (1 = inline).
     pub fn threads(&self) -> usize {
         self.threads
     }

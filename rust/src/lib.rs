@@ -7,13 +7,32 @@
 //! evaluation — is AOT-compiled from a Pallas kernel to HLO and executed
 //! through PJRT (`runtime`), with a native Rust path as fallback/comparator.
 //!
-//! Layer map (see DESIGN.md):
+//! ## Quick start
+//!
+//! Training goes through one entry point, the [`svm::Trainer`] builder;
+//! the engine behind it — baseline SMO, the paper's PA-SMO, or the
+//! conjugate-direction SMO — is a [`solver::SolverChoice`]:
+//!
+//! ```
+//! use pasmo::solver::SolverChoice;
+//! use pasmo::svm::Trainer;
+//!
+//! let data = std::sync::Arc::new(pasmo::data::synth::chessboard(120, 4, 1));
+//! let outcome = Trainer::rbf(100.0, 0.5)
+//!     .solver(SolverChoice::Pasmo)
+//!     .train(&data);
+//! assert!(outcome.result.converged);
+//! assert!(outcome.model.n_sv() > 0);
+//! ```
+//!
+//! ## Layer map (see DESIGN.md)
+//!
 //! * [`solver`] — the paper's contribution: SMO (Alg. 1), the planning-ahead
 //!   step (eqs. 7/8, Algs. 2 & 4), PA-aware working-set selection (Alg. 3)
-//!   and the complete PA-SMO driver (Alg. 5), plus shrinking and telemetry —
-//!   all behind the [`solver::Engine`] trait over first-class
-//!   [`solver::QpProblem`] descriptions (built by the single
-//!   `solver::EngineConfig` factory).
+//!   and the complete PA-SMO driver (Alg. 5), plus the conjugate SMO
+//!   engine (`solver::conjugate`), shrinking and telemetry — all behind
+//!   the [`solver::Engine`] trait over first-class [`solver::QpProblem`]
+//!   descriptions (built by the single `solver::EngineConfig` factory).
 //! * [`kernel`] — kernel functions, the LRU row cache and Gram abstractions.
 //! * `runtime` — PJRT engine loading `artifacts/*.hlo.txt`. Compiled only
 //!   with the `pjrt` cargo feature (off by default so the crate builds
@@ -30,13 +49,30 @@
 //! * [`util`] — substrates that would normally come from crates.io (PRNG,
 //!   CLI parsing, JSON, error handling, property testing, timing) built
 //!   in-repo because the build environment is offline.
+//!
+//! ## Documentation discipline
+//!
+//! The whole public surface is documented and the lint below keeps it
+//! that way: `ci.sh` runs `RUSTDOCFLAGS="-D warnings" cargo doc` (plus
+//! `cargo test --doc`), so an undocumented public item or a broken
+//! doctest fails CI rather than silently regressing.
 
+#![warn(missing_docs)]
+
+/// Experiment drivers and the permutation fan-out (paper §7 protocol).
 pub mod coordinator;
+/// Datasets: dense storage, LIBSVM IO, splits, the synthetic suite.
 pub mod data;
+/// Kernel functions, the LRU row cache and the `Gram` facade.
 pub mod kernel;
+/// PJRT/XLA runtime (compiled only with the `pjrt` cargo feature).
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+/// The solver family: SMO, PA-SMO, conjugate SMO, and their substrate.
 pub mod solver;
+/// Statistics for the paper's evaluation protocol.
 pub mod stats;
+/// The user-facing SVM API: train, predict, CV, grid search, SVR, …
 pub mod svm;
+/// Offline substrates for what would normally come from crates.io.
 pub mod util;

@@ -5,9 +5,15 @@
 //! * `train` — train an SVM (native or PJRT kernel path) and save a model.
 //! * `predict` — evaluate a saved model on a LIBSVM file.
 //! * `gridsearch` — (C, γ) grid search with cross-validation.
-//! * `experiment <id>` — regenerate a paper table/figure:
-//!   `table1 | table2 | fig2 | fig3 | fig4 | wss | heuristic | all`.
+//! * `bench` — solver perf baseline (wall time, kernel entries, hit rate).
+//! * `experiment <id>` — regenerate a paper table/figure or comparison:
+//!   `table1 | table2 | fig2 | fig3 | fig4 | wss | heuristic |
+//!   engine_shootout | all`.
 //! * `info` — environment / artifact status.
+//!
+//! `pasmo --help`, `pasmo <command> --help` and `pasmo help <command>`
+//! print the flag reference; `tests/cli.rs` asserts the help text covers
+//! every flag the code reads, so new flags cannot go undocumented.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -35,6 +41,19 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // `pasmo --help`, `pasmo <cmd> --help`, `pasmo help [<cmd>]`.
+    if args.flag("help") || args.command() == Some("help") {
+        let target = if args.command() == Some("help") {
+            args.positional.get(1).map(|s| s.as_str())
+        } else {
+            args.command()
+        };
+        match target.and_then(subcommand_help) {
+            Some(text) => println!("{text}"),
+            None => print_usage(),
+        }
+        return Ok(());
+    }
     match args.command() {
         Some("datasets") => cmd_datasets(),
         Some("train") => cmd_train(args),
@@ -50,6 +69,104 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// Shared flag descriptions (referenced from several subcommand pages).
+const HELP_DATA_FLAGS: &str = "\
+  --dataset NAME        synthetic-suite dataset (see `pasmo datasets`)\n\
+  --libsvm FILE         load a LIBSVM-format file instead\n\
+  --len N               generated dataset size ℓ (suite datasets only)\n\
+  --seed S              generation / protocol seed (default 42)";
+
+const HELP_SOLVER_FLAG: &str = "\
+  --solver NAME         smo | pasmo | pasmo-multi:N | conjugate\n\
+                        (pasmo = planning-ahead, the default;\n\
+                         conjugate = conjugate-direction SMO)";
+
+/// The full flag reference for one subcommand. Every flag a subcommand
+/// reads must appear here — `tests/cli.rs` enforces the parity.
+fn subcommand_help(cmd: &str) -> Option<String> {
+    let body = match cmd {
+        "datasets" => "usage: pasmo datasets\n\n\
+             List the synthetic benchmark suite standing in for the paper's\n\
+             22 datasets: name, paper ℓ, the paper's (C, γ) and SV/BSV counts.\n\
+             Takes no flags (--help prints this page)."
+            .to_string(),
+        "train" => format!(
+            "usage: pasmo train (--dataset NAME | --libsvm FILE) [options]\n\n\
+             Train an SVM classifier and optionally save the model.\n\n\
+             data:\n{HELP_DATA_FLAGS}\n\n\
+             model:\n\
+               --c C                 regularization constant (default: paper value or 1)\n\
+               --gamma G             RBF kernel width (default: paper value or 0.5)\n\
+               --w-pos W / --w-neg W per-class cost multipliers C₊ = W·C, C₋ (imbalanced data)\n\n\
+             solver:\n{HELP_SOLVER_FLAG}\n\
+               --eps E               KKT stopping accuracy (default 1e-3)\n\
+               --threads N           kernel-row worker threads (bit-identical results)\n\n\
+             output / backend:\n\
+               --out model.json      save the trained model\n\
+               --runtime pjrt        use the PJRT kernel path (needs the `pjrt` feature)"
+        ),
+        "predict" => "usage: pasmo predict --model model.json --libsvm FILE\n\n\
+             Evaluate a saved model on a LIBSVM file.\n\n\
+               --model FILE          model JSON produced by `pasmo train --out`\n\
+               --libsvm FILE         evaluation data"
+            .to_string(),
+        "gridsearch" => format!(
+            "usage: pasmo gridsearch (--dataset NAME | --libsvm FILE) [options]\n\n\
+             (C, γ) grid search on k-fold cross-validation accuracy. By default\n\
+             the grid is warm-started: one CvSession threads each fold's α from\n\
+             grid point to grid point (fewer total iterations, same accuracies).\n\n\
+             data:\n{HELP_DATA_FLAGS}\n\n\
+             search:\n\
+               --folds K             cross-validation folds (default 4)\n\
+               --cold                disable warm-starting (every point from α = 0)\n\n\
+             solver:\n{HELP_SOLVER_FLAG}\n\
+               --threads N           kernel-row worker threads"
+        ),
+        "bench" => format!(
+            "usage: pasmo bench [options]\n\n\
+             Solver perf baseline: wall time, iterations, kernel entries and\n\
+             cache hit rate per (dataset × solver × shrinking) cell. The cache\n\
+             is sized in rows so the kernel/cache layer is actually exercised.\n\n\
+               --datasets a,b,c      suite datasets (default chess-board-1000,banana)\n\
+               --len N               dataset size ℓ (default 600)\n\
+               --seed S              generation seed (default 42)\n\
+               --threads N           kernel-row worker threads\n\
+               --cache-rows R        cache budget in rows (default ℓ/4)\n\
+               --shrink-interval I   shrink check period (0 = solver default)\n\
+               --out FILE            write BENCH_solver.json trajectory artifact\n\n\
+             solver (default: the smo,pasmo pair — shrink on and off each):\n{HELP_SOLVER_FLAG}"
+        ),
+        "experiment" => "usage: pasmo experiment <id> [options]\n\n\
+             Regenerate a paper table/figure or engine comparison. Ids:\n\
+               table1           dataset statistics (SV/BSV vs paper)\n\
+               table2           SMO vs PA-SMO, paired permutations + Wilcoxon\n\
+               fig2             the gain parabola (pure analytics)\n\
+               fig3             planning-step size histograms\n\
+               fig4             multiple planning-ahead (N recent working sets)\n\
+               wss              §7.2 WSS-only ablation\n\
+               heuristic        §7.3 fixed 1.1× over-relaxation\n\
+               engine_shootout  SMO vs PA-SMO vs Conjugate SMO, paired + Wilcoxon\n\
+               all              everything above\n\n\
+             protocol:\n\
+               --perms N             random permutations per dataset (default 10)\n\
+               --scale S             dataset scale relative to the paper's ℓ\n\
+               --max-len N           hard ℓ cap in fast mode (0 = none)\n\
+               --full                complete 22-dataset suite at paper sizes\n\
+               --datasets a,b,c      restrict to these datasets\n\
+               --eps E               stopping accuracy (default 1e-3)\n\
+               --seed S              master seed (default 42)\n\
+               --threads N           permutation fan-out worker threads\n\
+               --out report.md       save the rendered report"
+            .to_string(),
+        "info" => "usage: pasmo info\n\n\
+             Print version, available threads and PJRT artifact status.\n\
+             Takes no flags (--help prints this page)."
+            .to_string(),
+        _ => return None,
+    };
+    Some(body)
+}
+
 fn print_usage() {
     println!(
         "pasmo — planning-ahead SMO SVM training system\n\
@@ -59,22 +176,26 @@ fn print_usage() {
          commands:\n\
            datasets                          list the benchmark suite\n\
            train      --dataset NAME | --libsvm FILE [--c C --gamma G]\n\
-                      [--solver smo|pasmo|pasmo-multi:N] [--eps E]\n\
+                      [--solver smo|pasmo|pasmo-multi:N|conjugate] [--eps E]\n\
                       [--w-pos W --w-neg W] (per-class cost multipliers)\n\
                       [--threads N] (kernel-row worker threads)\n\
                       [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
            predict    --model model.json --libsvm FILE\n\
            gridsearch --dataset NAME [--len N] [--folds K] [--cold]\n\
-                      [--threads N]\n\
+                      [--solver NAME] [--threads N]\n\
            bench      [--datasets a,b,c] [--len N] [--seed S] [--threads N]\n\
-                      [--cache-rows R] [--shrink-interval I]\n\
+                      [--cache-rows R] [--shrink-interval I] [--solver NAME]\n\
                       [--out BENCH_solver.json]\n\
                       solver perf baseline: wall time, iterations, kernel\n\
                       entries, cache hit rate — shrink on vs off\n\
-           experiment table1|table2|fig2|fig3|fig4|wss|heuristic|all\n\
+           experiment table1|table2|fig2|fig3|fig4|wss|heuristic|\n\
+                      engine_shootout|all\n\
                       [--perms N --scale S --max-len N --full\n\
                        --datasets a,b,c --eps E --seed S --out report.md]\n\
-           info                              environment / artifact status"
+           info                              environment / artifact status\n\
+         \n\
+         `pasmo <command> --help` (or `pasmo help <command>`) prints the\n\
+         complete flag reference for one command."
     );
 }
 
@@ -93,19 +214,23 @@ fn load_dataset(args: &Args) -> Result<(Arc<Dataset>, Option<suite::DatasetSpec>
     }
 }
 
-fn solver_choice(args: &Args) -> Result<SolverChoice> {
-    let s = args.get_or("solver", "pasmo");
-    Ok(match s.as_str() {
+fn parse_solver(s: &str) -> Result<SolverChoice> {
+    Ok(match s {
         "smo" => SolverChoice::Smo,
         "pasmo" => SolverChoice::Pasmo,
+        "conjugate" => SolverChoice::ConjugateSmo,
         other => {
             if let Some(n) = other.strip_prefix("pasmo-multi:") {
                 SolverChoice::PasmoMulti(n.parse().context("bad N in pasmo-multi:N")?)
             } else {
-                bail!("unknown solver {other:?} (smo | pasmo | pasmo-multi:N)");
+                bail!("unknown solver {other:?} (smo | pasmo | pasmo-multi:N | conjugate)");
             }
         }
     })
+}
+
+fn solver_choice(args: &Args) -> Result<SolverChoice> {
+    parse_solver(&args.get_or("solver", "pasmo"))
 }
 
 fn cmd_datasets() -> Result<()> {
@@ -155,7 +280,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "trained on ℓ={} d={} | C={c} γ={gamma} solver={:?}\n\
          iterations={} time={:.3}s objective={:.6} gap={:.2e} converged={}\n\
-         SV={} BSV={} free/bounded/planning steps = {}/{}/{}\n\
+         SV={} BSV={} free/bounded/planning/conjugate steps = {}/{}/{}/{}\n\
          train accuracy = {:.4}",
         ds.len(),
         ds.dim(),
@@ -170,6 +295,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.telemetry.free_steps,
         res.telemetry.bounded_steps,
         res.telemetry.planning_steps,
+        res.telemetry.conjugate_steps,
         accuracy(&model, &ds),
     );
     if let Some(out) = args.get("out") {
@@ -222,7 +348,9 @@ fn cmd_gridsearch(args: &Args) -> Result<()> {
     let (ds, spec) = load_dataset(args)?;
     let folds = args.get_parse_or("folds", 4usize);
     let warm = if args.flag("cold") { WarmStart::Cold } else { WarmStart::Seeded };
-    let base = Trainer::rbf(1.0, 1.0).threads(args.get_parse_or("threads", 1usize));
+    let base = Trainer::rbf(1.0, 1.0)
+        .solver(solver_choice(args)?)
+        .threads(args.get_parse_or("threads", 1usize));
     let res = grid_search(
         &ds,
         &log_grid(10.0, -1, 3),
@@ -276,6 +404,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
         None => vec!["chess-board-1000".into(), "banana".into()],
     };
+    // Default matrix: the paper's smo/pasmo pair; `--solver NAME` (any
+    // engine, incl. `conjugate`) restricts the run to that one engine.
+    let solvers: Vec<(String, SolverChoice)> = match args.get("solver") {
+        Some(name) => vec![(name.to_string(), parse_solver(name)?)],
+        None => vec![
+            ("smo".to_string(), SolverChoice::Smo),
+            ("pasmo".to_string(), SolverChoice::Pasmo),
+        ],
+    };
 
     println!("==== pasmo bench (solver baseline) ====");
     println!(
@@ -291,9 +428,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let spec = suite::find(name)
             .with_context(|| format!("unknown dataset {name:?} (see `pasmo datasets`)"))?;
         let ds = Arc::new(spec.generate(len, seed));
-        for (solver_name, choice) in
-            [("smo", SolverChoice::Smo), ("pasmo", SolverChoice::Pasmo)]
-        {
+        for (solver_name, choice) in &solvers {
+            let choice = *choice;
             for shrinking in [true, false] {
                 let trainer = Trainer::rbf(spec.c, spec.gamma)
                     .solver(choice)
@@ -317,7 +453,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
                 let mut obj = BTreeMap::new();
                 obj.insert("dataset".into(), Json::Str(name.clone()));
-                obj.insert("solver".into(), Json::Str(solver_name.into()));
+                obj.insert("solver".into(), Json::Str(solver_name.clone()));
                 obj.insert("shrinking".into(), Json::Bool(shrinking));
                 obj.insert("converged".into(), Json::Bool(res.converged));
                 obj.insert("wall_time_s".into(), Json::Num(res.wall_time_s));
@@ -370,11 +506,10 @@ fn exp_options(args: &Args) -> ExpOptions {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
-    let which = args
-        .positional
-        .get(1)
-        .map(|s| s.as_str())
-        .context("need an experiment id (table1|table2|fig2|fig3|fig4|wss|heuristic|all)")?;
+    let which = args.positional.get(1).map(|s| s.as_str()).context(
+        "need an experiment id \
+         (table1|table2|fig2|fig3|fig4|wss|heuristic|engine_shootout|all)",
+    )?;
     let opts = exp_options(args);
     let mut report = Report::new(false);
     match which {
@@ -385,6 +520,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "fig4" => report.section(experiments::fig4(&opts)),
         "wss" => report.section(experiments::wss_ablation(&opts)),
         "heuristic" => report.section(experiments::heuristic_step(&opts)),
+        "engine_shootout" => report.section(experiments::engine_shootout(&opts)),
         "all" => {
             report.section(experiments::table1(&opts));
             report.section(experiments::table2(&opts));
@@ -393,6 +529,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             report.section(experiments::fig4(&opts));
             report.section(experiments::wss_ablation(&opts));
             report.section(experiments::heuristic_step(&opts));
+            report.section(experiments::engine_shootout(&opts));
         }
         other => bail!("unknown experiment {other:?}"),
     }

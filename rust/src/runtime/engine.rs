@@ -15,7 +15,9 @@ use super::manifest::{ArtifactMeta, Manifest};
 
 /// A PJRT CPU engine bound to one artifacts directory.
 pub struct PjrtEngine {
+    /// The PJRT client executing the compiled artifacts.
     pub client: xla::PjRtClient,
+    /// The loaded artifact manifest.
     pub manifest: Manifest,
     execs: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
 }

@@ -10,11 +10,17 @@ use crate::util::json::Json;
 /// Metadata for one AOT artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Path to the HLO-text file.
     pub file: PathBuf,
+    /// HLO entry computation name.
     pub entry: String,
+    /// Argument names, in call order.
     pub arg_names: Vec<String>,
+    /// Argument shapes, aligned with `arg_names`.
     pub arg_shapes: Vec<Vec<usize>>,
+    /// Output shape.
     pub out_shape: Vec<usize>,
     /// Query block size Q.
     pub q: usize,
@@ -27,7 +33,9 @@ pub struct ArtifactMeta {
 /// Parsed MANIFEST.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 

@@ -1,0 +1,610 @@
+//! Conjugate SMO — a third [`Engine`] that augments the SMO working-set
+//! step with conjugate-direction momentum (after Torres-Barrán, Alaíz &
+//! Dorronsoro, *Faster SVM Training via Conjugate SMO*; see PAPERS.md).
+//!
+//! The planning-ahead idea — reuse information from previous iterations
+//! to pick a better step — is carried further here: instead of *solving
+//! a 2×2 system for the predicted next working set* (PA-SMO), the
+//! solver *keeps the previous update direction* `d` and combines it
+//! with the freshly selected SMO direction `v_B = e_i − e_j` into
+//!
+//! ```text
+//! d' = v_B + β·d,     β = − (v_Bᵀ K d) / (dᵀ K d),
+//! ```
+//!
+//! the classical conjugate-direction momentum: `d'` is K-conjugate to
+//! `d` (`d'ᵀKd = 0`), so the exact line search along `d'` does not undo
+//! the progress of the previous step. The step size is the exact
+//! maximizer of the quadratic along `d'`, clipped to the box-feasible
+//! interval:
+//!
+//! ```text
+//! μ = clip( (d'ᵀ∇f) / (d'ᵀKd'),  [lo, hi] ),
+//! ```
+//!
+//! with `[lo, hi]` the largest interval keeping every coordinate of
+//! `α + μ·d'` inside its box (the re-projection of the momentum onto
+//! the current feasible set). Because `K d` is maintained incrementally
+//! (`K d' = (K_{i·} − K_{j·}) + β·K d`, fused into the gradient update),
+//! a conjugate step costs **zero extra kernel evaluations** over a
+//! plain SMO step — the two working-set rows are needed either way.
+//!
+//! **Gain-fallback safety** (mirroring PA-SMO's Lemma-3 discipline): the
+//! conjugate step is taken only when its gain *strictly exceeds* the
+//! gain of the plain SMO step on the same working set; otherwise the
+//! solver reverts to the SMO step. Every iteration therefore gains at
+//! least as much as baseline SMO, so the standard SMO convergence
+//! argument carries over unchanged.
+//!
+//! **Shrinking / warm starts.** The momentum is stored in *original*
+//! coordinates (like PA-SMO's planning history), so shrink swaps never
+//! corrupt it. It is dropped when it can no longer be applied: when a
+//! support coordinate is shrunk out of the active prefix (the direction
+//! would move a fixed variable) or when an unshrink reactivates
+//! coordinates whose `K d` entries went stale. Warm starts need no
+//! special handling — the momentum simply starts empty.
+//!
+//! The engine plugs into the ordinary training surface via
+//! `SolverChoice::ConjugateSmo`:
+//!
+//! ```
+//! use pasmo::solver::SolverChoice;
+//! use pasmo::svm::Trainer;
+//!
+//! let data = std::sync::Arc::new(pasmo::data::synth::chessboard(120, 4, 5));
+//! let conj = Trainer::rbf(100.0, 0.5).solver(SolverChoice::ConjugateSmo).train(&data);
+//! let smo = Trainer::rbf(100.0, 0.5).solver(SolverChoice::Smo).train(&data);
+//! assert!(conj.result.converged);
+//! // Same optimum as baseline SMO (the gain fallback guarantees every
+//! // iteration gains at least as much as the plain SMO step).
+//! let rel = (conj.result.objective - smo.result.objective).abs()
+//!     / (1.0 + smo.result.objective.abs());
+//! assert!(rel < 2e-3);
+//! ```
+
+use std::time::Instant;
+
+use crate::kernel::matrix::Gram;
+
+use super::engine::Engine;
+use super::events::StepKind;
+use super::smo::{SolveResult, SolverConfig, SolverCore};
+use super::state::SolverState;
+use super::step::{clamp, SubProblem, TAU};
+use super::wss::GainKind;
+
+/// The conjugate SMO solver: SMO working-set selection, momentum-
+/// combined update directions, gain fallback to the plain SMO step.
+pub struct ConjugateSmoSolver {
+    /// Shared solver tuning (ε, cache, shrinking, WSS, step policy …).
+    pub config: SolverConfig,
+}
+
+/// A conjugate step decision: the momentum coefficient β and the exact
+/// (clipped) line-search step μ along `v_B + β·d`.
+#[derive(Debug, Clone, Copy)]
+struct ConjugateStep {
+    beta: f64,
+    mu: f64,
+}
+
+/// Conjugate momentum carried between iterations.
+///
+/// `d` and `kd = K·d` are dense vectors over *original* indices;
+/// `support` lists the originals with a non-zero direction component.
+/// `kd` is refreshed over the active prefix on every step (fused into
+/// the gradient update), so its entries are valid exactly for the
+/// originals that stayed active since the momentum was last (re)built —
+/// [`Momentum::revalidate`] drops the momentum whenever that invariant
+/// could break.
+struct Momentum {
+    d: Vec<f64>,
+    kd: Vec<f64>,
+    support: Vec<usize>,
+    have: bool,
+    last_active_len: usize,
+}
+
+impl Momentum {
+    fn new(n: usize, active_len: usize) -> Momentum {
+        Momentum {
+            d: vec![0.0; n],
+            kd: vec![0.0; n],
+            support: Vec::new(),
+            have: false,
+            last_active_len: active_len,
+        }
+    }
+
+    fn clear(&mut self) {
+        for &s in &self.support {
+            self.d[s] = 0.0;
+        }
+        self.support.clear();
+        self.have = false;
+    }
+
+    /// Component of the combined direction `v_B + β·d` at original
+    /// index `s`, for the working set `(i_orig, j_orig)`.
+    #[inline]
+    fn component(&self, beta: f64, s: usize, i_orig: usize, j_orig: usize) -> f64 {
+        let mut ds = beta * self.d[s];
+        if s == i_orig {
+            ds += 1.0;
+        }
+        if s == j_orig {
+            ds -= 1.0;
+        }
+        ds
+    }
+
+    /// Drop momentum the current active view can no longer honor. Called
+    /// once per iteration, after shrinking may have run:
+    /// * `active_len` grew (unshrink) — reactivated originals carry
+    ///   stale `kd` entries, and the next working set may select them;
+    /// * `active_len` shrank and a support coordinate left the prefix —
+    ///   the direction would move a variable the solver fixed.
+    ///
+    /// Swaps only ever happen alongside an `active_len` change
+    /// (`solver::shrink`), so an unchanged length means the view is
+    /// unchanged and the momentum stays valid.
+    fn revalidate(&mut self, state: &SolverState) {
+        let al = state.active_len;
+        if al > self.last_active_len {
+            self.clear();
+        } else if al < self.last_active_len
+            && self.have
+            && self.support.iter().any(|&s| state.pos[s] >= al)
+        {
+            self.clear();
+        }
+        self.last_active_len = al;
+    }
+
+    /// Replace the stored direction with `dir` (already combined and
+    /// filtered to non-zero components) and rescale if its magnitude
+    /// drifted — the direction's scale is arbitrary (β is scale-free),
+    /// so renormalizing keeps repeated |β| > 1 chains finite.
+    fn store_direction(&mut self, dir: &[(usize, f64)]) {
+        for &s in &self.support {
+            self.d[s] = 0.0;
+        }
+        self.support.clear();
+        let mut maxabs = 0.0f64;
+        for &(s, ds) in dir {
+            if ds != 0.0 {
+                self.d[s] = ds;
+                self.support.push(s);
+                maxabs = maxabs.max(ds.abs());
+            }
+        }
+        self.have = !self.support.is_empty();
+        if maxabs > 1e12 {
+            let inv = 1.0 / maxabs;
+            for &s in &self.support {
+                self.d[s] *= inv;
+            }
+            for v in self.kd.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+impl ConjugateSmoSolver {
+    /// A conjugate SMO engine with the given tuning.
+    pub fn new(config: SolverConfig) -> ConjugateSmoSolver {
+        ConjugateSmoSolver { config }
+    }
+
+    /// Evaluate the conjugate step for working set `(i_orig, j_orig)`
+    /// against the momentum. Returns `None` — *revert to the SMO step* —
+    /// when the momentum is degenerate (vanishing curvature), the line
+    /// search collapses, or the conjugate gain does not strictly beat
+    /// the plain SMO step's gain `gain_smo`.
+    ///
+    /// Reads only the maintained state and `K d` — no kernel entries.
+    fn try_conjugate(
+        state: &SolverState,
+        mom: &Momentum,
+        sp: &SubProblem,
+        i_orig: usize,
+        j_orig: usize,
+        gain_smo: f64,
+    ) -> Option<ConjugateStep> {
+        // Curvature of the previous direction, dᵀKd.
+        let mut qd = 0.0;
+        for &s in &mom.support {
+            qd += mom.d[s] * mom.kd[s];
+        }
+        if !(qd > TAU) {
+            return None;
+        }
+        // β = −(v_BᵀKd)/(dᵀKd) makes d' = v_B + β·d K-conjugate to d.
+        let t = mom.kd[i_orig] - mom.kd[j_orig];
+        let beta = -t / qd;
+        if !beta.is_finite() {
+            return None;
+        }
+        // Curvature along d': q_c = v_BᵀKv_B − t²/qd (Gram–Schmidt step).
+        let qc = sp.q - t * t / qd;
+        if !(qc > TAU) {
+            return None;
+        }
+        // Linear term d'ᵀ∇f = (G_i − G_j) + β·(dᵀG).
+        let mut dg = 0.0;
+        for &s in &mom.support {
+            dg += mom.d[s] * state.grad[state.pos[s]];
+        }
+        let lc = sp.l + beta * dg;
+        // Box re-projection: the largest μ-interval keeping every moved
+        // coordinate feasible. Each coordinate's interval contains 0, so
+        // lo ≤ 0 ≤ hi always holds.
+        let (lo, hi) = Self::direction_bounds(state, mom, beta, i_orig, j_orig);
+        let mu = clamp(lc / qc, lo, hi);
+        if !mu.is_finite() || mu == 0.0 {
+            return None;
+        }
+        // Gain of the (possibly clipped) exact line search along d'.
+        let gain = lc * mu - 0.5 * qc * mu * mu;
+        if gain > gain_smo {
+            Some(ConjugateStep { beta, mu })
+        } else {
+            None
+        }
+    }
+
+    /// Feasible step interval along `v_B + β·d` given the current α.
+    fn direction_bounds(
+        state: &SolverState,
+        mom: &Momentum,
+        beta: f64,
+        i_orig: usize,
+        j_orig: usize,
+    ) -> (f64, f64) {
+        let mut lo = f64::NEG_INFINITY;
+        let mut hi = f64::INFINITY;
+        let mut consider = |s: usize, ds: f64| {
+            if ds == 0.0 {
+                return;
+            }
+            let p = state.pos[s];
+            let (a, l, u) = (state.alpha[p], state.lower[p], state.upper[p]);
+            if ds > 0.0 {
+                hi = hi.min((u - a) / ds);
+                lo = lo.max((l - a) / ds);
+            } else {
+                hi = hi.min((l - a) / ds);
+                lo = lo.max((u - a) / ds);
+            }
+        };
+        for &s in &mom.support {
+            consider(s, mom.component(beta, s, i_orig, j_orig));
+        }
+        if mom.d[i_orig] == 0.0 {
+            consider(i_orig, 1.0);
+        }
+        if mom.d[j_orig] == 0.0 {
+            consider(j_orig, -1.0);
+        }
+        (lo, hi)
+    }
+
+    fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
+        let mut mom = Momentum::new(core.state.len(), core.state.active_len);
+        // Combined-direction scratch, reused across iterations.
+        let mut dir: Vec<(usize, f64)> = Vec::new();
+        let converged = loop {
+            if let Some(done) = core.check_stop_and_shrink() {
+                break done;
+            }
+            mom.revalidate(&core.state);
+            let Some(sel) = core.select(GainKind::Approx, &[]) else {
+                break true; // no violating pair on the active set
+            };
+            core.iterations += 1;
+            let (i, j) = (sel.i, sel.j);
+            let sp = core.subproblem(i, j);
+            let mu_smo = self.config.step_policy.step(&sp);
+            let gain_smo = sp.gain(mu_smo);
+            let (i_orig, j_orig) = (core.state.perm[i], core.state.perm[j]);
+
+            let conj = if mom.have {
+                let attempt =
+                    Self::try_conjugate(&core.state, &mom, &sp, i_orig, j_orig, gain_smo);
+                if attempt.is_none() {
+                    core.telemetry.conjugate_reverted += 1;
+                }
+                attempt
+            } else {
+                None
+            };
+
+            match conj {
+                Some(ConjugateStep { beta, mu }) => {
+                    // Materialize d' = v_B + β·d sparsely over its support.
+                    dir.clear();
+                    for &s in &mom.support {
+                        let ds = mom.component(beta, s, i_orig, j_orig);
+                        if ds != 0.0 {
+                            dir.push((s, ds));
+                        }
+                    }
+                    if mom.d[i_orig] == 0.0 {
+                        dir.push((i_orig, 1.0));
+                    }
+                    if mom.d[j_orig] == 0.0 {
+                        dir.push((j_orig, -1.0));
+                    }
+                    core.apply_direction_and_update(i, j, beta, &dir, &mut mom.kd, mu);
+                    mom.store_direction(&dir);
+                    core.telemetry.count_step(StepKind::Conjugate);
+                }
+                None => {
+                    // Plain SMO step; the applied pair direction (with its
+                    // kernel image, seeded by β = 0) becomes the momentum.
+                    // Free/bounded accounting matches `SolverCore::smo_step`
+                    // (shared policy definition), so step-kind telemetry is
+                    // comparable across engines.
+                    let free = self.config.step_policy.step_is_free(&sp, mu_smo);
+                    if mu_smo != 0.0 {
+                        dir.clear();
+                        dir.push((i_orig, 1.0));
+                        dir.push((j_orig, -1.0));
+                        core.apply_direction_and_update(i, j, 0.0, &dir, &mut mom.kd, mu_smo);
+                        mom.store_direction(&dir);
+                    } else {
+                        mom.clear();
+                    }
+                    core.telemetry.count_step(if free {
+                        StepKind::SmoFree
+                    } else {
+                        StepKind::SmoAtBound
+                    });
+                }
+            }
+            if core.telemetry.config.objective_trace {
+                let obj = core.state.objective();
+                let it = core.iterations;
+                core.telemetry.record_objective(it, || obj);
+            }
+        };
+        core.finish(converged, started)
+    }
+}
+
+impl Engine for ConjugateSmoSolver {
+    fn name(&self) -> &'static str {
+        "conjugate"
+    }
+
+    fn solve_state(&self, state: SolverState, gram: &mut Gram) -> SolveResult {
+        let started = Instant::now();
+        let core = SolverCore::from_state(state, gram, self.config);
+        self.run(core, started)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::matrix::DenseGram;
+    use crate::kernel::{KernelFunction, NativeRowComputer};
+    use crate::solver::events::TelemetryConfig;
+    use crate::solver::reference::solve_reference;
+    use crate::solver::smo::tests::{make_gram, random_problem, solve_cls};
+    use crate::solver::smo::SmoSolver;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn converges_and_matches_smo_objective() {
+        for seed in [1u64, 5, 9] {
+            let ds = random_problem(80, seed);
+            let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+            let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+            let smo =
+                solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 2.0, &mut g1);
+            let cj = solve_cls(
+                &ConjugateSmoSolver::new(SolverConfig::default()),
+                ds.labels(),
+                2.0,
+                &mut g2,
+            );
+            assert!(cj.converged, "seed {seed}");
+            assert!(cj.gap <= 1e-3 + 1e-9, "seed {seed}: {}", cj.gap);
+            let rel = (cj.objective - smo.objective).abs() / (1.0 + smo.objective.abs());
+            assert!(rel < 2e-3, "seed {seed}: {} vs {}", cj.objective, smo.objective);
+        }
+    }
+
+    #[test]
+    fn conjugate_steps_occur_and_are_counted() {
+        // Overlapping classes at large C: many free steps, so momentum
+        // builds and the conjugate direction strictly beats the plain
+        // step whenever v_BᵀKd ≠ 0 (which is the typical case).
+        let ds = random_problem(60, 3);
+        let mut gram = make_gram(&ds, 2.0, 1 << 22);
+        let cfg = SolverConfig {
+            telemetry: TelemetryConfig::full(1),
+            shrinking: false,
+            ..Default::default()
+        };
+        let res = solve_cls(&ConjugateSmoSolver::new(cfg), ds.labels(), 1e4, &mut gram);
+        assert!(res.converged);
+        assert!(
+            res.telemetry.conjugate_steps > 0,
+            "no conjugate steps: {:?}",
+            res.telemetry
+        );
+        assert_eq!(res.telemetry.total_steps(), res.iterations);
+    }
+
+    #[test]
+    fn objective_is_monotone_and_gains_at_least_the_smo_step() {
+        // The gain-fallback guarantee in observable form: the objective
+        // trace never decreases (each step gains ≥ the plain SMO step's
+        // positive gain).
+        let ds = random_problem(60, 7);
+        let mut gram = make_gram(&ds, 1.5, 1 << 22);
+        let cfg = SolverConfig {
+            telemetry: TelemetryConfig::full(1),
+            shrinking: false,
+            ..Default::default()
+        };
+        let res = solve_cls(&ConjugateSmoSolver::new(cfg), ds.labels(), 100.0, &mut gram);
+        assert!(res.converged);
+        let trace = &res.telemetry.objective_trace;
+        assert!(trace.len() > 2);
+        for w in trace.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 - 1e-9,
+                "objective decreased: {} -> {}",
+                w[0].1,
+                w[1].1
+            );
+        }
+    }
+
+    #[test]
+    fn matches_reference_oracle_at_tight_eps() {
+        for seed in [2u64, 4] {
+            let ds = random_problem(24, seed);
+            let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.8 });
+            let dense = DenseGram::materialize(&nc);
+            let c = 5.0;
+            let reference = solve_reference(&dense, ds.labels(), c, 200_000, 1e-14);
+            let cfg = SolverConfig { eps: 1e-6, ..Default::default() };
+            let mut gram = make_gram(&ds, 0.8, 1 << 22);
+            let cj = solve_cls(&ConjugateSmoSolver::new(cfg), ds.labels(), c, &mut gram);
+            let tol = 1e-4 * (1.0 + reference.objective.abs());
+            assert!(
+                (cj.objective - reference.objective).abs() < tol,
+                "seed {seed}: CSMO {} vs ref {}",
+                cj.objective,
+                reference.objective
+            );
+        }
+    }
+
+    #[test]
+    fn final_objective_never_worse_than_smo_across_seeds() {
+        let mut rng = Pcg::new(321);
+        for _ in 0..5 {
+            let seed = rng.next_u64();
+            let ds = random_problem(40, seed);
+            let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+            let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+            let smo =
+                solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 10.0, &mut g1);
+            let cj = solve_cls(
+                &ConjugateSmoSolver::new(SolverConfig::default()),
+                ds.labels(),
+                10.0,
+                &mut g2,
+            );
+            assert!(
+                cj.objective >= smo.objective - 1e-3 * (1.0 + smo.objective.abs()),
+                "seed {seed}: CSMO {} < SMO {}",
+                cj.objective,
+                smo.objective
+            );
+        }
+    }
+
+    #[test]
+    fn feasibility_invariants_hold_throughout() {
+        use crate::util::quickcheck::forall;
+        forall(
+            "conjugate-feasible-solutions",
+            8,
+            |g| (16 + g.below(48), g.next_u64(), 10f64.powf(g.range(-1.0, 3.0))),
+            |&(n, seed, c)| {
+                let ds = random_problem(n, seed);
+                let mut gram = make_gram(&ds, 1.0, 1 << 22);
+                let res = solve_cls(
+                    &ConjugateSmoSolver::new(SolverConfig::default()),
+                    ds.labels(),
+                    c,
+                    &mut gram,
+                );
+                // The momentum direction sums to zero by construction; a
+                // long β-chain may accumulate float dust, never more.
+                let sum: f64 = res.alpha.iter().sum();
+                if sum.abs() > 1e-6 {
+                    return Err(format!("equality constraint violated: {sum}"));
+                }
+                for (i, &a) in res.alpha.iter().enumerate() {
+                    let y = ds.label(i) as f64;
+                    let (lo, hi) = ((y * c).min(0.0), (y * c).max(0.0));
+                    if a < lo - 1e-9 || a > hi + 1e-9 {
+                        return Err(format!("box violated at {i}: {a} not in [{lo},{hi}]"));
+                    }
+                }
+                if !res.converged {
+                    return Err("did not converge".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_conjugate_matches_unshrunk_objective() {
+        let ds = random_problem(120, 17);
+        let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+        let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+        // An aggressive shrink period exercises the momentum-drop paths
+        // (support shrunk away, unshrink reactivation) many times.
+        let tight = SolverConfig { shrink_interval: 7, ..Default::default() };
+        let on = solve_cls(
+            &ConjugateSmoSolver::new(SolverConfig { shrinking: true, ..tight }),
+            ds.labels(),
+            1.0,
+            &mut g1,
+        );
+        let off = solve_cls(
+            &ConjugateSmoSolver::new(SolverConfig { shrinking: false, ..tight }),
+            ds.labels(),
+            1.0,
+            &mut g2,
+        );
+        assert!(on.converged && off.converged);
+        let rel = (on.objective - off.objective).abs() / (1.0 + off.objective.abs());
+        assert!(rel < 2e-3, "{} vs {}", on.objective, off.objective);
+    }
+
+    #[test]
+    fn solves_are_bit_deterministic() {
+        let ds = random_problem(90, 21);
+        let engine = ConjugateSmoSolver::new(SolverConfig::default());
+        let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+        let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+        let a = solve_cls(&engine, ds.labels(), 50.0, &mut g1);
+        let b = solve_cls(&engine, ds.labels(), 50.0, &mut g2);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn warm_start_from_own_solution_converges_immediately() {
+        use crate::solver::problem::QpProblem;
+        let ds = random_problem(80, 13);
+        let engine = ConjugateSmoSolver::new(SolverConfig::default());
+        let mut g1 = make_gram(&ds, 1.0, 1 << 22);
+        let cold = engine.solve(&QpProblem::classification(ds.labels(), 10.0), &mut g1);
+        assert!(cold.converged);
+        let mut g2 = make_gram(&ds, 1.0, 1 << 22);
+        let warm = engine.solve(
+            &QpProblem::classification(ds.labels(), 10.0).warm_start(cold.alpha.clone()),
+            &mut g2,
+        );
+        assert!(warm.converged);
+        assert!(
+            warm.iterations <= cold.iterations / 4,
+            "warm restart took {} iterations vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+}

@@ -3,12 +3,14 @@
 //!
 //! Everything above the solver layer — `svm::Trainer`, ε-SVR, one-class,
 //! the coordinator drivers — talks to a `dyn Engine` built by the single
-//! [`EngineConfig::build`] factory. Adding a solver (conjugate SMO,
-//! Frank-Wolfe, …) means implementing [`Engine`] and adding one factory
-//! arm; no caller changes.
+//! [`EngineConfig::build`] factory. Adding a solver (Frank-Wolfe, …)
+//! means implementing [`Engine`] and adding one factory arm; no caller
+//! changes — exactly how the conjugate SMO engine
+//! (`solver::conjugate`, PR 4) plugged in after PA-SMO.
 
 use crate::kernel::matrix::Gram;
 
+use super::conjugate::ConjugateSmoSolver;
 use super::pasmo::PasmoSolver;
 use super::problem::QpProblem;
 use super::smo::{SmoSolver, SolveResult, SolverConfig};
@@ -24,10 +26,30 @@ pub enum SolverChoice {
     /// Multiple-planning-ahead PA-SMO with N recent working sets (§7.4).
     /// `N = 0` is clamped to 1 (identical to [`SolverChoice::Pasmo`]).
     PasmoMulti(usize),
+    /// Conjugate SMO (`solver::conjugate`): conjugate-direction momentum
+    /// on top of the SMO step, with a gain fallback to plain SMO.
+    ConjugateSmo,
 }
 
 /// A QP engine: anything that can drive the paper's general dual problem
 /// to an ε-approximate KKT point over a [`Gram`] view.
+///
+/// ```
+/// use std::sync::Arc;
+/// use pasmo::data::Dataset;
+/// use pasmo::kernel::matrix::Gram;
+/// use pasmo::kernel::{KernelFunction, NativeRowComputer};
+/// use pasmo::solver::{Engine, EngineConfig, QpProblem, SolverChoice, SolverConfig};
+///
+/// let ds = Arc::new(Dataset::new(1, vec![1.0, -1.0], vec![1, -1]));
+/// let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+/// let mut gram = Gram::new(Box::new(nc), 1 << 20);
+/// let engine =
+///     EngineConfig::new(SolverChoice::ConjugateSmo, SolverConfig::default()).build();
+/// let res = engine.solve(&QpProblem::classification(ds.labels(), 10.0), &mut gram);
+/// assert!(res.converged);
+/// assert!(res.gap <= 1e-3);
+/// ```
 pub trait Engine {
     /// Engine name for reports and diagnostics.
     fn name(&self) -> &'static str;
@@ -50,11 +72,14 @@ pub trait Engine {
 /// Complete engine specification: the algorithm plus its shared tuning.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
+    /// Which solver family member to build.
     pub solver: SolverChoice,
+    /// Shared solver tuning handed to the built engine.
     pub config: SolverConfig,
 }
 
 impl EngineConfig {
+    /// Pair a solver choice with its tuning.
     pub fn new(solver: SolverChoice, config: SolverConfig) -> EngineConfig {
         EngineConfig { solver, config }
     }
@@ -73,6 +98,7 @@ impl EngineConfig {
                 cfg.planning_candidates = n.max(1);
                 Box::new(PasmoSolver::new(cfg))
             }
+            SolverChoice::ConjugateSmo => Box::new(ConjugateSmoSolver::new(cfg)),
         }
     }
 }
@@ -90,6 +116,10 @@ mod tests {
         assert_eq!(
             EngineConfig::new(SolverChoice::PasmoMulti(4), cfg).build().name(),
             "pasmo"
+        );
+        assert_eq!(
+            EngineConfig::new(SolverChoice::ConjugateSmo, cfg).build().name(),
+            "conjugate"
         );
     }
 
@@ -139,7 +169,12 @@ mod tests {
         let ds = random_problem(50, 9);
         let problem = QpProblem::classification(ds.labels(), 2.0);
         let mut objectives = Vec::new();
-        for choice in [SolverChoice::Smo, SolverChoice::Pasmo, SolverChoice::PasmoMulti(3)] {
+        for choice in [
+            SolverChoice::Smo,
+            SolverChoice::Pasmo,
+            SolverChoice::PasmoMulti(3),
+            SolverChoice::ConjugateSmo,
+        ] {
             let mut gram = make_gram(&ds, 1.0, 1 << 22);
             let engine = EngineConfig::new(choice, SolverConfig::default()).build();
             let res = engine.solve(&problem, &mut gram);

@@ -13,6 +13,9 @@ pub enum StepKind {
     SmoAtBound,
     /// Planning-ahead step (Algorithm 4 took the planned μ).
     Planning,
+    /// Conjugate-direction step (the `solver::conjugate` engine took the
+    /// momentum-combined direction instead of the plain SMO step).
+    Conjugate,
 }
 
 /// Which streams to record.
@@ -32,14 +35,17 @@ pub struct TelemetryConfig {
 }
 
 impl TelemetryConfig {
+    /// All streams disabled (the timing-run default).
     pub fn off() -> TelemetryConfig {
         TelemetryConfig::default()
     }
 
+    /// Only the planning-step ratio stream (Figure 3 input).
     pub fn fig3() -> TelemetryConfig {
         TelemetryConfig { planning_ratios: true, ..Default::default() }
     }
 
+    /// Every stream enabled at the given sampling period.
     pub fn full(trace_every: usize) -> TelemetryConfig {
         TelemetryConfig {
             planning_ratios: true,
@@ -54,12 +60,21 @@ impl TelemetryConfig {
 /// Collected telemetry.
 #[derive(Debug, Clone, Default)]
 pub struct Telemetry {
+    /// The stream configuration this telemetry was collected under.
     pub config: TelemetryConfig,
+    /// Free (interior-Newton) SMO steps taken.
     pub free_steps: u64,
+    /// SMO steps clipped at the box boundary.
     pub bounded_steps: u64,
+    /// Planning-ahead steps taken (PA-SMO).
     pub planning_steps: u64,
     /// Planning attempts that reverted to a SMO step (box/degeneracy).
     pub planning_reverted: u64,
+    /// Conjugate-direction steps taken (conjugate SMO).
+    pub conjugate_steps: u64,
+    /// Conjugate attempts that fell back to the plain SMO step (the
+    /// momentum step would have gained less, or was degenerate).
+    pub conjugate_reverted: u64,
     /// μ/μ*−1 per planning step (Figure 3 input).
     pub planning_ratios: Vec<f64>,
     /// (iteration, f(α)) samples.
@@ -71,16 +86,19 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
+    /// Fresh, empty telemetry for the given stream configuration.
     pub fn new(config: TelemetryConfig) -> Telemetry {
         Telemetry { config, ..Default::default() }
     }
 
+    /// Record what the current iteration did.
     #[inline]
     pub fn count_step(&mut self, kind: StepKind) {
         match kind {
             StepKind::SmoFree => self.free_steps += 1,
             StepKind::SmoAtBound => self.bounded_steps += 1,
             StepKind::Planning => self.planning_steps += 1,
+            StepKind::Conjugate => self.conjugate_steps += 1,
         }
         if self.config.kind_trace {
             self.kind_trace.push(kind);
@@ -101,6 +119,8 @@ impl Telemetry {
         iter % every == 0
     }
 
+    /// Record an objective sample if the stream is on and the iteration
+    /// is due; the closure is never evaluated otherwise.
     #[inline]
     pub fn record_objective(&mut self, iter: u64, f: impl FnOnce() -> f64) {
         if self.config.objective_trace && self.due(iter) {
@@ -109,6 +129,8 @@ impl Telemetry {
         }
     }
 
+    /// Record a KKT-gap sample if the stream is on and the iteration is
+    /// due; the closure is never evaluated otherwise.
     #[inline]
     pub fn record_gap(&mut self, iter: u64, gap: impl FnOnce() -> f64) {
         if self.config.gap_trace && self.due(iter) {
@@ -117,8 +139,9 @@ impl Telemetry {
         }
     }
 
+    /// Total iterations accounted for, across every step kind.
     pub fn total_steps(&self) -> u64 {
-        self.free_steps + self.bounded_steps + self.planning_steps
+        self.free_steps + self.bounded_steps + self.planning_steps + self.conjugate_steps
     }
 }
 

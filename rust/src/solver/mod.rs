@@ -15,6 +15,10 @@
 //! * [`smo`] — Algorithm 1 (the LIBSVM-equivalent baseline).
 //! * [`pasmo`] — Algorithms 2/4/5: the planning-ahead solver, including
 //!   the multiple-planning-ahead variant (§7.4).
+//! * [`conjugate`] — conjugate SMO: the planning idea carried further
+//!   with conjugate-direction momentum and an exact line search,
+//!   falling back to the plain SMO step whenever momentum would lose
+//!   gain (related work; see PAPERS.md).
 //! * [`shrink`] — shrinking heuristic + gradient reconstruction.
 //! * [`events`] — telemetry (step-kind counts, μ/μ* ratios for Fig. 3,
 //!   objective/gap traces).
@@ -25,6 +29,7 @@
 //! * [`engine`] — the [`Engine`] trait every solver implements, plus the
 //!   single [`SolverChoice`] → engine factory ([`EngineConfig`]).
 
+pub mod conjugate;
 pub mod engine;
 pub mod events;
 pub mod pasmo;
@@ -36,6 +41,7 @@ pub mod state;
 pub mod step;
 pub mod wss;
 
+pub use conjugate::ConjugateSmoSolver;
 pub use engine::{Engine, EngineConfig, SolverChoice};
 pub use events::{StepKind, Telemetry, TelemetryConfig};
 pub use pasmo::PasmoSolver;

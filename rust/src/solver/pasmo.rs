@@ -29,6 +29,7 @@ use super::wss::{GainKind, Selection};
 
 /// The PA-SMO solver (Algorithm 5).
 pub struct PasmoSolver {
+    /// Shared solver tuning (ε, cache, shrinking, WSS, step policy …).
     pub config: SolverConfig,
 }
 
@@ -40,6 +41,7 @@ struct Plan {
 }
 
 impl PasmoSolver {
+    /// A planning-ahead SMO engine with the given tuning.
     pub fn new(config: SolverConfig) -> PasmoSolver {
         PasmoSolver { config }
     }

@@ -19,6 +19,27 @@ use crate::kernel::matrix::Gram;
 use super::state::SolverState;
 
 /// A general dual QP instance, independent of any solver.
+///
+/// Every training task is built by one of the constructors:
+///
+/// ```
+/// use pasmo::solver::QpProblem;
+///
+/// // C-SVC (signed-α convention): box sides follow the labels.
+/// let svc = QpProblem::classification(&[1, -1], 2.0);
+/// assert_eq!(svc.lower, vec![0.0, -2.0]);
+/// assert_eq!(svc.upper, vec![2.0, 0.0]);
+/// assert_eq!(svc.equality_sum, 0.0);
+///
+/// // ε-SVR doubles the variables (α and −α* halves).
+/// let svr = QpProblem::svr(&[0.5, -0.5], 1.0, 0.1);
+/// assert_eq!(svr.len(), 4);
+///
+/// // One-class: Σα = 1 with a feasible LIBSVM-style warm start.
+/// let oc = QpProblem::one_class(10, 0.5);
+/// assert_eq!(oc.equality_sum, 1.0);
+/// assert!(oc.alpha0.is_some());
+/// ```
 #[derive(Debug, Clone)]
 pub struct QpProblem {
     /// Linear term `p` (`y` for classification, `y ∓ ε` for SVR, 0 for
@@ -119,6 +140,7 @@ impl QpProblem {
         self.linear.len()
     }
 
+    /// Is this a zero-variable problem?
     pub fn is_empty(&self) -> bool {
         self.linear.is_empty()
     }

@@ -47,8 +47,11 @@ pub fn project(v: &[f64], lo: &[f64], hi: &[f64]) -> Vec<f64> {
 /// Result of the reference solve.
 #[derive(Debug, Clone)]
 pub struct ReferenceResult {
+    /// The solution found by projected gradient ascent.
     pub alpha: Vec<f64>,
+    /// Dual objective f(α) at the solution.
     pub objective: f64,
+    /// Ascent iterations performed.
     pub iterations: usize,
 }
 

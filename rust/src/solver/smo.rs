@@ -11,7 +11,7 @@ use super::engine::Engine;
 use super::events::{StepKind, Telemetry, TelemetryConfig};
 use super::shrink;
 use super::state::SolverState;
-use super::step::{OverStep, SubProblem, TAU};
+use super::step::{OverStep, SubProblem};
 use super::wss::{self, GainKind, Selection};
 
 /// Working-set selection flavour for the baseline solver.
@@ -85,17 +85,26 @@ pub struct SolveResult {
     /// Dual variables in *original* coordinates (shrink permutations are
     /// undone before the result leaves the solver).
     pub alpha: Vec<f64>,
+    /// Bias term b from the KKT conditions (see `SolverState::bias`).
     pub bias: f64,
+    /// Iterations performed (= SMO-family steps taken).
     pub iterations: u64,
     /// Final dual objective f(α).
     pub objective: f64,
     /// Final (full) KKT gap.
     pub gap: f64,
+    /// Did the solve reach the ε-approximate KKT point (vs hitting the
+    /// iteration cap)?
     pub converged: bool,
+    /// Support vectors (|αᵢ| > 0) in the solution.
     pub sv: usize,
+    /// Bounded support vectors (αᵢ at its box bound).
     pub bsv: usize,
+    /// Wall-clock duration of the solve in seconds.
     pub wall_time_s: f64,
+    /// Collected telemetry streams (step kinds, ratios, traces).
     pub telemetry: Telemetry,
+    /// Row-cache statistics over this solve.
     pub cache_stats: CacheStats,
     /// Kernel entries evaluated by the Gram over this solve (diagonal +
     /// row computations at their actual, possibly shrunk, lengths +
@@ -256,30 +265,67 @@ impl<'a> SolverCore<'a> {
         let (row_i, row_j) = self.gram.rows_pair(i, j);
         let (row_i, row_j) = (&row_i[..al], &row_j[..al]);
         let st = &mut self.state;
-        let grad = &mut st.grad[..al];
-        let alpha = &st.alpha[..al];
-        let lower = &st.lower[..al];
-        let upper = &st.upper[..al];
-        let mut m = f64::NEG_INFINITY;
-        let mut big_m = f64::INFINITY;
-        let mut argmax = None;
-        for n in 0..al {
-            let g = grad[n] - mu * (row_i[n] as f64 - row_j[n] as f64);
-            grad[n] = g;
-            if g > m && alpha[n] < upper[n] {
-                m = g;
-                argmax = Some(n);
-            }
-            if g < big_m && alpha[n] > lower[n] {
-                big_m = g;
-            }
+        self.cached_scan = Some(fused_scan_update(
+            &mut st.grad[..al],
+            &st.alpha[..al],
+            &st.lower[..al],
+            &st.upper[..al],
+            &st.perm[..al],
+            mu,
+            |n| row_i[n] as f64 - row_j[n] as f64,
+        ));
+    }
+
+    /// Direction-step core shared with `solver::conjugate`: apply
+    /// `α ← α + μ·d` for the sparse original-coordinate direction
+    /// `d = v_B + β·d_prev` (given as `(original index, component)`
+    /// pairs), refresh the direction's kernel image in place
+    /// (`kd[s] ← (K_{i·} − K_{j·})[s] + β·kd[s]` for every active
+    /// original index `s` — so `kd` holds `K·d` for the *new* direction
+    /// afterwards), and update the active gradient `G ← G − μ·K·d` with
+    /// the same fused stopping scan as [`SolverCore::apply_and_update`].
+    ///
+    /// `(i, j)` is the current working set in *positions* (its rows are
+    /// fetched through the cache, exactly the rows a plain SMO step
+    /// would need). With `β = 0` and `dir = [(iₒ, 1), (jₒ, −1)]` this
+    /// degenerates to `apply_and_update` plus seeding `kd` with
+    /// `K_{i·} − K_{j·}` — the momentum bootstrap after a fallback step.
+    ///
+    /// The caller guarantees μ lies in the direction's feasible interval;
+    /// the per-coordinate clamp only snaps floating-point dust, exactly
+    /// like [`SolverState::apply_step`].
+    pub(crate) fn apply_direction_and_update(
+        &mut self,
+        i: usize,
+        j: usize,
+        beta: f64,
+        dir: &[(usize, f64)],
+        kd: &mut [f64],
+        mu: f64,
+    ) {
+        for &(s, ds) in dir {
+            let p = self.state.pos[s];
+            self.state.alpha[p] = (self.state.alpha[p] + mu * ds)
+                .clamp(self.state.lower[p], self.state.upper[p]);
         }
-        let gap = if m == f64::NEG_INFINITY || big_m == f64::INFINITY {
-            f64::NEG_INFINITY
-        } else {
-            m - big_m
-        };
-        self.cached_scan = Some((m, big_m, gap, argmax.map(|p| st.perm[p])));
+        let al = self.state.active_len;
+        let (row_i, row_j) = self.gram.rows_pair(i, j);
+        let (row_i, row_j) = (&row_i[..al], &row_j[..al]);
+        let st = &mut self.state;
+        let perm = &st.perm[..al];
+        self.cached_scan = Some(fused_scan_update(
+            &mut st.grad[..al],
+            &st.alpha[..al],
+            &st.lower[..al],
+            &st.upper[..al],
+            perm,
+            mu,
+            |n| {
+                let kdn = (row_i[n] as f64 - row_j[n] as f64) + beta * kd[perm[n]];
+                kd[perm[n]] = kdn;
+                kdn
+            },
+        ));
     }
 
     /// One plain SMO step (eq. 2 / configured policy) on the selected pair.
@@ -287,13 +333,7 @@ impl<'a> SolverCore<'a> {
     pub fn smo_step(&mut self, sel: Selection) -> (f64, bool) {
         let sp = self.subproblem(sel.i, sel.j);
         let mu = self.config.step_policy.step(&sp);
-        let free = match self.config.step_policy {
-            OverStep::Newton => sp.is_free(),
-            // over-relaxed steps count as free if uncut
-            OverStep::OverRelaxed(_) => {
-                mu.is_finite() && mu > sp.lo && mu < sp.hi && sp.q > TAU
-            }
-        };
+        let free = self.config.step_policy.step_is_free(&sp, mu);
         self.apply_and_update(sel.i, sel.j, mu);
         self.telemetry.count_step(if free {
             StepKind::SmoFree
@@ -325,12 +365,56 @@ impl<'a> SolverCore<'a> {
     }
 }
 
+/// The fused gradient-update + stopping-scan body shared by
+/// [`SolverCore::apply_and_update`] (plain SMO pair steps) and
+/// [`SolverCore::apply_direction_and_update`] (conjugate directions):
+/// one linear sweep over the contiguous active prefix that updates
+/// `grad[n] ← grad[n] − μ·kdn(n)` and computes the next iteration's
+/// stopping quantities with the updated gradient still in registers.
+/// `kdn(n)` is the direction's kernel image at position `n`; it is
+/// monomorphized and inlined per caller, so the SMO hot path keeps its
+/// plain two-row codegen. Returns the `cached_scan` tuple
+/// `(m, big_m, gap, argmax_up in original coordinates)`.
+#[inline(always)]
+fn fused_scan_update(
+    grad: &mut [f64],
+    alpha: &[f64],
+    lower: &[f64],
+    upper: &[f64],
+    perm: &[usize],
+    mu: f64,
+    mut kdn: impl FnMut(usize) -> f64,
+) -> (f64, f64, f64, Option<usize>) {
+    let mut m = f64::NEG_INFINITY;
+    let mut big_m = f64::INFINITY;
+    let mut argmax = None;
+    for n in 0..grad.len() {
+        let g = grad[n] - mu * kdn(n);
+        grad[n] = g;
+        if g > m && alpha[n] < upper[n] {
+            m = g;
+            argmax = Some(n);
+        }
+        if g < big_m && alpha[n] > lower[n] {
+            big_m = g;
+        }
+    }
+    let gap = if m == f64::NEG_INFINITY || big_m == f64::INFINITY {
+        f64::NEG_INFINITY
+    } else {
+        m - big_m
+    };
+    (m, big_m, gap, argmax.map(|p| perm[p]))
+}
+
 /// Algorithm 1 — the baseline SMO solver.
 pub struct SmoSolver {
+    /// Shared solver tuning (ε, cache, shrinking, WSS, step policy …).
     pub config: SolverConfig,
 }
 
 impl SmoSolver {
+    /// A baseline SMO engine with the given tuning.
     pub fn new(config: SolverConfig) -> SmoSolver {
         SmoSolver { config }
     }

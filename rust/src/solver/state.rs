@@ -107,6 +107,7 @@ impl SolverState {
         self.y.len()
     }
 
+    /// Is this a zero-variable state?
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }

@@ -11,9 +11,13 @@ pub const TAU: f64 = 1e-12;
 /// The 1-D sub-problem `max_μ  l·μ − ½ q·μ²  s.t. lo ≤ μ ≤ hi`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SubProblem {
+    /// Linear term `l = v_Bᵀ∇f(α) = G_i − G_j` (the pair's violation).
     pub l: f64,
+    /// Curvature `q = v_BᵀKv_B = K_ii − 2K_ij + K_jj ≥ 0`.
     pub q: f64,
+    /// Lower feasible step bound `L̃` (≤ 0).
     pub lo: f64,
+    /// Upper feasible step bound `Ũ` (≥ 0).
     pub hi: f64,
 }
 
@@ -150,6 +154,19 @@ impl OverStep {
                 } else {
                     sp.clipped_step()
                 }
+            }
+        }
+    }
+
+    /// Was `mu` (this policy's step on `sp`) a *free* step? Newton
+    /// counts interior Newton steps; over-relaxed steps count as free
+    /// if uncut. One definition shared by every SMO-family engine so
+    /// free/bounded telemetry stays comparable across them.
+    pub fn step_is_free(&self, sp: &SubProblem, mu: f64) -> bool {
+        match *self {
+            OverStep::Newton => sp.is_free(),
+            OverStep::OverRelaxed(_) => {
+                mu.is_finite() && mu > sp.lo && mu < sp.hi && sp.q > TAU
             }
         }
     }

@@ -28,7 +28,9 @@ pub enum GainKind {
 /// A selected working set (tuple, paper's ordered convention).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Selection {
+    /// The ascent index (`i ∈ I_up`, positional).
     pub i: usize,
+    /// The descent index (`j ∈ I_down`, positional).
     pub j: usize,
 }
 

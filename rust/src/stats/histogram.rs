@@ -13,10 +13,14 @@
 pub struct Fig3Histogram {
     /// Bin edges in t-space (len = bins + 1), symmetric around 0.
     pub t_max: f64,
+    /// Number of regular bins between the overflow bins.
     pub bins: usize,
     counts: Vec<u64>,
+    /// Samples below `−t_max` (left overflow bin).
     pub underflow: u64,
+    /// Samples at or above `t_max` (right overflow bin).
     pub overflow: u64,
+    /// Total samples recorded (regular + overflow).
     pub total: u64,
 }
 
@@ -61,6 +65,7 @@ impl Fig3Histogram {
         self.counts[idx.min(self.bins - 1)] += 1;
     }
 
+    /// Per-bin counts (regular bins only).
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }

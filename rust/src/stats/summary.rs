@@ -3,11 +3,17 @@
 /// Mean / sd / median / min / max of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub sd: f64,
+    /// Median (midpoint of the two central values for even n).
     pub median: f64,
+    /// Smallest value.
     pub min: f64,
+    /// Largest value.
     pub max: f64,
 }
 

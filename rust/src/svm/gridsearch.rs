@@ -28,8 +28,11 @@ pub enum WarmStart {
 /// One evaluated grid point.
 #[derive(Debug, Clone, Copy)]
 pub struct GridPoint {
+    /// Regularization constant C at this point.
     pub c: f64,
+    /// RBF kernel width γ at this point.
     pub gamma: f64,
+    /// k-fold cross-validation accuracy.
     pub cv_accuracy: f64,
     /// Solver iterations this point's CV spent (all folds).
     pub iterations: u64,
@@ -38,7 +41,9 @@ pub struct GridPoint {
 /// Result of a grid search.
 #[derive(Debug, Clone)]
 pub struct GridSearchResult {
+    /// Every evaluated point, in sweep order (C-major, γ-minor).
     pub evaluated: Vec<GridPoint>,
+    /// The winning point (ties break toward smaller C, then smaller γ).
     pub best: GridPoint,
     /// Solver iterations summed over the whole grid.
     pub total_iterations: u64,
@@ -46,6 +51,18 @@ pub struct GridSearchResult {
 
 /// Exhaustive grid search with `k`-fold CV. Ties break toward smaller C
 /// then smaller γ (prefer the smoother machine).
+///
+/// ```
+/// use pasmo::svm::gridsearch::{grid_search, log_grid, WarmStart};
+/// use pasmo::svm::Trainer;
+///
+/// let data = pasmo::data::synth::chessboard(90, 4, 7);
+/// let base = Trainer::rbf(1.0, 1.0);
+/// let res =
+///     grid_search(&data, &log_grid(10.0, 0, 1), &[0.5], 3, 1, &base, WarmStart::Seeded);
+/// assert_eq!(res.evaluated.len(), 2); // C ∈ {1, 10} × γ ∈ {0.5}
+/// assert!(res.evaluated.iter().any(|p| p.c == res.best.c && p.gamma == res.best.gamma));
+/// ```
 pub fn grid_search(
     data: &Dataset,
     cs: &[f64],

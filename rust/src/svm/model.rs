@@ -16,11 +16,13 @@ use crate::util::json::Json;
 /// is already inside α).
 #[derive(Debug, Clone)]
 pub struct SvmModel {
+    /// The kernel the machine was trained with.
     pub kernel: KernelFunction,
     /// Support vectors (rows with α ≠ 0).
     pub support: Dataset,
     /// Signed dual coefficients, aligned with `support` rows.
     pub coef: Vec<f64>,
+    /// Bias term b of the decision function.
     pub bias: f64,
 }
 

@@ -18,34 +18,41 @@ pub struct MulticlassDataset {
 }
 
 impl MulticlassDataset {
+    /// Empty dataset of the given feature dimension.
     pub fn with_dim(dim: usize) -> MulticlassDataset {
         assert!(dim > 0);
         MulticlassDataset { dim, features: Vec::new(), labels: Vec::new() }
     }
 
+    /// Append an example.
     pub fn push(&mut self, x: &[f32], y: i32) {
         assert_eq!(x.len(), self.dim);
         self.features.extend_from_slice(x);
         self.labels.push(y);
     }
 
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Is the dataset empty?
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Feature dimension.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Feature row of example `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.features[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// Class label of example `i`.
     #[inline]
     pub fn label(&self, i: usize) -> i32 {
         self.labels[i]
@@ -60,6 +67,7 @@ impl MulticlassDataset {
 /// A one-vs-one multiclass model.
 #[derive(Debug, Clone)]
 pub struct OvoModel {
+    /// Distinct classes, sorted (vote-index order).
     pub classes: Vec<i32>,
     /// Binary machine per (a, b) class pair, a < b (index order of
     /// `pair_index`); positive decision votes for `a`.

@@ -22,12 +22,16 @@ pub struct OneClassConfig {
     /// ν ∈ (0, 1]: upper bound on the outlier fraction / lower bound on
     /// the support-vector fraction.
     pub nu: f64,
+    /// The kernel function.
     pub kernel: KernelFunction,
+    /// Which engine drives the solve (any [`SolverChoice`]).
     pub solver: SolverChoice,
+    /// Full low-level solver configuration.
     pub solver_config: SolverConfig,
 }
 
 impl OneClassConfig {
+    /// RBF one-class configuration at (ν, γ) with PA-SMO defaults.
     pub fn new(nu: f64, gamma: f64) -> OneClassConfig {
         assert!(nu > 0.0 && nu <= 1.0, "nu must be in (0, 1]");
         OneClassConfig {
@@ -42,8 +46,11 @@ impl OneClassConfig {
 /// A trained one-class model.
 #[derive(Debug, Clone)]
 pub struct OneClassModel {
+    /// The kernel the model was trained with.
     pub kernel: KernelFunction,
+    /// Support vectors (rows with α > 0).
     pub support: Dataset,
+    /// Dual coefficients aligned with `support` rows.
     pub coef: Vec<f64>,
     /// Offset ρ.
     pub rho: f64,
@@ -59,6 +66,7 @@ impl OneClassModel {
         f
     }
 
+    /// Is `x` on the inlier side of the decision surface?
     pub fn is_inlier(&self, x: &[f32]) -> bool {
         self.decision(x) >= 0.0
     }

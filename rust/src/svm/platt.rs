@@ -11,7 +11,9 @@ use super::predict::decision_values;
 /// Fitted sigmoid parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlattScaler {
+    /// Sigmoid slope A.
     pub a: f64,
+    /// Sigmoid offset B.
     pub b: f64,
 }
 

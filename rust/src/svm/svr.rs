@@ -83,15 +83,20 @@ impl RowComputer for DoubledRowComputer {
 /// ε-SVR training configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SvrConfig {
+    /// Regularization constant C.
     pub c: f64,
     /// Tube half-width ε (insensitive-loss zone).
     pub epsilon: f64,
+    /// The kernel function.
     pub kernel: KernelFunction,
+    /// Which engine drives the solve (any [`SolverChoice`]).
     pub solver: SolverChoice,
+    /// Full low-level solver configuration.
     pub solver_config: SolverConfig,
 }
 
 impl SvrConfig {
+    /// RBF ε-SVR configuration at (C, ε, γ) with PA-SMO defaults.
     pub fn new(c: f64, epsilon: f64, gamma: f64) -> SvrConfig {
         SvrConfig {
             c,
@@ -106,10 +111,13 @@ impl SvrConfig {
 /// A trained ε-SVR model.
 #[derive(Debug, Clone)]
 pub struct SvrModel {
+    /// The kernel the model was trained with.
     pub kernel: KernelFunction,
     /// Support rows (|α_i − α*_i| > 0).
     pub support: Vec<Vec<f32>>,
+    /// Regression coefficients `α_i − α*_i`, aligned with `support`.
     pub coef: Vec<f64>,
+    /// Bias term b of the regression function.
     pub bias: f64,
 }
 

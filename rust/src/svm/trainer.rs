@@ -2,7 +2,7 @@
 //! [`QpProblem`], picks an [`Engine`] through the single `SolverChoice`
 //! factory, and returns the trained model plus solver diagnostics.
 //!
-//! ```no_run
+//! ```
 //! use pasmo::kernel::KernelFunction;
 //! use pasmo::solver::SolverChoice;
 //! use pasmo::svm::Trainer;
@@ -13,6 +13,7 @@
 //!     .stop_eps(1e-3)
 //!     .class_weights(2.0, 1.0) // C₊ = 200, C₋ = 100
 //!     .train(&data);
+//! assert!(outcome.result.converged);
 //! println!("{} SVs in {} iterations", outcome.result.sv, outcome.result.iterations);
 //! ```
 
@@ -31,7 +32,9 @@ use super::model::SvmModel;
 /// A trained classifier plus the solve diagnostics that produced it.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
+    /// The trained model (support vectors, coefficients, bias, kernel).
     pub model: SvmModel,
+    /// Solver diagnostics: iterations, objective, telemetry, cache stats.
     pub result: SolveResult,
 }
 
@@ -40,12 +43,16 @@ pub struct TrainOutcome {
 /// `svm::oneclass`).
 #[derive(Debug, Clone)]
 pub struct Trainer {
+    /// The kernel function k(x, x′).
     pub kernel: KernelFunction,
+    /// Regularization constant C.
     pub c: f64,
     /// Per-class cost multipliers `(w₊, w₋)`: positives are budgeted
     /// `w₊·C`, negatives `w₋·C`. `(1, 1)` is the unweighted machine.
     pub weights: (f64, f64),
+    /// Which engine drives training (PA-SMO by default).
     pub solver: SolverChoice,
+    /// Full low-level solver configuration.
     pub solver_config: SolverConfig,
     /// Optional α seed for the next [`Trainer::train`] call (repaired to
     /// feasibility at lowering — see [`QpProblem::lower`]).

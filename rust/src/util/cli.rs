@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 /// Parsed command line: positionals in order plus `--key [value]` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments in order (subcommand first).
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,

@@ -3,7 +3,9 @@
 /// Column alignment.
 #[derive(Clone, Copy, PartialEq)]
 pub enum Align {
+    /// Left-aligned (labels, dataset names).
     Left,
+    /// Right-aligned (numbers; the default).
     Right,
 }
 
@@ -15,6 +17,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers (all right-aligned).
     pub fn new(headers: &[&str]) -> Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -30,6 +33,7 @@ impl Table {
         self
     }
 
+    /// Append a row (must match the header arity).
     pub fn add_row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);

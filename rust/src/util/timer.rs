@@ -10,15 +10,19 @@ use std::time::{Duration, Instant};
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
+    /// Time since start/restart.
     pub fn elapsed(&self) -> Duration {
         self.0.elapsed()
     }
+    /// Elapsed time in seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
+    /// Return the elapsed time and restart from zero.
     pub fn restart(&mut self) -> Duration {
         let e = self.0.elapsed();
         self.0 = Instant::now();
@@ -29,10 +33,15 @@ impl Stopwatch {
 /// Result of a micro-benchmark run.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Standard deviation of the per-iteration seconds.
     pub std_s: f64,
+    /// Fastest iteration in seconds.
     pub min_s: f64,
 }
 

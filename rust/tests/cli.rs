@@ -51,6 +51,67 @@ fn no_args_prints_usage() {
     assert!(text.contains("experiment"));
 }
 
+/// Help/flag parity: every `--flag` the binary reads (extracted from
+/// `src/main.rs` by scanning the `Args` accessor calls) must appear in
+/// the help output of `pasmo --help` + every subcommand's `--help`.
+/// A flag added to the code without a help line fails this test.
+#[test]
+fn help_documents_every_flag_the_code_reads() {
+    const SUBCOMMANDS: [&str; 7] =
+        ["datasets", "train", "predict", "gridsearch", "bench", "experiment", "info"];
+    // 1. Collect the full help corpus.
+    let mut corpus = String::new();
+    let general = pasmo().arg("--help").output().unwrap();
+    assert!(general.status.success());
+    corpus.push_str(&String::from_utf8_lossy(&general.stdout));
+    for cmd in SUBCOMMANDS {
+        let out = pasmo().args([cmd, "--help"]).output().unwrap();
+        assert!(out.status.success(), "{cmd} --help failed");
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        assert!(
+            text.contains(&format!("pasmo {cmd}")),
+            "{cmd} --help does not name its command:\n{text}"
+        );
+        // `pasmo help <cmd>` must print the same page.
+        let via_help = pasmo().args(["help", cmd]).output().unwrap();
+        assert_eq!(text, String::from_utf8_lossy(&via_help.stdout).to_string());
+        corpus.push_str(&text);
+    }
+    // 2. Extract every flag name read anywhere in main.rs.
+    let src = include_str!("../src/main.rs");
+    let mut flags = std::collections::BTreeSet::new();
+    for pat in ["args.get(\"", "args.get_or(\"", "args.get_parse_or(\"", "args.flag(\""] {
+        for (idx, _) in src.match_indices(pat) {
+            let rest = &src[idx + pat.len()..];
+            let name = &rest[..rest.find('"').unwrap()];
+            flags.insert(name.to_string());
+        }
+    }
+    assert!(flags.len() >= 20, "flag extraction looks broken: {flags:?}");
+    for required in ["threads", "w-pos", "w-neg", "cold", "solver", "help"] {
+        assert!(flags.contains(required), "expected to extract --{required}");
+    }
+    // 3. Every flag appears as `--name` followed by a non-name character.
+    for flag in &flags {
+        let needle = format!("--{flag}");
+        let documented = corpus.match_indices(&needle).any(|(i, _)| {
+            corpus[i + needle.len()..]
+                .chars()
+                .next()
+                .map(|c| !(c.is_ascii_alphanumeric() || c == '-'))
+                .unwrap_or(true)
+        });
+        assert!(documented, "flag --{flag} is read by main.rs but not documented in any help text");
+    }
+    // 4. The solver flag documents every engine, including the new one.
+    for solver in ["smo", "pasmo", "pasmo-multi:N", "conjugate"] {
+        assert!(
+            corpus.contains(solver),
+            "help does not list solver value {solver:?}"
+        );
+    }
+}
+
 #[test]
 fn datasets_lists_the_suite() {
     let out = pasmo().arg("datasets").output().unwrap();
@@ -145,6 +206,104 @@ fn train_accepts_per_class_cost_weights() {
     );
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("converged=true"), "{text}");
+}
+
+#[test]
+fn train_accepts_conjugate_solver() {
+    let out = pasmo()
+        .args([
+            "train", "--dataset", "chess-board-1000", "--len", "300", "--solver", "conjugate",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "conjugate train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=true"), "{text}");
+    assert!(text.contains("solver=ConjugateSmo"), "{text}");
+}
+
+#[test]
+fn train_rejects_unknown_solver() {
+    let out = pasmo()
+        .args(["train", "--dataset", "banana", "--len", "100", "--solver", "sgd"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown solver"), "{err}");
+    assert!(err.contains("conjugate"), "error should list the valid engines: {err}");
+}
+
+#[test]
+fn experiment_engine_shootout_runs_three_engines() {
+    let dir = TempDir::new("engine-shootout");
+    let report = dir.path("shootout.md");
+    let out = pasmo()
+        .args([
+            "experiment",
+            "engine_shootout",
+            "--datasets",
+            "thyroid",
+            "--perms",
+            "3",
+            "--max-len",
+            "120",
+            "--out",
+        ])
+        .arg(&report)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "engine_shootout failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&report).unwrap();
+    assert!(text.contains("Engine shootout"), "{text}");
+    assert!(text.contains("Conjugate SMO"), "{text}");
+    assert!(text.contains("iters CSMO"), "{text}");
+    assert!(text.contains("thyroid"), "{text}");
+}
+
+#[test]
+fn bench_accepts_conjugate_solver() {
+    let dir = TempDir::new("bench-conjugate");
+    let path = dir.path("BENCH_conjugate.json");
+    let out = pasmo()
+        .args([
+            "bench",
+            "--len",
+            "300",
+            "--datasets",
+            "chess-board-1000",
+            "--cache-rows",
+            "32",
+            "--shrink-interval",
+            "50",
+            "--solver",
+            "conjugate",
+            "--out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "conjugate bench failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc =
+        pasmo::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 2, "conjugate × shrink on/off");
+    for r in runs {
+        assert_eq!(r.get("solver").unwrap().as_str(), Some("conjugate"));
+        assert_eq!(r.get("converged").unwrap().as_bool(), Some(true));
+    }
 }
 
 #[test]

@@ -80,6 +80,7 @@ fn all_solver_variants_agree_with_oracle() {
         ("smo", SolverChoice::Smo),
         ("pasmo", SolverChoice::Pasmo),
         ("multi3", SolverChoice::PasmoMulti(3)),
+        ("conjugate", SolverChoice::ConjugateSmo),
     ] {
         let res = Trainer::rbf(10.0, 0.5).solver(choice).train(&ds).result;
         assert!(
@@ -95,6 +96,120 @@ fn all_solver_variants_agree_with_oracle() {
         .solver_config(SolverConfig { wss: WssKind::MaxViolating, ..Default::default() });
     let res = trainer.train(&ds).result;
     assert!((res.objective - oracle.objective).abs() < tol, "mvp wss");
+}
+
+/// The PR-4 acceptance property: all three first-class engines — SMO,
+/// PA-SMO and Conjugate SMO — reach the reference-oracle objective
+/// within tolerance on the quickcheck problem family, in a plain run,
+/// an aggressively *shrink-enabled* run, and a run *warm-started* from
+/// the shrunk solution (which must converge almost immediately and stay
+/// at the optimum).
+#[test]
+fn three_way_engine_parity_on_quickcheck_family() {
+    use pasmo::util::quickcheck::forall;
+    forall(
+        "three-way-engine-parity",
+        5,
+        |g| (30 + g.below(40), g.next_u64(), 10f64.powf(g.range(-0.5, 2.0))),
+        |&(n, seed, c)| {
+            let ds = Arc::new(chessboard(n, 4, seed));
+            let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+            let dense = DenseGram::materialize(&nc);
+            let oracle = solve_reference(&dense, ds.labels(), c, 300_000, 1e-14);
+            let tol = 1e-3 * (1.0 + oracle.objective.abs());
+            for choice in
+                [SolverChoice::Smo, SolverChoice::Pasmo, SolverChoice::ConjugateSmo]
+            {
+                // Shrink-enabled run with an aggressive period, so the
+                // active prefix really contracts at these tiny sizes.
+                let shrunk = Trainer::rbf(c, 0.5)
+                    .solver(choice)
+                    .solver_config(SolverConfig {
+                        shrinking: true,
+                        shrink_interval: 5,
+                        ..Default::default()
+                    })
+                    .train(&ds)
+                    .result;
+                if !shrunk.converged {
+                    return Err(format!("{choice:?}: shrink-enabled run did not converge"));
+                }
+                if (shrunk.objective - oracle.objective).abs() > tol {
+                    return Err(format!(
+                        "{choice:?}: shrunk objective {} vs oracle {}",
+                        shrunk.objective, oracle.objective
+                    ));
+                }
+                // Warm-started from that solution: still at the optimum,
+                // in (almost) no iterations.
+                let warm = Trainer::rbf(c, 0.5)
+                    .solver(choice)
+                    .warm_start(shrunk.alpha.clone())
+                    .train(&ds)
+                    .result;
+                if !warm.converged {
+                    return Err(format!("{choice:?}: warm-started run did not converge"));
+                }
+                if (warm.objective - oracle.objective).abs() > tol {
+                    return Err(format!(
+                        "{choice:?}: warm objective {} vs oracle {}",
+                        warm.objective, oracle.objective
+                    ));
+                }
+                if warm.iterations > shrunk.iterations / 2 + 10 {
+                    return Err(format!(
+                        "{choice:?}: warm start did not help ({} vs cold {})",
+                        warm.iterations, shrunk.iterations
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The conjugate engine drives the *general* QP shapes through the same
+/// passthrough as the other engines: ε-SVR (doubled variables) and
+/// one-class (Σα = 1, non-trivial warm start) train to the same
+/// objective as PA-SMO on the identical problem.
+#[test]
+fn conjugate_engine_handles_svr_and_one_class() {
+    use pasmo::data::regression::sinc;
+    use pasmo::svm::oneclass::{train_one_class, OneClassConfig};
+    use pasmo::svm::svr::{train_svr_native, SvrConfig};
+    use pasmo::util::prng::Pcg;
+
+    // ε-SVR on the doubled dual.
+    let data = sinc(120, 0.05, 3);
+    let mut cfg = SvrConfig::new(5.0, 0.1, 0.5);
+    cfg.solver = SolverChoice::ConjugateSmo;
+    let (_, cj) = train_svr_native(&data, &cfg);
+    assert!(cj.converged, "conjugate ε-SVR did not converge");
+    let mut pa_cfg = SvrConfig::new(5.0, 0.1, 0.5);
+    pa_cfg.solver = SolverChoice::Pasmo;
+    let (_, pa) = train_svr_native(&data, &pa_cfg);
+    let rel = (cj.objective - pa.objective).abs() / (1.0 + pa.objective.abs());
+    assert!(rel < 2e-3, "SVR objectives diverge: {} vs {}", cj.objective, pa.objective);
+
+    // One-class with its feasible LIBSVM-style fill as warm start.
+    let mut rng = Pcg::new(77);
+    let mut blob = pasmo::data::Dataset::with_dim(2);
+    for _ in 0..150 {
+        blob.push(&[rng.normal() as f32, rng.normal() as f32], 1);
+    }
+    let blob = Arc::new(blob);
+    let mut oc = OneClassConfig::new(0.2, 0.5);
+    oc.solver = SolverChoice::ConjugateSmo;
+    let (model, cj) = train_one_class(&blob, &oc);
+    assert!(cj.converged, "conjugate one-class did not converge");
+    let mut oc_pa = OneClassConfig::new(0.2, 0.5);
+    oc_pa.solver = SolverChoice::Pasmo;
+    let (_, pa) = train_one_class(&blob, &oc_pa);
+    let rel = (cj.objective - pa.objective).abs() / (1.0 + pa.objective.abs());
+    assert!(rel < 2e-3, "one-class objectives diverge: {} vs {}", cj.objective, pa.objective);
+    // ν bounds the outlier fraction: most of the blob is inside.
+    let inliers = (0..blob.len()).filter(|&i| model.is_inlier(blob.row(i))).count();
+    assert!(inliers as f64 / blob.len() as f64 > 0.6, "{inliers} inliers");
 }
 
 /// API-parity: the `Trainer`/`QpProblem` path reproduces the seed
