@@ -13,6 +13,9 @@
 #                                [[example]] targets and must keep building)
 #   4d. run the quickstart example at tiny scale (end-to-end smoke)
 #   4e. pasmo bench at tiny scale → BENCH_solver.json (perf trajectory)
+#   4e2. pasmo bench --predict at tiny scale → BENCH_predict.json
+#                               (inference-side trajectory: scalar vs
+#                                tiled vs threaded vs linear-collapse)
 #   4f. docs gate: RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 #                               (zero rustdoc warnings — missing docs on
 #                                any public item or a broken doc link
@@ -60,6 +63,11 @@ cargo run --release --example quickstart -- --len 200
 # repo root so successive PRs have a trajectory to compare against.
 step "pasmo bench --len 300 (writes ../BENCH_solver.json)"
 cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --out ../BENCH_solver.json
+
+# Inference baseline artifact: tiny-scale batch-scoring bench (queries/s
+# and kernel entries for scalar vs tiled vs threaded vs linear-collapse).
+step "pasmo bench --predict --len 300 (writes ../BENCH_predict.json)"
+cargo run --release -- bench --predict --len 300 --out ../BENCH_predict.json
 
 # Docs gate: the public surface is fully documented (#![warn(missing_docs)]
 # promoted to an error here) and every doctest runs green.

@@ -1,7 +1,9 @@
 //! Beyond classification: ε-SVR, one-class SVM and Platt-calibrated
 //! probabilities — all running on the same PA-SMO solver core, which
 //! handles the paper's general dual form `max pᵀα − ½αᵀKα` with
-//! arbitrary linear term, box and warm start.
+//! arbitrary linear term, box and warm start — and all predicting
+//! through the same batch `Scorer` (blocked SV×query tiles, optional
+//! threads) and saving through the same kind-tagged JSON schema.
 //!
 //! ```sh
 //! cargo run --release --example regression_and_anomaly
@@ -44,6 +46,24 @@ fn main() -> Result<()> {
         let truth = if x.abs() < 1e-9 { 1.0 } else { x.sin() / x };
         println!("{:>6.1}  {:>8.4}  {:>8.4}", x, truth, svr.predict(&[x as f32]));
     }
+
+    // ---- batch scoring + the unified model schema ----
+    // One threaded scorer pass over the whole test set (bit-identical to
+    // scoring one example at a time), and an SVR save/load round trip
+    // through the same kind-tagged JSON schema classifiers use.
+    let batch = svr.predict_all(&test_set, 2);
+    ensure!(batch.len() == test_set.len());
+    ensure!(batch[0] == svr.predict(test_set.row(0)), "batch != scalar");
+    let model_path = std::env::temp_dir().join("pasmo-example-svr.json");
+    svr.save(&model_path)?;
+    let reloaded = pasmo::svm::svr::SvrModel::load(&model_path)?;
+    ensure!((reloaded.predict(test_set.row(0)) - batch[0]).abs() < 1e-9);
+    std::fs::remove_file(&model_path).ok();
+    println!(
+        "\nbatch scorer: {} predictions in one threaded pass; \
+         svr.json round trip OK (kind-tagged schema v2)",
+        batch.len()
+    );
 
     // ---- one-class SVM: anomaly detection on a Gaussian blob ----
     let mut rng = Pcg::new(7);

@@ -1,0 +1,118 @@
+//! Batch-prediction throughput: the seed's scalar per-SV decision loop
+//! vs the tiled batch `Scorer`, the threaded scorer, and the linear
+//! primal collapse, across (n_sv, d, queries) shapes (DESIGN.md P3).
+//!
+//! Columns: mean time per full scoring pass, queries/s, and kernel
+//! entries evaluated per pass (q·n_sv for the expansion, 0 for the
+//! collapsed linear path). The scorer rows must beat the scalar row —
+//! that is the inference-side speedup this instrument exists to track.
+//! `PASMO_BENCH_FULL=1` enlarges the shapes.
+
+use pasmo::data::dataset::Dataset;
+use pasmo::kernel::KernelFunction;
+use pasmo::svm::scorer::Scorer;
+use pasmo::util::prng::Pcg;
+use pasmo::util::timer::bench;
+
+fn random_ds(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed);
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+    }
+    ds
+}
+
+fn random_coef(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// The pre-scorer baseline: per example, per SV, `KernelFunction::eval`.
+fn scalar_pass(
+    kernel: KernelFunction,
+    sv: &Dataset,
+    coef: &[f64],
+    bias: f64,
+    queries: &Dataset,
+) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..queries.len() {
+        let x = queries.row(i);
+        let mut f = bias;
+        for s in 0..sv.len() {
+            f += coef[s] * kernel.eval(sv.row(s), x);
+        }
+        acc += f;
+    }
+    acc
+}
+
+fn report(r: &pasmo::util::timer::BenchResult, q: usize, entries: u64) {
+    println!(
+        "{}   {:>10.1} queries/s  {:>12} K-entries/pass",
+        r.line(),
+        q as f64 / r.mean_s,
+        entries
+    );
+}
+
+fn main() {
+    println!("==== bench_predict_throughput ====");
+    println!("batch decision-function evaluation: scalar loop vs tiled/threaded scorer (DESIGN.md P3)\n");
+
+    let full = std::env::var("PASMO_BENCH_FULL").is_ok();
+    let shapes: &[(usize, usize, usize)] = if full {
+        &[(1000, 16, 4096), (4000, 64, 4096), (8000, 200, 2048)]
+    } else {
+        &[(300, 8, 512), (1000, 32, 1024), (2000, 64, 512)]
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let samples = if full { 20 } else { 10 };
+
+    for &(n_sv, d, q) in shapes {
+        let sv = random_ds(n_sv, d, 7);
+        let coef = random_coef(n_sv, 8);
+        let queries = random_ds(q, d, 9);
+        let bias = 0.125;
+        let entries = (n_sv * q) as u64;
+
+        let kernel = KernelFunction::Rbf { gamma: 0.5 };
+        let r = bench(&format!("scalar  sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+            scalar_pass(kernel, &sv, &coef, bias, &queries)
+        });
+        report(&r, q, entries);
+
+        let tiled = Scorer::new(kernel, &sv, &coef, bias);
+        let r = bench(&format!("tiled   sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+            tiled.decision_values(&queries).iter().sum::<f64>()
+        });
+        report(&r, q, entries);
+
+        let threaded = Scorer::new(kernel, &sv, &coef, bias).with_threads(threads);
+        let r = bench(
+            &format!("tile-t{threads:<2}sv={n_sv:<5} d={d:<4} q={q:<5}"),
+            samples,
+            || threaded.decision_values(&queries).iter().sum::<f64>(),
+        );
+        report(&r, q, entries);
+
+        let lin = KernelFunction::Linear;
+        let expansion = Scorer::new(lin, &sv, &coef, bias).collapse_linear(false);
+        let r = bench(&format!("lin-exp sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+            expansion.decision_values(&queries).iter().sum::<f64>()
+        });
+        report(&r, q, entries);
+
+        let collapsed = Scorer::new(lin, &sv, &coef, bias);
+        assert!(collapsed.is_collapsed());
+        let r = bench(&format!("lin-col sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+            collapsed.decision_values(&queries).iter().sum::<f64>()
+        });
+        report(&r, q, 0);
+
+        println!();
+    }
+}

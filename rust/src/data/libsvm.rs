@@ -4,6 +4,11 @@
 //! 1-based, strictly increasing indices. We densify on read (the solver
 //! and the PJRT artifacts are dense); `dim` is the max index seen unless
 //! an explicit dimension is forced (to align train/test files).
+//!
+//! Three label interpretations share one line parser:
+//! * [`read`] — binary ±1 labels (sign of the value, zero rejected),
+//! * [`read_regression`] — real-valued targets,
+//! * [`read_multiclass`] — arbitrary integer class labels.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -12,6 +17,8 @@ use crate::bail;
 use crate::util::error::{Context, Result};
 
 use super::dataset::Dataset;
+use super::multiclass::MulticlassDataset;
+use super::regression::RegressionDataset;
 
 /// One parsed sparse example.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,20 +29,14 @@ pub struct SparseExample {
     pub entries: Vec<(usize, f32)>,
 }
 
-/// Parse one LIBSVM line. Accepts labels `+1/-1/1/-1.0` etc. (sign only).
-pub fn parse_line(line: &str) -> Result<SparseExample> {
+/// Parse one LIBSVM line without interpreting the label: the raw f64
+/// label value plus the sparse entries.
+fn parse_line_raw(line: &str) -> Result<(f64, Vec<(usize, f32)>)> {
     let mut parts = line.split_ascii_whitespace();
     let label_tok = parts.next().context("empty line")?;
     let label_val: f64 = label_tok
         .parse()
         .with_context(|| format!("bad label {label_tok:?}"))?;
-    let label = if label_val > 0.0 {
-        1
-    } else if label_val < 0.0 {
-        -1
-    } else {
-        bail!("label must be nonzero (+1/-1), got {label_tok:?}");
-    };
     let mut entries = Vec::new();
     let mut last = 0usize; // 1-based last index
     for tok in parts {
@@ -56,7 +57,61 @@ pub fn parse_line(line: &str) -> Result<SparseExample> {
         let val: f32 = val.parse().with_context(|| format!("bad value {val:?}"))?;
         entries.push((idx - 1, val));
     }
+    Ok((label_val, entries))
+}
+
+/// Parse one LIBSVM line. Accepts labels `+1/-1/1/-1.0` etc. (sign only).
+pub fn parse_line(line: &str) -> Result<SparseExample> {
+    let (label_val, entries) = parse_line_raw(line)?;
+    let label = if label_val > 0.0 {
+        1
+    } else if label_val < 0.0 {
+        -1
+    } else {
+        bail!("label must be nonzero (+1/-1), got {label_val:?}");
+    };
     Ok(SparseExample { label, entries })
+}
+
+/// One raw example: 1-based source line, raw f64 label, sparse entries.
+type RawExample = (usize, f64, Vec<(usize, f32)>);
+
+/// Shared reading loop: every non-comment line's raw (label, entries)
+/// plus the resolved dense dimension.
+fn read_raw<R: BufRead>(reader: R, force_dim: Option<usize>) -> Result<(usize, Vec<RawExample>)> {
+    let mut examples = Vec::new();
+    let mut max_dim = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let (label, entries) = parse_line_raw(trimmed)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        if let Some((idx, _)) = entries.last() {
+            max_dim = max_dim.max(idx + 1);
+        }
+        examples.push((lineno + 1, label, entries));
+    }
+    let dim = match force_dim {
+        Some(d) => {
+            if d < max_dim {
+                bail!("force_dim {d} < max feature index {max_dim}");
+            }
+            d
+        }
+        None => max_dim.max(1),
+    };
+    Ok((dim, examples))
+}
+
+/// Scatter sparse entries into a zeroed dense row.
+fn densify(entries: &[(usize, f32)], row: &mut [f32]) {
+    row.iter_mut().for_each(|v| *v = 0.0);
+    for &(i, v) in entries {
+        row[i] = v;
+    }
 }
 
 /// Read a LIBSVM file into a dense [`Dataset`]. `force_dim` overrides the
@@ -69,40 +124,81 @@ pub fn read(path: &Path, force_dim: Option<usize>) -> Result<Dataset> {
 
 /// Read from any buffered reader (unit-testable without touching disk).
 pub fn read_from<R: BufRead>(reader: R, force_dim: Option<usize>) -> Result<Dataset> {
-    let mut examples = Vec::new();
-    let mut max_dim = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
-        }
-        let ex = parse_line(trimmed)
-            .with_context(|| format!("line {}", lineno + 1))?;
-        if let Some((idx, _)) = ex.entries.last() {
-            max_dim = max_dim.max(idx + 1);
-        }
-        examples.push(ex);
-    }
-    let dim = match force_dim {
-        Some(d) => {
-            if d < max_dim {
-                bail!("force_dim {d} < max feature index {max_dim}");
-            }
-            d
-        }
-        None => max_dim.max(1),
-    };
+    let (dim, examples) = read_raw(reader, force_dim)?;
     let mut ds = Dataset::with_dim(dim);
     let mut row = vec![0f32; dim];
-    for ex in &examples {
-        row.iter_mut().for_each(|v| *v = 0.0);
-        for &(i, v) in &ex.entries {
-            row[i] = v;
-        }
-        ds.push(&row, ex.label);
+    for (lineno, label, entries) in &examples {
+        let y = if *label > 0.0 {
+            1
+        } else if *label < 0.0 {
+            -1
+        } else {
+            bail!("line {lineno}: label must be nonzero (+1/-1)");
+        };
+        densify(entries, &mut row);
+        ds.push(&row, y);
     }
     Ok(ds)
+}
+
+/// Read a LIBSVM file as a regression set: the label column is the
+/// real-valued target (any value, including 0).
+pub fn read_regression(path: &Path, force_dim: Option<usize>) -> Result<RegressionDataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_regression_from(std::io::BufReader::new(file), force_dim)
+}
+
+/// [`read_regression`] from any buffered reader.
+pub fn read_regression_from<R: BufRead>(
+    reader: R,
+    force_dim: Option<usize>,
+) -> Result<RegressionDataset> {
+    let (dim, examples) = read_raw(reader, force_dim)?;
+    let mut ds = RegressionDataset::with_dim(dim);
+    let mut row = vec![0f32; dim];
+    for (_, target, entries) in &examples {
+        densify(entries, &mut row);
+        ds.push(&row, *target);
+    }
+    Ok(ds)
+}
+
+/// Read a LIBSVM file as a multiclass set: the label column is an
+/// arbitrary integer class id.
+pub fn read_multiclass(path: &Path, force_dim: Option<usize>) -> Result<MulticlassDataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_multiclass_from(std::io::BufReader::new(file), force_dim)
+}
+
+/// [`read_multiclass`] from any buffered reader.
+pub fn read_multiclass_from<R: BufRead>(
+    reader: R,
+    force_dim: Option<usize>,
+) -> Result<MulticlassDataset> {
+    let (dim, examples) = read_raw(reader, force_dim)?;
+    let mut ds = MulticlassDataset::with_dim(dim);
+    let mut row = vec![0f32; dim];
+    for (lineno, label, entries) in &examples {
+        if label.fract() != 0.0 || label.abs() > i32::MAX as f64 {
+            bail!("line {lineno}: multiclass label {label} is not an integer class id");
+        }
+        densify(entries, &mut row);
+        ds.push(&row, *label as i32);
+    }
+    Ok(ds)
+}
+
+/// Write one dense row's non-zero entries as ` index:value` tokens.
+fn write_entries<W: Write>(w: &mut W, row: &[f32]) -> Result<()> {
+    for (j, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+    }
+    writeln!(w)?;
+    Ok(())
 }
 
 /// Write a dataset in LIBSVM format (zero entries skipped).
@@ -112,12 +208,33 @@ pub fn write(ds: &Dataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(file);
     for i in 0..ds.len() {
         write!(w, "{}", if ds.label(i) > 0 { "+1" } else { "-1" })?;
-        for (j, &v) in ds.row(i).iter().enumerate() {
-            if v != 0.0 {
-                write!(w, " {}:{}", j + 1, v)?;
-            }
-        }
-        writeln!(w)?;
+        write_entries(&mut w, ds.row(i))?;
+    }
+    Ok(())
+}
+
+/// Write a regression dataset in LIBSVM format (the label column is the
+/// f64 target; zero feature entries skipped).
+pub fn write_regression(ds: &RegressionDataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.len() {
+        write!(w, "{}", ds.target(i))?;
+        write_entries(&mut w, ds.row(i))?;
+    }
+    Ok(())
+}
+
+/// Write a multiclass dataset in LIBSVM format (integer class labels;
+/// zero feature entries skipped).
+pub fn write_multiclass(ds: &MulticlassDataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.len() {
+        write!(w, "{}", ds.label(i))?;
+        write_entries(&mut w, ds.row(i))?;
     }
     Ok(())
 }
@@ -168,6 +285,65 @@ mod tests {
         let ds = read_from(Cursor::new("+1 1:1\n"), Some(5)).unwrap();
         assert_eq!(ds.dim(), 5);
         assert!(read_from(Cursor::new("+1 9:1\n"), Some(3)).is_err());
+    }
+
+    #[test]
+    fn regression_reader_keeps_real_targets() {
+        let text = "0.5 1:1\n-2.25 2:3\n0 1:7\n";
+        let ds = read_regression_from(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.target(0), 0.5);
+        assert_eq!(ds.target(1), -2.25);
+        assert_eq!(ds.target(2), 0.0, "zero targets are valid for regression");
+        assert_eq!(ds.row(1), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn multiclass_reader_keeps_integer_classes() {
+        let text = "3 1:1\n0 2:1\n-7 1:2 2:2\n";
+        let ds = read_multiclass_from(Cursor::new(text), None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.label(0), 3);
+        assert_eq!(ds.label(1), 0);
+        assert_eq!(ds.label(2), -7);
+        assert_eq!(ds.classes(), vec![-7, 0, 3]);
+    }
+
+    #[test]
+    fn multiclass_reader_rejects_fractional_labels() {
+        let err = read_multiclass_from(Cursor::new("1.5 1:1\n"), None).unwrap_err();
+        assert!(format!("{err:#}").contains("not an integer"), "{err:#}");
+    }
+
+    #[test]
+    fn binary_reader_rejects_zero_label_with_line_number() {
+        let err = read_from(Cursor::new("+1 1:1\n0 1:2\n"), None).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn regression_and_multiclass_round_trip_through_files() {
+        let dir = std::env::temp_dir().join("pasmo-libsvm-rt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let rpath = dir.join("reg.libsvm");
+        let mut rd = crate::data::regression::RegressionDataset::with_dim(2);
+        rd.push(&[1.5, 0.0], 0.25);
+        rd.push(&[0.0, -2.0], -3.5);
+        write_regression(&rd, &rpath).unwrap();
+        let rrt = read_regression(&rpath, Some(2)).unwrap();
+        assert_eq!(rd, rrt);
+
+        let mpath = dir.join("multi.libsvm");
+        let mut md = MulticlassDataset::with_dim(2);
+        md.push(&[1.0, 2.0], 4);
+        md.push(&[0.5, 0.0], -1);
+        write_multiclass(&md, &mpath).unwrap();
+        let mrt = read_multiclass(&mpath, Some(2)).unwrap();
+        assert_eq!(md, mrt);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Dataset substrate: dense dataset type, LIBSVM-format IO, feature
-//! scaling, synthetic generators for the paper's 22-dataset suite, and
-//! permutation / cross-validation splits.
+//! Dataset substrate: dense dataset types (binary, regression,
+//! multiclass), LIBSVM-format IO, feature scaling, synthetic generators
+//! for the paper's 22-dataset suite, and permutation /
+//! cross-validation splits.
 
 pub mod dataset;
 pub mod libsvm;
+pub mod multiclass;
 pub mod regression;
 pub mod scale;
 pub mod splits;

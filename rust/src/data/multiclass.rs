@@ -1,0 +1,112 @@
+//! Dense multiclass dataset (arbitrary integer labels) — the substrate
+//! for one-vs-one classification (`svm::multiclass`). Lives in the data
+//! layer so LIBSVM IO ([`super::libsvm::read_multiclass`]) and the
+//! batch scorer can consume it without the `svm` layer in between.
+
+use std::collections::BTreeSet;
+
+/// A multiclass dataset: dense features with arbitrary integer labels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MulticlassDataset {
+    dim: usize,
+    features: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl MulticlassDataset {
+    /// Empty dataset of the given feature dimension.
+    pub fn with_dim(dim: usize) -> MulticlassDataset {
+        assert!(dim > 0);
+        MulticlassDataset { dim, features: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Append an example.
+    pub fn push(&mut self, x: &[f32], y: i32) {
+        assert_eq!(x.len(), self.dim);
+        self.features.extend_from_slice(x);
+        self.labels.push(y);
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Is the dataset empty?
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Feature row of example `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Class label of example `i`.
+    #[inline]
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// Raw row-major feature buffer (the batch-scoring input shape).
+    pub fn features(&self) -> &[f32] {
+        &self.features
+    }
+
+    /// Distinct classes, sorted.
+    pub fn classes(&self) -> Vec<i32> {
+        self.labels.iter().copied().collect::<BTreeSet<_>>().into_iter().collect()
+    }
+}
+
+/// Synthetic k-class Gaussian blobs on a circle (test/demo generator).
+pub fn blobs(n: usize, k: usize, radius: f64, sd: f64, seed: u64) -> MulticlassDataset {
+    use crate::util::prng::Pcg;
+    assert!(k >= 2);
+    let mut rng = Pcg::new(seed);
+    let mut ds = MulticlassDataset::with_dim(2);
+    for _ in 0..n {
+        let c = rng.below(k);
+        let theta = 2.0 * std::f64::consts::PI * c as f64 / k as f64;
+        ds.push(
+            &[
+                (radius * theta.cos() + rng.normal() * sd) as f32,
+                (radius * theta.sin() + rng.normal() * sd) as f32,
+            ],
+            c as i32,
+        );
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_classes() {
+        let mut ds = MulticlassDataset::with_dim(2);
+        ds.push(&[1.0, 2.0], 7);
+        ds.push(&[3.0, 4.0], 2);
+        ds.push(&[5.0, 6.0], 7);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.label(2), 7);
+        assert_eq!(ds.classes(), vec![2, 7]);
+        assert_eq!(ds.features(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn blobs_generates_k_classes() {
+        let ds = blobs(120, 3, 4.0, 0.3, 1);
+        assert_eq!(ds.len(), 120);
+        assert_eq!(ds.classes(), vec![0, 1, 2]);
+    }
+}

@@ -56,6 +56,11 @@ impl RegressionDataset {
     pub fn targets(&self) -> &[f64] {
         &self.targets
     }
+
+    /// Raw row-major feature buffer (the batch-scoring input shape).
+    pub fn features(&self) -> &[f32] {
+        &self.features
+    }
 }
 
 /// The classic `sinc` regression benchmark: `y = sin(x)/x + noise` on

@@ -1,12 +1,15 @@
-//! Kernel substrate: Mercer kernel functions, the native (Rust) Gram-row
-//! computer, the PJRT-backed computer (`crate::runtime`, behind the
-//! `pjrt` feature), the LRU row cache, and the [`matrix::Gram`] facade
-//! the solver talks to.
+//! Kernel substrate: Mercer kernel functions, the shared tiled
+//! evaluation primitives ([`tile`] — one code path feeding both Gram
+//! rows for training and SV×query blocks for batch inference), the
+//! native (Rust) Gram-row computer, the PJRT-backed computer
+//! (`crate::runtime`, behind the `pjrt` feature), the LRU row cache,
+//! and the [`matrix::Gram`] facade the solver talks to.
 
 pub mod cache;
 pub mod function;
 pub mod matrix;
 pub mod native;
+pub mod tile;
 
 pub use cache::RowCache;
 pub use function::KernelFunction;

@@ -8,15 +8,11 @@ use crate::data::dataset::Dataset;
 
 use super::function::KernelFunction;
 use super::matrix::RowComputer;
+use super::tile;
 
-/// Minimum multiply-add work (entries × feature dim) before a row is
-/// split across threads. Spawning and joining scoped workers costs tens
-/// of microseconds, so low-dimensional or post-shrink short rows — whose
-/// whole computation is cheaper than a spawn — always run inline; the
-/// gate is on estimated flops, not entry count.
-const PAR_MIN_MADDS: usize = 1 << 16;
-
-/// Computes kernel rows directly from the dataset.
+/// Computes kernel rows directly from the dataset, on the shared
+/// [`tile`] primitives (the same code path the batch
+/// [`crate::svm::scorer::Scorer`] uses for SV×query blocks).
 ///
 /// For RBF the row loop uses the `‖a‖²+‖b‖²−2a·b` decomposition with
 /// precomputed squared norms, turning each row into one pass of dot
@@ -24,11 +20,14 @@ const PAR_MIN_MADDS: usize = 1 << 16;
 /// pass is tiled four output entries wide so `x_i` is loaded once per
 /// four dot products; each entry still accumulates its own f64 dot in
 /// index order, so tiled results are bit-identical to the scalar loop.
+/// The dot-product kernels (linear/poly/sigmoid) run the same tiled
+/// pass with their own value map, bit-identical to
+/// [`KernelFunction::eval`].
 ///
 /// With `threads > 1` (see [`NativeRowComputer::with_threads`]) long rows
-/// are chunked across a `std::thread::scope` — entries are computed by
-/// exactly the same arithmetic regardless of the chunking, so threaded
-/// rows are bit-identical to single-threaded ones.
+/// are chunked across a `std::thread::scope` ([`tile::chunked`]) —
+/// entries are computed by exactly the same arithmetic regardless of the
+/// chunking, so threaded rows are bit-identical to single-threaded ones.
 pub struct NativeRowComputer {
     data: Arc<Dataset>,
     kernel: KernelFunction,
@@ -51,9 +50,7 @@ impl NativeRowComputer {
         kernel: KernelFunction,
         threads: usize,
     ) -> NativeRowComputer {
-        let sqnorms = (0..data.len())
-            .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
-            .collect();
+        let sqnorms = tile::squared_norms(&data);
         NativeRowComputer { data, kernel, sqnorms, threads: threads.max(1) }
     }
 
@@ -69,114 +66,20 @@ impl NativeRowComputer {
 
     /// Fill `out` with kernel values of example `i` against the columns
     /// named by `col(p)` (identity for full rows, the active permutation
-    /// for gathered rows).
+    /// for gathered rows). One call into the shared [`tile`] primitives:
+    /// the worker gate, the chunking and the 4-wide tiled value loop are
+    /// the same code the batch scorer runs.
     fn fill<C: Fn(usize) -> usize + Sync>(&self, i: usize, col: C, out: &mut [f32]) {
         let xi = self.data.row(i);
-        let m = out.len();
-        let work = m * self.data.dim().max(1);
-        let workers = if self.threads > 1 && work >= PAR_MIN_MADDS {
-            self.threads.min(m)
-        } else {
-            1
-        };
-        match self.kernel {
-            KernelFunction::Rbf { gamma } => {
-                let ni = self.sqnorms[i];
-                if workers <= 1 {
-                    rbf_tile(xi, &self.sqnorms, &self.data, ni, gamma, &col, 0, out);
-                } else {
-                    let chunk = m.div_ceil(workers);
-                    let data = &*self.data;
-                    let sqnorms = &self.sqnorms;
-                    let col = &col;
-                    std::thread::scope(|s| {
-                        for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                            let base = c * chunk;
-                            s.spawn(move || {
-                                rbf_tile(
-                                    xi, sqnorms, data, ni, gamma, col, base, out_chunk,
-                                );
-                            });
-                        }
-                    });
-                }
-            }
-            k => {
-                if workers <= 1 {
-                    for (p, o) in out.iter_mut().enumerate() {
-                        *o = k.eval(xi, self.data.row(col(p))) as f32;
-                    }
-                } else {
-                    let chunk = m.div_ceil(workers);
-                    let data = &*self.data;
-                    let col = &col;
-                    std::thread::scope(|s| {
-                        for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                            let base = c * chunk;
-                            s.spawn(move || {
-                                for (p, o) in out_chunk.iter_mut().enumerate() {
-                                    *o = k.eval(xi, data.row(col(base + p))) as f32;
-                                }
-                            });
-                        }
-                    });
-                }
-            }
-        }
-    }
-}
-
-/// The tiled RBF row loop: four output entries per step, `x_i` streamed
-/// once per tile. Every entry's dot product accumulates in feature order
-/// into its own f64, exactly like the scalar remainder loop — results
-/// are bit-identical to a one-entry-at-a-time evaluation (asserted by
-/// test), so tiling is purely a memory-locality optimization.
-#[allow(clippy::too_many_arguments)]
-fn rbf_tile<C: Fn(usize) -> usize>(
-    xi: &[f32],
-    sqnorms: &[f64],
-    data: &Dataset,
-    ni: f64,
-    gamma: f64,
-    col: &C,
-    base: usize,
-    out: &mut [f32],
-) {
-    let d = data.dim();
-    let m = out.len();
-    let mut p = 0usize;
-    while p + 4 <= m {
-        let j0 = col(base + p);
-        let j1 = col(base + p + 1);
-        let j2 = col(base + p + 2);
-        let j3 = col(base + p + 3);
-        let x0 = data.row(j0);
-        let x1 = data.row(j1);
-        let x2 = data.row(j2);
-        let x3 = data.row(j3);
-        let (mut d0, mut d1, mut d2, mut d3) = (0f64, 0f64, 0f64, 0f64);
-        for k in 0..d {
-            let v = xi[k] as f64;
-            d0 += v * x0[k] as f64;
-            d1 += v * x1[k] as f64;
-            d2 += v * x2[k] as f64;
-            d3 += v * x3[k] as f64;
-        }
-        out[p] = (-gamma * (ni + sqnorms[j0] - 2.0 * d0).max(0.0)).exp() as f32;
-        out[p + 1] = (-gamma * (ni + sqnorms[j1] - 2.0 * d1).max(0.0)).exp() as f32;
-        out[p + 2] = (-gamma * (ni + sqnorms[j2] - 2.0 * d2).max(0.0)).exp() as f32;
-        out[p + 3] = (-gamma * (ni + sqnorms[j3] - 2.0 * d3).max(0.0)).exp() as f32;
-        p += 4;
-    }
-    while p < m {
-        let j = col(base + p);
-        let xj = data.row(j);
-        let mut dot = 0f64;
-        for k in 0..d {
-            dot += xi[k] as f64 * xj[k] as f64;
-        }
-        out[p] = (-gamma * (ni + sqnorms[j] - 2.0 * dot).max(0.0)).exp() as f32;
-        p += 1;
+        let ni = self.sqnorms[i];
+        let workers = tile::workers_for(self.threads, out.len(), self.data.dim());
+        let kernel = self.kernel;
+        let data = &*self.data;
+        let sqnorms = &self.sqnorms;
+        let col = &col;
+        tile::chunked(workers, out, |base, chunk| {
+            tile::kernel_block_f32(kernel, xi, ni, sqnorms, data, col, base, chunk);
+        });
     }
 }
 
@@ -303,7 +206,10 @@ mod tests {
         let one = NativeRowComputer::new(ds.clone(), k);
         let four = NativeRowComputer::with_threads(ds.clone(), k, 4);
         assert_eq!(four.threads(), 4);
-        assert!(700 * 100 >= super::PAR_MIN_MADDS, "test must exercise the threaded path");
+        assert!(
+            700 * 100 >= crate::kernel::tile::PAR_MIN_MADDS,
+            "test must exercise the threaded path"
+        );
         let mut a = vec![0f32; 700];
         let mut b = vec![0f32; 700];
         for i in [0usize, 350, 699] {

@@ -1,0 +1,318 @@
+//! Shared tiled kernel-evaluation primitives — the one code path that
+//! computes "kernel values of a row against many dataset rows", consumed
+//! by both sides of the system:
+//!
+//! * **training** — [`super::native::NativeRowComputer`] produces Gram
+//!   rows (full, gathered-through-the-permutation, shrunk-prefix) for
+//!   the solver;
+//! * **inference** — [`crate::svm::scorer::Scorer`] produces SV×query
+//!   blocks for batch prediction.
+//!
+//! The primitives keep one contract: **per-entry arithmetic is exactly
+//! the scalar evaluation**. Every entry accumulates its own f64 dot
+//! product in feature order, so tiled, gathered, threaded and batched
+//! results are bit-identical to a one-entry-at-a-time loop (asserted by
+//! tests on both the Gram and the scorer side). Tiling is purely a
+//! memory-locality optimization: the 4-wide tile streams the query row
+//! once per four dot products.
+
+use crate::data::dataset::Dataset;
+
+use super::function::KernelFunction;
+
+/// Minimum multiply-add work (entries × feature dim) before a block is
+/// split across threads. Spawning and joining scoped workers costs tens
+/// of microseconds, so low-dimensional or short blocks — whose whole
+/// computation is cheaper than a spawn — always run inline; the gate is
+/// on estimated flops, not entry count.
+pub const PAR_MIN_MADDS: usize = 1 << 16;
+
+/// Precomputed squared norms ‖x_i‖² of every dataset row (f64
+/// accumulation in feature order) — the RBF fast path's input for the
+/// `‖a‖²+‖b‖²−2a·b` decomposition.
+pub fn squared_norms(data: &Dataset) -> Vec<f64> {
+    (0..data.len())
+        .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
+        .collect()
+}
+
+/// How many scoped workers a block of `entries` kernel entries over
+/// `dim`-dimensional rows deserves: `1` (inline) unless `threads > 1`
+/// and the estimated multiply-add work clears [`PAR_MIN_MADDS`]; never
+/// more workers than entries.
+pub fn workers_for(threads: usize, entries: usize, dim: usize) -> usize {
+    if threads > 1 && entries.saturating_mul(dim.max(1)) >= PAR_MIN_MADDS {
+        threads.min(entries.max(1))
+    } else {
+        1
+    }
+}
+
+/// Split `out` into `workers` contiguous chunks and fill them on scoped
+/// threads; `fill(base, chunk)` receives each chunk together with its
+/// starting index in `out`. With `workers <= 1` the fill runs inline on
+/// the calling thread. Workers write disjoint chunks and the arithmetic
+/// per entry does not depend on the chunking, so results are
+/// bit-identical for any worker count.
+pub fn chunked<T: Send, F: Fn(usize, &mut [T]) + Sync>(workers: usize, out: &mut [T], fill: F) {
+    if workers <= 1 || out.len() <= 1 {
+        fill(0, out);
+        return;
+    }
+    let chunk = out.len().div_ceil(workers);
+    let fill = &fill;
+    std::thread::scope(|s| {
+        for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let base = c * chunk;
+            s.spawn(move || fill(base, out_chunk));
+        }
+    });
+}
+
+/// The tiled dot-product loop: `emit(p, j, dot)` is called for
+/// `p ∈ [0, n)` in index order with `j = col(base + p)` and
+/// `dot = Σ_k xi[k]·data[j][k]` accumulated in f64 feature order.
+/// Four output entries are produced per tile so `xi` is streamed once
+/// per four dot products; each entry still owns its accumulator, so the
+/// dots are bit-identical to a scalar per-entry loop.
+#[inline]
+fn dot_block<C: Fn(usize) -> usize, E: FnMut(usize, usize, f64)>(
+    xi: &[f32],
+    data: &Dataset,
+    col: &C,
+    base: usize,
+    n: usize,
+    mut emit: E,
+) {
+    let d = data.dim();
+    let mut p = 0usize;
+    while p + 4 <= n {
+        let j0 = col(base + p);
+        let j1 = col(base + p + 1);
+        let j2 = col(base + p + 2);
+        let j3 = col(base + p + 3);
+        let x0 = data.row(j0);
+        let x1 = data.row(j1);
+        let x2 = data.row(j2);
+        let x3 = data.row(j3);
+        let (mut d0, mut d1, mut d2, mut d3) = (0f64, 0f64, 0f64, 0f64);
+        for k in 0..d {
+            let v = xi[k] as f64;
+            d0 += v * x0[k] as f64;
+            d1 += v * x1[k] as f64;
+            d2 += v * x2[k] as f64;
+            d3 += v * x3[k] as f64;
+        }
+        emit(p, j0, d0);
+        emit(p + 1, j1, d1);
+        emit(p + 2, j2, d2);
+        emit(p + 3, j3, d3);
+        p += 4;
+    }
+    while p < n {
+        let j = col(base + p);
+        let xj = data.row(j);
+        let mut dot = 0f64;
+        for k in 0..d {
+            dot += xi[k] as f64 * xj[k] as f64;
+        }
+        emit(p, j, dot);
+        p += 1;
+    }
+}
+
+/// Tiled kernel values of `xi` against dataset rows: `emit(p, value)` is
+/// called for `p ∈ [0, n)` in index order with the f64 kernel value
+/// `k(xi, data[col(base + p)])`.
+///
+/// `xi_sqnorm` is ‖xi‖² and `sqnorms` the dataset's [`squared_norms`] —
+/// both consumed only by the RBF arm (any slice is accepted for the
+/// dot-product kernels, which never index it). The per-entry arithmetic
+/// matches the scalar evaluations exactly: for RBF the
+/// `‖a‖²+‖b‖²−2a·b` decomposition (the Gram-row fast path), for
+/// linear/poly/sigmoid the feature-order f64 dot that
+/// [`KernelFunction::eval`] performs — so linear, polynomial and sigmoid
+/// values are bit-identical to `eval`, and RBF values are bit-identical
+/// to the established decomposition path.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn kernel_block<C: Fn(usize) -> usize, E: FnMut(usize, f64)>(
+    kernel: KernelFunction,
+    xi: &[f32],
+    xi_sqnorm: f64,
+    sqnorms: &[f64],
+    data: &Dataset,
+    col: &C,
+    base: usize,
+    n: usize,
+    mut emit: E,
+) {
+    match kernel {
+        KernelFunction::Rbf { gamma } => dot_block(xi, data, col, base, n, |p, j, dot| {
+            emit(
+                p,
+                (-gamma * (xi_sqnorm + sqnorms[j] - 2.0 * dot).max(0.0)).exp(),
+            )
+        }),
+        KernelFunction::Linear => {
+            dot_block(xi, data, col, base, n, |p, _, dot| emit(p, dot))
+        }
+        KernelFunction::Poly { gamma, coef0, degree } => {
+            dot_block(xi, data, col, base, n, |p, _, dot| {
+                emit(p, (gamma * dot + coef0).powi(degree as i32))
+            })
+        }
+        KernelFunction::Sigmoid { gamma, coef0 } => {
+            dot_block(xi, data, col, base, n, |p, _, dot| {
+                emit(p, (gamma * dot + coef0).tanh())
+            })
+        }
+    }
+}
+
+/// [`kernel_block`] storing into an f32 row — the Gram-row shape
+/// ([`super::matrix::RowComputer::compute_cols`] semantics:
+/// `out[p] = k(xi, data[col(base + p)])`).
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_block_f32<C: Fn(usize) -> usize>(
+    kernel: KernelFunction,
+    xi: &[f32],
+    xi_sqnorm: f64,
+    sqnorms: &[f64],
+    data: &Dataset,
+    col: &C,
+    base: usize,
+    out: &mut [f32],
+) {
+    kernel_block(
+        kernel,
+        xi,
+        xi_sqnorm,
+        sqnorms,
+        data,
+        col,
+        base,
+        out.len(),
+        |p, v| out[p] = v as f32,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn random_ds(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg::new(seed);
+        let mut ds = Dataset::with_dim(d);
+        let mut row = vec![0f32; d];
+        for _ in 0..n {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+        }
+        ds
+    }
+
+    #[test]
+    fn kernel_block_matches_scalar_eval_for_dot_kernels() {
+        let ds = random_ds(37, 6, 1); // 37 exercises the remainder lanes
+        let sq = squared_norms(&ds);
+        let xi: Vec<f32> = ds.row(5).to_vec();
+        for k in [
+            KernelFunction::Linear,
+            KernelFunction::Poly { gamma: 0.4, coef0: 1.0, degree: 3 },
+            KernelFunction::Sigmoid { gamma: 0.2, coef0: -0.5 },
+        ] {
+            let mut got = vec![0f64; ds.len()];
+            kernel_block(k, &xi, sq[5], &sq, &ds, &|p| p, 0, ds.len(), |p, v| got[p] = v);
+            for j in 0..ds.len() {
+                let want = k.eval(&xi, ds.row(j));
+                assert_eq!(
+                    got[j].to_bits(),
+                    want.to_bits(),
+                    "{k:?} j={j}: {} vs {want}",
+                    got[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_block_matches_decomposition_reference() {
+        let ds = random_ds(41, 5, 2);
+        let sq = squared_norms(&ds);
+        let gamma = 0.8;
+        let k = KernelFunction::Rbf { gamma };
+        let xi: Vec<f32> = ds.row(3).to_vec();
+        let mut got = vec![0f64; ds.len()];
+        kernel_block(k, &xi, sq[3], &sq, &ds, &|p| p, 0, ds.len(), |p, v| got[p] = v);
+        for j in 0..ds.len() {
+            let mut dot = 0f64;
+            for t in 0..ds.dim() {
+                dot += xi[t] as f64 * ds.row(j)[t] as f64;
+            }
+            let want = (-gamma * (sq[3] + sq[j] - 2.0 * dot).max(0.0)).exp();
+            assert_eq!(got[j].to_bits(), want.to_bits(), "j={j}");
+            // and the decomposition agrees with the direct sqdist eval
+            assert!((got[j] - k.eval(&xi, ds.row(j))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gathered_base_offsets_index_correctly() {
+        let ds = random_ds(30, 4, 3);
+        let sq = squared_norms(&ds);
+        let k = KernelFunction::Rbf { gamma: 1.1 };
+        let cols: Vec<usize> = (0..30).rev().collect();
+        let mut full = vec![0f32; 30];
+        kernel_block_f32(k, ds.row(7), sq[7], &sq, &ds, &|p| p, 0, &mut full);
+        // gather through cols with a non-zero base, as the chunked path does
+        let mut part = vec![0f32; 10];
+        kernel_block_f32(k, ds.row(7), sq[7], &sq, &ds, &|p| cols[p], 12, &mut part);
+        for p in 0..10 {
+            assert_eq!(part[p].to_bits(), full[cols[12 + p]].to_bits(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn chunked_is_bit_identical_and_covers_every_entry() {
+        let ds = random_ds(257, 9, 4);
+        let sq = squared_norms(&ds);
+        let k = KernelFunction::Rbf { gamma: 0.6 };
+        let xi: Vec<f32> = ds.row(0).to_vec();
+        let mut inline = vec![0f32; 257];
+        kernel_block_f32(k, &xi, sq[0], &sq, &ds, &|p| p, 0, &mut inline);
+        for workers in [2usize, 3, 8] {
+            let mut par = vec![0f32; 257];
+            chunked(workers, &mut par, |base, chunk| {
+                kernel_block_f32(k, &xi, sq[0], &sq, &ds, &|p| p, base, chunk);
+            });
+            assert!(
+                inline.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "workers={workers} diverges"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_gate_respects_threshold_and_clamps() {
+        assert_eq!(workers_for(1, 1 << 20, 10), 1, "single-threaded stays inline");
+        assert_eq!(workers_for(4, 10, 2), 1, "tiny work stays inline");
+        assert_eq!(workers_for(4, PAR_MIN_MADDS, 1), 4);
+        assert_eq!(workers_for(8, PAR_MIN_MADDS / 4, 4), 8);
+        assert_eq!(workers_for(8, 3, 1 << 20), 3, "never more workers than entries");
+        assert_eq!(workers_for(4, 0, 64), 1, "empty block stays inline");
+    }
+
+    #[test]
+    fn chunked_handles_empty_and_tiny_outputs() {
+        let mut empty: Vec<f32> = Vec::new();
+        chunked(4, &mut empty, |_, chunk| assert!(chunk.is_empty()));
+        let mut one = vec![0f64; 1];
+        chunked(4, &mut one, |base, chunk| {
+            assert_eq!(base, 0);
+            chunk[0] = 7.0;
+        });
+        assert_eq!(one[0], 7.0);
+    }
+}

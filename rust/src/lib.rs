@@ -33,7 +33,9 @@
 //!   engine (`solver::conjugate`), shrinking and telemetry — all behind
 //!   the [`solver::Engine`] trait over first-class [`solver::QpProblem`]
 //!   descriptions (built by the single `solver::EngineConfig` factory).
-//! * [`kernel`] — kernel functions, the LRU row cache and Gram abstractions.
+//! * [`kernel`] — kernel functions, the shared tiled evaluation
+//!   primitives (`kernel::tile`, feeding both Gram rows and batch
+//!   scoring), the LRU row cache and Gram abstractions.
 //! * `runtime` — PJRT engine loading `artifacts/*.hlo.txt`. Compiled only
 //!   with the `pjrt` cargo feature (off by default so the crate builds
 //!   offline with zero external dependencies); the default build uses the
@@ -41,7 +43,9 @@
 //! * [`data`] — LIBSVM IO and the synthetic dataset suite standing in for
 //!   the paper's 22 benchmark datasets.
 //! * [`svm`] — the user-facing API: the [`svm::Trainer`] builder (kernel, C,
-//!   per-class costs, solver choice, warm start → `TrainOutcome`), predict,
+//!   per-class costs, solver choice, warm start → `TrainOutcome`), the
+//!   shared batch [`svm::Scorer`] behind predict and every model kind's
+//!   decision loops, the kind-tagged model schema (`svm::schema`),
 //!   warm-started cross-validation / grid search, ε-SVR, one-class, OvO.
 //! * [`stats`] — Wilcoxon signed-rank test and the histogram machinery the
 //!   paper's evaluation uses.

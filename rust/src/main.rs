@@ -18,15 +18,20 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use pasmo::bail;
 use pasmo::coordinator::experiments::{self, ExpOptions};
 use pasmo::coordinator::report::Report;
 use pasmo::data::{libsvm, suite, Dataset};
+use pasmo::svm::multiclass::OvoModel;
+use pasmo::svm::oneclass::OneClassModel;
+use pasmo::svm::platt::PlattScaler;
 use pasmo::svm::predict::accuracy;
+use pasmo::svm::schema::{self, AnyModel};
+use pasmo::svm::svr::SvrModel;
 use pasmo::svm::trainer::TrainOutcome;
 use pasmo::svm::{SolverChoice, SvmModel, Trainer};
 use pasmo::util::cli::Args;
 use pasmo::util::error::{Context, Result};
+use pasmo::{bail, ensure};
 
 fn main() {
     let args = Args::from_env();
@@ -102,13 +107,25 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --eps E               KKT stopping accuracy (default 1e-3)\n\
                --threads N           kernel-row worker threads (bit-identical results)\n\n\
              output / backend:\n\
+               --probability         fit Platt (A, B) on the training set and save it\n\
+                                     in the model (enables `pasmo predict --probability`)\n\
                --out model.json      save the trained model\n\
                --runtime pjrt        use the PJRT kernel path (needs the `pjrt` feature)"
         ),
-        "predict" => "usage: pasmo predict --model model.json --libsvm FILE\n\n\
-             Evaluate a saved model on a LIBSVM file.\n\n\
-               --model FILE          model JSON produced by `pasmo train --out`\n\
-               --libsvm FILE         evaluation data"
+        "predict" => "usage: pasmo predict --model model.json --libsvm FILE [options]\n\n\
+             Evaluate a saved model on a LIBSVM file. The model file's kind\n\
+             tag picks the task; all four kinds score through the shared\n\
+             batch engine (blocked SV×query tiles, linear primal collapse).\n\n\
+               --model FILE          model JSON produced by `pasmo train --out` or the\n\
+                                     library save() of SVR / one-class / multiclass models\n\
+               --libsvm FILE         evaluation data (targets for svr, class ids for\n\
+                                     multiclass, ±1 with +1 = inlier for oneclass)\n\
+               --task NAME           classify | svr | oneclass | multiclass — assert the\n\
+                                     model kind (defaults to whatever the file holds)\n\
+               --threads N           batch-scoring worker threads (bit-identical results)\n\
+               --probability         classify only: per-example P(y=+1) and log-loss\n\
+                                     (needs a model trained with --probability)\n\
+               --out FILE            write per-example predictions"
             .to_string(),
         "gridsearch" => format!(
             "usage: pasmo gridsearch (--dataset NAME | --libsvm FILE) [options]\n\n\
@@ -134,7 +151,14 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --cache-rows R        cache budget in rows (default ℓ/4)\n\
                --shrink-interval I   shrink check period (0 = solver default)\n\
                --out FILE            write BENCH_solver.json trajectory artifact\n\n\
-             solver (default: the smo,pasmo pair — shrink on and off each):\n{HELP_SOLVER_FLAG}"
+             solver (default: the smo,pasmo pair — shrink on and off each):\n{HELP_SOLVER_FLAG}\n\n\
+             predict mode:\n\
+               --predict             benchmark batch scoring instead: scalar loop vs\n\
+                                     tiled vs threaded scorer vs linear collapse\n\
+                                     (queries/s + kernel-entry columns; --out writes\n\
+                                     BENCH_predict.json; --datasets takes the first\n\
+                                     name, --len sizes both the model and the queries,\n\
+                                     --threads the threaded row)"
         ),
         "experiment" => "usage: pasmo experiment <id> [options]\n\n\
              Regenerate a paper table/figure or engine comparison. Ids:\n\
@@ -179,15 +203,19 @@ fn print_usage() {
                       [--solver smo|pasmo|pasmo-multi:N|conjugate] [--eps E]\n\
                       [--w-pos W --w-neg W] (per-class cost multipliers)\n\
                       [--threads N] (kernel-row worker threads)\n\
+                      [--probability] (save Platt calibration in the model)\n\
                       [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
            predict    --model model.json --libsvm FILE\n\
+                      [--task classify|svr|oneclass|multiclass] [--threads N]\n\
+                      [--probability] [--out predictions.txt]\n\
            gridsearch --dataset NAME [--len N] [--folds K] [--cold]\n\
                       [--solver NAME] [--threads N]\n\
            bench      [--datasets a,b,c] [--len N] [--seed S] [--threads N]\n\
                       [--cache-rows R] [--shrink-interval I] [--solver NAME]\n\
-                      [--out BENCH_solver.json]\n\
+                      [--out BENCH_solver.json] [--predict]\n\
                       solver perf baseline: wall time, iterations, kernel\n\
-                      entries, cache hit rate — shrink on vs off\n\
+                      entries, cache hit rate — shrink on vs off; --predict\n\
+                      benchmarks batch scoring into BENCH_predict.json\n\
            experiment table1|table2|fig2|fig3|fig4|wss|heuristic|\n\
                       engine_shootout|all\n\
                       [--perms N --scale S --max-len N --full\n\
@@ -271,11 +299,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             args.get_parse_or("w-neg", 1.0),
         );
 
-    let TrainOutcome { model, result: res } = if args.get("runtime") == Some("pjrt") {
+    let TrainOutcome { mut model, result: res } = if args.get("runtime") == Some("pjrt") {
         train_pjrt(&ds, &trainer, gamma)?
     } else {
         trainer.train(&ds)
     };
+    if args.flag("probability") {
+        // One batch scoring pass over the training set calibrates the
+        // sigmoid; the (A, B) pair is saved inside the model file.
+        let p = PlattScaler::fit_model(&model, &ds);
+        println!("Platt calibration fitted: A={:.6} B={:.6}", p.a, p.b);
+        model.platt = Some(p);
+    }
 
     println!(
         "trained on ℓ={} d={} | C={c} γ={gamma} solver={:?}\n\
@@ -332,15 +367,176 @@ fn train_pjrt(_ds: &Arc<Dataset>, _trainer: &Trainer, _gamma: f64) -> Result<Tra
 fn cmd_predict(args: &Args) -> Result<()> {
     let model_path = args.get("model").context("need --model model.json")?;
     let file = args.get("libsvm").context("need --libsvm FILE")?;
-    let model = SvmModel::load(Path::new(model_path))?;
-    let ds = libsvm::read(Path::new(file), Some(model.support.dim()))?;
-    let acc = accuracy(&model, &ds);
-    println!(
-        "predicted {} examples with {} SVs: accuracy = {acc:.4}",
-        ds.len(),
-        model.n_sv()
+    let threads = args.get_parse_or("threads", 1usize);
+    let any = schema::load_any(Path::new(model_path))?;
+    if let Some(task) = args.get("task") {
+        ensure!(
+            task == any.task_name(),
+            "--task {task} requested but {model_path} holds a {:?} model",
+            any.task_name()
+        );
+    }
+    let out = args.get("out");
+    let probability = args.flag("probability");
+    ensure!(
+        !probability || matches!(&any, AnyModel::Svc(_)),
+        "--probability is only available for classify models (this file holds {:?})",
+        any.task_name()
     );
+    match &any {
+        AnyModel::Svc(model) => predict_classify(model, file, threads, probability, out),
+        AnyModel::Svr(model) => predict_svr(model, file, threads, out),
+        AnyModel::OneClass(model) => predict_oneclass(model, file, threads, out),
+        AnyModel::Multiclass(model) => predict_multiclass(model, file, threads, out),
+    }
+}
+
+/// Write one value per line to `out` (shared by the predict tasks).
+fn write_column<T: std::fmt::Display>(out: Option<&str>, values: &[T]) -> Result<()> {
+    if let Some(out) = out {
+        let mut text = String::new();
+        for v in values {
+            text.push_str(&format!("{v}\n"));
+        }
+        std::fs::write(out, text).with_context(|| format!("write predictions {out}"))?;
+        println!("predictions written to {out}");
+    }
     Ok(())
+}
+
+/// `pasmo predict` on a binary classifier: one batch scoring pass
+/// drives accuracy, the confusion counts and (with `--probability` and
+/// a Platt-calibrated model) per-example probabilities.
+fn predict_classify(
+    model: &SvmModel,
+    file: &str,
+    threads: usize,
+    probability: bool,
+    out: Option<&str>,
+) -> Result<()> {
+    use pasmo::svm::predict::evaluate;
+    let ds = libsvm::read(Path::new(file), Some(model.support.dim()))?;
+    let ev = evaluate(model, &ds, threads);
+    let (tp, fp, tn, fnn) = ev.confusion;
+    println!(
+        "classified {} examples with {} SVs (threads={threads}): accuracy = {:.4}\n\
+         confusion: tp={tp} fp={fp} tn={tn} fn={fnn}",
+        ds.len(),
+        model.n_sv(),
+        ev.accuracy
+    );
+    let probs = if probability {
+        let platt = model.platt.as_ref().context(
+            "model has no Platt calibration; retrain with `pasmo train --probability`",
+        )?;
+        let probs = platt.prob_all(&ev.decisions);
+        let n = probs.len().max(1) as f64;
+        let mean = probs.iter().sum::<f64>() / n;
+        let log_loss = probs
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let p = p.clamp(1e-15, 1.0 - 1e-15);
+                if ds.label(i) == 1 {
+                    -p.ln()
+                } else {
+                    -(1.0 - p).ln()
+                }
+            })
+            .sum::<f64>()
+            / n;
+        println!("mean P(y=+1) = {mean:.4}  log-loss = {log_loss:.4}");
+        Some(probs)
+    } else {
+        None
+    };
+    if out.is_some() {
+        let lines: Vec<String> = (0..ds.len())
+            .map(|i| match &probs {
+                Some(p) => {
+                    format!("{} {:.6} {:.6}", ev.predictions[i], ev.decisions[i], p[i])
+                }
+                None => format!("{} {:.6}", ev.predictions[i], ev.decisions[i]),
+            })
+            .collect();
+        write_column(out, &lines)?;
+    }
+    Ok(())
+}
+
+/// `pasmo predict` on an ε-SVR model: batch predictions, RMSE and MAE
+/// against the file's real-valued targets.
+fn predict_svr(model: &SvrModel, file: &str, threads: usize, out: Option<&str>) -> Result<()> {
+    let data = libsvm::read_regression(Path::new(file), Some(model.support.dim()))?;
+    let preds = model.predict_all(&data, threads);
+    let n = data.len().max(1) as f64;
+    let (mut se, mut ae) = (0f64, 0f64);
+    for (p, t) in preds.iter().zip(data.targets()) {
+        se += (p - t) * (p - t);
+        ae += (p - t).abs();
+    }
+    println!(
+        "predicted {} targets with {} SVs (threads={threads}): rmse = {:.6}  mae = {:.6}",
+        data.len(),
+        model.n_sv(),
+        (se / n).sqrt(),
+        ae / n
+    );
+    write_column(out, &preds)
+}
+
+/// `pasmo predict` on a one-class model: inlier fraction plus agreement
+/// with the file's ±1 labels (+1 = inlier ground truth).
+fn predict_oneclass(
+    model: &OneClassModel,
+    file: &str,
+    threads: usize,
+    out: Option<&str>,
+) -> Result<()> {
+    let data = libsvm::read(Path::new(file), Some(model.support.dim()))?;
+    let decisions = model.decision_values(&data, threads);
+    let n = data.len().max(1) as f64;
+    let inliers = decisions.iter().filter(|&&f| f >= 0.0).count();
+    let agree = (0..data.len())
+        .filter(|&i| (decisions[i] >= 0.0) == (data.label(i) == 1))
+        .count();
+    println!(
+        "scored {} examples with {} SVs (threads={threads}): inlier fraction = {:.4}  \
+         label agreement = {:.4}",
+        data.len(),
+        model.n_sv(),
+        inliers as f64 / n,
+        agree as f64 / n
+    );
+    write_column(out, &decisions)
+}
+
+/// `pasmo predict` on a one-vs-one multiclass model: every machine
+/// scores the whole batch once, votes decide the class.
+fn predict_multiclass(
+    model: &OvoModel,
+    file: &str,
+    threads: usize,
+    out: Option<&str>,
+) -> Result<()> {
+    let dim = model.machines[0].support.dim();
+    let data = libsvm::read_multiclass(Path::new(file), Some(dim))?;
+    let preds = model.predict_all(&data, threads);
+    let n = data.len().max(1) as f64;
+    let correct = preds
+        .iter()
+        .enumerate()
+        .filter(|&(i, &p)| p == data.label(i))
+        .count();
+    println!(
+        "classified {} examples over {} classes with {} machines (threads={threads}): \
+         accuracy = {:.4}",
+        data.len(),
+        model.classes.len(),
+        model.machines.len(),
+        correct as f64 / n
+    );
+    write_column(out, &preds)
 }
 
 fn cmd_gridsearch(args: &Args) -> Result<()> {
@@ -391,6 +587,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use pasmo::solver::SolverConfig;
     use pasmo::util::json::Json;
     use std::collections::BTreeMap;
+
+    if args.flag("predict") {
+        return cmd_bench_predict(args);
+    }
 
     let len = args.get_parse_or("len", 600usize);
     let seed = args.get_parse_or("seed", 42u64);
@@ -480,6 +680,153 @@ fn cmd_bench(args: &Args) -> Result<()> {
     doc.insert("threads".into(), Json::Num(threads as f64));
     doc.insert("cache_rows".into(), Json::Num(cache_rows as f64));
     doc.insert("shrink_interval".into(), Json::Num(shrink_interval as f64));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let doc = Json::Obj(doc);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, doc.to_string())
+            .with_context(|| format!("write bench report {out}"))?;
+        println!("\nreport written to {out}");
+    }
+    Ok(())
+}
+
+/// Predict-throughput baseline (`pasmo bench --predict`): queries/s and
+/// kernel entries per full scoring pass for the seed's scalar per-SV
+/// loop, the tiled batch scorer, the threaded scorer, and the linear
+/// kernel with and without the primal collapse — printed as a table and
+/// optionally written as `BENCH_predict.json` (the inference-side
+/// trajectory artifact next to `BENCH_solver.json`).
+fn cmd_bench_predict(args: &Args) -> Result<()> {
+    use pasmo::kernel::KernelFunction;
+    use pasmo::util::json::Json;
+    use pasmo::util::timer::{black_box, Stopwatch};
+    use std::collections::BTreeMap;
+
+    let len = args.get_parse_or("len", 600usize);
+    let seed = args.get_parse_or("seed", 42u64);
+    let threads = args.get_parse_or(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    );
+    let name = match args.get("datasets") {
+        Some(list) => list.split(',').next().unwrap_or("chess-board-1000").trim().to_string(),
+        None => "chess-board-1000".to_string(),
+    };
+    let spec = suite::find(&name)
+        .with_context(|| format!("unknown dataset {name:?} (see `pasmo datasets`)"))?;
+    let train_set = Arc::new(spec.generate(len, seed));
+    let queries = spec.generate(len, seed.wrapping_add(1));
+    let model = Trainer::rbf(spec.c, spec.gamma).train(&train_set).model;
+    // Same expansion under the linear kernel exercises the collapse path
+    // (throughput only — the decision surface is irrelevant here).
+    let linear = SvmModel {
+        kernel: KernelFunction::Linear,
+        support: model.support.clone(),
+        coef: model.coef.clone(),
+        bias: model.bias,
+        platt: None,
+    };
+    let n_sv = model.n_sv();
+    let q = queries.len();
+
+    println!("==== pasmo bench --predict (scoring baseline) ====");
+    println!("dataset={name} ℓ={len} queries={q} SVs={n_sv} threads={threads}\n");
+    println!(
+        "{:<18} {:>12} {:>14} {:>16}",
+        "mode", "s/pass", "queries/s", "kernel-entries"
+    );
+
+    // Mean seconds per full scoring pass (1 warmup + `reps` timed).
+    fn time_pass(reps: usize, mut pass: impl FnMut() -> f64) -> f64 {
+        black_box(pass());
+        let mut total = 0.0;
+        for _ in 0..reps {
+            let t = Stopwatch::start();
+            black_box(pass());
+            total += t.secs();
+        }
+        total / reps as f64
+    }
+
+    let scalar_pass = |m: &SvmModel| {
+        // The seed's per-example, per-SV loop — the pre-scorer baseline.
+        let mut acc = 0.0;
+        for i in 0..queries.len() {
+            let x = queries.row(i);
+            let mut f = m.bias;
+            for s in 0..m.support.len() {
+                f += m.coef[s] * m.kernel.eval(m.support.row(s), x);
+            }
+            acc += f;
+        }
+        acc
+    };
+
+    let reps = 5usize;
+    let full_entries = (q * n_sv) as f64;
+    // (mode, kernel, seconds per pass, kernel entries per pass)
+    let mut rows: Vec<(String, String, f64, f64)> = Vec::new();
+    rows.push((
+        "scalar".into(),
+        "rbf".into(),
+        time_pass(reps, || scalar_pass(&model)),
+        full_entries,
+    ));
+    let tiled = model.scorer();
+    rows.push((
+        "tiled".into(),
+        "rbf".into(),
+        time_pass(reps, || tiled.decision_values(&queries).iter().sum()),
+        full_entries,
+    ));
+    let threaded = model.scorer().with_threads(threads);
+    rows.push((
+        "threaded".into(),
+        "rbf".into(),
+        time_pass(reps, || threaded.decision_values(&queries).iter().sum()),
+        full_entries,
+    ));
+    let lin_exp = linear.scorer().collapse_linear(false);
+    rows.push((
+        "linear".into(),
+        "linear".into(),
+        time_pass(reps, || lin_exp.decision_values(&queries).iter().sum()),
+        full_entries,
+    ));
+    let lin_col = linear.scorer();
+    rows.push((
+        "linear-collapse".into(),
+        "linear".into(),
+        time_pass(reps, || lin_col.decision_values(&queries).iter().sum()),
+        0.0,
+    ));
+
+    let mut runs: Vec<Json> = Vec::new();
+    for (mode, kernel, s_per_pass, entries) in &rows {
+        println!(
+            "{:<18} {:>11.6}s {:>14.1} {:>16}",
+            mode,
+            s_per_pass,
+            q as f64 / s_per_pass,
+            *entries as u64
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("mode".into(), Json::Str(mode.clone()));
+        obj.insert("kernel".into(), Json::Str(kernel.clone()));
+        obj.insert("wall_s_per_pass".into(), Json::Num(*s_per_pass));
+        obj.insert("queries_per_s".into(), Json::Num(q as f64 / s_per_pass));
+        obj.insert("kernel_entries_per_pass".into(), Json::Num(*entries));
+        runs.push(Json::Obj(obj));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("predict".into()));
+    doc.insert("dataset".into(), Json::Str(name));
+    doc.insert("len".into(), Json::Num(len as f64));
+    doc.insert("queries".into(), Json::Num(q as f64));
+    doc.insert("n_sv".into(), Json::Num(n_sv as f64));
+    doc.insert("seed".into(), Json::Num(seed as f64));
+    doc.insert("threads".into(), Json::Num(threads as f64));
     doc.insert("runs".into(), Json::Arr(runs));
     let doc = Json::Obj(doc);
     if let Some(out) = args.get("out") {

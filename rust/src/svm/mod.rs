@@ -2,8 +2,12 @@
 //! / grid search, plus ε-SVR, one-class SVM and Platt probability
 //! calibration — all driven through the `solver::Engine` contract.
 //!
-//! The front door is [`Trainer`]: a builder over kernel, C, per-class
-//! costs, solver choice and warm start that yields a [`TrainOutcome`].
+//! The front door for training is [`Trainer`]: a builder over kernel, C,
+//! per-class costs, solver choice and warm start that yields a
+//! [`TrainOutcome`]. The front door for inference is the shared batch
+//! [`Scorer`] ([`scorer`]): every model kind's decision loops route
+//! through it, and every model kind saves/loads through the kind-tagged
+//! JSON schema ([`schema`]).
 pub mod crossval;
 pub mod gridsearch;
 pub mod model;
@@ -11,9 +15,12 @@ pub mod multiclass;
 pub mod oneclass;
 pub mod platt;
 pub mod predict;
+pub mod schema;
+pub mod scorer;
 pub mod svr;
 pub mod trainer;
 
 pub use crate::solver::engine::SolverChoice;
 pub use model::SvmModel;
+pub use scorer::Scorer;
 pub use trainer::{TrainOutcome, Trainer};

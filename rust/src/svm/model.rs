@@ -2,12 +2,14 @@
 
 use std::path::Path;
 
-use crate::util::error::{Context, Error, Result};
-use crate::{bail, ensure};
+use crate::util::error::Result;
 
 use crate::data::dataset::Dataset;
 use crate::kernel::function::KernelFunction;
-use crate::util::json::Json;
+
+use super::platt::PlattScaler;
+use super::schema;
+use super::scorer::Scorer;
 
 /// A trained binary SVM classifier.
 ///
@@ -24,6 +26,9 @@ pub struct SvmModel {
     pub coef: Vec<f64>,
     /// Bias term b of the decision function.
     pub bias: f64,
+    /// Optional Platt probability calibration (fitted by
+    /// [`PlattScaler::fit_model`]; saved/loaded with the model).
+    pub platt: Option<PlattScaler>,
 }
 
 impl SvmModel {
@@ -45,7 +50,7 @@ impl SvmModel {
                 coef.push(alpha[i]);
             }
         }
-        SvmModel { kernel, support, coef, bias }
+        SvmModel { kernel, support, coef, bias, platt: None }
     }
 
     /// Number of support vectors.
@@ -53,13 +58,18 @@ impl SvmModel {
         self.coef.len()
     }
 
-    /// Decision value `f(x)`.
+    /// The batch scoring engine over this model's expansion — build it
+    /// once per batch (it precomputes the support-side invariants), then
+    /// score whole datasets via [`Scorer::decision_values`] /
+    /// [`Scorer::decision_block`].
+    pub fn scorer(&self) -> Scorer<'_> {
+        Scorer::new(self.kernel, &self.support, &self.coef, self.bias)
+    }
+
+    /// Decision value `f(x)` (one-off convenience: builds a throwaway
+    /// [`Scorer`]; batch callers use [`SvmModel::scorer`] directly).
     pub fn decision(&self, x: &[f32]) -> f64 {
-        let mut f = self.bias;
-        for s in 0..self.support.len() {
-            f += self.coef[s] * self.kernel.eval(self.support.row(s), x);
-        }
-        f
+        self.scorer().decision(x)
     }
 
     /// Predicted label (±1; 0-decision maps to +1, LIBSVM convention).
@@ -71,94 +81,25 @@ impl SvmModel {
         }
     }
 
-    /// Serialize to a JSON file.
+    /// Serialize to a JSON file (schema v2, `kind: "svc"` — see
+    /// [`schema`]).
     pub fn save(&self, path: &Path) -> Result<()> {
-        use std::collections::BTreeMap;
-        let mut obj = BTreeMap::new();
-        let (kname, gamma, coef0, degree) = match self.kernel {
-            KernelFunction::Rbf { gamma } => ("rbf", gamma, 0.0, 0),
-            KernelFunction::Linear => ("linear", 0.0, 0.0, 0),
-            KernelFunction::Poly { gamma, coef0, degree } => ("poly", gamma, coef0, degree),
-            KernelFunction::Sigmoid { gamma, coef0 } => ("sigmoid", gamma, coef0, 0),
-        };
-        obj.insert("kernel".into(), Json::Str(kname.into()));
-        obj.insert("gamma".into(), Json::Num(gamma));
-        obj.insert("coef0".into(), Json::Num(coef0));
-        obj.insert("degree".into(), Json::Num(degree as f64));
-        obj.insert("bias".into(), Json::Num(self.bias));
-        obj.insert("dim".into(), Json::Num(self.support.dim() as f64));
-        obj.insert(
-            "coef".into(),
-            Json::Arr(self.coef.iter().map(|&c| Json::Num(c)).collect()),
-        );
-        obj.insert(
-            "labels".into(),
-            Json::Arr(
-                self.support
-                    .labels()
-                    .iter()
-                    .map(|&y| Json::Num(y as f64))
-                    .collect(),
-            ),
-        );
-        let mut rows = Vec::new();
-        for i in 0..self.support.len() {
-            rows.push(Json::Arr(
-                self.support.row(i).iter().map(|&v| Json::Num(v as f64)).collect(),
-            ));
-        }
-        obj.insert("sv".into(), Json::Arr(rows));
-        std::fs::write(path, Json::Obj(obj).to_string())
-            .with_context(|| format!("write {}", path.display()))
+        schema::save(path, &schema::svc_to_json(self))
     }
 
-    /// Load from a JSON file written by [`SvmModel::save`].
+    /// Load from a JSON file written by [`SvmModel::save`] (v1 files
+    /// without a `kind` tag load as classifiers too). Parsing is strict:
+    /// a non-numeric `coef`/`labels`/`sv` entry fails with its position
+    /// instead of being silently dropped.
     pub fn load(path: &Path) -> Result<SvmModel> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read {}", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| Error::msg(format!("parse model: {e}")))?;
-        let get = |k: &str| v.get(k).with_context(|| format!("missing field {k}"));
-        let gamma = get("gamma")?.as_f64().context("gamma")?;
-        let coef0 = get("coef0")?.as_f64().context("coef0")?;
-        let degree = get("degree")?.as_f64().context("degree")? as u32;
-        let kernel = match get("kernel")?.as_str().context("kernel")? {
-            "rbf" => KernelFunction::Rbf { gamma },
-            "linear" => KernelFunction::Linear,
-            "poly" => KernelFunction::Poly { gamma, coef0, degree },
-            "sigmoid" => KernelFunction::Sigmoid { gamma, coef0 },
-            other => bail!("unknown kernel {other:?}"),
-        };
-        let bias = get("bias")?.as_f64().context("bias")?;
-        let dim = get("dim")?.as_usize().context("dim")?;
-        let coef: Vec<f64> = get("coef")?
-            .as_arr()
-            .context("coef")?
-            .iter()
-            .filter_map(|j| j.as_f64())
-            .collect();
-        let labels: Vec<i8> = get("labels")?
-            .as_arr()
-            .context("labels")?
-            .iter()
-            .filter_map(|j| j.as_f64())
-            .map(|y| if y > 0.0 { 1 } else { -1 })
-            .collect();
-        let mut support = Dataset::with_dim(dim);
-        let rows = get("sv")?.as_arr().context("sv")?;
-        ensure!(
-            rows.len() == coef.len() && rows.len() == labels.len(),
-            "sv/coef/label counts disagree"
-        );
-        let mut buf = vec![0f32; dim];
-        for (r, row) in rows.iter().enumerate() {
-            let vals = row.as_arr().context("sv row")?;
-            ensure!(vals.len() == dim, "sv row arity");
-            for (k, jv) in vals.iter().enumerate() {
-                buf[k] = jv.as_f64().context("sv value")? as f32;
-            }
-            support.push(&buf, labels[r]);
+        match schema::load_any(path)? {
+            schema::AnyModel::Svc(m) => Ok(m),
+            other => crate::bail!(
+                "{} holds a {:?} model, not a binary classifier",
+                path.display(),
+                other.task_name()
+            ),
         }
-        Ok(SvmModel { kernel, support, coef, bias })
     }
 }
 
@@ -204,9 +145,23 @@ mod tests {
         let l = SvmModel::load(&path).unwrap();
         assert_eq!(l.n_sv(), m.n_sv());
         assert_eq!(l.kernel, m.kernel);
+        assert!(l.platt.is_none());
         for x in [[0.3f32, -0.7], [2.0, 1.0]] {
             assert!((l.decision(&x) - m.decision(&x)).abs() < 1e-9);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn platt_calibration_round_trips() {
+        let mut m = toy_model();
+        m.platt = Some(PlattScaler { a: -1.25, b: 0.5 });
+        let dir = std::env::temp_dir().join("pasmo-model-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model-platt.json");
+        m.save(&path).unwrap();
+        let l = SvmModel::load(&path).unwrap();
+        assert_eq!(l.platt, Some(PlattScaler { a: -1.25, b: 0.5 }));
         std::fs::remove_file(&path).ok();
     }
 
@@ -217,6 +172,27 @@ mod tests {
         let path = dir.join("bad.json");
         std::fs::write(&path, "{\"kernel\": \"rbf\"}").unwrap();
         assert!(SvmModel::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_reports_position_of_non_numeric_coef() {
+        // The v1 loader silently dropped non-numeric coef entries and
+        // failed later (or worse, misaligned); the strict parser names
+        // the offending position.
+        let dir = std::env::temp_dir().join("pasmo-model-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad-coef.json");
+        std::fs::write(
+            &path,
+            "{\"kernel\":\"rbf\",\"gamma\":0.5,\"coef0\":0,\"degree\":0,\
+             \"bias\":0.1,\"dim\":2,\"coef\":[0.8,\"oops\"],\
+             \"labels\":[1,-1],\"sv\":[[1,0],[-1,0]]}",
+        )
+        .unwrap();
+        let err = SvmModel::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("coef[1]"), "error does not name the position: {msg}");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -1,68 +1,24 @@
 //! One-vs-one multiclass classification (LIBSVM's scheme): train
 //! k(k−1)/2 binary PA-SMO machines and combine them by majority vote.
+//!
+//! The dataset type lives in the data layer
+//! ([`crate::data::multiclass`], re-exported here) so LIBSVM IO can
+//! produce it; voting runs on the shared batch
+//! [`Scorer`](super::scorer::Scorer) — one scorer per machine per
+//! batch, each scoring the whole query set in blocked SV×query tiles.
 
-use std::collections::BTreeSet;
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::data::dataset::Dataset;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+pub use crate::data::multiclass::{blobs, MulticlassDataset};
 
 use super::model::SvmModel;
+use super::schema;
 use super::trainer::Trainer;
-
-/// A multiclass dataset: dense features with arbitrary integer labels.
-#[derive(Debug, Clone, PartialEq)]
-pub struct MulticlassDataset {
-    dim: usize,
-    features: Vec<f32>,
-    labels: Vec<i32>,
-}
-
-impl MulticlassDataset {
-    /// Empty dataset of the given feature dimension.
-    pub fn with_dim(dim: usize) -> MulticlassDataset {
-        assert!(dim > 0);
-        MulticlassDataset { dim, features: Vec::new(), labels: Vec::new() }
-    }
-
-    /// Append an example.
-    pub fn push(&mut self, x: &[f32], y: i32) {
-        assert_eq!(x.len(), self.dim);
-        self.features.extend_from_slice(x);
-        self.labels.push(y);
-    }
-
-    /// Number of examples.
-    pub fn len(&self) -> usize {
-        self.labels.len()
-    }
-
-    /// Is the dataset empty?
-    pub fn is_empty(&self) -> bool {
-        self.labels.is_empty()
-    }
-
-    /// Feature dimension.
-    pub fn dim(&self) -> usize {
-        self.dim
-    }
-
-    /// Feature row of example `i`.
-    #[inline]
-    pub fn row(&self, i: usize) -> &[f32] {
-        &self.features[i * self.dim..(i + 1) * self.dim]
-    }
-
-    /// Class label of example `i`.
-    #[inline]
-    pub fn label(&self, i: usize) -> i32 {
-        self.labels[i]
-    }
-
-    /// Distinct classes, sorted.
-    pub fn classes(&self) -> Vec<i32> {
-        self.labels.iter().copied().collect::<BTreeSet<_>>().into_iter().collect()
-    }
-}
 
 /// A one-vs-one multiclass model.
 #[derive(Debug, Clone)]
@@ -76,12 +32,46 @@ pub struct OvoModel {
 }
 
 impl OvoModel {
-    /// Majority vote over all pairwise machines (ties → smaller class id,
-    /// LIBSVM convention).
-    pub fn predict(&self, x: &[f32]) -> i32 {
+    /// Assemble from parts (the schema loader's entry): classes must be
+    /// sorted and distinct, machines aligned with pairs, pairs drawn
+    /// from the classes.
+    pub fn from_parts(
+        classes: Vec<i32>,
+        machines: Vec<SvmModel>,
+        pairs: Vec<(i32, i32)>,
+    ) -> Result<OvoModel> {
+        ensure!(classes.len() >= 2, "need at least two classes");
+        ensure!(
+            classes.windows(2).all(|w| w[0] < w[1]),
+            "classes must be sorted and distinct"
+        );
+        ensure!(
+            machines.len() == pairs.len(),
+            "machines/pairs counts disagree ({} vs {})",
+            machines.len(),
+            pairs.len()
+        );
+        ensure!(!machines.is_empty(), "need at least one pairwise machine");
+        for &(a, b) in &pairs {
+            if !(classes.contains(&a) && classes.contains(&b)) {
+                bail!("pair ({a}, {b}) references a class not in classes");
+            }
+        }
+        Ok(OvoModel { classes, machines, pairs })
+    }
+
+    /// The (a, b) class pair of every machine, aligned with
+    /// [`OvoModel::machines`].
+    pub fn pairs(&self) -> &[(i32, i32)] {
+        &self.pairs
+    }
+
+    /// Majority vote over one example's per-machine decision values
+    /// (ties → smaller class id, LIBSVM convention).
+    fn vote(&self, decision_of: impl Fn(usize) -> f64) -> i32 {
         let mut votes = vec![0usize; self.classes.len()];
-        for (m, &(a, b)) in self.machines.iter().zip(&self.pairs) {
-            let winner = if m.decision(x) >= 0.0 { a } else { b };
+        for (m, &(a, b)) in (0..self.machines.len()).zip(&self.pairs) {
+            let winner = if decision_of(m) >= 0.0 { a } else { b };
             let idx = self.classes.iter().position(|&c| c == winner).unwrap();
             votes[idx] += 1;
         }
@@ -89,15 +79,67 @@ impl OvoModel {
         self.classes[best.map(|(i, _)| i).unwrap_or(0)]
     }
 
-    /// Accuracy on a multiclass dataset.
+    /// Majority vote over all pairwise machines (ties → smaller class id,
+    /// LIBSVM convention). One-off convenience — batch callers use
+    /// [`OvoModel::predict_all`], which builds each machine's scorer
+    /// once instead of once per example.
+    pub fn predict(&self, x: &[f32]) -> i32 {
+        let decisions: Vec<f64> =
+            self.machines.iter().map(|m| m.scorer().decision(x)).collect();
+        self.vote(|m| decisions[m])
+    }
+
+    /// Predicted classes for every row of `data`: each machine scores
+    /// the whole batch in one pass (`threads` scoring workers), then
+    /// votes are tallied per example.
+    pub fn predict_all(&self, data: &MulticlassDataset, threads: usize) -> Vec<i32> {
+        let per_machine: Vec<Vec<f64>> = self
+            .machines
+            .iter()
+            .map(|m| {
+                let mut out = vec![0f64; data.len()];
+                m.scorer().with_threads(threads).decision_block(
+                    data.dim(),
+                    data.features(),
+                    &mut out,
+                );
+                out
+            })
+            .collect();
+        (0..data.len())
+            .map(|i| self.vote(|m| per_machine[m][i]))
+            .collect()
+    }
+
+    /// Accuracy on a multiclass dataset (one batch pass per machine).
     pub fn accuracy(&self, data: &MulticlassDataset) -> f64 {
         if data.is_empty() {
             return f64::NAN;
         }
-        let correct = (0..data.len())
-            .filter(|&i| self.predict(data.row(i)) == data.label(i))
+        let preds = self.predict_all(data, 1);
+        let correct = preds
+            .iter()
+            .enumerate()
+            .filter(|&(i, &p)| p == data.label(i))
             .count();
         correct as f64 / data.len() as f64
+    }
+
+    /// Serialize to a JSON file (schema v2, `kind: "multiclass"`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        schema::save(path, &schema::ovo_to_json(self))
+    }
+
+    /// Load from a JSON file written by [`OvoModel::save`].
+    pub fn load(path: &Path) -> Result<OvoModel> {
+        match schema::load_any(path)? {
+            schema::AnyModel::Multiclass(m) => Ok(m),
+            other => crate::bail!(
+                "{} holds a {:?} model, not a multiclass model",
+                path.display(),
+                other.task_name()
+            ),
+        }
     }
 }
 
@@ -126,26 +168,6 @@ pub fn train_ovo(data: &MulticlassDataset, trainer: &Trainer) -> OvoModel {
     OvoModel { classes, machines, pairs }
 }
 
-/// Synthetic k-class Gaussian blobs on a circle (test/demo generator).
-pub fn blobs(n: usize, k: usize, radius: f64, sd: f64, seed: u64) -> MulticlassDataset {
-    use crate::util::prng::Pcg;
-    assert!(k >= 2);
-    let mut rng = Pcg::new(seed);
-    let mut ds = MulticlassDataset::with_dim(2);
-    for _ in 0..n {
-        let c = rng.below(k);
-        let theta = 2.0 * std::f64::consts::PI * c as f64 / k as f64;
-        ds.push(
-            &[
-                (radius * theta.cos() + rng.normal() * sd) as f32,
-                (radius * theta.sin() + rng.normal() * sd) as f32,
-            ],
-            c as i32,
-        );
-    }
-    ds
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +178,7 @@ mod tests {
         assert_eq!(ds.classes(), vec![0, 1, 2]);
         let model = train_ovo(&ds, &Trainer::rbf(10.0, 0.5));
         assert_eq!(model.machines.len(), 3); // 3 choose 2
+        assert_eq!(model.pairs(), &[(0, 1), (0, 2), (1, 2)]);
     }
 
     #[test]
@@ -176,6 +199,42 @@ mod tests {
             let x = [(5.0 * theta.cos()) as f32, (5.0 * theta.sin()) as f32];
             assert_eq!(model.predict(&x), c as i32, "center of class {c}");
         }
+    }
+
+    #[test]
+    fn batch_prediction_matches_per_example_and_round_trips() {
+        let train_set = blobs(150, 3, 5.0, 0.4, 6);
+        let test_set = blobs(90, 3, 5.0, 0.4, 7);
+        let model = train_ovo(&train_set, &Trainer::rbf(10.0, 0.3));
+        let batch = model.predict_all(&test_set, 1);
+        let threaded = model.predict_all(&test_set, 4);
+        for i in 0..test_set.len() {
+            assert_eq!(batch[i], model.predict(test_set.row(i)), "i={i}");
+            assert_eq!(batch[i], threaded[i], "i={i} threaded");
+        }
+        // save/load round trip through the v2 `multiclass` schema
+        let dir = std::env::temp_dir().join("pasmo-ovo-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ovo.json");
+        model.save(&path).unwrap();
+        let loaded = OvoModel::load(&path).unwrap();
+        assert_eq!(loaded.classes, model.classes);
+        assert_eq!(loaded.pairs(), model.pairs());
+        assert_eq!(loaded.predict_all(&test_set, 1), batch);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        let ds = blobs(60, 2, 4.0, 0.4, 8);
+        let m = train_ovo(&ds, &Trainer::rbf(5.0, 0.5));
+        let machine = m.machines[0].clone();
+        assert!(OvoModel::from_parts(vec![0], vec![machine.clone()], vec![(0, 1)]).is_err());
+        assert!(OvoModel::from_parts(vec![0, 1], vec![], vec![]).is_err());
+        assert!(
+            OvoModel::from_parts(vec![0, 1], vec![machine.clone()], vec![(0, 7)]).is_err()
+        );
+        assert!(OvoModel::from_parts(vec![0, 1], vec![machine], vec![(0, 1)]).is_ok());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! Dual: `max −½αᵀKα  s.t.  Σα = 1, 0 ≤ α_i ≤ 1/(νℓ)` (linear term 0).
 //! Decision: `f(x) = Σ α_i k(x_i, x) − ρ`, inliers have `f ≥ 0`.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::data::dataset::Dataset;
@@ -15,6 +16,10 @@ use crate::kernel::native::NativeRowComputer;
 use crate::solver::engine::{Engine, EngineConfig, SolverChoice};
 use crate::solver::problem::QpProblem;
 use crate::solver::smo::{SolveResult, SolverConfig};
+use crate::util::error::Result;
+
+use super::schema;
+use super::scorer::Scorer;
 
 /// One-class SVM configuration.
 #[derive(Debug, Clone, Copy)]
@@ -57,18 +62,54 @@ pub struct OneClassModel {
 }
 
 impl OneClassModel {
-    /// Decision value; ≥ 0 means inlier.
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// The batch scoring engine over this model's expansion (offset
+    /// `−ρ`) — build it once per batch.
+    pub fn scorer(&self) -> Scorer<'_> {
+        Scorer::new(self.kernel, &self.support, &self.coef, -self.rho)
+    }
+
+    /// Decision value; ≥ 0 means inlier (one-off convenience; batch
+    /// callers use [`OneClassModel::scorer`] /
+    /// [`OneClassModel::decision_values`]).
     pub fn decision(&self, x: &[f32]) -> f64 {
-        let mut f = -self.rho;
-        for s in 0..self.support.len() {
-            f += self.coef[s] * self.kernel.eval(self.support.row(s), x);
-        }
-        f
+        self.scorer().decision(x)
+    }
+
+    /// Decision values for every row of `data` — one batch scoring pass
+    /// with `threads` workers.
+    pub fn decision_values(&self, data: &Dataset, threads: usize) -> Vec<f64> {
+        let mut out = vec![0f64; data.len()];
+        self.scorer()
+            .with_threads(threads)
+            .decision_block(data.dim(), data.features(), &mut out);
+        out
     }
 
     /// Is `x` on the inlier side of the decision surface?
     pub fn is_inlier(&self, x: &[f32]) -> bool {
         self.decision(x) >= 0.0
+    }
+
+    /// Serialize to a JSON file (schema v2, `kind: "oneclass"`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        schema::save(path, &schema::oneclass_to_json(self))
+    }
+
+    /// Load from a JSON file written by [`OneClassModel::save`].
+    pub fn load(path: &Path) -> Result<OneClassModel> {
+        match schema::load_any(path)? {
+            schema::AnyModel::OneClass(m) => Ok(m),
+            other => crate::bail!(
+                "{} holds a {:?} model, not a one-class model",
+                path.display(),
+                other.task_name()
+            ),
+        }
     }
 }
 
@@ -133,6 +174,34 @@ mod tests {
         assert!(model.is_inlier(&[0.0, 0.0]), "blob center must be inlier");
         assert!(!model.is_inlier(&[25.0, 25.0]), "far point must be outlier");
         assert!(!model.is_inlier(&[-30.0, 5.0]));
+    }
+
+    #[test]
+    fn batch_decisions_match_per_example_and_round_trip() {
+        let ds = blob(150, 4);
+        let cfg = OneClassConfig::new(0.2, 0.5);
+        let (model, _) = train_one_class(&ds, &cfg);
+        let queries = blob(80, 5);
+        let batch = model.decision_values(&queries, 1);
+        let threaded = model.decision_values(&queries, 4);
+        for i in 0..queries.len() {
+            let one = model.decision(queries.row(i));
+            assert_eq!(one.to_bits(), batch[i].to_bits(), "i={i}");
+            assert_eq!(one.to_bits(), threaded[i].to_bits(), "i={i} threaded");
+        }
+        // save/load round trip through the v2 `oneclass` schema
+        let dir = std::env::temp_dir().join("pasmo-oneclass-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oc.json");
+        model.save(&path).unwrap();
+        let loaded = OneClassModel::load(&path).unwrap();
+        assert_eq!(loaded.n_sv(), model.n_sv());
+        assert!((loaded.rho - model.rho).abs() < 1e-12);
+        for i in 0..queries.len().min(10) {
+            let d = (loaded.decision(queries.row(i)) - model.decision(queries.row(i))).abs();
+            assert!(d < 1e-9, "i={i}: Δ={d}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

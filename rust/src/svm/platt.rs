@@ -104,7 +104,14 @@ impl PlattScaler {
         PlattScaler { a, b }
     }
 
-    /// Fit against a model's decision values on a calibration set.
+    /// Calibrated probabilities for a whole batch of decision values
+    /// (pairs with one [`decision_values`] scoring pass).
+    pub fn prob_all(&self, decisions: &[f64]) -> Vec<f64> {
+        decisions.iter().map(|&f| self.prob(f)).collect()
+    }
+
+    /// Fit against a model's decision values on a calibration set (one
+    /// batch scoring pass through the shared scorer).
     pub fn fit_model(model: &SvmModel, calibration: &Dataset) -> PlattScaler {
         let d = decision_values(model, calibration);
         PlattScaler::fit(&d, calibration.labels())

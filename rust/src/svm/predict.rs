@@ -1,17 +1,91 @@
-//! Batch prediction and evaluation metrics.
+//! Batch prediction and evaluation metrics, all derived from one
+//! [`Scorer`] pass.
+//!
+//! [`evaluate`] computes the decision values for a whole dataset once
+//! (batch scorer, optional threads) and derives predictions, accuracy
+//! and the confusion counts from that single pass. The per-metric entry
+//! points ([`accuracy`], [`confusion`], [`predict_all`]) are per-call
+//! conveniences — each runs its own pass, so callers who want more than
+//! one statistic should take them from a single [`evaluate`] /
+//! [`evaluate_with`] result instead.
 
 use crate::data::dataset::Dataset;
 
 use super::model::SvmModel;
+use super::scorer::Scorer;
 
-/// Decision values for every row of `data`.
-pub fn decision_values(model: &SvmModel, data: &Dataset) -> Vec<f64> {
-    (0..data.len()).map(|i| model.decision(data.row(i))).collect()
+/// Everything one scoring pass over a labeled dataset yields.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Decision value `f(x)` per example.
+    pub decisions: Vec<f64>,
+    /// Predicted labels (±1; `f ≥ 0` maps to +1, LIBSVM convention).
+    pub predictions: Vec<i8>,
+    /// Fraction of predictions matching the dataset labels (NaN on an
+    /// empty dataset).
+    pub accuracy: f64,
+    /// Confusion counts (tp, fp, tn, fn) with +1 as the positive class.
+    pub confusion: (usize, usize, usize, usize),
 }
 
-/// Predicted labels for every row.
+/// Label a decision value (±1; 0 maps to +1, LIBSVM convention).
+#[inline]
+fn label_of(f: f64) -> i8 {
+    if f >= 0.0 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Derive an [`Evaluation`] from precomputed decision values (one pass,
+/// shared by every metric).
+fn evaluation_from(decisions: Vec<f64>, data: &Dataset) -> Evaluation {
+    let predictions: Vec<i8> = decisions.iter().map(|&f| label_of(f)).collect();
+    let (mut tp, mut fp, mut tn, mut fnn) = (0usize, 0usize, 0usize, 0usize);
+    let mut correct = 0usize;
+    for (i, &p) in predictions.iter().enumerate() {
+        match (p, data.label(i)) {
+            (1, 1) => tp += 1,
+            (1, -1) => fp += 1,
+            (-1, -1) => tn += 1,
+            (-1, 1) => fnn += 1,
+            _ => unreachable!("labels are ±1 by Dataset invariant"),
+        }
+        if p == data.label(i) {
+            correct += 1;
+        }
+    }
+    let accuracy = if data.is_empty() {
+        f64::NAN
+    } else {
+        correct as f64 / data.len() as f64
+    };
+    Evaluation { decisions, predictions, accuracy, confusion: (tp, fp, tn, fnn) }
+}
+
+/// Score `data` once (batch scorer with `threads` workers) and derive
+/// decisions, predictions, accuracy and confusion counts from the
+/// single pass.
+pub fn evaluate(model: &SvmModel, data: &Dataset, threads: usize) -> Evaluation {
+    let decisions = model.scorer().with_threads(threads).decision_values(data);
+    evaluation_from(decisions, data)
+}
+
+/// Like [`evaluate`] over a caller-built scorer (reuse one scorer — and
+/// its precomputed support-side invariants — across several datasets).
+pub fn evaluate_with(scorer: &Scorer<'_>, data: &Dataset) -> Evaluation {
+    evaluation_from(scorer.decision_values(data), data)
+}
+
+/// Decision values for every row of `data` (one batch pass).
+pub fn decision_values(model: &SvmModel, data: &Dataset) -> Vec<f64> {
+    model.scorer().decision_values(data)
+}
+
+/// Predicted labels for every row (one batch pass).
 pub fn predict_all(model: &SvmModel, data: &Dataset) -> Vec<i8> {
-    (0..data.len()).map(|i| model.predict(data.row(i))).collect()
+    decision_values(model, data).into_iter().map(label_of).collect()
 }
 
 /// Classification accuracy against the dataset's labels.
@@ -19,25 +93,12 @@ pub fn accuracy(model: &SvmModel, data: &Dataset) -> f64 {
     if data.is_empty() {
         return f64::NAN;
     }
-    let correct = (0..data.len())
-        .filter(|&i| model.predict(data.row(i)) == data.label(i))
-        .count();
-    correct as f64 / data.len() as f64
+    evaluate(model, data, 1).accuracy
 }
 
 /// Confusion counts (tp, fp, tn, fn) with +1 as the positive class.
 pub fn confusion(model: &SvmModel, data: &Dataset) -> (usize, usize, usize, usize) {
-    let (mut tp, mut fp, mut tn, mut fnn) = (0, 0, 0, 0);
-    for i in 0..data.len() {
-        match (model.predict(data.row(i)), data.label(i)) {
-            (1, 1) => tp += 1,
-            (1, -1) => fp += 1,
-            (-1, -1) => tn += 1,
-            (-1, 1) => fnn += 1,
-            _ => unreachable!(),
-        }
-    }
-    (tp, fp, tn, fnn)
+    evaluate(model, data, 1).confusion
 }
 
 #[cfg(test)]
@@ -49,7 +110,13 @@ mod tests {
         // A linear-kernel "model" implementing f(x) = x0: one SV at (1, 0)
         // with coef 1 and no bias.
         let sv = Dataset::new(2, vec![1.0, 0.0], vec![1]);
-        SvmModel { kernel: KernelFunction::Linear, support: sv, coef: vec![1.0], bias: 0.0 }
+        SvmModel {
+            kernel: KernelFunction::Linear,
+            support: sv,
+            coef: vec![1.0],
+            bias: 0.0,
+            platt: None,
+        }
     }
 
     fn quadrant_data() -> Dataset {
@@ -80,9 +147,40 @@ mod tests {
     }
 
     #[test]
+    fn evaluate_derives_every_metric_from_one_pass() {
+        let m = linear_stump();
+        let d = quadrant_data();
+        let ev = evaluate(&m, &d, 1);
+        assert_eq!(ev.decisions.len(), 4);
+        assert_eq!(ev.predictions, predict_all(&m, &d));
+        assert_eq!(ev.accuracy, accuracy(&m, &d));
+        assert_eq!(ev.confusion, confusion(&m, &d));
+        // the shared-scorer form agrees
+        let scorer = m.scorer();
+        let ev2 = evaluate_with(&scorer, &d);
+        assert_eq!(ev2.predictions, ev.predictions);
+        assert_eq!(ev2.confusion, ev.confusion);
+    }
+
+    #[test]
+    fn threaded_evaluation_matches_single_threaded() {
+        let m = linear_stump();
+        let d = quadrant_data();
+        let one = evaluate(&m, &d, 1);
+        let four = evaluate(&m, &d, 4);
+        assert_eq!(one.predictions, four.predictions);
+        assert!(one
+            .decisions
+            .iter()
+            .zip(&four.decisions)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
     fn empty_dataset_gives_nan_accuracy() {
         let m = linear_stump();
         let d = Dataset::with_dim(2);
         assert!(accuracy(&m, &d).is_nan());
+        assert!(evaluate(&m, &d, 1).accuracy.is_nan());
     }
 }

@@ -1,0 +1,483 @@
+//! The unified model JSON schema (v2): one kind-tagged document shape
+//! for every model kind, so SVR / one-class / multiclass models
+//! save/load exactly like the binary classifier.
+//!
+//! Common envelope: `{"format": "pasmo-model", "version": 2,
+//! "kind": "svc" | "svr" | "oneclass" | "multiclass", ...}` plus the
+//! kernel fields (`kernel`/`gamma`/`coef0`/`degree`), `dim`, and the
+//! kind's payload:
+//!
+//! * `svc` — `bias`, `coef`, `labels`, `sv`, optional `platt: {a, b}`;
+//! * `svr` — `bias`, `coef`, `sv`;
+//! * `oneclass` — `rho`, `coef`, `sv`;
+//! * `multiclass` — `classes`, `pairs`, `machines` (an array of `svc`
+//!   payloads, one per class pair).
+//!
+//! v1 files (no `kind` tag) load as `svc` — the pre-v2 classifier
+//! schema is a strict subset. Parsing is **strict with positioned
+//! errors**: a non-numeric entry in `coef`/`labels`/`sv`/`classes`
+//! fails as e.g. `coef[3]: expected a number` instead of being silently
+//! dropped into a count mismatch (or a same-count misalignment).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+use crate::{bail, ensure};
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+
+use super::model::SvmModel;
+use super::multiclass::OvoModel;
+use super::oneclass::OneClassModel;
+use super::platt::PlattScaler;
+use super::svr::SvrModel;
+
+/// Any model the unified schema can hold, tagged by kind.
+#[derive(Debug, Clone)]
+pub enum AnyModel {
+    /// A binary classifier (`kind: "svc"`, or a v1 file).
+    Svc(SvmModel),
+    /// An ε-SVR regressor (`kind: "svr"`).
+    Svr(SvrModel),
+    /// A one-class model (`kind: "oneclass"`).
+    OneClass(OneClassModel),
+    /// A one-vs-one multiclass model (`kind: "multiclass"`).
+    Multiclass(OvoModel),
+}
+
+impl AnyModel {
+    /// The prediction task this model serves — the `--task` vocabulary
+    /// of `pasmo predict` (`classify | svr | oneclass | multiclass`).
+    pub fn task_name(&self) -> &'static str {
+        match self {
+            AnyModel::Svc(_) => "classify",
+            AnyModel::Svr(_) => "svr",
+            AnyModel::OneClass(_) => "oneclass",
+            AnyModel::Multiclass(_) => "multiclass",
+        }
+    }
+
+    /// Feature dimension the model's support vectors live in.
+    pub fn dim(&self) -> usize {
+        match self {
+            AnyModel::Svc(m) => m.support.dim(),
+            AnyModel::Svr(m) => m.support.dim(),
+            AnyModel::OneClass(m) => m.support.dim(),
+            AnyModel::Multiclass(m) => m.machines[0].support.dim(),
+        }
+    }
+}
+
+/// Load any model file, dispatching on its `kind` tag (absent = v1
+/// classifier).
+pub fn load_any(path: &Path) -> Result<AnyModel> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| Error::msg(format!("parse model: {e}")))?;
+    let kind = match v.get("kind") {
+        None => "svc", // v1 files predate the tag
+        Some(k) => k.as_str().context("kind: expected a string")?,
+    };
+    let loaded = match kind {
+        "svc" => AnyModel::Svc(svc_of_json(&v)?),
+        "svr" => AnyModel::Svr(svr_of_json(&v)?),
+        "oneclass" => AnyModel::OneClass(oneclass_of_json(&v)?),
+        "multiclass" => AnyModel::Multiclass(ovo_of_json(&v)?),
+        other => bail!("unknown model kind {other:?}"),
+    };
+    Ok(loaded)
+}
+
+/// Write a schema document to disk (compact JSON).
+pub fn save(path: &Path, doc: &Json) -> Result<()> {
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("write {}", path.display()))
+}
+
+/// The common envelope: format/version/kind plus the kernel fields and
+/// the support dimension.
+fn envelope(kind: &str, kernel: KernelFunction, dim: usize) -> BTreeMap<String, Json> {
+    let mut obj = BTreeMap::new();
+    obj.insert("format".into(), Json::Str("pasmo-model".into()));
+    obj.insert("version".into(), Json::Num(2.0));
+    obj.insert("kind".into(), Json::Str(kind.into()));
+    let (kname, gamma, coef0, degree) = match kernel {
+        KernelFunction::Rbf { gamma } => ("rbf", gamma, 0.0, 0),
+        KernelFunction::Linear => ("linear", 0.0, 0.0, 0),
+        KernelFunction::Poly { gamma, coef0, degree } => ("poly", gamma, coef0, degree),
+        KernelFunction::Sigmoid { gamma, coef0 } => ("sigmoid", gamma, coef0, 0),
+    };
+    obj.insert("kernel".into(), Json::Str(kname.into()));
+    obj.insert("gamma".into(), Json::Num(gamma));
+    obj.insert("coef0".into(), Json::Num(coef0));
+    obj.insert("degree".into(), Json::Num(degree as f64));
+    obj.insert("dim".into(), Json::Num(dim as f64));
+    obj
+}
+
+/// Parse the kernel fields of a document.
+fn kernel_of(v: &Json) -> Result<KernelFunction> {
+    let get = |k: &str| v.get(k).with_context(|| format!("missing field {k}"));
+    let gamma = get("gamma")?.as_f64().context("gamma: expected a number")?;
+    let coef0 = get("coef0")?.as_f64().context("coef0: expected a number")?;
+    let degree = get("degree")?.as_f64().context("degree: expected a number")? as u32;
+    Ok(match get("kernel")?.as_str().context("kernel: expected a string")? {
+        "rbf" => KernelFunction::Rbf { gamma },
+        "linear" => KernelFunction::Linear,
+        "poly" => KernelFunction::Poly { gamma, coef0, degree },
+        "sigmoid" => KernelFunction::Sigmoid { gamma, coef0 },
+        other => bail!("unknown kernel {other:?}"),
+    })
+}
+
+/// Required field accessor.
+fn field<'a>(v: &'a Json, name: &str) -> Result<&'a Json> {
+    v.get(name).with_context(|| format!("missing field {name}"))
+}
+
+/// Strict f64-array parse: every entry must be a number, errors name
+/// the offending position (`name[i]: expected a number`).
+fn num_array(v: &Json, name: &str) -> Result<Vec<f64>> {
+    let arr = field(v, name)?
+        .as_arr()
+        .with_context(|| format!("{name}: expected an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, j) in arr.iter().enumerate() {
+        out.push(
+            j.as_f64()
+                .with_context(|| format!("{name}[{i}]: expected a number"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Serialize support rows as an array of row arrays.
+fn sv_json(support: &Dataset) -> Json {
+    let mut rows = Vec::with_capacity(support.len());
+    for i in 0..support.len() {
+        rows.push(Json::Arr(
+            support.row(i).iter().map(|&v| Json::Num(v as f64)).collect(),
+        ));
+    }
+    Json::Arr(rows)
+}
+
+/// Strict support-matrix parse into a dense [`Dataset`]. `labels` gives
+/// each row's ±1 label (classifier), or `None` for the label-free kinds
+/// (every row stored with label +1, which the kernels never read).
+fn sv_of_json(v: &Json, dim: usize, labels: Option<&[i8]>) -> Result<Dataset> {
+    let rows = field(v, "sv")?.as_arr().context("sv: expected an array")?;
+    if let Some(labels) = labels {
+        ensure!(
+            rows.len() == labels.len(),
+            "sv/labels counts disagree ({} vs {})",
+            rows.len(),
+            labels.len()
+        );
+    }
+    let mut support = Dataset::with_dim(dim);
+    let mut buf = vec![0f32; dim];
+    for (r, row) in rows.iter().enumerate() {
+        let vals = row
+            .as_arr()
+            .with_context(|| format!("sv[{r}]: expected an array"))?;
+        ensure!(
+            vals.len() == dim,
+            "sv[{r}]: expected {dim} values, got {}",
+            vals.len()
+        );
+        for (k, jv) in vals.iter().enumerate() {
+            buf[k] = jv
+                .as_f64()
+                .with_context(|| format!("sv[{r}][{k}]: expected a number"))?
+                as f32;
+        }
+        support.push(&buf, labels.map(|l| l[r]).unwrap_or(1));
+    }
+    Ok(support)
+}
+
+/// The `svc` payload (shared by the standalone classifier file and the
+/// machines of a multiclass file).
+pub(crate) fn svc_to_json(m: &SvmModel) -> Json {
+    let mut obj = envelope("svc", m.kernel, m.support.dim());
+    obj.insert("bias".into(), Json::Num(m.bias));
+    obj.insert(
+        "coef".into(),
+        Json::Arr(m.coef.iter().map(|&c| Json::Num(c)).collect()),
+    );
+    obj.insert(
+        "labels".into(),
+        Json::Arr(
+            m.support
+                .labels()
+                .iter()
+                .map(|&y| Json::Num(y as f64))
+                .collect(),
+        ),
+    );
+    obj.insert("sv".into(), sv_json(&m.support));
+    if let Some(p) = &m.platt {
+        let mut platt = BTreeMap::new();
+        platt.insert("a".into(), Json::Num(p.a));
+        platt.insert("b".into(), Json::Num(p.b));
+        obj.insert("platt".into(), Json::Obj(platt));
+    }
+    Json::Obj(obj)
+}
+
+/// Parse an `svc` payload (also accepts v1 documents — same fields).
+pub(crate) fn svc_of_json(v: &Json) -> Result<SvmModel> {
+    let kernel = kernel_of(v)?;
+    let bias = field(v, "bias")?.as_f64().context("bias: expected a number")?;
+    let dim = field(v, "dim")?.as_usize().context("dim: expected a number")?;
+    let coef = num_array(v, "coef")?;
+    let labels: Vec<i8> = num_array(v, "labels")?
+        .into_iter()
+        .map(|y| if y > 0.0 { 1 } else { -1 })
+        .collect();
+    let support = sv_of_json(v, dim, Some(&labels))?;
+    ensure!(
+        support.len() == coef.len(),
+        "sv/coef counts disagree ({} vs {})",
+        support.len(),
+        coef.len()
+    );
+    let platt = match v.get("platt") {
+        None => None,
+        Some(p) => Some(PlattScaler {
+            a: field(p, "a")?.as_f64().context("platt.a: expected a number")?,
+            b: field(p, "b")?.as_f64().context("platt.b: expected a number")?,
+        }),
+    };
+    Ok(SvmModel { kernel, support, coef, bias, platt })
+}
+
+/// The `svr` document.
+pub(crate) fn svr_to_json(m: &SvrModel) -> Json {
+    let mut obj = envelope("svr", m.kernel, m.support.dim());
+    obj.insert("bias".into(), Json::Num(m.bias));
+    obj.insert(
+        "coef".into(),
+        Json::Arr(m.coef.iter().map(|&c| Json::Num(c)).collect()),
+    );
+    obj.insert("sv".into(), sv_json(&m.support));
+    Json::Obj(obj)
+}
+
+/// Parse an `svr` document.
+pub(crate) fn svr_of_json(v: &Json) -> Result<SvrModel> {
+    let kernel = kernel_of(v)?;
+    let bias = field(v, "bias")?.as_f64().context("bias: expected a number")?;
+    let dim = field(v, "dim")?.as_usize().context("dim: expected a number")?;
+    let coef = num_array(v, "coef")?;
+    let support = sv_of_json(v, dim, None)?;
+    ensure!(
+        support.len() == coef.len(),
+        "sv/coef counts disagree ({} vs {})",
+        support.len(),
+        coef.len()
+    );
+    Ok(SvrModel { kernel, support, coef, bias })
+}
+
+/// The `oneclass` document.
+pub(crate) fn oneclass_to_json(m: &OneClassModel) -> Json {
+    let mut obj = envelope("oneclass", m.kernel, m.support.dim());
+    obj.insert("rho".into(), Json::Num(m.rho));
+    obj.insert(
+        "coef".into(),
+        Json::Arr(m.coef.iter().map(|&c| Json::Num(c)).collect()),
+    );
+    obj.insert("sv".into(), sv_json(&m.support));
+    Json::Obj(obj)
+}
+
+/// Parse a `oneclass` document.
+pub(crate) fn oneclass_of_json(v: &Json) -> Result<OneClassModel> {
+    let kernel = kernel_of(v)?;
+    let rho = field(v, "rho")?.as_f64().context("rho: expected a number")?;
+    let dim = field(v, "dim")?.as_usize().context("dim: expected a number")?;
+    let coef = num_array(v, "coef")?;
+    let support = sv_of_json(v, dim, None)?;
+    ensure!(
+        support.len() == coef.len(),
+        "sv/coef counts disagree ({} vs {})",
+        support.len(),
+        coef.len()
+    );
+    Ok(OneClassModel { kernel, support, coef, rho })
+}
+
+/// The `multiclass` document: classes, class pairs, one `svc` payload
+/// per pairwise machine.
+pub(crate) fn ovo_to_json(m: &OvoModel) -> Json {
+    let dim = m.machines.first().map(|b| b.support.dim()).unwrap_or(1);
+    let kernel = m.machines.first().map(|b| b.kernel).unwrap_or(KernelFunction::Linear);
+    let mut obj = envelope("multiclass", kernel, dim);
+    obj.insert(
+        "classes".into(),
+        Json::Arr(m.classes.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    obj.insert(
+        "pairs".into(),
+        Json::Arr(
+            m.pairs()
+                .iter()
+                .map(|&(a, b)| {
+                    Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)])
+                })
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "machines".into(),
+        Json::Arr(m.machines.iter().map(svc_to_json).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Strict i32 parse of one numeric JSON value.
+fn class_id(j: &Json, what: &str) -> Result<i32> {
+    let n = j.as_f64().with_context(|| format!("{what}: expected a number"))?;
+    ensure!(
+        n.fract() == 0.0 && n.abs() <= i32::MAX as f64,
+        "{what}: {n} is not an integer class id"
+    );
+    Ok(n as i32)
+}
+
+/// Parse a `multiclass` document.
+pub(crate) fn ovo_of_json(v: &Json) -> Result<OvoModel> {
+    let classes_arr = field(v, "classes")?
+        .as_arr()
+        .context("classes: expected an array")?;
+    let mut classes = Vec::with_capacity(classes_arr.len());
+    for (i, j) in classes_arr.iter().enumerate() {
+        classes.push(class_id(j, &format!("classes[{i}]"))?);
+    }
+    let pairs_arr = field(v, "pairs")?.as_arr().context("pairs: expected an array")?;
+    let mut pairs = Vec::with_capacity(pairs_arr.len());
+    for (i, j) in pairs_arr.iter().enumerate() {
+        let pair = j
+            .as_arr()
+            .with_context(|| format!("pairs[{i}]: expected an array"))?;
+        ensure!(pair.len() == 2, "pairs[{i}]: expected [a, b]");
+        pairs.push((
+            class_id(&pair[0], &format!("pairs[{i}][0]"))?,
+            class_id(&pair[1], &format!("pairs[{i}][1]"))?,
+        ));
+    }
+    let machines_arr = field(v, "machines")?
+        .as_arr()
+        .context("machines: expected an array")?;
+    let dim = field(v, "dim")?.as_usize().context("dim: expected a number")?;
+    let mut machines = Vec::with_capacity(machines_arr.len());
+    for (i, j) in machines_arr.iter().enumerate() {
+        let m = svc_of_json(j).with_context(|| format!("machines[{i}]"))?;
+        // Validate here, not at predict time: a dimension mismatch must
+        // be a positioned load error, never a mid-batch scorer panic.
+        ensure!(
+            m.support.dim() == dim,
+            "machines[{i}]: support dim {} != model dim {dim}",
+            m.support.dim()
+        );
+        machines.push(m);
+    }
+    OvoModel::from_parts(classes, machines, pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("pasmo-schema-test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn v1_document_without_kind_loads_as_svc() {
+        let path = dir().join("v1.json");
+        std::fs::write(
+            &path,
+            "{\"kernel\":\"rbf\",\"gamma\":0.5,\"coef0\":0,\"degree\":0,\
+             \"bias\":0.25,\"dim\":2,\"coef\":[1.5,-0.5],\
+             \"labels\":[1,-1],\"sv\":[[1,0],[0,1]]}",
+        )
+        .unwrap();
+        match load_any(&path).unwrap() {
+            AnyModel::Svc(m) => {
+                assert_eq!(m.n_sv(), 2);
+                assert_eq!(m.bias, 0.25);
+                assert_eq!(m.support.label(1), -1);
+            }
+            other => panic!("wrong kind {:?}", other.task_name()),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let path = dir().join("alien.json");
+        std::fs::write(&path, "{\"kind\":\"ranking\"}").unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown model kind"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_counts_are_rejected() {
+        let path = dir().join("misaligned.json");
+        std::fs::write(
+            &path,
+            "{\"kernel\":\"linear\",\"gamma\":0,\"coef0\":0,\"degree\":0,\
+             \"bias\":0,\"dim\":1,\"coef\":[1,2,3],\
+             \"labels\":[1,-1],\"sv\":[[1],[2]]}",
+        )
+        .unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("counts disagree"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn multiclass_machine_dim_mismatch_is_a_load_error() {
+        // A machine whose support dim disagrees with the model dim must
+        // fail at load with a position, not panic at predict time.
+        let path = dir().join("dim-mismatch.json");
+        std::fs::write(
+            &path,
+            "{\"kind\":\"multiclass\",\"kernel\":\"linear\",\"gamma\":0,\
+             \"coef0\":0,\"degree\":0,\"dim\":3,\
+             \"classes\":[0,1],\"pairs\":[[0,1]],\
+             \"machines\":[{\"kernel\":\"linear\",\"gamma\":0,\"coef0\":0,\
+             \"degree\":0,\"bias\":0,\"dim\":2,\"coef\":[1],\
+             \"labels\":[1],\"sv\":[[1,0]]}]}",
+        )
+        .unwrap();
+        let err = load_any(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("machines[0]") && msg.contains("dim"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sv_matrix_errors_are_positioned() {
+        let path = dir().join("bad-sv.json");
+        std::fs::write(
+            &path,
+            "{\"kernel\":\"linear\",\"gamma\":0,\"coef0\":0,\"degree\":0,\
+             \"bias\":0,\"dim\":2,\"coef\":[1],\
+             \"labels\":[1],\"sv\":[[1,null]]}",
+        )
+        .unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("sv[0][1]"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+}

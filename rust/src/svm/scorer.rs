@@ -1,0 +1,454 @@
+//! The shared batch scoring engine — one decision-function core for
+//! every model kind.
+//!
+//! Every trained model in this crate predicts through the same kernel
+//! expansion `f(x) = Σ_s coef_s · k(x_s, x) + offset`; only the
+//! coefficients and the offset differ (C-SVC bias, ε-SVR bias,
+//! one-class `−ρ`, one machine per class pair for OvO). [`Scorer`]
+//! evaluates that expansion for a whole query batch in blocked SV×query
+//! tiles on the same [`crate::kernel::tile`] primitives the training
+//! side uses for Gram rows:
+//!
+//! * support vectors stay in the dense row-major [`Dataset`] layout;
+//!   queries are scored against L2-sized SV blocks so a support row is
+//!   streamed from memory once per query *chunk*, not once per query;
+//! * within a block the 4-wide tiled dot loop of
+//!   [`crate::kernel::tile::kernel_block`] runs with per-entry f64
+//!   accumulation in feature order — batch results are **bit-identical**
+//!   to scoring one query at a time, and threaded chunks
+//!   ([`crate::kernel::tile::chunked`] over disjoint query ranges) are
+//!   bit-identical to single-threaded runs;
+//! * for the linear kernel the expansion collapses to the primal weight
+//!   vector `w = Σ_s coef_s · x_s`, making a query cost O(d) instead of
+//!   O(n_sv · d) with zero kernel evaluations (disable with
+//!   [`Scorer::collapse_linear`] to force the expansion path).
+//!
+//! RBF values use the `‖a‖²+‖b‖²−2a·b` decomposition (the Gram-row fast
+//! path), which differs from the direct `exp(−γ‖a−b‖²)` evaluation only
+//! in the last floating-point bits; the dot-product kernels
+//! (linear/poly/sigmoid) are bit-identical to [`KernelFunction::eval`].
+
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
+use crate::kernel::tile;
+
+/// Support rows per SV×query tile block. A block of `SV_BLOCK · d` f32
+/// features is revisited by every query of a chunk, so it is sized to
+/// stay cache-resident for the dimensions the suite uses
+/// (512 rows × 64 dims × 4 B = 128 KiB).
+const SV_BLOCK: usize = 512;
+
+/// ‖x‖² with f64 accumulation in feature order (the RBF decomposition's
+/// query-side input).
+#[inline]
+fn sqnorm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v as f64 * v as f64).sum()
+}
+
+/// Batch decision-function evaluator over a borrowed support set.
+///
+/// Construction precomputes the support-side invariants (RBF squared
+/// norms, the collapsed linear `w`), so build it once per batch — the
+/// model types expose a `scorer()` method doing exactly that.
+///
+/// ```
+/// use pasmo::svm::Trainer;
+/// let data = std::sync::Arc::new(pasmo::data::synth::chessboard(150, 4, 1));
+/// let model = Trainer::rbf(10.0, 0.5).train(&data).model;
+/// let scorer = model.scorer().with_threads(2);
+/// let decisions = scorer.decision_values(&data);
+/// assert_eq!(decisions.len(), data.len());
+/// assert_eq!(decisions[0], model.decision(data.row(0)));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Scorer<'m> {
+    kernel: KernelFunction,
+    support: &'m Dataset,
+    coef: &'m [f64],
+    offset: f64,
+    /// ‖x_s‖² per support row (RBF only; empty otherwise).
+    sv_sqnorms: Vec<f64>,
+    /// Collapsed primal weights for the linear kernel (None = expansion).
+    w: Option<Vec<f64>>,
+    threads: usize,
+}
+
+impl<'m> Scorer<'m> {
+    /// Scorer over `support`/`coef` computing
+    /// `f(x) = Σ_s coef[s]·k(support[s], x) + offset`. The linear kernel
+    /// is collapsed to its primal weight vector by default.
+    pub fn new(
+        kernel: KernelFunction,
+        support: &'m Dataset,
+        coef: &'m [f64],
+        offset: f64,
+    ) -> Scorer<'m> {
+        assert_eq!(
+            support.len(),
+            coef.len(),
+            "support rows and coefficients must align"
+        );
+        let sv_sqnorms = match kernel {
+            KernelFunction::Rbf { .. } => tile::squared_norms(support),
+            _ => Vec::new(),
+        };
+        let mut s = Scorer {
+            kernel,
+            support,
+            coef,
+            offset,
+            sv_sqnorms,
+            w: None,
+            threads: 1,
+        };
+        s = s.collapse_linear(true);
+        s
+    }
+
+    /// Worker threads for batch scoring (0/1 = inline). Threaded batches
+    /// are bit-identical to single-threaded ones — threads only chunk
+    /// the query range.
+    pub fn with_threads(mut self, threads: usize) -> Scorer<'m> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Enable/disable the linear-kernel collapse to the primal `w`
+    /// (enabled by default; a no-op for non-linear kernels). The
+    /// collapsed path reorders the floating-point reduction, so values
+    /// can differ from the expansion in the last bits.
+    pub fn collapse_linear(mut self, enabled: bool) -> Scorer<'m> {
+        self.w = match (enabled, self.kernel) {
+            (true, KernelFunction::Linear) => {
+                let d = self.support.dim();
+                let mut w = vec![0f64; d];
+                for s in 0..self.support.len() {
+                    let c = self.coef[s];
+                    for (wk, &v) in w.iter_mut().zip(self.support.row(s)) {
+                        *wk += c * v as f64;
+                    }
+                }
+                Some(w)
+            }
+            _ => None,
+        };
+        self
+    }
+
+    /// The kernel this scorer evaluates.
+    pub fn kernel(&self) -> KernelFunction {
+        self.kernel
+    }
+
+    /// Number of support vectors in the expansion.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// The constant added to every decision value (bias, or −ρ).
+    pub fn offset(&self) -> f64 {
+        self.offset
+    }
+
+    /// Is the linear collapse active (queries cost O(d), zero kernel
+    /// evaluations)?
+    pub fn is_collapsed(&self) -> bool {
+        self.w.is_some()
+    }
+
+    /// Kernel entries one full pass over `queries` rows evaluates:
+    /// `queries · n_sv` for the expansion, 0 for the collapsed linear
+    /// path — the inference-side analogue of the solver's kernel-work
+    /// meter.
+    pub fn kernel_entries_per_pass(&self, queries: usize) -> u64 {
+        if self.is_collapsed() {
+            0
+        } else {
+            queries as u64 * self.n_sv() as u64
+        }
+    }
+
+    /// Decision value of a single query (the batch path at batch size 1
+    /// — bit-identical to the same query inside any batch).
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        let mut out = [0f64];
+        self.decision_block(x.len(), x, &mut out);
+        out[0]
+    }
+
+    /// Decision values for every row of a dataset.
+    pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
+        let mut out = vec![0f64; data.len()];
+        self.decision_block(data.dim(), data.features(), &mut out);
+        out
+    }
+
+    /// Decision values for `out.len()` row-major `dim`-dimensional query
+    /// rows — the raw batch entry point shared by every dataset shape
+    /// (binary, regression, multiclass all expose `features()`).
+    pub fn decision_block(&self, dim: usize, rows: &[f32], out: &mut [f64]) {
+        assert_eq!(dim, self.support.dim(), "query dim != support dim");
+        assert_eq!(rows.len(), out.len() * dim, "rows/out length mismatch");
+        if out.is_empty() {
+            return;
+        }
+        if let Some(w) = &self.w {
+            let workers = tile::workers_for(self.threads, out.len(), dim);
+            let offset = self.offset;
+            tile::chunked(workers, out, |base, chunk| {
+                for (q, o) in chunk.iter_mut().enumerate() {
+                    let x = &rows[(base + q) * dim..(base + q + 1) * dim];
+                    let mut f = 0f64;
+                    for (wk, &v) in w.iter().zip(x) {
+                        f += wk * v as f64;
+                    }
+                    *o = f + offset;
+                }
+            });
+            return;
+        }
+        let workers = tile::workers_for(
+            self.threads,
+            out.len().saturating_mul(self.n_sv()),
+            dim,
+        )
+        .min(out.len());
+        tile::chunked(workers, out, |base, chunk| {
+            self.score_chunk(dim, rows, base, chunk)
+        });
+    }
+
+    /// Score one contiguous query chunk through blocked SV×query tiles.
+    /// Each query's value threads through the blocks as one running f64
+    /// (`f = offset; f += coef_s·k_s` in ascending SV order — blocks in
+    /// order, entries within a block in order), exactly the association
+    /// order of the scalar per-SV loop: chunking and blocking never
+    /// change a result bit.
+    fn score_chunk(&self, dim: usize, rows: &[f32], base: usize, out: &mut [f64]) {
+        for o in out.iter_mut() {
+            *o = self.offset;
+        }
+        let n_sv = self.coef.len();
+        let rbf = matches!(self.kernel, KernelFunction::Rbf { .. });
+        let mut s0 = 0usize;
+        while s0 < n_sv {
+            let block = (n_sv - s0).min(SV_BLOCK);
+            for (q, o) in out.iter_mut().enumerate() {
+                let x = &rows[(base + q) * dim..(base + q + 1) * dim];
+                let nq = if rbf { sqnorm(x) } else { 0.0 };
+                let mut f = *o;
+                tile::kernel_block(
+                    self.kernel,
+                    x,
+                    nq,
+                    &self.sv_sqnorms,
+                    self.support,
+                    &|p| p,
+                    s0,
+                    block,
+                    |p, v| f += self.coef[s0 + p] * v,
+                );
+                *o = f;
+            }
+            s0 += block;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    /// Random kernel expansion: support rows, coefficients, offset.
+    fn random_expansion(n_sv: usize, d: usize, seed: u64) -> (Dataset, Vec<f64>, f64) {
+        let mut rng = Pcg::new(seed);
+        let mut sv = Dataset::with_dim(d);
+        let mut row = vec![0f32; d];
+        let mut coef = Vec::with_capacity(n_sv);
+        for _ in 0..n_sv {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            sv.push(&row, 1);
+            coef.push(rng.normal() * 2.0);
+        }
+        (sv, coef, rng.normal())
+    }
+
+    fn random_queries(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// The legacy per-example loop every model used before the scorer.
+    fn legacy_decision(
+        kernel: KernelFunction,
+        sv: &Dataset,
+        coef: &[f64],
+        offset: f64,
+        x: &[f32],
+    ) -> f64 {
+        let mut f = offset;
+        for s in 0..sv.len() {
+            f += coef[s] * kernel.eval(sv.row(s), x);
+        }
+        f
+    }
+
+    const KERNELS: [KernelFunction; 4] = [
+        KernelFunction::Rbf { gamma: 0.7 },
+        KernelFunction::Linear,
+        KernelFunction::Poly { gamma: 0.3, coef0: 1.0, degree: 2 },
+        KernelFunction::Sigmoid { gamma: 0.2, coef0: 0.1 },
+    ];
+
+    /// The ≤1e-12 agreement bound, conditioned on the expansion's
+    /// magnitude: per-term rounding differences (RBF decomposition vs
+    /// direct ‖a−b‖², collapsed vs expanded linear reduction) accumulate
+    /// with the ℓ1 coefficient mass, so that mass is the natural scale.
+    fn tol(coef: &[f64], want: f64) -> f64 {
+        1e-12 * (1.0 + want.abs() + coef.iter().map(|c| c.abs()).sum::<f64>())
+    }
+
+    #[test]
+    fn batch_matches_legacy_loop_within_1e12() {
+        for (ki, kernel) in KERNELS.into_iter().enumerate() {
+            let (sv, coef, offset) = random_expansion(57, 5, 10 + ki as u64);
+            let scorer = Scorer::new(kernel, &sv, &coef, offset);
+            let queries = random_queries(23, 5, 99);
+            let mut out = vec![0f64; 23];
+            scorer.decision_block(5, &queries, &mut out);
+            for q in 0..23 {
+                let x = &queries[q * 5..(q + 1) * 5];
+                let want = legacy_decision(kernel, &sv, &coef, offset, x);
+                assert!(
+                    (out[q] - want).abs() <= tol(&coef, want),
+                    "{kernel:?} q={q}: {} vs {want}",
+                    out[q]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_kernels_are_bit_identical_to_legacy_loop() {
+        // Linear (collapse disabled), poly, sigmoid share the exact
+        // f64 dot of KernelFunction::eval — bitwise equality holds.
+        for kernel in [
+            KernelFunction::Linear,
+            KernelFunction::Poly { gamma: 0.3, coef0: 1.0, degree: 2 },
+            KernelFunction::Sigmoid { gamma: 0.2, coef0: 0.1 },
+        ] {
+            let (sv, coef, offset) = random_expansion(41, 7, 21);
+            let scorer = Scorer::new(kernel, &sv, &coef, offset).collapse_linear(false);
+            assert!(!scorer.is_collapsed());
+            let queries = random_queries(17, 7, 22);
+            let mut out = vec![0f64; 17];
+            scorer.decision_block(7, &queries, &mut out);
+            for q in 0..17 {
+                let x = &queries[q * 7..(q + 1) * 7];
+                let want = legacy_decision(kernel, &sv, &coef, offset, x);
+                assert_eq!(out[q].to_bits(), want.to_bits(), "{kernel:?} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_query_is_bit_identical_to_batch() {
+        for kernel in KERNELS {
+            let (sv, coef, offset) = random_expansion(33, 4, 31);
+            let scorer = Scorer::new(kernel, &sv, &coef, offset);
+            let queries = random_queries(11, 4, 32);
+            let mut batch = vec![0f64; 11];
+            scorer.decision_block(4, &queries, &mut batch);
+            for q in 0..11 {
+                let one = scorer.decision(&queries[q * 4..(q + 1) * 4]);
+                assert_eq!(one.to_bits(), batch[q].to_bits(), "{kernel:?} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_batches_are_bit_identical() {
+        // queries · n_sv · d clears the threading threshold
+        let (sv, coef, offset) = random_expansion(300, 30, 41);
+        for kernel in KERNELS {
+            let scorer = Scorer::new(kernel, &sv, &coef, offset);
+            let queries = random_queries(90, 30, 42);
+            let mut one = vec![0f64; 90];
+            scorer.decision_block(30, &queries, &mut one);
+            let threaded = scorer.clone().with_threads(4);
+            let mut four = vec![0f64; 90];
+            threaded.decision_block(30, &queries, &mut four);
+            assert!(
+                one.iter().zip(&four).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{kernel:?} diverges across thread counts"
+            );
+        }
+    }
+
+    #[test]
+    fn sv_blocking_covers_more_than_one_block() {
+        // n_sv > SV_BLOCK exercises the multi-block accumulation order.
+        let (sv, coef, offset) = random_expansion(SV_BLOCK + 77, 3, 51);
+        let kernel = KernelFunction::Rbf { gamma: 0.5 };
+        let scorer = Scorer::new(kernel, &sv, &coef, offset);
+        let queries = random_queries(5, 3, 52);
+        let mut out = vec![0f64; 5];
+        scorer.decision_block(3, &queries, &mut out);
+        for q in 0..5 {
+            let x = &queries[q * 3..(q + 1) * 3];
+            let want = legacy_decision(kernel, &sv, &coef, offset, x);
+            assert!((out[q] - want).abs() <= tol(&coef, want), "q={q}");
+        }
+    }
+
+    #[test]
+    fn linear_collapse_matches_expansion_and_counts_zero_entries() {
+        let (sv, coef, offset) = random_expansion(64, 6, 61);
+        let collapsed = Scorer::new(KernelFunction::Linear, &sv, &coef, offset);
+        assert!(collapsed.is_collapsed());
+        assert_eq!(collapsed.kernel_entries_per_pass(10), 0);
+        let expansion = collapsed.clone().collapse_linear(false);
+        assert!(!expansion.is_collapsed());
+        assert_eq!(expansion.kernel_entries_per_pass(10), 640);
+        let queries = random_queries(19, 6, 62);
+        let (mut a, mut b) = (vec![0f64; 19], vec![0f64; 19]);
+        collapsed.decision_block(6, &queries, &mut a);
+        expansion.decision_block(6, &queries, &mut b);
+        for q in 0..19 {
+            assert!(
+                (a[q] - b[q]).abs() <= tol(&coef, b[q]),
+                "q={q}: collapsed {} vs expansion {}",
+                a[q],
+                b[q]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_support_scores_the_offset() {
+        let sv = Dataset::with_dim(3);
+        let coef: Vec<f64> = Vec::new();
+        for kernel in KERNELS {
+            let scorer = Scorer::new(kernel, &sv, &coef, 0.75);
+            assert_eq!(scorer.n_sv(), 0);
+            assert_eq!(scorer.decision(&[1.0, 2.0, 3.0]), 0.75);
+        }
+    }
+
+    #[test]
+    fn empty_query_batch_is_a_no_op() {
+        let (sv, coef, offset) = random_expansion(5, 2, 71);
+        let scorer = Scorer::new(KernelFunction::Rbf { gamma: 1.0 }, &sv, &coef, offset);
+        let mut out: Vec<f64> = Vec::new();
+        scorer.decision_block(2, &[], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "query dim != support dim")]
+    fn dimension_mismatch_is_rejected() {
+        let (sv, coef, offset) = random_expansion(5, 3, 81);
+        let scorer = Scorer::new(KernelFunction::Linear, &sv, &coef, offset);
+        scorer.decision(&[1.0, 2.0]);
+    }
+}

@@ -14,14 +14,20 @@
 //! "the method is widely applicable" conclusion. The regression
 //! coefficient of example `i` is `γ_i + γ_{ℓ+i} = α_i − α*_i`.
 
+use std::path::Path;
 use std::sync::Arc;
 
+use crate::data::dataset::Dataset;
 use crate::data::regression::RegressionDataset;
 use crate::kernel::function::KernelFunction;
 use crate::kernel::matrix::{Gram, RowComputer};
 use crate::solver::engine::{Engine, EngineConfig, SolverChoice};
 use crate::solver::problem::QpProblem;
 use crate::solver::smo::{SolveResult, SolverConfig};
+use crate::util::error::Result;
+
+use super::schema;
+use super::scorer::Scorer;
 
 /// Row computer for the doubled ε-SVR Gram matrix K̃ (2ℓ × 2ℓ).
 struct DoubledRowComputer {
@@ -113,8 +119,8 @@ impl SvrConfig {
 pub struct SvrModel {
     /// The kernel the model was trained with.
     pub kernel: KernelFunction,
-    /// Support rows (|α_i − α*_i| > 0).
-    pub support: Vec<Vec<f32>>,
+    /// Support rows (|α_i − α*_i| > 0), dense row-major (labels unused).
+    pub support: Dataset,
     /// Regression coefficients `α_i − α*_i`, aligned with `support`.
     pub coef: Vec<f64>,
     /// Bias term b of the regression function.
@@ -122,23 +128,60 @@ pub struct SvrModel {
 }
 
 impl SvrModel {
-    /// Predicted target `f(x) = Σ coef_s k(x_s, x) + b`.
-    pub fn predict(&self, x: &[f32]) -> f64 {
-        let mut f = self.bias;
-        for (sv, &c) in self.support.iter().zip(&self.coef) {
-            f += c * self.kernel.eval(sv, x);
-        }
-        f
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
     }
 
-    /// Root-mean-square error over a dataset.
+    /// The batch scoring engine over this model's expansion — build it
+    /// once per batch.
+    pub fn scorer(&self) -> Scorer<'_> {
+        Scorer::new(self.kernel, &self.support, &self.coef, self.bias)
+    }
+
+    /// Predicted target `f(x) = Σ coef_s k(x_s, x) + b` (one-off
+    /// convenience; batch callers use [`SvrModel::scorer`] /
+    /// [`SvrModel::predict_all`]).
+    pub fn predict(&self, x: &[f32]) -> f64 {
+        self.scorer().decision(x)
+    }
+
+    /// Predicted targets for every row of `data` — one batch scoring
+    /// pass with `threads` workers.
+    pub fn predict_all(&self, data: &RegressionDataset, threads: usize) -> Vec<f64> {
+        let mut out = vec![0f64; data.len()];
+        self.scorer()
+            .with_threads(threads)
+            .decision_block(data.dim(), data.features(), &mut out);
+        out
+    }
+
+    /// Root-mean-square error over a dataset (one batch pass).
     pub fn rmse(&self, data: &RegressionDataset) -> f64 {
-        let mut se = 0.0;
-        for i in 0..data.len() {
-            let e = self.predict(data.row(i)) - data.target(i);
-            se += e * e;
-        }
+        let preds = self.predict_all(data, 1);
+        let se: f64 = preds
+            .iter()
+            .zip(data.targets())
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum();
         (se / data.len().max(1) as f64).sqrt()
+    }
+
+    /// Serialize to a JSON file (schema v2, `kind: "svr"`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        schema::save(path, &schema::svr_to_json(self))
+    }
+
+    /// Load from a JSON file written by [`SvrModel::save`].
+    pub fn load(path: &Path) -> Result<SvrModel> {
+        match schema::load_any(path)? {
+            schema::AnyModel::Svr(m) => Ok(m),
+            other => crate::bail!(
+                "{} holds a {:?} model, not an SVR regressor",
+                path.display(),
+                other.task_name()
+            ),
+        }
     }
 }
 
@@ -165,12 +208,12 @@ pub fn train_svr(
     let engine = EngineConfig::new(cfg.solver, cfg.solver_config).build();
     let result = engine.solve(&problem, &mut gram);
 
-    let mut support = Vec::new();
+    let mut support = Dataset::with_dim(data.dim());
     let mut coef = Vec::new();
     for i in 0..l {
         let c = result.alpha[i] + result.alpha[l + i];
         if c.abs() > 1e-12 {
-            support.push(data.row(i).to_vec());
+            support.push(data.row(i), 1); // label unused by the kernels
             coef.push(c);
         }
     }
@@ -236,6 +279,34 @@ mod tests {
             assert!(res.alpha[i] >= -1e-9 && res.alpha[i] <= 2.0 + 1e-9);
             assert!(res.alpha[80 + i] >= -2.0 - 1e-9 && res.alpha[80 + i] <= 1e-9);
         }
+    }
+
+    #[test]
+    fn batch_prediction_matches_per_example_and_round_trips() {
+        let train = sinc(120, 0.05, 6);
+        let cfg = SvrConfig::new(5.0, 0.05, 0.5);
+        let (model, _) = train_svr_native(&train, &cfg);
+        let test = sinc(60, 0.0, 7);
+        let batch = model.predict_all(&test, 1);
+        let threaded = model.predict_all(&test, 4);
+        for i in 0..test.len() {
+            let one = model.predict(test.row(i));
+            assert_eq!(one.to_bits(), batch[i].to_bits(), "i={i}");
+            assert_eq!(one.to_bits(), threaded[i].to_bits(), "i={i} threaded");
+        }
+        // save/load round trip through the v2 `svr` schema
+        let dir = std::env::temp_dir().join("pasmo-svr-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("svr.json");
+        model.save(&path).unwrap();
+        let loaded = SvrModel::load(&path).unwrap();
+        assert_eq!(loaded.n_sv(), model.n_sv());
+        assert_eq!(loaded.kernel, model.kernel);
+        for i in 0..test.len().min(10) {
+            let d = (loaded.predict(test.row(i)) - model.predict(test.row(i))).abs();
+            assert!(d < 1e-9, "i={i}: Δ={d}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -158,10 +158,14 @@ fn train_save_predict_round_trip() {
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("accuracy"), "{text}");
-    // parse the accuracy and demand something sane
+    // parse the accuracy (first line; confusion counts follow) and
+    // demand something sane
     let acc: f64 = text
         .split("accuracy = ")
         .nth(1)
+        .unwrap()
+        .lines()
+        .next()
         .unwrap()
         .trim()
         .parse()
@@ -375,6 +379,198 @@ fn bench_writes_kernel_entry_trajectory_json() {
             entries(false)
         );
     }
+}
+
+#[test]
+fn predict_accepts_task_threads_and_writes_predictions() {
+    let dir = TempDir::new("predict-task");
+    let model = dir.path("model.json");
+    let out = pasmo()
+        .args(["train", "--dataset", "banana", "--len", "250", "--out"])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let test_path = dir.path("test.libsvm");
+    let ds = pasmo::data::synth::banana(120, 99);
+    pasmo::data::libsvm::write(&ds, &test_path).unwrap();
+
+    let preds = dir.path("preds.txt");
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .args(["--libsvm"])
+        .arg(&test_path)
+        .args(["--task", "classify", "--threads", "2", "--out"])
+        .arg(&preds)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy"), "{text}");
+    assert!(text.contains("confusion"), "{text}");
+    let lines = std::fs::read_to_string(&preds).unwrap();
+    assert_eq!(lines.lines().count(), 120, "one prediction per example");
+
+    // a wrong --task is rejected with the model's actual kind
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .args(["--libsvm"])
+        .arg(&test_path)
+        .args(["--task", "svr"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("classify"), "{err}");
+}
+
+#[test]
+fn train_probability_enables_predict_probability() {
+    let dir = TempDir::new("predict-probability");
+    let model = dir.path("model.json");
+    let out = pasmo()
+        .args([
+            "train", "--dataset", "banana", "--len", "250", "--probability", "--out",
+        ])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Platt calibration"));
+    assert!(std::fs::read_to_string(&model).unwrap().contains("\"platt\""));
+
+    let test_path = dir.path("test.libsvm");
+    let ds = pasmo::data::synth::banana(100, 7);
+    pasmo::data::libsvm::write(&ds, &test_path).unwrap();
+
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&model)
+        .args(["--libsvm"])
+        .arg(&test_path)
+        .args(["--probability"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("log-loss"), "{text}");
+}
+
+#[test]
+fn predict_dispatches_svr_and_multiclass_model_files() {
+    let dir = TempDir::new("predict-kinds");
+
+    // SVR: save a model + a regression eval file through the library.
+    let train = pasmo::data::regression::sinc(150, 0.05, 3);
+    let (svr, _) = pasmo::svm::svr::train_svr_native(
+        &train,
+        &pasmo::svm::svr::SvrConfig::new(5.0, 0.05, 0.5),
+    );
+    let svr_path = dir.path("svr.json");
+    svr.save(&svr_path).unwrap();
+    let reg_path = dir.path("reg.libsvm");
+    pasmo::data::libsvm::write_regression(&pasmo::data::regression::sinc(60, 0.0, 4), &reg_path)
+        .unwrap();
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&svr_path)
+        .args(["--libsvm"])
+        .arg(&reg_path)
+        .args(["--task", "svr"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("rmse"), "svr output");
+
+    // Multiclass: one-vs-one model + class-labeled eval file.
+    let mtrain = pasmo::data::multiclass::blobs(150, 3, 5.0, 0.4, 5);
+    let ovo = pasmo::svm::multiclass::train_ovo(
+        &mtrain,
+        &pasmo::svm::Trainer::rbf(10.0, 0.3),
+    );
+    let ovo_path = dir.path("ovo.json");
+    ovo.save(&ovo_path).unwrap();
+    let multi_path = dir.path("multi.libsvm");
+    pasmo::data::libsvm::write_multiclass(
+        &pasmo::data::multiclass::blobs(80, 3, 5.0, 0.4, 6),
+        &multi_path,
+    )
+    .unwrap();
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&ovo_path)
+        .args(["--libsvm"])
+        .arg(&multi_path)
+        .args(["--task", "multiclass", "--threads", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("3 classes") && text.contains("accuracy"), "{text}");
+
+    // --probability is a classify-only flag: other kinds reject it
+    // loudly instead of silently ignoring it.
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&ovo_path)
+        .args(["--libsvm"])
+        .arg(&multi_path)
+        .args(["--probability"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("only available for classify"), "{err}");
+}
+
+#[test]
+fn bench_predict_writes_throughput_json() {
+    let dir = TempDir::new("bench-predict");
+    let path = dir.path("BENCH_predict.json");
+    let out = pasmo()
+        .args([
+            "bench",
+            "--predict",
+            "--len",
+            "200",
+            "--datasets",
+            "chess-board-1000",
+            "--threads",
+            "2",
+            "--out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench --predict failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc =
+        pasmo::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str(), Some("predict"));
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    let modes: Vec<&str> =
+        runs.iter().map(|r| r.get("mode").unwrap().as_str().unwrap()).collect();
+    for mode in ["scalar", "tiled", "threaded", "linear", "linear-collapse"] {
+        assert!(modes.contains(&mode), "missing mode {mode}: {modes:?}");
+    }
+    for r in runs {
+        assert!(r.get("queries_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // the linear collapse evaluates zero kernel entries
+    let collapse = runs
+        .iter()
+        .find(|r| r.get("mode").unwrap().as_str() == Some("linear-collapse"))
+        .unwrap();
+    assert_eq!(
+        collapse.get("kernel_entries_per_pass").unwrap().as_f64(),
+        Some(0.0)
+    );
 }
 
 #[test]

@@ -1,0 +1,272 @@
+//! Inference parity suite: the batch `Scorer` vs the per-example scalar
+//! decision loop across all four kernels and every model kind,
+//! threaded-vs-single-thread bit-determinism, and save/load round trips
+//! for the kind-tagged v2 schemas.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pasmo::data::dataset::Dataset;
+use pasmo::data::multiclass::blobs;
+use pasmo::data::regression::sinc;
+use pasmo::kernel::KernelFunction;
+use pasmo::svm::multiclass::{train_ovo, OvoModel};
+use pasmo::svm::oneclass::{train_one_class, OneClassConfig, OneClassModel};
+use pasmo::svm::predict;
+use pasmo::svm::scorer::Scorer;
+use pasmo::svm::svr::{train_svr_native, SvrConfig, SvrModel};
+use pasmo::svm::{SvmModel, Trainer};
+use pasmo::util::prng::Pcg;
+use pasmo::util::quickcheck::forall;
+
+/// The ≤1e-12 agreement bound, conditioned on the expansion's
+/// magnitude: per-term rounding differences (RBF decomposition vs
+/// direct ‖a−b‖², collapsed vs expanded linear reduction) accumulate
+/// with the ℓ1 coefficient mass, so that mass is the natural scale.
+fn tol(coef: &[f64], want: f64) -> f64 {
+    1e-12 * (1.0 + want.abs() + coef.iter().map(|c| c.abs()).sum::<f64>())
+}
+
+/// The legacy per-example loop every model kind used before the scorer.
+fn legacy_decision(
+    kernel: KernelFunction,
+    sv: &Dataset,
+    coef: &[f64],
+    offset: f64,
+    x: &[f32],
+) -> f64 {
+    let mut f = offset;
+    for s in 0..sv.len() {
+        f += coef[s] * kernel.eval(sv.row(s), x);
+    }
+    f
+}
+
+fn random_ds(n: usize, d: usize, rng: &mut Pcg) -> Dataset {
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for _ in 0..n {
+        row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+    }
+    ds
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasmo-parity-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Random expansions across all four kernels: the batch scorer agrees
+/// with the legacy scalar loop to ≤1e-12 relative everywhere, and the
+/// dot-product kernels (whose scalar path shares the tiled dot's exact
+/// arithmetic) are bit-identical.
+#[test]
+fn quickcheck_scorer_matches_scalar_decision_across_kernels() {
+    forall(
+        "scorer-vs-scalar",
+        24,
+        |g| {
+            let d = 1 + g.below(8);
+            let n_sv = 1 + g.below(60);
+            let n_q = 1 + g.below(40);
+            let sv = random_ds(n_sv, d, g);
+            let coef: Vec<f64> = (0..n_sv).map(|_| g.normal() * 3.0).collect();
+            let offset = g.normal();
+            let queries = random_ds(n_q, d, g);
+            let kernel = match g.below(4) {
+                0 => KernelFunction::Rbf { gamma: g.range(0.05, 2.0) },
+                1 => KernelFunction::Linear,
+                2 => KernelFunction::Poly {
+                    gamma: g.range(0.1, 1.0),
+                    coef0: 1.0,
+                    degree: 2 + g.below(3) as u32,
+                },
+                _ => KernelFunction::Sigmoid { gamma: g.range(0.05, 0.5), coef0: 0.1 },
+            };
+            (kernel, sv, coef, offset, queries)
+        },
+        |(kernel, sv, coef, offset, queries)| {
+            let scorer = Scorer::new(*kernel, sv, coef, *offset);
+            let batch = scorer.decision_values(queries);
+            let bitwise = !matches!(*kernel, KernelFunction::Rbf { .. })
+                && !scorer.is_collapsed();
+            for q in 0..queries.len() {
+                let want = legacy_decision(*kernel, sv, coef, *offset, queries.row(q));
+                let got = batch[q];
+                if bitwise && got.to_bits() != want.to_bits() {
+                    return Err(format!("q={q}: {got} != {want} (bitwise)"));
+                }
+                if (got - want).abs() > tol(coef, want) {
+                    return Err(format!("q={q}: {got} vs {want}"));
+                }
+                // single-query call is bit-identical to the batch entry
+                let one = scorer.decision(queries.row(q));
+                if one.to_bits() != got.to_bits() {
+                    return Err(format!("q={q}: single {one} != batch {got}"));
+                }
+            }
+            // threaded pass is bit-identical to the single-threaded one
+            let threaded = Scorer::new(*kernel, sv, coef, *offset)
+                .with_threads(4)
+                .decision_values(queries);
+            for q in 0..queries.len() {
+                if threaded[q].to_bits() != batch[q].to_bits() {
+                    return Err(format!("q={q}: threaded diverges"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A trained classifier: scorer-backed decision/predict/evaluate agree
+/// with the legacy loop over its own expansion, threads included.
+#[test]
+fn trained_svc_batch_parity_and_threads() {
+    let data = Arc::new(pasmo::data::synth::chessboard(250, 4, 11));
+    let model = Trainer::rbf(10.0, 0.5).train(&data).model;
+    let ev1 = predict::evaluate(&model, &data, 1);
+    let ev4 = predict::evaluate(&model, &data, 4);
+    for i in 0..data.len() {
+        let want = legacy_decision(
+            model.kernel,
+            &model.support,
+            &model.coef,
+            model.bias,
+            data.row(i),
+        );
+        assert!(
+            (ev1.decisions[i] - want).abs() <= tol(&model.coef, want),
+            "i={i}: {} vs {want}",
+            ev1.decisions[i]
+        );
+        assert_eq!(ev1.decisions[i].to_bits(), ev4.decisions[i].to_bits(), "i={i} threads");
+    }
+    assert_eq!(ev1.predictions, predict::predict_all(&model, &data));
+    assert_eq!(ev1.accuracy, predict::accuracy(&model, &data));
+    assert_eq!(ev1.confusion, predict::confusion(&model, &data));
+}
+
+/// SVR: batch predictions match the legacy loop; v2 `svr` schema round
+/// trips exactly (f32 features and f64 coefficients survive JSON).
+#[test]
+fn svr_parity_and_schema_round_trip() {
+    let train = sinc(150, 0.05, 12);
+    let (model, _) = train_svr_native(&train, &SvrConfig::new(5.0, 0.05, 0.5));
+    let test = sinc(70, 0.0, 13);
+    let batch = model.predict_all(&test, 1);
+    let threaded = model.predict_all(&test, 4);
+    for i in 0..test.len() {
+        let want = legacy_decision(
+            model.kernel,
+            &model.support,
+            &model.coef,
+            model.bias,
+            test.row(i),
+        );
+        assert!((batch[i] - want).abs() <= tol(&model.coef, want), "i={i}");
+        assert_eq!(batch[i].to_bits(), threaded[i].to_bits(), "i={i} threads");
+    }
+    let path = temp_path("svr.json");
+    model.save(&path).unwrap();
+    let loaded = SvrModel::load(&path).unwrap();
+    assert_eq!(loaded.n_sv(), model.n_sv());
+    let reloaded = loaded.predict_all(&test, 1);
+    for i in 0..test.len() {
+        assert!((reloaded[i] - batch[i]).abs() < 1e-9, "i={i}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// One-class: batch decisions match the legacy loop (offset −ρ); v2
+/// `oneclass` schema round trips.
+#[test]
+fn oneclass_parity_and_schema_round_trip() {
+    let mut rng = Pcg::new(14);
+    let ds = Arc::new(random_ds(180, 2, &mut rng));
+    let (model, _) = train_one_class(&ds, &OneClassConfig::new(0.15, 0.4));
+    let queries = random_ds(60, 2, &mut rng);
+    let batch = model.decision_values(&queries, 1);
+    let threaded = model.decision_values(&queries, 4);
+    for i in 0..queries.len() {
+        let want = legacy_decision(
+            model.kernel,
+            &model.support,
+            &model.coef,
+            -model.rho,
+            queries.row(i),
+        );
+        assert!((batch[i] - want).abs() <= tol(&model.coef, want), "i={i}");
+        assert_eq!(batch[i].to_bits(), threaded[i].to_bits(), "i={i} threads");
+        assert_eq!(model.is_inlier(queries.row(i)), batch[i] >= 0.0, "i={i}");
+    }
+    let path = temp_path("oneclass.json");
+    model.save(&path).unwrap();
+    let loaded = OneClassModel::load(&path).unwrap();
+    assert_eq!(loaded.n_sv(), model.n_sv());
+    for i in 0..queries.len() {
+        let d = (loaded.decision(queries.row(i)) - batch[i]).abs();
+        assert!(d < 1e-9, "i={i}: Δ={d}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Multiclass: batch voting equals per-example voting; v2 `multiclass`
+/// schema round trips machines, pairs and classes.
+#[test]
+fn multiclass_parity_and_schema_round_trip() {
+    let train = blobs(180, 3, 5.0, 0.4, 15);
+    let test = blobs(90, 3, 5.0, 0.4, 16);
+    let model = train_ovo(&train, &Trainer::rbf(10.0, 0.3));
+    let batch = model.predict_all(&test, 1);
+    let threaded = model.predict_all(&test, 4);
+    for i in 0..test.len() {
+        assert_eq!(batch[i], model.predict(test.row(i)), "i={i}");
+        assert_eq!(batch[i], threaded[i], "i={i} threads");
+    }
+    let path = temp_path("ovo.json");
+    model.save(&path).unwrap();
+    let loaded = OvoModel::load(&path).unwrap();
+    assert_eq!(loaded.classes, model.classes);
+    assert_eq!(loaded.pairs(), model.pairs());
+    assert_eq!(loaded.machines.len(), model.machines.len());
+    assert_eq!(loaded.predict_all(&test, 1), batch);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Cross-kind loads fail with a clear kind message instead of parsing
+/// garbage, and kind-specific loaders reject other kinds.
+#[test]
+fn kind_tags_are_enforced_on_load() {
+    let train = sinc(60, 0.05, 17);
+    let (svr, _) = train_svr_native(&train, &SvrConfig::new(2.0, 0.1, 0.5));
+    let path = temp_path("kind-mismatch.json");
+    svr.save(&path).unwrap();
+    let err = SvmModel::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("svr"), "{err:#}");
+    let err = OneClassModel::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("svr"), "{err:#}");
+    let err = OvoModel::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("svr"), "{err:#}");
+    assert!(SvrModel::load(&path).is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Strict parsing: a non-numeric coefficient in any kind's document
+/// fails with its position (the v1 loader silently dropped it).
+#[test]
+fn malformed_documents_fail_with_positions() {
+    let path = temp_path("bad-svr.json");
+    std::fs::write(
+        &path,
+        "{\"kind\":\"svr\",\"kernel\":\"rbf\",\"gamma\":0.5,\"coef0\":0,\
+         \"degree\":0,\"bias\":0,\"dim\":1,\"coef\":[1.0,true],\
+         \"sv\":[[1],[2]]}",
+    )
+    .unwrap();
+    let err = SvrModel::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("coef[1]"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+}
