@@ -23,6 +23,17 @@
 #   4g. pasmo experiment engine_shootout at tiny scale (the three-way
 #                                SMO / PA-SMO / CSMO comparison stays
 #                                runnable end to end)
+#   4h. pasmo audit             (the repo's own source-tree lint: panics
+#                                in library paths, undocumented unsafe,
+#                                float ==, stray threads/prints, HashMap
+#                                iteration — hard gate, audit.allow is
+#                                the only escape hatch)
+#   4i. cargo test -q --features debug-invariants
+#                               (the whole suite again with the solver/
+#                                cache invariant checkers compiled in)
+#   4j. cargo clippy -D warnings (skipped when clippy is not installed)
+#   4k. cargo +nightly miri test on the unsafe-heavy kernel modules
+#                               (skipped when miri is not installed)
 #   5. cargo build --features pjrt
 #                               (the gated runtime module must keep
 #                                compiling against the vendor/xla stub)
@@ -80,6 +91,37 @@ cargo test -q --doc
 # The three-way engine comparison stays runnable end to end.
 step "pasmo experiment engine_shootout (tiny scale)"
 cargo run --release -- experiment engine_shootout --datasets thyroid --perms 3 --max-len 150
+
+# Source-tree lint: the binary audits its own src/ against audit.allow.
+# Any unlisted panic path, undocumented unsafe, float ==, stray thread,
+# print, or HashMap iteration — or a stale allowlist entry — fails CI.
+step "pasmo audit"
+cargo run --release --quiet -- audit
+
+# Run the whole suite again with the invariant checkers compiled in:
+# every solve in every test now validates Σα preservation, box bounds,
+# perm/pos bijections, cache byte accounting and gradient parity at the
+# shrink/unshrink seams.
+step "cargo test -q --features debug-invariants"
+cargo test -q --features debug-invariants
+
+# Static analysis and UB detection are best-effort: the offline image may
+# not ship clippy or miri, and the gate must not rot when they're absent.
+if cargo clippy --version >/dev/null 2>&1; then
+    step "cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    step "cargo clippy (SKIPPED: clippy not installed)"
+fi
+
+if cargo +nightly miri --version >/dev/null 2>&1; then
+    # Scope miri to the unsafe-heavy kernel layer: full-suite miri is
+    # orders of magnitude too slow for a CI gate.
+    step "cargo +nightly miri test kernel::"
+    cargo +nightly miri test kernel::
+else
+    step "cargo miri (SKIPPED: miri not installed)"
+fi
 
 step "cargo build --benches --features pjrt"
 cargo build --benches --features pjrt

@@ -1,0 +1,373 @@
+//! `pasmo audit` — the repo's own source-tree lint (offline, no deps).
+//!
+//! A plain-text, line-level analysis over `rust/src` enforcing the
+//! repo-specific rules rustc/clippy cannot express (see [`Rule`]):
+//! library code never panics, every `unsafe` block is SAFETY-documented,
+//! solver values are never compared to float literals with `==`/`!=`,
+//! threads stay inside the two blessed modules, `HashMap` iteration
+//! never feeds a result path (bit-determinism), and the library crate
+//! never prints.
+//!
+//! Intentional exceptions live in a committed allowlist file
+//! (`rust/audit.allow`): one `path:rule:content` entry per accepted
+//! violation, where `content` is the trimmed source line (or `*` for a
+//! per-file-per-rule wildcard) and `#` starts a comment. An entry that
+//! stops matching anything is itself reported as [`Rule::StaleAllow`],
+//! so the allowlist can only ever shrink.
+//!
+//! Wired into `ci.sh` as a hard gate; run it locally with
+//! `cargo run --release -- audit`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+
+mod rules;
+
+pub use rules::audit_source;
+
+/// The lint rules `pasmo audit` enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// No `.unwrap()` / `.expect(` / `panic!` in library code paths
+    /// (tests and `main.rs` are exempt): malformed input must surface
+    /// as a positioned `util::error` Result, not a crash.
+    NoPanic,
+    /// Every `unsafe` block is preceded by (or carries) a `// SAFETY:`
+    /// comment justifying it.
+    UnsafeSafety,
+    /// No `==` / `!=` against float literals: solver quantities compare
+    /// through tolerances; exact-zero sentinel tests must be allowlisted
+    /// with a justification.
+    FloatEq,
+    /// `std::thread` only inside `kernel::tile` and `coordinator::jobs`,
+    /// the two audited concurrency seams.
+    ThreadScope,
+    /// No iteration over `HashMap`-typed values: iteration order is
+    /// nondeterministic and must never feed a result or report path.
+    HashmapIter,
+    /// No `println!` / `eprintln!` in the library crate; output belongs
+    /// to the binary and the report sinks.
+    NoPrint,
+    /// An allowlist entry that matches no current violation (the
+    /// exception it documented was fixed — delete the entry).
+    StaleAllow,
+}
+
+impl Rule {
+    /// Stable rule id used in reports and the allowlist file.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoPanic => "no-panic",
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::FloatEq => "float-eq",
+            Rule::ThreadScope => "thread-scope",
+            Rule::HashmapIter => "hashmap-iter",
+            Rule::NoPrint => "no-print",
+            Rule::StaleAllow => "stale-allow",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Rule> {
+        [
+            Rule::NoPanic,
+            Rule::UnsafeSafety,
+            Rule::FloatEq,
+            Rule::ThreadScope,
+            Rule::HashmapIter,
+            Rule::NoPrint,
+            Rule::StaleAllow,
+        ]
+        .into_iter()
+        .find(|r| r.name() == name)
+    }
+}
+
+/// One rule violation at a specific source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the audited source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number (0 for allowlist-level findings).
+    pub line: usize,
+    /// The rule violated.
+    pub rule: Rule,
+    /// What matched: the offending pattern or a short explanation.
+    pub detail: String,
+    /// The trimmed raw source line — the allowlist matching key.
+    pub raw: String,
+}
+
+struct AllowEntry {
+    path: String,
+    rule: String,
+    content: String,
+    line: usize,
+}
+
+/// The committed set of accepted violations (`rust/audit.allow`).
+///
+/// Format: one `path:rule:content` entry per line, where `content` is
+/// the trimmed source line the violation sits on or `*` to accept every
+/// instance of `rule` in `path`; blank lines and `#` comments are
+/// ignored. Matching is line-content based, not line-number based, so
+/// entries survive unrelated edits but die with the code they excuse.
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// An empty allowlist (used when the file does not exist).
+    pub fn empty() -> Allowlist {
+        Allowlist { entries: Vec::new() }
+    }
+
+    /// Parse allowlist text; rejects unknown rule names and malformed
+    /// entries with the offending line number.
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let mut entries = Vec::new();
+        for (k, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let mut parts = t.splitn(3, ':');
+            let (path, rule, content) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(p), Some(r), Some(c)) => (p, r, c),
+                _ => crate::bail!("audit.allow line {}: expected path:rule:content", k + 1),
+            };
+            if Rule::from_name(rule).is_none() {
+                crate::bail!("audit.allow line {}: unknown rule {rule:?}", k + 1);
+            }
+            entries.push(AllowEntry {
+                path: path.to_string(),
+                rule: rule.to_string(),
+                content: content.to_string(),
+                line: k + 1,
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Indices of every entry matching this violation (empty = not
+    /// allowlisted). All matches are reported so duplicate/wildcard
+    /// entries are not flagged stale while they still apply.
+    fn matches(&self, v: &Violation) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.path == v.file
+                    && e.rule == v.rule.name()
+                    && (e.content == "*" || e.content == v.raw)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// The outcome of auditing a source tree.
+pub struct AuditReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Violations suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// Surviving violations (including stale allowlist entries), sorted
+    /// by (file, line, rule, detail) for deterministic output.
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    /// True when nothing is left to report.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report: `file:line: [rule] detail` per violation
+    /// plus a one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            if v.line == 0 {
+                let _ = writeln!(out, "{}: [{}] {}", v.file, v.rule.name(), v.detail);
+            } else {
+                let _ = writeln!(out, "{}:{}: [{}] {}", v.file, v.line, v.rule.name(), v.detail);
+            }
+        }
+        let _ = writeln!(
+            out,
+            "audit: {} files scanned, {} violations, {} allowlisted",
+            self.files_scanned,
+            self.violations.len(),
+            self.suppressed
+        );
+        out
+    }
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .context("strip source root prefix")?
+                .to_str()
+                .with_context(|| format!("non-utf8 path {}", path.display()))?
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Audit every `.rs` file under `src` (except the binary root
+/// `main.rs`, which owns the user-facing print/fail-fast surface),
+/// apply the allowlist, and report what remains.
+pub fn audit_tree(src: &Path, allowlist: &Allowlist) -> Result<AuditReport> {
+    let mut files = Vec::new();
+    collect_rs(src, src, &mut files)?;
+    files.sort();
+    let mut used = vec![false; allowlist.entries.len()];
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    for rel in &files {
+        if rel == "main.rs" {
+            continue;
+        }
+        let text = std::fs::read_to_string(src.join(rel))
+            .with_context(|| format!("read {rel}"))?;
+        for v in rules::audit_source(rel, &text) {
+            let hits = allowlist.matches(&v);
+            if hits.is_empty() {
+                violations.push(v);
+            } else {
+                suppressed += 1;
+                for idx in hits {
+                    used[idx] = true;
+                }
+            }
+        }
+    }
+    for (idx, e) in allowlist.entries.iter().enumerate() {
+        if !used[idx] {
+            violations.push(Violation {
+                file: e.path.clone(),
+                line: 0,
+                rule: Rule::StaleAllow,
+                detail: format!(
+                    "allowlist line {} ({}:{}) matches no violation — delete it",
+                    e.line, e.rule, e.content
+                ),
+                raw: String::new(),
+            });
+        }
+    }
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.name(), a.detail.as_str()).cmp(&(
+            b.file.as_str(),
+            b.line,
+            b.rule.name(),
+            b.detail.as_str(),
+        ))
+    });
+    let files_scanned = files.iter().filter(|r| r.as_str() != "main.rs").count();
+    Ok(AuditReport { files_scanned, suppressed, violations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasmo-audit-{name}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn allowlist_parses_and_rejects_garbage() {
+        let a = Allowlist::parse(
+            "# comment\n\nsolver/x.rs:no-panic:x.unwrap()\nkernel/y.rs:float-eq:*\n",
+        )
+        .unwrap();
+        assert_eq!(a.entries.len(), 2);
+        assert!(Allowlist::parse("solver/x.rs:no-panic").is_err());
+        assert!(Allowlist::parse("solver/x.rs:bogus-rule:line").is_err());
+    }
+
+    #[test]
+    fn tree_audit_flags_suppresses_and_reports_stale() {
+        let dir = scratch("tree");
+        std::fs::write(
+            dir.join("sub/bad.rs"),
+            "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("main.rs"), "fn main() {\n    println!(\"hi\");\n}\n").unwrap();
+
+        // 1. No allowlist: the violation surfaces; main.rs is skipped.
+        let report = audit_tree(&dir, &Allowlist::empty()).unwrap();
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.violations.len(), 1);
+        let v = &report.violations[0];
+        assert_eq!((v.file.as_str(), v.line, v.rule.name()), ("sub/bad.rs", 2, "no-panic"));
+        assert!(report.render().contains("sub/bad.rs:2: [no-panic]"), "{}", report.render());
+
+        // 2. An exact-content entry suppresses it.
+        let allow = Allowlist::parse("sub/bad.rs:no-panic:x.unwrap()\n").unwrap();
+        let report = audit_tree(&dir, &allow).unwrap();
+        assert!(report.is_clean(), "{}", report.render());
+        assert_eq!(report.suppressed, 1);
+
+        // 3. A wildcard entry suppresses it too.
+        let allow = Allowlist::parse("sub/bad.rs:no-panic:*\n").unwrap();
+        assert!(audit_tree(&dir, &allow).unwrap().is_clean());
+
+        // 4. A stale entry is itself a violation.
+        let allow =
+            Allowlist::parse("sub/bad.rs:no-panic:x.unwrap()\nsub/bad.rs:no-print:*\n").unwrap();
+        let report = audit_tree(&dir, &allow).unwrap();
+        assert_eq!(report.violations.len(), 1);
+        assert_eq!(report.violations[0].rule.name(), "stale-allow");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_is_sorted_deterministically() {
+        let dir = scratch("sorted");
+        std::fs::write(dir.join("b.rs"), "fn f() {\n    println!(\"x\");\n}\n").unwrap();
+        std::fs::write(
+            dir.join("a.rs"),
+            "fn g(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        )
+        .unwrap();
+        let report = audit_tree(&dir, &Allowlist::empty()).unwrap();
+        let order: Vec<&str> = report.violations.iter().map(|v| v.file.as_str()).collect();
+        assert_eq!(order, vec!["a.rs", "b.rs"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for rule in [
+            Rule::NoPanic,
+            Rule::UnsafeSafety,
+            Rule::FloatEq,
+            Rule::ThreadScope,
+            Rule::HashmapIter,
+            Rule::NoPrint,
+            Rule::StaleAllow,
+        ] {
+            assert_eq!(Rule::from_name(rule.name()), Some(rule));
+        }
+        assert_eq!(Rule::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,434 @@
+//! The lint rules: line-level analysis over comment/string-stripped source.
+//!
+//! Every rule works on *stripped* code lines — string literal contents are
+//! blanked (quotes kept), char literals removed, `//` and `/* */` comments
+//! removed, with multi-line strings and block comments tracked across
+//! lines — so a pattern inside a string or comment never trips a rule.
+//! The one exception is [`Rule::UnsafeSafety`], which by design reads the
+//! *raw* lines: the `// SAFETY:` marker it looks for is a comment.
+//!
+//! Lines inside `#[cfg(test)] mod … { … }` regions are exempt from every
+//! rule (test code may unwrap freely); the region is tracked by brace
+//! depth from the attribute to the closing brace.
+
+use super::{Rule, Violation};
+
+/// Per-line code with string/char contents blanked and comments removed.
+///
+/// Tracks multi-line strings and block comments across lines, so the
+/// output has exactly one entry per input line.
+fn strip_file(text: &str) -> Vec<String> {
+    let mut out_lines = Vec::new();
+    let mut in_str = false;
+    let mut in_block = false;
+    for line in text.split('\n') {
+        let b: Vec<char> = line.chars().collect();
+        let n = b.len();
+        let mut out = String::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = b[i];
+            if in_block {
+                if c == '*' && i + 1 < n && b[i + 1] == '/' {
+                    in_block = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if in_str {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    in_str = false;
+                    out.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if c == '"' {
+                in_str = true;
+                out.push('"');
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // Char literal (escaped or plain) — skipped; a lone quote
+                // (lifetime) is kept.
+                if i + 1 < n && b[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && b[j] != '\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                    continue;
+                } else if i + 2 < n && b[i + 2] == '\'' {
+                    i += 3;
+                    continue;
+                } else {
+                    out.push(c);
+                    i += 1;
+                    continue;
+                }
+            }
+            if c == '/' && i + 1 < n && b[i + 1] == '/' {
+                break;
+            }
+            if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                in_block = true;
+                i += 2;
+                continue;
+            }
+            out.push(c);
+            i += 1;
+        }
+        out_lines.push(out);
+    }
+    out_lines
+}
+
+/// For each line: is it inside a `#[cfg(test)] mod … { … }` region?
+fn test_regions(code_lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    // Brace depth at region entry; the region stays active while the
+    // running depth exceeds it.
+    let mut region_depth: Option<i64> = None;
+    for (k, code) in code_lines.iter().enumerate() {
+        if region_depth.is_some() {
+            in_test[k] = true;
+        }
+        if region_depth.is_none() && pending && code.contains("mod ") && code.contains('{') {
+            region_depth = Some(depth);
+            in_test[k] = true;
+            pending = false;
+        }
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            pending = true;
+        }
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        if let Some(rd) = region_depth {
+            if depth <= rd && code.contains('}') {
+                region_depth = None;
+            }
+        }
+    }
+    in_test
+}
+
+/// Is `tok` (already stripped of a leading `-` and `f64`/`f32` suffixes)
+/// a float literal? True when there is a `.` and the mantissa before it
+/// is one or more digits.
+fn is_float_tok(tok: &str) -> bool {
+    let t = tok.trim_start_matches('-');
+    let mant = match t.find('.') {
+        Some(dot) => &t[..dot],
+        None => return false,
+    };
+    !mant.is_empty() && mant.chars().all(|c| c.is_ascii_digit())
+}
+
+/// Find `needle` in `hay` at or after `start` (char indices).
+fn find_from(hay: &[char], needle: &[char], start: usize) -> Option<usize> {
+    if hay.len() < needle.len() {
+        return None;
+    }
+    (start..=hay.len() - needle.len()).find(|&i| hay[i..i + needle.len()] == *needle)
+}
+
+/// Does this stripped line compare a float literal with `==` / `!=`?
+/// Scans the token on each side of every occurrence of the operators.
+fn float_eq_hit(code: &str) -> bool {
+    let b: Vec<char> = code.chars().collect();
+    for op in ["==", "!="] {
+        let opc: Vec<char> = op.chars().collect();
+        let mut start = 0usize;
+        while let Some(p) = find_from(&b, &opc, start) {
+            start = p + 2;
+            // Right-hand token.
+            let mut r = p + 2;
+            while r < b.len() && b[r] == ' ' {
+                r += 1;
+            }
+            let mut rtok = String::new();
+            if r < b.len() && b[r] == '-' {
+                rtok.push('-');
+                r += 1;
+            }
+            while r < b.len() && (b[r].is_alphanumeric() || b[r] == '.' || b[r] == '_') {
+                rtok.push(b[r]);
+                r += 1;
+            }
+            let rt = rtok.trim_end_matches('_').replace("f64", "").replace("f32", "");
+            if is_float_tok(&rt) {
+                return true;
+            }
+            // Left-hand token.
+            let mut ltok: Vec<char> = Vec::new();
+            let mut l = p;
+            while l > 0 && b[l - 1] == ' ' {
+                l -= 1;
+            }
+            while l > 0 && (b[l - 1].is_alphanumeric() || b[l - 1] == '.' || b[l - 1] == '_') {
+                ltok.push(b[l - 1]);
+                l -= 1;
+            }
+            let lt: String = ltok.iter().rev().collect();
+            let lt = lt.replace("f64", "").replace("f32", "");
+            if is_float_tok(&lt) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Names of fields/locals declared with a `HashMap`-ish type in this
+/// file, including through local `type X = …HashMap…` aliases.
+fn hashmap_names(code_lines: &[String]) -> std::collections::BTreeSet<String> {
+    let mut aliases: Vec<String> = vec!["HashMap".to_string()];
+    for code in code_lines {
+        let t = code.trim();
+        if let Some(rest) = t.strip_prefix("type ") {
+            if let Some((lhs, rhs)) = rest.split_once('=') {
+                if aliases.iter().any(|a| rhs.contains(a.as_str())) {
+                    let name = match lhs.split('<').next() {
+                        Some(n) => n.trim(),
+                        None => "",
+                    };
+                    if !name.is_empty() {
+                        aliases.push(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    let mut names = std::collections::BTreeSet::new();
+    for code in code_lines {
+        let b: Vec<char> = code.chars().collect();
+        for a in &aliases {
+            let pat: Vec<char> = format!(": {a}").chars().collect();
+            let mut idx = 0usize;
+            while let Some(p) = find_from(&b, &pat, idx) {
+                idx = p + 1;
+                // The char after the alias must not be identifier-ish
+                // (so `: HashMapLike` does not count as `: HashMap`).
+                let after = p + 2 + a.chars().count();
+                if after < b.len() && (b[after].is_alphanumeric() || b[after] == '_') {
+                    continue;
+                }
+                // Scan back for the declared identifier.
+                let mut tok: Vec<char> = Vec::new();
+                let mut l = p;
+                while l > 0 && (b[l - 1].is_alphanumeric() || b[l - 1] == '_') {
+                    tok.push(b[l - 1]);
+                    l -= 1;
+                }
+                let name: String = tok.iter().rev().collect();
+                if name.chars().next().is_some_and(|c| !c.is_ascii_digit()) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Run every rule over one file's text.
+///
+/// `rel` is the path relative to the audited source root, `/`-separated;
+/// it scopes [`Rule::ThreadScope`] (which exempts `kernel/tile.rs` and
+/// `coordinator/jobs.rs`). Skipping `main.rs` is the *tree walker's* job
+/// ([`super::audit_tree`]) — this function audits whatever it is given.
+pub fn audit_source(rel: &str, text: &str) -> Vec<Violation> {
+    let mut viols = Vec::new();
+    let code_lines = strip_file(text);
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let in_test = test_regions(&code_lines);
+    let hm_names = hashmap_names(&code_lines);
+    let thread_ok = rel == "kernel/tile.rs" || rel == "coordinator/jobs.rs";
+    let mut push = |line: usize, rule: Rule, detail: String, raw: &str| {
+        viols.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule,
+            detail,
+            raw: raw.trim().to_string(),
+        });
+    };
+    for (k, code) in code_lines.iter().enumerate() {
+        if in_test[k] {
+            continue;
+        }
+        let line = k + 1;
+        let raw = raw_lines[k];
+        // R1: no `.unwrap()` / `.expect(` / `panic!` in library paths.
+        for pat in [".unwrap()", ".expect(", "panic!"] {
+            if code.contains(pat) {
+                push(line, Rule::NoPanic, pat.to_string(), raw);
+                break;
+            }
+        }
+        // R2: every `unsafe` block carries a `// SAFETY:` comment, on the
+        // same line or in the contiguous comment block directly above.
+        if code.contains("unsafe")
+            && (code.contains("unsafe ") || code.contains("unsafe{") || code.trim() == "unsafe")
+        {
+            let mut ok = raw.contains("SAFETY:");
+            let mut j = k;
+            while !ok && j > 0 {
+                j -= 1;
+                let t = raw_lines[j].trim();
+                if !t.starts_with("//") {
+                    break;
+                }
+                if t.contains("SAFETY:") {
+                    ok = true;
+                }
+            }
+            if !ok {
+                push(line, Rule::UnsafeSafety, "unsafe without // SAFETY:".to_string(), raw);
+            }
+        }
+        // R3: no float-literal `==` / `!=` on solver values.
+        if float_eq_hit(code) {
+            push(line, Rule::FloatEq, "float literal ==/!=".to_string(), raw);
+        }
+        // R4: threads only in the two blessed modules.
+        if !thread_ok && (code.contains("std::thread") || code.contains("thread::")) {
+            push(
+                line,
+                Rule::ThreadScope,
+                "thread use outside kernel::tile/coordinator::jobs".to_string(),
+                raw,
+            );
+        }
+        // R5: no iteration over HashMap-typed values (bit-determinism).
+        for name in &hm_names {
+            for m in [".iter()", ".keys()", ".values()", ".drain(", ".into_iter()"] {
+                if code.contains(&format!("{name}{m}")) {
+                    push(line, Rule::HashmapIter, format!("{name}{m}"), raw);
+                    break;
+                }
+            }
+        }
+        // R6: the library crate never prints; reports go through sinks.
+        for pat in ["println!", "eprintln!", "print!(", "eprint!("] {
+            if code.contains(pat) {
+                push(line, Rule::NoPrint, pat.to_string(), raw);
+                break;
+            }
+        }
+    }
+    viols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(rel: &str, src: &str) -> Vec<(usize, &'static str)> {
+        audit_source(rel, src).iter().map(|v| (v.line, v.rule.name())).collect()
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_expect_and_panic() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n\
+                   fn g(x: Option<u32>) -> u32 {\n    x.expect(\"gone\")\n}\n\
+                   fn h() {\n    panic!(\"boom\");\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(2, "no-panic"), (5, "no-panic"), (8, "no-panic")]);
+    }
+
+    #[test]
+    fn no_panic_ignores_strings_and_comments() {
+        let src = "fn f() -> &'static str {\n    // .unwrap() would panic! here\n    \".unwrap()\"\n}\n";
+        assert_eq!(hits("m.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        None::<u32>.unwrap();\n    }\n}\nfn lib2(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(10, "no-panic")]);
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        assert_eq!(hits("m.rs", bad), vec![(2, "unsafe-safety")]);
+        let good = "fn f(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert_eq!(hits("m.rs", good), Vec::<(usize, &str)>::new());
+        let same_line = "fn f(p: *const f32) -> f32 {\n    unsafe { *p } // SAFETY: valid by contract\n}\n";
+        assert_eq!(hits("m.rs", same_line), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn unsafe_safety_comment_must_be_contiguous() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: stale, detached\n    let q = p;\n    unsafe { *q }\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(4, "unsafe-safety")]);
+    }
+
+    #[test]
+    fn float_eq_flags_literal_comparisons() {
+        let src = "fn f(x: f64) -> bool {\n    x == 0.0\n}\n\
+                   fn g(x: f64) -> bool {\n    1.5 != x\n}\n\
+                   fn h(x: f64) -> bool {\n    x == 2.0_f64\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(2, "float-eq"), (5, "float-eq"), (8, "float-eq")]);
+    }
+
+    #[test]
+    fn float_eq_ignores_ints_idents_and_strings() {
+        let src = "fn f(x: usize, y: usize, s: &str) -> bool {\n    x == 0 && x == y && s == \"0.0\" && x.min(y) == 2\n}\n";
+        assert_eq!(hits("m.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn thread_scope_is_path_dependent() {
+        let src = "fn f() {\n    std::thread::scope(|_| {});\n}\n";
+        assert_eq!(hits("solver/smo.rs", src), vec![(2, "thread-scope")]);
+        assert_eq!(hits("kernel/tile.rs", src), Vec::<(usize, &str)>::new());
+        assert_eq!(hits("coordinator/jobs.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn hashmap_iteration_is_flagged_including_aliases() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S {\n    m: HashMap<u32, u32>,\n}\n\
+                   impl S {\n    fn f(&self) -> usize {\n        self.m.iter().count()\n    }\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(7, "hashmap-iter")]);
+        let aliased = "use std::collections::HashMap;\n\
+                       type Index = HashMap<u32, u32>;\n\
+                       fn f(idx: Index) -> usize {\n    idx.keys().count()\n}\n";
+        assert_eq!(hits("m.rs", aliased), vec![(4, "hashmap-iter")]);
+    }
+
+    #[test]
+    fn hashmap_lookup_is_fine() {
+        let src = "use std::collections::HashMap;\nfn f(m: HashMap<u32, u32>) -> Option<u32> {\n    m.get(&1).copied()\n}\n";
+        assert_eq!(hits("m.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn printing_is_flagged_in_library_code() {
+        let src = "fn f() {\n    println!(\"hi\");\n}\nfn g() {\n    eprint!(\"no\");\n}\n";
+        assert_eq!(hits("m.rs", src), vec![(2, "no-print"), (4, "no-print")]);
+    }
+
+    #[test]
+    fn stripping_handles_block_comments_and_multiline_strings() {
+        let src = "fn f() -> String {\n    /* println!(\"dead\")\n       x.unwrap() */\n    let s = \"line one\n        line two with .unwrap()\n        end\".to_string();\n    s\n}\n";
+        assert_eq!(hits("m.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn raw_line_is_recorded_trimmed() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let v = audit_source("m.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].raw, "x.unwrap()");
+        assert_eq!(v[0].detail, ".unwrap()");
+    }
+}

@@ -73,7 +73,9 @@ pub fn run_permutations(
                         bsv: res.bsv,
                         planning_steps: res.telemetry.planning_steps,
                     };
-                    results[ci].lock().unwrap()[p] = Some(m);
+                    // A poisoned lock only means another worker panicked
+                    // mid-store; the slot vector itself is still valid.
+                    results[ci].lock().unwrap_or_else(|e| e.into_inner())[p] = Some(m);
                 }
             });
         }
@@ -84,7 +86,7 @@ pub fn run_permutations(
         .enumerate()
         .map(|(ci, m)| {
             m.into_inner()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .into_iter()
                 .enumerate()
                 .map(|(p, r)| {

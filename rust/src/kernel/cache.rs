@@ -267,9 +267,16 @@ impl RowCache {
             if self.nodes[slot].row.len() >= row_len {
                 self.stats.hits += 1;
                 self.touch(slot);
-                // Raw-parts round trip works around the NLL borrow
-                // limitation; the storage is a stable boxed slice.
+                #[cfg(feature = "debug-invariants")]
+                self.debug_validate();
                 let (p, l) = (self.nodes[slot].row.as_ptr(), self.nodes[slot].row.len());
+                // SAFETY: the raw-parts round trip only works around the
+                // NLL borrow limitation (the early return would otherwise
+                // extend the `map.get` borrow over the miss arm below).
+                // `p`/`l` come from the live boxed slice owned by
+                // `self.nodes[slot]`; boxed storage never moves, and the
+                // returned slice borrows `self`, so no `&mut self` method
+                // can evict or mutate the row while it is alive.
                 return unsafe { std::slice::from_raw_parts(p, l) };
             }
             // Resident but shorter than the current active view (the
@@ -282,7 +289,13 @@ impl RowCache {
         let mut row = vec![0f32; row_len].into_boxed_slice();
         compute(&mut row);
         let slot = self.insert_entry(i, row);
+        #[cfg(feature = "debug-invariants")]
+        self.debug_validate();
         let (p, l) = (self.nodes[slot].row.as_ptr(), self.nodes[slot].row.len());
+        // SAFETY: as on the hit path — the box just inserted into
+        // `self.nodes[slot]` is stable storage, and the returned slice's
+        // lifetime is tied to the `&mut self` borrow, so nothing can
+        // evict or mutate the row while the borrow lives.
         unsafe { std::slice::from_raw_parts(p, l) }
     }
 
@@ -310,6 +323,9 @@ impl RowCache {
             return;
         }
         let mut dropped: Vec<usize> = Vec::new();
+        // Iteration order over the map is irrelevant here: every resident
+        // row receives the same column patches, and drops are collected
+        // first, removed after (allowlisted for the hashmap-iter lint).
         for (&key, &slot) in self.map.iter() {
             let row = &mut self.nodes[slot].row;
             let len = row.len();
@@ -348,6 +364,8 @@ impl RowCache {
                 self.map.insert(a, s);
             }
         }
+        #[cfg(feature = "debug-invariants")]
+        self.debug_validate();
     }
 
     /// Invalidate everything (dataset changed). Also resets the
@@ -360,6 +378,73 @@ impl RowCache {
         self.tail = NIL;
         self.bytes_used = 0;
         self.stats = CacheStats::default();
+        #[cfg(feature = "debug-invariants")]
+        self.debug_validate();
+    }
+
+    /// Full structural validation of the cache (`debug-invariants`
+    /// builds only; called after every mutating operation):
+    ///
+    /// * byte accounting: `bytes_used` == Σ resident row lengths · 4,
+    /// * map/slab agreement: every non-free slot's key maps back to it,
+    /// * the intrusive LRU list is a consistent doubly-linked chain from
+    ///   `head` to `tail` visiting every resident slot exactly once,
+    /// * `free` and the resident slots partition the slab.
+    #[cfg(feature = "debug-invariants")]
+    pub(crate) fn debug_validate(&self) {
+        let free: std::collections::BTreeSet<usize> = self.free.iter().copied().collect();
+        let mut resident = 0usize;
+        let mut resident_bytes = 0usize;
+        for (s, node) in self.nodes.iter().enumerate() {
+            if free.contains(&s) {
+                continue;
+            }
+            resident += 1;
+            resident_bytes += node.row.len() * std::mem::size_of::<f32>();
+            crate::invariant!(
+                self.map.get(&node.key) == Some(&s),
+                "cache map and slab disagree for key {} (slot {})",
+                node.key,
+                s
+            );
+        }
+        crate::invariant!(
+            resident == self.map.len(),
+            "resident slots {} != map entries {}",
+            resident,
+            self.map.len()
+        );
+        crate::invariant!(
+            free.len() + resident == self.nodes.len(),
+            "free list and resident slots do not partition the slab"
+        );
+        crate::invariant!(
+            resident_bytes == self.bytes_used,
+            "byte accounting drift: {} bytes resident vs {} accounted",
+            resident_bytes,
+            self.bytes_used
+        );
+        let mut count = 0usize;
+        let mut prev = NIL;
+        let mut cur = self.head;
+        while cur != NIL {
+            crate::invariant!(
+                self.nodes[cur].prev == prev,
+                "LRU back-link broken at slot {cur}"
+            );
+            crate::invariant!(!free.contains(&cur), "free slot {cur} linked in the LRU list");
+            count += 1;
+            crate::invariant!(count <= self.nodes.len(), "LRU list cycles");
+            prev = cur;
+            cur = self.nodes[cur].next;
+        }
+        crate::invariant!(prev == self.tail, "LRU tail does not terminate the list");
+        crate::invariant!(
+            count == self.map.len(),
+            "LRU list length {} != resident rows {}",
+            count,
+            self.map.len()
+        );
     }
 }
 
@@ -579,6 +664,65 @@ mod tests {
             }
             assert_eq!(c.len(), model.len(), "step {step}");
         }
+    }
+
+    #[test]
+    fn byte_accounting_matches_resident_rows_throughout_random_workload() {
+        use crate::util::prng::Pcg;
+        // Regression guard for the accounting the debug-invariants
+        // checker enforces: after any mix of hits, misses, variable-length
+        // recomputes and swap batches, `bytes_used` equals the sum of the
+        // resident rows' actual lengths.
+        let mut c = RowCache::with_budget(64 * 4, 8);
+        let mut rng = Pcg::new(7);
+        for step in 0..600 {
+            let i = rng.below(16);
+            let len = 2 + rng.below(6);
+            c.get_or_compute(i, len, None, fill(i as f32));
+            if step % 97 == 0 {
+                c.apply_swaps(&[(rng.below(8), rng.below(8)), (rng.below(8), rng.below(8))]);
+            }
+            let expected: usize = c
+                .map
+                .values()
+                .map(|&s| c.nodes[s].row.len() * std::mem::size_of::<f32>())
+                .sum();
+            assert_eq!(c.bytes_used, expected, "accounting drift at step {step}");
+            assert!(c.bytes_used <= 64 * 4 || c.len() <= 2, "budget overshoot at step {step}");
+        }
+        c.clear();
+        assert_eq!(c.bytes_used, 0);
+    }
+
+    #[cfg(feature = "debug-invariants")]
+    #[test]
+    fn debug_validate_accepts_a_healthy_cache() {
+        let mut c = RowCache::with_capacity_rows(4);
+        for i in 0..6 {
+            c.get_or_compute(i, 4, None, fill(i as f32));
+        }
+        c.debug_validate();
+    }
+
+    #[cfg(feature = "debug-invariants")]
+    #[test]
+    #[should_panic(expected = "invariant violated")]
+    fn corrupted_byte_accounting_is_caught() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(0, 4, None, fill(1.0));
+        c.bytes_used += std::mem::size_of::<f32>();
+        c.debug_validate();
+    }
+
+    #[cfg(feature = "debug-invariants")]
+    #[test]
+    #[should_panic(expected = "invariant violated")]
+    fn corrupted_lru_list_is_caught() {
+        let mut c = RowCache::with_capacity_rows(4);
+        c.get_or_compute(0, 4, None, fill(1.0));
+        c.get_or_compute(1, 4, None, fill(2.0));
+        c.head = NIL; // sever the list from its residents
+        c.debug_validate();
     }
 
     #[test]

@@ -203,28 +203,35 @@ impl Gram {
     }
 
     /// Ensure row `p` is resident covering the active prefix, metering
-    /// the computer's honest evaluation cost on a miss.
-    fn fetch(&mut self, p: usize, pinned: Option<usize>) {
+    /// the computer's honest evaluation cost on a miss, and return the
+    /// resident row's raw parts. Returning parts instead of re-looking
+    /// the row up lets callers reborrow without a can't-miss `.expect()`.
+    fn fetch(&mut self, p: usize, pinned: Option<usize>) -> (*const f32, usize) {
         debug_assert!(p < self.len);
         let need = self.active_len;
         let misses_before = self.cache.stats().misses;
         let computer = &self.computer;
         let cols = &self.perm[..need];
         let orig = self.perm[p];
-        self.cache.get_or_compute(p, need, pinned, |out| {
+        let row = self.cache.get_or_compute(p, need, pinned, |out| {
             computer.compute_cols(orig, cols, out)
         });
+        let parts = (row.as_ptr(), row.len());
         if self.cache.stats().misses > misses_before {
             self.row_entries += self.computer.cols_cost(need) as u64;
         }
+        parts
     }
 
     /// Borrow row `p` (computing/caching on miss). The returned slice
     /// covers at least the active prefix; it may be longer if a wider row
     /// is resident.
     pub fn row(&mut self, p: usize) -> &[f32] {
-        self.fetch(p, None);
-        let (ptr, l) = self.cache.row_ptr(p).expect("row resident after fetch");
+        let (ptr, l) = self.fetch(p, None);
+        // SAFETY: `fetch` just made row `p` resident and returned its
+        // boxed slice's pointer/length; boxed storage never moves, and
+        // the returned borrow ties to `&mut self`, so nothing can evict
+        // or mutate the row while it lives.
         unsafe { std::slice::from_raw_parts(ptr, l) }
     }
 
@@ -236,10 +243,13 @@ impl Gram {
     /// further cache mutation can occur while they live.
     pub fn rows_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
         assert_ne!(i, j, "rows_pair needs two distinct rows");
-        self.fetch(i, Some(j));
-        self.fetch(j, Some(i));
-        let (pi, li) = self.cache.row_ptr(i).expect("row i resident");
-        let (pj, lj) = self.cache.row_ptr(j).expect("row j resident");
+        let (pi, li) = self.fetch(i, Some(j));
+        let (pj, lj) = self.fetch(j, Some(i));
+        // SAFETY: both rows are resident — the second fetch pins `i`, so
+        // making room for `j` cannot evict it, and only eviction (or a
+        // recompute of `i` itself, which fetching `j` cannot trigger)
+        // would free the box behind `pi`. Boxed storage never moves, and
+        // both borrows tie to `&mut self` (see the soundness note above).
         unsafe {
             (
                 std::slice::from_raw_parts(pi, li),
@@ -256,11 +266,15 @@ impl Gram {
         }
         if let Some((ptr, l)) = self.cache.row_ptr(p) {
             if q < l {
+                // SAFETY: `row_ptr` returned the live resident row's
+                // pointer and length; `q < l` keeps the read in bounds,
+                // and nothing mutates the cache between lookup and read.
                 return unsafe { *ptr.add(q) } as f64;
             }
         }
         if let Some((ptr, l)) = self.cache.row_ptr(q) {
             if p < l {
+                // SAFETY: as above, with `p < l` bounding the read.
                 return unsafe { *ptr.add(p) } as f64;
             }
         }
@@ -283,6 +297,10 @@ impl Gram {
     pub(crate) fn resident_row(&self, p: usize) -> Option<&[f32]> {
         self.cache
             .row_ptr(p)
+            // SAFETY: `row_ptr` hands back the live resident boxed row's
+            // pointer and length; boxed storage never moves, and the
+            // returned slice borrows `self`, so every evicting method
+            // (`&mut self`) is unreachable while it lives.
             .map(|(ptr, l)| unsafe { std::slice::from_raw_parts(ptr, l) })
     }
 

@@ -60,6 +60,25 @@ pub fn chunked<T: Send, F: Fn(usize, &mut [T]) + Sync>(workers: usize, out: &mut
         return;
     }
     let chunk = out.len().div_ceil(workers);
+    #[cfg(feature = "debug-invariants")]
+    {
+        // The spawned chunks must partition `out` exactly: contiguous,
+        // non-overlapping, and covering every entry once.
+        let mut covered = 0usize;
+        for (c, piece) in out.chunks(chunk).enumerate() {
+            crate::invariant!(
+                c * chunk == covered,
+                "chunk {c} starts at {} but the previous ended at {covered}",
+                c * chunk
+            );
+            covered += piece.len();
+        }
+        crate::invariant!(
+            covered == out.len(),
+            "chunks cover {covered} of {} entries",
+            out.len()
+        );
+    }
     let fill = &fill;
     std::thread::scope(|s| {
         for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {

@@ -63,6 +63,8 @@
 
 #![warn(missing_docs)]
 
+/// `pasmo audit`: the repo's own source-tree lint (offline, no deps).
+pub mod audit;
 /// Experiment drivers and the permutation fan-out (paper §7 protocol).
 pub mod coordinator;
 /// Datasets: dense storage, LIBSVM IO, splits, the synthetic suite.

@@ -9,6 +9,7 @@
 //! * `experiment <id>` — regenerate a paper table/figure or comparison:
 //!   `table1 | table2 | fig2 | fig3 | fig4 | wss | heuristic |
 //!   engine_shootout | all`.
+//! * `audit` — the repo's own source-tree lint (see `src/audit`).
 //! * `info` — environment / artifact status.
 //!
 //! `pasmo --help`, `pasmo <command> --help` and `pasmo help <command>`
@@ -66,6 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("gridsearch") => cmd_gridsearch(args),
         Some("bench") => cmd_bench(args),
         Some("experiment") => cmd_experiment(args),
+        Some("audit") => cmd_audit(args),
         Some("info") => cmd_info(),
         _ => {
             print_usage();
@@ -182,6 +184,18 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --threads N           permutation fan-out worker threads\n\
                --out report.md       save the rendered report"
             .to_string(),
+        "audit" => "usage: pasmo audit [options]\n\n\
+             Run the repo's own source-tree lint: no panics in library\n\
+             paths, SAFETY comments on every unsafe block, no float\n\
+             literal ==/!= comparisons, thread spawning only in the two\n\
+             sanctioned modules, no HashMap iteration, no printing from\n\
+             the library crate. Violations not excused by the allowlist\n\
+             (and allowlist entries matching nothing) exit nonzero.\n\n\
+               --src DIR             source tree to scan (default: this crate's src/)\n\
+               --allowlist FILE      allowlist of excused findings, one\n\
+                                     `path:rule:content` entry per line (default:\n\
+                                     audit.allow next to Cargo.toml; missing = empty)"
+            .to_string(),
         "info" => "usage: pasmo info\n\n\
              Print version, available threads and PJRT artifact status.\n\
              Takes no flags (--help prints this page)."
@@ -220,6 +234,9 @@ fn print_usage() {
                       engine_shootout|all\n\
                       [--perms N --scale S --max-len N --full\n\
                        --datasets a,b,c --eps E --seed S --out report.md]\n\
+           audit      [--src DIR] [--allowlist FILE]\n\
+                      the repo's own source lint (panic-free library paths,\n\
+                      SAFETY comments, float comparisons, thread scope)\n\
            info                              environment / artifact status\n\
          \n\
          `pasmo <command> --help` (or `pasmo help <command>`) prints the\n\
@@ -838,14 +855,17 @@ fn cmd_bench_predict(args: &Args) -> Result<()> {
 }
 
 fn exp_options(args: &Args) -> ExpOptions {
-    let mut o = ExpOptions::default();
-    o.scale = args.get_parse_or("scale", o.scale);
-    o.max_len = args.get_parse_or("max-len", o.max_len);
-    o.perms = args.get_parse_or("perms", o.perms);
-    o.eps = args.get_parse_or("eps", o.eps);
-    o.seed = args.get_parse_or("seed", o.seed);
-    o.full = args.flag("full");
-    o.threads = args.get_parse_or("threads", o.threads);
+    let d = ExpOptions::default();
+    let mut o = ExpOptions {
+        scale: args.get_parse_or("scale", d.scale),
+        max_len: args.get_parse_or("max-len", d.max_len),
+        perms: args.get_parse_or("perms", d.perms),
+        eps: args.get_parse_or("eps", d.eps),
+        seed: args.get_parse_or("seed", d.seed),
+        full: args.flag("full"),
+        threads: args.get_parse_or("threads", d.threads),
+        ..d
+    };
     if let Some(list) = args.get("datasets") {
         o.datasets = list.split(',').map(|s| s.trim().to_string()).collect();
     }
@@ -884,6 +904,30 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         report.save(Path::new(out))?;
         println!("\nreport saved to {out}");
     }
+    Ok(())
+}
+
+/// `pasmo audit` — the in-repo lint. Scans a source tree (default: this
+/// crate's `src/`), applies the allowlist, prints the report and exits
+/// nonzero if any violation (including stale allowlist entries) remains.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use pasmo::audit::{audit_tree, Allowlist};
+    let src = args.get_or("src", concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let allow_path =
+        args.get_or("allowlist", concat!(env!("CARGO_MANIFEST_DIR"), "/audit.allow"));
+    let allowlist = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => Allowlist::parse(&text)
+            .with_context(|| format!("parse allowlist {allow_path}"))?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Allowlist::empty(),
+        Err(e) => bail!("read allowlist {allow_path}: {e}"),
+    };
+    let report = audit_tree(Path::new(&src), &allowlist)?;
+    print!("{}", report.render());
+    ensure!(
+        report.is_clean(),
+        "audit found {} violation(s) in {src}",
+        report.violations.len()
+    );
     Ok(())
 }
 

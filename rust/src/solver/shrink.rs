@@ -87,6 +87,18 @@ pub fn shrink(state: &mut SolverState, gram: &mut Gram, m: f64, big_m: f64) -> u
     gram.apply_swaps(&swaps);
     state.active_len = keepers;
     gram.set_active_len(keepers);
+    #[cfg(feature = "debug-invariants")]
+    {
+        crate::invariant!(
+            crate::util::invariant::inverse_permutation_ok(&state.perm, &state.pos),
+            "shrink broke the perm/pos bijection"
+        );
+        crate::invariant!(
+            gram.active_len() == state.active_len,
+            "gram/state active prefixes disagree after shrink"
+        );
+        crate::invariant!(state.active_len >= 2, "shrink left fewer than two active");
+    }
     al - keepers
 }
 
@@ -120,6 +132,31 @@ pub fn unshrink_and_reconstruct(state: &mut SolverState, gram: &mut Gram) {
     }
     state.active_len = n;
     gram.set_active_len(n);
+    #[cfg(feature = "debug-invariants")]
+    {
+        // Gradient parity: the incrementally maintained gradient must
+        // agree with a direct recompute G_p = y_p − Σ_q α_q K_qp on a
+        // spread-out sample of positions. Rows are f32 and the increments
+        // accumulate over the whole solve, so the tolerance is generous —
+        // this catches structural corruption (a missed update, a wrong
+        // index or sign), not float dust. Sampling keeps the check (and
+        // its kernel-meter footprint) linear rather than quadratic.
+        let scale: f64 = state.alpha.iter().map(|a| a.abs()).sum();
+        let tol = 1e-3 * (1.0 + scale);
+        for p in (0..n).step_by((n / 8).max(1)) {
+            let mut want = state.y[p];
+            for q in 0..n {
+                if state.alpha[q].abs() > 0.0 {
+                    want -= state.alpha[q] * gram.entry(q, p);
+                }
+            }
+            crate::invariant!(
+                (state.grad[p] - want).abs() <= tol,
+                "gradient parity lost at position {p}: maintained {} vs recomputed {want}",
+                state.grad[p]
+            );
+        }
+    }
 }
 
 #[cfg(test)]

@@ -133,6 +133,10 @@ pub(crate) struct SolverCore<'a> {
     /// inside the fused gradient-update loop of the previous iteration;
     /// when present the stop check runs with zero additional scans.
     cached_scan: Option<(f64, f64, f64, Option<usize>)>,
+    /// Σα at entry — the equality-constraint target every later iterate
+    /// must preserve (SMO steps move mass along `e_i − e_j`).
+    #[cfg(feature = "debug-invariants")]
+    equality_sum: f64,
 }
 
 impl<'a> SolverCore<'a> {
@@ -150,6 +154,8 @@ impl<'a> SolverCore<'a> {
         } else {
             n.min(1000).max(1)
         };
+        #[cfg(feature = "debug-invariants")]
+        let equality_sum = state.alpha.iter().sum::<f64>();
         SolverCore {
             state,
             gram,
@@ -161,6 +167,8 @@ impl<'a> SolverCore<'a> {
             unshrunk: false,
             hint_argmax_up: None,
             cached_scan: None,
+            #[cfg(feature = "debug-invariants")]
+            equality_sum,
         }
     }
 
@@ -175,6 +183,8 @@ impl<'a> SolverCore<'a> {
     /// Stopping / shrinking bookkeeping run at the top of each iteration.
     /// Returns `Some(converged)` if the loop should stop.
     pub fn check_stop_and_shrink(&mut self) -> Option<bool> {
+        #[cfg(feature = "debug-invariants")]
+        self.state.check_invariants(self.equality_sum);
         let (m, big_m, gap, argmax) = match self.cached_scan.take() {
             Some(scan) => scan,
             None => {
@@ -346,6 +356,8 @@ impl<'a> SolverCore<'a> {
     pub fn finish(mut self, converged: bool, started: Instant) -> SolveResult {
         // Always report on the full problem, in original coordinates.
         shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
+        #[cfg(feature = "debug-invariants")]
+        self.state.check_invariants(self.equality_sum);
         let (_, _, gap) = self.state.kkt_gap_active();
         let (sv, bsv) = self.state.sv_counts(1e-12);
         SolveResult {

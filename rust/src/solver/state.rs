@@ -265,6 +265,56 @@ impl SolverState {
         }
         (sv, bsv)
     }
+
+    /// Validate the state's structural invariants (`debug-invariants`
+    /// builds only; panics via [`crate::invariant!`] on violation):
+    ///
+    /// * every state vector has the problem length and
+    ///   `active_len ≤ ℓ`,
+    /// * `perm`/`pos` are inverse permutations of each other,
+    /// * the equality constraint holds: `Σα == equality_sum` within
+    ///   `1e-6·(1 + Σ|α|)` (SMO steps move mass along `e_i − e_j`, so the
+    ///   sum is conserved exactly up to float dust),
+    /// * every α lies in its box `[L, U]` (with relative slack for the
+    ///   clamp's floating point) and no box is inverted.
+    #[cfg(feature = "debug-invariants")]
+    pub fn check_invariants(&self, equality_sum: f64) {
+        let n = self.len();
+        crate::invariant!(
+            self.alpha.len() == n
+                && self.grad.len() == n
+                && self.lower.len() == n
+                && self.upper.len() == n
+                && self.perm.len() == n
+                && self.pos.len() == n,
+            "state vector lengths disagree"
+        );
+        crate::invariant!(self.active_len <= n, "active prefix longer than the problem");
+        crate::invariant!(
+            crate::util::invariant::inverse_permutation_ok(&self.perm, &self.pos),
+            "perm/pos are not inverse permutations"
+        );
+        let sum: f64 = self.alpha.iter().sum();
+        let scale: f64 = self.alpha.iter().map(|a| a.abs()).sum();
+        crate::invariant!(
+            (sum - equality_sum).abs() <= 1e-6 * (1.0 + scale),
+            "equality constraint drifted: sum alpha = {sum}, target {equality_sum}"
+        );
+        for p in 0..n {
+            let slack = 1e-12 * (1.0 + self.lower[p].abs().max(self.upper[p].abs()));
+            crate::invariant!(
+                self.lower[p] <= self.upper[p],
+                "inverted box at position {p}"
+            );
+            crate::invariant!(
+                self.alpha[p] >= self.lower[p] - slack && self.alpha[p] <= self.upper[p] + slack,
+                "alpha[{p}] = {} outside box [{}, {}]",
+                self.alpha[p],
+                self.lower[p],
+                self.upper[p]
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -391,5 +441,77 @@ mod tests {
         s.alpha = vec![1.0, 0.5, -0.2];
         let (sv, bsv) = s.sv_counts(1e-9);
         assert_eq!((sv, bsv), (3, 1));
+    }
+
+    #[cfg(feature = "debug-invariants")]
+    mod invariant_checks {
+        use super::*;
+        use crate::util::prng::Pcg;
+        use crate::util::quickcheck::forall;
+
+        #[test]
+        fn healthy_state_passes() {
+            let mut s = SolverState::new(&[1, -1, 1, -1], 2.0);
+            s.check_invariants(0.0);
+            s.apply_step(0, 1, 0.5);
+            s.swap(0, 3);
+            s.check_invariants(0.0);
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated")]
+        fn alpha_sum_drift_is_caught() {
+            let mut s = SolverState::new(&[1, -1], 1.0);
+            s.alpha[0] = 0.5; // one-sided update breaks the equality sum
+            s.check_invariants(0.0);
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated")]
+        fn out_of_box_alpha_is_caught() {
+            let mut s = SolverState::new(&[1, -1], 1.0);
+            s.alpha = vec![2.0, -2.0]; // sum is fine, the box is not
+            s.check_invariants(0.0);
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated")]
+        fn broken_permutation_is_caught() {
+            let mut s = SolverState::new(&[1, -1, 1], 1.0);
+            s.pos.swap(0, 1); // pos no longer inverts perm
+            s.check_invariants(0.0);
+        }
+
+        #[test]
+        fn random_step_and_swap_sequences_never_trip_the_checkers() {
+            forall(
+                "steps and swaps preserve state invariants",
+                60,
+                |rng: &mut Pcg| {
+                    let n = 3 + rng.below(12);
+                    let ops: Vec<(usize, usize, f64)> = (0..25)
+                        .map(|_| (rng.below(n), rng.below(n), rng.range(-2.0, 2.0)))
+                        .collect();
+                    (n, ops)
+                },
+                |&(n, ref ops)| {
+                    let labels: Vec<i8> =
+                        (0..n).map(|k| if k % 2 == 0 { 1 } else { -1 }).collect();
+                    let mut s = SolverState::new(&labels, 1.5);
+                    for &(p, q, mu) in ops {
+                        if p != q {
+                            // alternate SMO-style steps (kept inside the
+                            // feasible interval, as the solver does) and
+                            // shrink-style swaps
+                            let (lo, hi) = s.step_bounds(p, q);
+                            s.apply_step(p, q, mu.clamp(lo, hi));
+                            s.swap(p, q);
+                        }
+                        s.check_invariants(0.0);
+                    }
+                    Ok(())
+                },
+            );
+        }
     }
 }

@@ -53,7 +53,7 @@ pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Option<WilcoxonOutcome> {
     }
     // Rank |d| ascending with average ranks for ties.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| diffs[i].abs().partial_cmp(&diffs[j].abs()).unwrap());
+    order.sort_by(|&i, &j| diffs[i].abs().total_cmp(&diffs[j].abs()));
     let mut ranks = vec![0f64; n];
     let mut has_ties = false;
     let mut tie_correction = 0.0f64; // Σ (t³ - t) over tie groups

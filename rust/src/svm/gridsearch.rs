@@ -92,14 +92,20 @@ pub fn grid_search(
             });
         }
     }
-    let best = *evaluated
-        .iter()
-        .max_by(|a, b| {
-            (a.cv_accuracy, -a.c, -a.gamma)
-                .partial_cmp(&(b.cv_accuracy, -b.c, -b.gamma))
-                .unwrap()
-        })
-        .unwrap();
+    // Best = highest CV accuracy, ties broken toward smaller C then
+    // smaller γ (less regularization risk at equal accuracy).
+    let mut best = evaluated[0];
+    for &p in &evaluated[1..] {
+        let better = p
+            .cv_accuracy
+            .total_cmp(&best.cv_accuracy)
+            .then(best.c.total_cmp(&p.c))
+            .then(best.gamma.total_cmp(&p.gamma))
+            .is_gt();
+        if better {
+            best = p;
+        }
+    }
     GridSearchResult { evaluated, best, total_iterations }
 }
 

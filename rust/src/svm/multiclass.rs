@@ -72,8 +72,11 @@ impl OvoModel {
         let mut votes = vec![0usize; self.classes.len()];
         for (m, &(a, b)) in (0..self.machines.len()).zip(&self.pairs) {
             let winner = if decision_of(m) >= 0.0 { a } else { b };
-            let idx = self.classes.iter().position(|&c| c == winner).unwrap();
-            votes[idx] += 1;
+            // The constructor validated every pair against `classes`, so
+            // the position lookup cannot miss; stay panic-free regardless.
+            if let Some(idx) = self.classes.iter().position(|&c| c == winner) {
+                votes[idx] += 1;
+            }
         }
         let best = votes.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i));
         self.classes[best.map(|(i, _)| i).unwrap_or(0)]

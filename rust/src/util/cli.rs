@@ -23,13 +23,13 @@ impl Args {
             if let Some(rest) = tok.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
-                    out.options.insert(rest.to_string(), v);
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        None => out.flags.push(rest.to_string()),
+                    }
                 } else {
                     out.flags.push(rest.to_string());
                 }

@@ -1,0 +1,112 @@
+//! Feature-gated runtime invariants (`--features debug-invariants`).
+//!
+//! The solver stack layers shrinking permutations, an intrusive LRU row
+//! cache and conjugate momentum on top of one shared `SolverState`; the
+//! paper's convergence argument only holds while dual feasibility and
+//! the perm/pos/cache bookkeeping stay exact. The [`invariant!`] macro
+//! is the single assertion point for those properties: it compiles to
+//! nothing in normal builds (zero overhead on the hot path) and to a
+//! `panic!` with an `invariant violated:` prefix under
+//! `--features debug-invariants`, which CI runs the full test suite
+//! with. Checker methods (`SolverState::check_invariants`,
+//! `RowCache::debug_validate`, the `tile::chunked` partition check, the
+//! shrink/unshrink seam checks) are themselves compiled only under the
+//! feature, so release binaries carry no checking code at all.
+//!
+//! Corruption tests assert the firing path with
+//! `#[should_panic(expected = "invariant violated")]`.
+
+/// Assert a runtime invariant in `debug-invariants` builds.
+///
+/// Expands to nothing unless the crate is compiled with
+/// `--features debug-invariants`. On failure it panics with a message
+/// prefixed `invariant violated:` (the condition itself when no message
+/// is given, a `format!`-style message otherwise).
+///
+/// ```
+/// let total = 2 + 2;
+/// pasmo::invariant!(total == 4, "arithmetic drifted: {total}");
+/// ```
+#[macro_export]
+macro_rules! invariant {
+    ($cond:expr $(,)?) => {
+        #[cfg(feature = "debug-invariants")]
+        {
+            if !($cond) {
+                panic!("invariant violated: {}", stringify!($cond));
+            }
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        #[cfg(feature = "debug-invariants")]
+        {
+            if !($cond) {
+                panic!("invariant violated: {}", format_args!($($arg)*));
+            }
+        }
+    };
+}
+
+/// True when `pos` is the inverse of the permutation `perm`: both are
+/// the same length `l`, every entry is `< l`, and `pos[perm[k]] == k`
+/// for every `k` (which forces both to be bijections on `0..l`).
+pub fn inverse_permutation_ok(perm: &[usize], pos: &[usize]) -> bool {
+    if perm.len() != pos.len() {
+        return false;
+    }
+    let l = perm.len();
+    (0..l).all(|k| perm[k] < l && pos[k] < l && pos[perm[k]] == k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_permutation_accepts_identity_and_real_inverses() {
+        assert!(inverse_permutation_ok(&[0, 1, 2], &[0, 1, 2]));
+        assert!(inverse_permutation_ok(&[2, 0, 1], &[1, 2, 0]));
+        assert!(inverse_permutation_ok(&[], &[]));
+    }
+
+    #[test]
+    fn inverse_permutation_rejects_corruption() {
+        // Length mismatch.
+        assert!(!inverse_permutation_ok(&[0, 1], &[0, 1, 2]));
+        // Out of range.
+        assert!(!inverse_permutation_ok(&[0, 7], &[0, 1]));
+        // Not inverse (pos is perm itself for a non-involution).
+        assert!(!inverse_permutation_ok(&[1, 2, 0], &[1, 2, 0]));
+        // Duplicate entry (not a bijection).
+        assert!(!inverse_permutation_ok(&[0, 0, 2], &[0, 1, 2]));
+    }
+
+    #[cfg(not(feature = "debug-invariants"))]
+    #[test]
+    fn invariant_is_a_no_op_without_the_feature() {
+        // Would panic under the feature; must be silent without it.
+        crate::invariant!(false, "never evaluated");
+        crate::invariant!(1 == 2);
+    }
+
+    #[cfg(feature = "debug-invariants")]
+    mod armed {
+        #[test]
+        fn invariant_passes_silently_when_true() {
+            crate::invariant!(1 + 1 == 2, "math broke");
+            crate::invariant!(true);
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated")]
+        fn invariant_fires_with_message() {
+            crate::invariant!(1 == 2, "one is not {}", 2);
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated")]
+        fn invariant_fires_without_message() {
+            crate::invariant!(false);
+        }
+    }
+}

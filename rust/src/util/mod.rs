@@ -2,6 +2,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod invariant;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

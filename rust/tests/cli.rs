@@ -57,8 +57,16 @@ fn no_args_prints_usage() {
 /// A flag added to the code without a help line fails this test.
 #[test]
 fn help_documents_every_flag_the_code_reads() {
-    const SUBCOMMANDS: [&str; 7] =
-        ["datasets", "train", "predict", "gridsearch", "bench", "experiment", "info"];
+    const SUBCOMMANDS: [&str; 8] = [
+        "datasets",
+        "train",
+        "predict",
+        "gridsearch",
+        "bench",
+        "experiment",
+        "audit",
+        "info",
+    ];
     // 1. Collect the full help corpus.
     let mut corpus = String::new();
     let general = pasmo().arg("--help").output().unwrap();
@@ -110,6 +118,67 @@ fn help_documents_every_flag_the_code_reads() {
             "help does not list solver value {solver:?}"
         );
     }
+}
+
+/// `pasmo audit` on a fixture tree: violations exit nonzero and are
+/// reported; a matching allowlist turns the same tree green; a stale
+/// allowlist entry flips it red again.
+#[test]
+fn audit_flags_fixture_violations_and_honours_the_allowlist() {
+    let dir = TempDir::new("audit-fixture");
+    let src = dir.path("src");
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(
+        src.join("bad.rs"),
+        "pub fn f(v: Option<u8>) -> u8 {\n    v.unwrap()\n}\n",
+    )
+    .unwrap();
+
+    // 1. Violation with no allowlist: nonzero exit, rule named in output.
+    let out = pasmo()
+        .args(["audit", "--src"])
+        .arg(&src)
+        .args(["--allowlist"])
+        .arg(dir.path("missing.allow"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "audit passed a tree with .unwrap()");
+    let text = String::from_utf8_lossy(&out.stdout).to_string()
+        + &String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("no-panic"), "rule missing from report:\n{text}");
+    assert!(text.contains("bad.rs"), "file missing from report:\n{text}");
+
+    // 2. An exact-content allowlist entry excuses it.
+    let allow = dir.path("audit.allow");
+    std::fs::write(&allow, "bad.rs:no-panic:v.unwrap()\n").unwrap();
+    let out = pasmo()
+        .args(["audit", "--src"])
+        .arg(&src)
+        .args(["--allowlist"])
+        .arg(&allow)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "allowlisted tree still fails: {}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // 3. A stale entry (fixed code, lingering excuse) is itself an error.
+    std::fs::write(src.join("bad.rs"), "pub fn f(v: Option<u8>) -> u8 {\n    v.unwrap_or(0)\n}\n")
+        .unwrap();
+    let out = pasmo()
+        .args(["audit", "--src"])
+        .arg(&src)
+        .args(["--allowlist"])
+        .arg(&allow)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "stale allowlist entry went unnoticed");
+    let text = String::from_utf8_lossy(&out.stdout).to_string()
+        + &String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("stale-allow"), "stale rule missing:\n{text}");
 }
 
 #[test]

@@ -1,0 +1,81 @@
+//! End-to-end exercise of the `debug-invariants` checker layer.
+//!
+//! Every checker in the library panics the moment its invariant is
+//! violated, so these tests assert by *finishing*: a full randomized
+//! solve — with shrinking forced on a short interval and a cache small
+//! enough to churn — that runs to completion under the feature proves
+//! the solver never left a state the checkers object to. The targeted
+//! corruption tests (each checker fires on a hand-broken structure)
+//! live next to the checkers themselves in the library's test modules.
+
+#![cfg(feature = "debug-invariants")]
+
+use std::sync::Arc;
+
+use pasmo::data::dataset::Dataset;
+use pasmo::kernel::function::KernelFunction;
+use pasmo::kernel::matrix::Gram;
+use pasmo::kernel::native::NativeRowComputer;
+use pasmo::solver::{Engine, PasmoSolver, QpProblem, SmoSolver, SolverConfig};
+use pasmo::util::prng::Pcg;
+use pasmo::util::quickcheck::forall;
+
+/// Two noisy Gaussian blobs with alternating labels — separable enough
+/// that solves terminate quickly, overlapping enough that some α end up
+/// strictly inside the box (free variables exercise the unshrink path).
+fn blob_dataset(n: usize, rng: &mut Pcg) -> (Arc<Dataset>, Vec<i8>) {
+    let mut ds = Dataset::with_dim(2);
+    for k in 0..n {
+        let y: i8 = if k % 2 == 0 { 1 } else { -1 };
+        let center = y as f64 * 0.75;
+        ds.push(
+            &[
+                (center + 0.9 * rng.normal()) as f32,
+                (-center + 0.9 * rng.normal()) as f32,
+            ],
+            y,
+        );
+    }
+    let labels: Vec<i8> = ds.labels().to_vec();
+    (Arc::new(ds), labels)
+}
+
+#[test]
+fn random_solves_with_shrinking_never_trip_invariants() {
+    forall(
+        "random_solves_with_shrinking_never_trip_invariants",
+        12,
+        |rng| {
+            let n = 20 + rng.below(40);
+            let c = [0.1, 1.0, 10.0][rng.below(3)];
+            (n, rng.next_u64(), c)
+        },
+        |&(n, seed, c)| {
+            let mut rng = Pcg::new(seed);
+            let (ds, labels) = blob_dataset(n, &mut rng);
+            let config = SolverConfig {
+                // Shrink often so every solve crosses the shrink and
+                // unshrink seams several times, not just at convergence.
+                shrink_interval: 5,
+                ..SolverConfig::default()
+            };
+            let problem = QpProblem::classification(&labels, c);
+            let engines: [&dyn Engine; 2] =
+                [&SmoSolver::new(config), &PasmoSolver::new(config)];
+            for engine in engines {
+                let nc = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+                // 64 KiB cache: small enough that rows are evicted
+                // mid-solve, so the RowCache validator sees real churn.
+                let mut gram = Gram::new(Box::new(nc), 1 << 16);
+                let result = engine.solve(&problem, &mut gram);
+                if result.alpha.len() != n {
+                    return Err(format!("alpha has {} entries, expected {n}", result.alpha.len()));
+                }
+                if result.alpha.iter().any(|a| !a.is_finite()) {
+                    return Err("non-finite alpha in solve result".to_string());
+                }
+            }
+            Ok(())
+        },
+    );
+}
