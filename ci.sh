@@ -16,6 +16,12 @@
 #   4e2. pasmo bench --predict at tiny scale → BENCH_predict.json
 #                               (inference-side trajectory: scalar vs
 #                                tiled vs threaded vs linear-collapse)
+#   4e3. pasmo serve smoke: train a model, serve it on an ephemeral
+#                                port, score one query + stats over
+#                                /dev/tcp, then a clean shutdown
+#   4e4. pasmo bench --serve at tiny scale → BENCH_serve.json
+#                               (serving-tier saturation trajectory:
+#                                queries/s + p50/p99 per max-batch)
 #   4f. docs gate: RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 #                               (zero rustdoc warnings — missing docs on
 #                                any public item or a broken doc link
@@ -79,6 +85,46 @@ cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --ou
 # and kernel entries for scalar vs tiled vs threaded vs linear-collapse).
 step "pasmo bench --predict --len 300 (writes ../BENCH_predict.json)"
 cargo run --release -- bench --predict --len 300 --out ../BENCH_predict.json
+
+# Serving-tier smoke: a real `pasmo serve` process on an ephemeral port
+# answers a score line, reports the request in its stats, and drains on
+# shutdown with exit 0. Uses bash's /dev/tcp so no netcat is required.
+step "pasmo serve smoke (score + stats + shutdown over /dev/tcp)"
+SERVE_DIR=$(mktemp -d)
+trap 'rm -rf "$SERVE_DIR"' EXIT
+cargo run --release --quiet -- train --dataset chess-board-1000 --len 200 \
+    --out "$SERVE_DIR/model.json" >/dev/null
+cargo run --release --quiet -- serve --model "smoke=$SERVE_DIR/model.json" \
+    --addr 127.0.0.1:0 >"$SERVE_DIR/serve.log" &
+SERVE_PID=$!
+SERVE_ADDR=""
+for _ in $(seq 1 100); do
+    SERVE_ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SERVE_DIR/serve.log")
+    [ -n "$SERVE_ADDR" ] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || { cat "$SERVE_DIR/serve.log"; exit 1; }
+    sleep 0.1
+done
+[ -n "$SERVE_ADDR" ] || { echo "serve never printed its address"; exit 1; }
+SERVE_PORT=${SERVE_ADDR##*:}
+serve_req() {
+    exec 3<>"/dev/tcp/127.0.0.1/$SERVE_PORT"
+    printf '%s\n' "$1" >&3
+    head -n 1 <&3
+    exec 3<&- 3>&-
+}
+SCORE=$(serve_req '{"model":"smoke","x":[0.25,-0.75],"id":1}')
+echo "score reply: $SCORE"
+echo "$SCORE" | grep -q '"ok":true' || { echo "serve smoke: score failed"; exit 1; }
+STATS=$(serve_req '{"cmd":"stats"}')
+echo "$STATS" | grep -q '"requests":1' || { echo "serve smoke: stats missed the request"; exit 1; }
+serve_req '{"cmd":"shutdown"}' | grep -q '"shutting_down":true' \
+    || { echo "serve smoke: shutdown refused"; exit 1; }
+wait "$SERVE_PID" || { echo "serve smoke: nonzero exit"; exit 1; }
+
+# Serving saturation artifact: the micro-batching sweep at tiny scale.
+step "pasmo bench --serve (writes ../BENCH_serve.json)"
+cargo run --release -- bench --serve --len 200 --rate 1000 --queries 400 \
+    --conns 2 --batches 1,8,64 --out ../BENCH_serve.json
 
 # Docs gate: the public surface is fully documented (#![warn(missing_docs)]
 # promoted to an error here) and every doctest runs green.

@@ -1,0 +1,101 @@
+//! Serving-tier saturation: open-loop load against a real `pasmo serve`
+//! socket across (max-batch × arrival-rate) configs.
+//!
+//! For each config the bench binds an in-process [`Server`] on an
+//! ephemeral port, drives it with [`drive_open_loop`] (send times
+//! scheduled up front — queueing shows up in the latency numbers rather
+//! than being absorbed by a closed loop), and reports achieved
+//! queries/s, p50/p99 latency, and the realized mean micro-batch size
+//! from the server's own stats. The point being demonstrated: with the
+//! same model and thread budget, admission micro-batching (max-batch >
+//! 1) sustains rates that drown a batch-size-1 server, because each
+//! drained batch amortizes one tiled SV×query pass over many queries.
+
+use std::sync::Arc;
+
+use pasmo::data::synth::chessboard;
+use pasmo::server::{drive_open_loop, request_once, LoadConfig, ServeConfig, Server};
+use pasmo::svm::schema::AnyModel;
+use pasmo::svm::Trainer;
+use pasmo::util::json::Json;
+
+fn mean_batch_from_stats(addr: std::net::SocketAddr) -> f64 {
+    request_once(addr, "{\"cmd\":\"stats\"}")
+        .ok()
+        .and_then(|stats| Json::parse(&stats).ok())
+        .and_then(|v| v.get("models")?.get("bench")?.get("mean_batch")?.as_f64())
+        .unwrap_or(0.0)
+}
+
+fn main() {
+    println!("==== bench_serve ====");
+    println!("open-loop saturation of the micro-batching serve tier\n");
+
+    let len = 400;
+    let train_set = Arc::new(chessboard(len, 4, 1));
+    let queries = chessboard(256, 4, 2);
+    let model = Trainer::rbf(1e3, 0.5).train(&train_set).model;
+    println!("model: chess-board ℓ={len}, {} SVs, dim 2", model.n_sv());
+    println!(
+        "{:>9} {:>8} {:>8} {:>10} {:>10} {:>10} {:>11} {:>7}",
+        "max-batch", "threads", "rate/s", "qps", "p50-us", "p99-us", "mean-batch", "errors"
+    );
+
+    for &(max_batch, threads) in &[(1usize, 1usize), (8, 1), (64, 1), (64, 2)] {
+        for &rate in &[1000.0, 4000.0] {
+            let config = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                max_batch,
+                max_wait_us: 200,
+                threads,
+            };
+            let server = match Server::bind(
+                config,
+                vec![("bench".to_string(), AnyModel::Svc(model.clone()))],
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    println!("bind failed: {e:#}");
+                    return;
+                }
+            };
+            let addr = server.local_addr();
+            let handle = std::thread::spawn(move || server.run());
+            let cfg = LoadConfig { rate, queries: 2000, conns: 4 };
+            let report = match drive_open_loop(
+                addr,
+                Some("bench"),
+                queries.dim(),
+                queries.features(),
+                &cfg,
+            ) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("drive failed: {e:#}");
+                    return;
+                }
+            };
+            let mean_batch = mean_batch_from_stats(addr);
+            let _ = request_once(addr, "{\"cmd\":\"shutdown\"}");
+            let _ = handle.join();
+            println!(
+                "{:>9} {:>8} {:>8.0} {:>10.1} {:>10.0} {:>10.0} {:>11.2} {:>7}",
+                max_batch,
+                threads,
+                rate,
+                report.qps,
+                report.p50_us,
+                report.p99_us,
+                mean_batch,
+                report.errors
+            );
+        }
+    }
+    println!(
+        "\nreading the table: at rates the batch-size-1 config cannot sustain\n\
+         (qps < rate, p99 exploding), micro-batching configs hold qps ≈ rate\n\
+         with bounded tails — the admission window amortizes one tiled pass\n\
+         over mean-batch queries. `pasmo bench --serve` writes the same\n\
+         sweep as BENCH_serve.json."
+    );
+}

@@ -4,9 +4,10 @@
 //! repo-specific rules rustc/clippy cannot express (see [`Rule`]):
 //! library code never panics, every `unsafe` block is SAFETY-documented,
 //! solver values are never compared to float literals with `==`/`!=`,
-//! threads stay inside the two blessed modules, `HashMap` iteration
-//! never feeds a result path (bit-determinism), and the library crate
-//! never prints.
+//! threads stay inside the blessed concurrency seams (`kernel::tile`,
+//! `coordinator::jobs`, and the whole `server::` tier), `HashMap`
+//! iteration never feeds a result path (bit-determinism), and the
+//! library crate never prints.
 //!
 //! Intentional exceptions live in a committed allowlist file
 //! (`rust/audit.allow`): one `path:rule:content` entry per accepted
@@ -41,8 +42,9 @@ pub enum Rule {
     /// through tolerances; exact-zero sentinel tests must be allowlisted
     /// with a justification.
     FloatEq,
-    /// `std::thread` only inside `kernel::tile` and `coordinator::jobs`,
-    /// the two audited concurrency seams.
+    /// `std::thread` only inside the audited concurrency seams:
+    /// `kernel::tile`, `coordinator::jobs`, and the `server::` tier
+    /// (whose connection and batcher threads are the module's purpose).
     ThreadScope,
     /// No iteration over `HashMap`-typed values: iteration order is
     /// nondeterministic and must never feed a result or report path.

@@ -241,16 +241,21 @@ fn hashmap_names(code_lines: &[String]) -> std::collections::BTreeSet<String> {
 /// Run every rule over one file's text.
 ///
 /// `rel` is the path relative to the audited source root, `/`-separated;
-/// it scopes [`Rule::ThreadScope`] (which exempts `kernel/tile.rs` and
-/// `coordinator/jobs.rs`). Skipping `main.rs` is the *tree walker's* job
-/// ([`super::audit_tree`]) — this function audits whatever it is given.
+/// it scopes [`Rule::ThreadScope`] (which exempts `kernel/tile.rs`,
+/// `coordinator/jobs.rs`, and the whole `server/` tier — a serving layer
+/// is connection + batcher threads by nature, so the rule admits the
+/// module rather than allowlisting every site). Skipping `main.rs` is
+/// the *tree walker's* job ([`super::audit_tree`]) — this function
+/// audits whatever it is given.
 pub fn audit_source(rel: &str, text: &str) -> Vec<Violation> {
     let mut viols = Vec::new();
     let code_lines = strip_file(text);
     let raw_lines: Vec<&str> = text.split('\n').collect();
     let in_test = test_regions(&code_lines);
     let hm_names = hashmap_names(&code_lines);
-    let thread_ok = rel == "kernel/tile.rs" || rel == "coordinator/jobs.rs";
+    let thread_ok = rel == "kernel/tile.rs"
+        || rel == "coordinator/jobs.rs"
+        || rel.starts_with("server/");
     let mut push = |line: usize, rule: Rule, detail: String, raw: &str| {
         viols.push(Violation {
             file: rel.to_string(),
@@ -298,12 +303,12 @@ pub fn audit_source(rel: &str, text: &str) -> Vec<Violation> {
         if float_eq_hit(code) {
             push(line, Rule::FloatEq, "float literal ==/!=".to_string(), raw);
         }
-        // R4: threads only in the two blessed modules.
+        // R4: threads only in the blessed concurrency seams.
         if !thread_ok && (code.contains("std::thread") || code.contains("thread::")) {
             push(
                 line,
                 Rule::ThreadScope,
-                "thread use outside kernel::tile/coordinator::jobs".to_string(),
+                "thread use outside kernel::tile/coordinator::jobs/server::*".to_string(),
                 raw,
             );
         }
@@ -391,6 +396,19 @@ mod tests {
         assert_eq!(hits("solver/smo.rs", src), vec![(2, "thread-scope")]);
         assert_eq!(hits("kernel/tile.rs", src), Vec::<(usize, &str)>::new());
         assert_eq!(hits("coordinator/jobs.rs", src), Vec::<(usize, &str)>::new());
+    }
+
+    #[test]
+    fn thread_scope_admits_the_server_tier_as_a_module() {
+        // The serving layer is connection + batcher threads by nature:
+        // every file under server/ is in scope, not just an allowlisted
+        // site — but a server-adjacent path outside the module is not.
+        let src = "fn f() {\n    std::thread::scope(|_| {});\n}\n";
+        assert_eq!(hits("server/mod.rs", src), Vec::<(usize, &str)>::new());
+        assert_eq!(hits("server/batcher.rs", src), Vec::<(usize, &str)>::new());
+        assert_eq!(hits("server/deeper/conn.rs", src), Vec::<(usize, &str)>::new());
+        assert_eq!(hits("svm/server_like.rs", src), vec![(2, "thread-scope")]);
+        assert_eq!(hits("serverless.rs", src), vec![(2, "thread-scope")]);
     }
 
     #[test]

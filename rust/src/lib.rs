@@ -47,6 +47,9 @@
 //!   shared batch [`svm::Scorer`] behind predict and every model kind's
 //!   decision loops, the kind-tagged model schema (`svm::schema`),
 //!   warm-started cross-validation / grid search, ε-SVR, one-class, OvO.
+//! * [`server`] — `pasmo serve`: a std-only TCP tier speaking
+//!   newline-delimited JSON whose admission micro-batcher scores queued
+//!   queries in shared tiled passes, bit-identical to offline predict.
 //! * [`stats`] — Wilcoxon signed-rank test and the histogram machinery the
 //!   paper's evaluation uses.
 //! * [`coordinator`] — experiment drivers regenerating every table/figure.
@@ -74,6 +77,8 @@ pub mod kernel;
 /// PJRT/XLA runtime (compiled only with the `pjrt` cargo feature).
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+/// `pasmo serve`: the persistent micro-batching TCP inference tier.
+pub mod server;
 /// The solver family: SMO, PA-SMO, conjugate SMO, and their substrate.
 pub mod solver;
 /// Statistics for the paper's evaluation protocol.

@@ -6,6 +6,8 @@
 //! * `predict` — evaluate a saved model on a LIBSVM file.
 //! * `gridsearch` — (C, γ) grid search with cross-validation.
 //! * `bench` — solver perf baseline (wall time, kernel entries, hit rate).
+//! * `serve` — persistent micro-batching TCP inference tier (newline-
+//!   delimited JSON; responses bit-match offline `predict`).
 //! * `experiment <id>` — regenerate a paper table/figure or comparison:
 //!   `table1 | table2 | fig2 | fig3 | fig4 | wss | heuristic |
 //!   engine_shootout | all`.
@@ -66,6 +68,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("predict") => cmd_predict(args),
         Some("gridsearch") => cmd_gridsearch(args),
         Some("bench") => cmd_bench(args),
+        Some("serve") => cmd_serve(args),
         Some("experiment") => cmd_experiment(args),
         Some("audit") => cmd_audit(args),
         Some("info") => cmd_info(),
@@ -160,8 +163,45 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                                      (queries/s + kernel-entry columns; --out writes\n\
                                      BENCH_predict.json; --datasets takes the first\n\
                                      name, --len sizes both the model and the queries,\n\
-                                     --threads the threaded row)"
+                                     --threads the threaded row)\n\n\
+             serve mode:\n\
+               --serve               benchmark the serving tier instead: per\n\
+                                     --batches config, bind an in-process server\n\
+                                     and drive it open-loop at a fixed arrival\n\
+                                     rate; reports queries/s and p50/p99 latency\n\
+                                     (--out writes BENCH_serve.json; --len sizes\n\
+                                     the model, --threads the scoring pass)\n\
+               --rate R              offered load, queries/second (default 2000)\n\
+               --queries N           total queries per config (default 2000)\n\
+               --conns N             client connections (default 4)\n\
+               --batches a,b,c       max-batch configs to sweep (default 1,8,64)\n\
+               --max-wait-us U       admission window in µs (default 200)"
         ),
+        "serve" => "usage: pasmo serve --model FILE[,NAME=FILE...] [options]\n\n\
+             Persistent micro-batching inference tier: a std-only TCP server\n\
+             speaking newline-delimited JSON, one request object per line.\n\
+             Connection threads admit queries into a shared queue; a single\n\
+             scoring loop drains micro-batches and scores each in one tiled\n\
+             SV×query pass per model — responses are bit-identical to\n\
+             offline `pasmo predict` on the same inputs.\n\n\
+               --model SPEC          comma-separated models to preload; each entry\n\
+                                     is FILE or NAME=FILE (the name defaults to\n\
+                                     the file stem). Any schema kind serves:\n\
+                                     svc, svr, oneclass, multiclass.\n\
+               --addr HOST:PORT      listen address (default 127.0.0.1:7878;\n\
+                                     port 0 binds an ephemeral port — the bound\n\
+                                     address is printed on startup)\n\
+               --max-batch N         micro-batch admission cap (default 64)\n\
+               --max-wait-us U       admission window in µs after a batch's\n\
+                                     first query arrives (default 200)\n\
+               --threads N           scoring worker threads per batch pass\n\n\
+             protocol (one JSON object per line, responses in request order):\n\
+               {\"x\":[..], \"model\":\"name\"?, \"id\":n?}    score a query\n\
+               {\"cmd\":\"stats\"}                           per-model metrics\n\
+               {\"cmd\":\"models\"}                          registry listing\n\
+               {\"cmd\":\"load\",\"name\":..,\"path\":..}       load / hot-swap\n\
+               {\"cmd\":\"shutdown\"}                        drain and exit"
+            .to_string(),
         "experiment" => "usage: pasmo experiment <id> [options]\n\n\
              Regenerate a paper table/figure or engine comparison. Ids:\n\
                table1           dataset statistics (SV/BSV vs paper)\n\
@@ -187,8 +227,9 @@ fn subcommand_help(cmd: &str) -> Option<String> {
         "audit" => "usage: pasmo audit [options]\n\n\
              Run the repo's own source-tree lint: no panics in library\n\
              paths, SAFETY comments on every unsafe block, no float\n\
-             literal ==/!= comparisons, thread spawning only in the two\n\
-             sanctioned modules, no HashMap iteration, no printing from\n\
+             literal ==/!= comparisons, thread spawning only in the\n\
+             sanctioned concurrency seams (kernel::tile, coordinator::jobs\n\
+             and the server:: tier), no HashMap iteration, no printing from\n\
              the library crate. Violations not excused by the allowlist\n\
              (and allowlist entries matching nothing) exit nonzero.\n\n\
                --src DIR             source tree to scan (default: this crate's src/)\n\
@@ -226,10 +267,17 @@ fn print_usage() {
                       [--solver NAME] [--threads N]\n\
            bench      [--datasets a,b,c] [--len N] [--seed S] [--threads N]\n\
                       [--cache-rows R] [--shrink-interval I] [--solver NAME]\n\
-                      [--out BENCH_solver.json] [--predict]\n\
+                      [--out BENCH_solver.json] [--predict] [--serve]\n\
                       solver perf baseline: wall time, iterations, kernel\n\
                       entries, cache hit rate — shrink on vs off; --predict\n\
-                      benchmarks batch scoring into BENCH_predict.json\n\
+                      benchmarks batch scoring into BENCH_predict.json;\n\
+                      --serve saturates the serving tier open-loop\n\
+                      ([--rate R --queries N --conns N --batches a,b,c])\n\
+                      into BENCH_serve.json\n\
+           serve      --model FILE[,NAME=FILE...] [--addr HOST:PORT]\n\
+                      [--max-batch N] [--max-wait-us U] [--threads N]\n\
+                      micro-batching TCP inference tier (newline-delimited\n\
+                      JSON; responses bit-match offline predict)\n\
            experiment table1|table2|fig2|fig3|fig4|wss|heuristic|\n\
                       engine_shootout|all\n\
                       [--perms N --scale S --max-len N --full\n\
@@ -468,12 +516,15 @@ fn predict_classify(
         None
     };
     if out.is_some() {
+        // Full-precision decisions (shortest round-trip Display): the
+        // file is the offline half of the serve-parity contract, so a
+        // reader can recover the exact f64 bits.
         let lines: Vec<String> = (0..ds.len())
             .map(|i| match &probs {
                 Some(p) => {
-                    format!("{} {:.6} {:.6}", ev.predictions[i], ev.decisions[i], p[i])
+                    format!("{} {} {}", ev.predictions[i], ev.decisions[i], p[i])
                 }
-                None => format!("{} {:.6}", ev.predictions[i], ev.decisions[i]),
+                None => format!("{} {}", ev.predictions[i], ev.decisions[i]),
             })
             .collect();
         write_column(out, &lines)?;
@@ -607,6 +658,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     if args.flag("predict") {
         return cmd_bench_predict(args);
+    }
+    if args.flag("serve") {
+        return cmd_bench_serve(args);
     }
 
     let len = args.get_parse_or("len", 600usize);
@@ -844,6 +898,191 @@ fn cmd_bench_predict(args: &Args) -> Result<()> {
     doc.insert("n_sv".into(), Json::Num(n_sv as f64));
     doc.insert("seed".into(), Json::Num(seed as f64));
     doc.insert("threads".into(), Json::Num(threads as f64));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let doc = Json::Obj(doc);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, doc.to_string())
+            .with_context(|| format!("write bench report {out}"))?;
+        println!("\nreport written to {out}");
+    }
+    Ok(())
+}
+
+/// Parse a `--model` spec: comma-separated `FILE` or `NAME=FILE`
+/// entries; the name defaults to the file stem.
+fn parse_model_specs(spec: &str) -> Result<Vec<(String, AnyModel)>> {
+    let mut models: Vec<(String, AnyModel)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, path) = match part.split_once('=') {
+            Some((n, p)) => (n.trim().to_string(), p.trim()),
+            None => {
+                let stem = Path::new(part)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or(part);
+                (stem.to_string(), part)
+            }
+        };
+        ensure!(!name.is_empty(), "empty model name in --model entry {part:?}");
+        ensure!(
+            !models.iter().any(|(n, _)| *n == name),
+            "duplicate model name {name:?} in --model"
+        );
+        let model = schema::load_any(Path::new(path))
+            .with_context(|| format!("load model {path}"))?;
+        models.push((name, model));
+    }
+    ensure!(!models.is_empty(), "--model needs at least one FILE or NAME=FILE entry");
+    Ok(models)
+}
+
+/// `pasmo serve` — bind the micro-batching TCP inference tier and run
+/// until a `{"cmd":"shutdown"}` request. Startup prints one line per
+/// model and a final `listening on HOST:PORT` line (flushed, so drivers
+/// reading a pipe can parse the ephemeral port before sending traffic).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pasmo::server::{ServeConfig, Server};
+    use std::io::Write as _;
+
+    let spec = args.get("model").context("need --model FILE[,NAME=FILE...]")?;
+    let models = parse_model_specs(spec)?;
+    let config = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        max_batch: args.get_parse_or("max-batch", 64usize).max(1),
+        max_wait_us: args.get_parse_or("max-wait-us", 200u64),
+        threads: args.get_parse_or("threads", 1usize),
+    };
+    let (max_batch, max_wait_us, threads) =
+        (config.max_batch, config.max_wait_us, config.threads);
+    for (name, m) in &models {
+        println!(
+            "model {name:?}: kind={} n_sv={} dim={}",
+            m.task_name(),
+            m.n_sv(),
+            m.dim()
+        );
+    }
+    let server = Server::bind(config, models)?;
+    println!(
+        "pasmo serve listening on {} (max-batch={max_batch} max-wait-us={max_wait_us} \
+         threads={threads})",
+        server.local_addr()
+    );
+    std::io::stdout().flush().context("flush startup banner")?;
+    server.run()?;
+    println!("pasmo serve stopped (drained and shut down)");
+    Ok(())
+}
+
+/// Serving saturation bench (`pasmo bench --serve`): for each
+/// `--batches` config, bind an in-process server on an ephemeral port,
+/// drive it open-loop over real sockets at a fixed arrival rate, and
+/// report achieved queries/s with p50/p99 latency — demonstrating the
+/// micro-batching win over batch-size-1 at saturation. `--out` writes
+/// the `BENCH_serve.json` trajectory artifact.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use pasmo::server::{drive_open_loop, request_once, LoadConfig, ServeConfig, Server};
+    use pasmo::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let len = args.get_parse_or("len", 400usize);
+    let seed = args.get_parse_or("seed", 42u64);
+    let threads = args.get_parse_or("threads", 1usize);
+    let rate = args.get_parse_or("rate", 2000.0f64);
+    let queries = args.get_parse_or("queries", 2000usize);
+    let conns = args.get_parse_or("conns", 4usize);
+    let max_wait_us = args.get_parse_or("max-wait-us", 200u64);
+    let batches_spec = args.get_or("batches", "1,8,64");
+    let batch_sizes: Vec<usize> = batches_spec
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&b| b >= 1)
+        .collect();
+    ensure!(
+        !batch_sizes.is_empty(),
+        "--batches needs a comma-separated list of positive sizes"
+    );
+    let name = match args.get("datasets") {
+        Some(list) => {
+            list.split(',').next().unwrap_or("chess-board-1000").trim().to_string()
+        }
+        None => "chess-board-1000".to_string(),
+    };
+    let spec = suite::find(&name)
+        .with_context(|| format!("unknown dataset {name:?} (see `pasmo datasets`)"))?;
+    let train_set = Arc::new(spec.generate(len, seed));
+    let query_set = spec.generate(len.min(256), seed.wrapping_add(1));
+    let model = Trainer::rbf(spec.c, spec.gamma).train(&train_set).model;
+    let n_sv = model.n_sv();
+
+    println!("==== pasmo bench --serve (serving saturation) ====");
+    println!(
+        "dataset={name} ℓ={len} SVs={n_sv} rate={rate}/s queries={queries} \
+         conns={conns} threads={threads} max-wait-us={max_wait_us}\n"
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "max-batch", "qps", "p50-us", "p99-us", "mean-batch", "errors"
+    );
+
+    let mut runs: Vec<Json> = Vec::new();
+    for &max_batch in &batch_sizes {
+        let config = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch,
+            max_wait_us,
+            threads,
+        };
+        let server = Server::bind(
+            config,
+            vec![("bench".to_string(), AnyModel::Svc(model.clone()))],
+        )?;
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run());
+        let cfg = LoadConfig { rate, queries, conns };
+        let report =
+            drive_open_loop(addr, Some("bench"), query_set.dim(), query_set.features(), &cfg)?;
+        let stats = request_once(addr, "{\"cmd\":\"stats\"}")?;
+        let mean_batch = Json::parse(&stats)
+            .ok()
+            .and_then(|v| v.get("models")?.get("bench")?.get("mean_batch")?.as_f64())
+            .unwrap_or(0.0);
+        let _ = request_once(addr, "{\"cmd\":\"shutdown\"}")?;
+        match handle.join() {
+            Ok(r) => r?,
+            Err(_) => bail!("server thread panicked (max-batch={max_batch})"),
+        }
+        println!(
+            "{:<10} {:>10.1} {:>10.0} {:>10.0} {:>11.2} {:>8}",
+            max_batch, report.qps, report.p50_us, report.p99_us, mean_batch, report.errors
+        );
+        let mut obj = BTreeMap::new();
+        obj.insert("max_batch".into(), Json::Num(max_batch as f64));
+        obj.insert("queries_per_s".into(), Json::Num(report.qps));
+        obj.insert("p50_us".into(), Json::Num(report.p50_us));
+        obj.insert("p99_us".into(), Json::Num(report.p99_us));
+        obj.insert("mean_batch".into(), Json::Num(mean_batch));
+        obj.insert("sent".into(), Json::Num(report.sent as f64));
+        obj.insert("ok".into(), Json::Num(report.ok as f64));
+        obj.insert("errors".into(), Json::Num(report.errors as f64));
+        obj.insert("wall_s".into(), Json::Num(report.wall_s));
+        runs.push(Json::Obj(obj));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("serve".into()));
+    doc.insert("dataset".into(), Json::Str(name));
+    doc.insert("len".into(), Json::Num(len as f64));
+    doc.insert("n_sv".into(), Json::Num(n_sv as f64));
+    doc.insert("rate".into(), Json::Num(rate));
+    doc.insert("queries".into(), Json::Num(queries as f64));
+    doc.insert("conns".into(), Json::Num(conns as f64));
+    doc.insert("threads".into(), Json::Num(threads as f64));
+    doc.insert("max_wait_us".into(), Json::Num(max_wait_us as f64));
     doc.insert("runs".into(), Json::Arr(runs));
     let doc = Json::Obj(doc);
     if let Some(out) = args.get("out") {

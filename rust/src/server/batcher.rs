@@ -1,0 +1,438 @@
+//! The admission micro-batcher: connection threads enqueue parsed
+//! queries; a single scoring loop drains them in micro-batches and
+//! scores each batch in one tiled SV×query pass per model group.
+//!
+//! Batching policy: the loop blocks for the first query, then holds the
+//! admission window open up to `max_wait` µs (or until `max_batch`
+//! queries are pending), then drains up to `max_batch`. Because the
+//! shared [`Scorer`] accumulates each query's kernel expansion
+//! independently in support order, a query's decision value is
+//! bit-identical whether it was scored alone, inside any micro-batch,
+//! or by offline `pasmo predict` — batching changes throughput, never
+//! results.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::svm::schema::AnyModel;
+use crate::svm::scorer::{ScoreScratch, Scorer};
+
+use super::metrics::Metrics;
+use super::protocol::{self, Outcome};
+use super::registry::ModelEntry;
+
+/// One admitted query waiting to be scored.
+#[derive(Debug)]
+pub struct Pending {
+    /// Registry entry captured at admission: the query scores against
+    /// this model generation even if the name is hot-swapped before the
+    /// batch drains.
+    pub entry: Arc<ModelEntry>,
+    /// The query row (length validated = entry dim at admission).
+    pub x: Vec<f32>,
+    /// Client correlation id, echoed in the response.
+    pub id: Option<f64>,
+    /// Admission timestamp; response latency = scored − enqueued.
+    pub enqueued: Instant,
+    /// Where the rendered response line goes; the connection thread
+    /// blocks on the paired receiver when it is this reply's turn.
+    pub reply: mpsc::Sender<String>,
+}
+
+#[derive(Debug)]
+struct QueueState {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The shared admission queue (mutex + condvar; std only).
+#[derive(Debug)]
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+fn lock(state: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl BatchQueue {
+    /// An open, empty queue.
+    pub fn new() -> BatchQueue {
+        BatchQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an admitted query. `Err` hands the item back when the
+    /// queue has been closed (shutdown is draining): the caller answers
+    /// it with an error response instead.
+    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+        let mut st = lock(&self.state);
+        if st.closed {
+            return Err(p);
+        }
+        st.items.push_back(p);
+        self.ready.notify_all();
+        Ok(())
+    }
+
+    /// Close for new admissions. Already-enqueued queries still drain;
+    /// [`BatchQueue::next_batch`] returns empty once they have.
+    pub fn close(&self) {
+        lock(&self.state).closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Has [`BatchQueue::close`] been called?
+    pub fn is_closed(&self) -> bool {
+        lock(&self.state).closed
+    }
+
+    /// Block for the next micro-batch, filling `out` (cleared first)
+    /// with up to `max_batch` queries. Waits for a first query, then
+    /// holds the window open up to `max_wait` for more. An empty `out`
+    /// on return means closed **and** fully drained — the batch loop's
+    /// exit condition.
+    pub fn next_batch(&self, max_batch: usize, max_wait: Duration, out: &mut Vec<Pending>) {
+        let max_batch = max_batch.max(1);
+        out.clear();
+        let mut st = lock(&self.state);
+        while st.items.is_empty() {
+            if st.closed {
+                return;
+            }
+            st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        if max_batch > 1 && !max_wait.is_zero() {
+            let deadline = Instant::now() + max_wait;
+            while st.items.len() < max_batch && !st.closed {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                let (guard, timeout) = self
+                    .ready
+                    .wait_timeout(st, left)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+        let n = st.items.len().min(max_batch);
+        out.extend(st.items.drain(..n));
+    }
+}
+
+impl Default for BatchQueue {
+    fn default() -> BatchQueue {
+        BatchQueue::new()
+    }
+}
+
+/// Reusable batch-loop buffers. After warm-up, scoring a micro-batch
+/// allocates nothing beyond the response strings themselves: the query
+/// block, decision buffer, per-machine decisions and the group ordering
+/// all reuse capacity across batches.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    scratch: ScoreScratch,
+    machine_out: Vec<f64>,
+    order: Vec<usize>,
+}
+
+impl BatchScratch {
+    /// Empty scratch; buffers grow to steady state over the first batches.
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+}
+
+/// Score one drained micro-batch: group queries by registry entry
+/// (pointer identity, so two generations of a hot-swapped name score
+/// separately), run one tiled pass per (model × group), send every
+/// response, and record metrics per group.
+pub fn score_batch(batch: &[Pending], metrics: &Metrics, threads: usize, sb: &mut BatchScratch) {
+    sb.order.clear();
+    sb.order.extend(0..batch.len());
+    sb.order.sort_by_key(|&i| Arc::as_ptr(&batch[i].entry) as usize);
+    let mut g0 = 0;
+    while g0 < sb.order.len() {
+        let entry = Arc::clone(&batch[sb.order[g0]].entry);
+        let mut g1 = g0 + 1;
+        while g1 < sb.order.len() && Arc::ptr_eq(&entry, &batch[sb.order[g1]].entry) {
+            g1 += 1;
+        }
+        score_group(
+            &sb.order[g0..g1],
+            batch,
+            &entry,
+            metrics,
+            threads,
+            &mut sb.scratch,
+            &mut sb.machine_out,
+        );
+        g0 = g1;
+    }
+}
+
+/// Score the `idxs` members of `batch`, all targeting `entry`.
+fn score_group(
+    idxs: &[usize],
+    batch: &[Pending],
+    entry: &ModelEntry,
+    metrics: &Metrics,
+    threads: usize,
+    scratch: &mut ScoreScratch,
+    machine_out: &mut Vec<f64>,
+) {
+    let n = idxs.len();
+    scratch.reset(entry.model.dim());
+    for &i in idxs {
+        scratch.push(&batch[i].x);
+    }
+    let kernel_entries = match &entry.model {
+        AnyModel::Svc(m) => {
+            let scorer = Scorer::with_invariants(
+                m.kernel,
+                &m.support,
+                &m.coef,
+                m.bias,
+                &entry.invariants[0],
+            )
+            .with_threads(threads);
+            let entries = scorer.kernel_entries_per_pass(n);
+            let out = scorer.decision_scratch(scratch);
+            for (k, &i) in idxs.iter().enumerate() {
+                let d = out[k];
+                let outcome = Outcome::Classify {
+                    decision: d,
+                    prediction: if d >= 0.0 { 1 } else { -1 },
+                    probability: m.platt.as_ref().map(|p| p.prob(d)),
+                };
+                let resp = protocol::score_response(batch[i].id, &entry.name, &outcome);
+                let _ = batch[i].reply.send(resp);
+            }
+            entries
+        }
+        AnyModel::Svr(m) => {
+            let scorer = Scorer::with_invariants(
+                m.kernel,
+                &m.support,
+                &m.coef,
+                m.bias,
+                &entry.invariants[0],
+            )
+            .with_threads(threads);
+            let entries = scorer.kernel_entries_per_pass(n);
+            let out = scorer.decision_scratch(scratch);
+            for (k, &i) in idxs.iter().enumerate() {
+                let outcome = Outcome::Regress { prediction: out[k] };
+                let resp = protocol::score_response(batch[i].id, &entry.name, &outcome);
+                let _ = batch[i].reply.send(resp);
+            }
+            entries
+        }
+        AnyModel::OneClass(m) => {
+            let scorer = Scorer::with_invariants(
+                m.kernel,
+                &m.support,
+                &m.coef,
+                -m.rho,
+                &entry.invariants[0],
+            )
+            .with_threads(threads);
+            let entries = scorer.kernel_entries_per_pass(n);
+            let out = scorer.decision_scratch(scratch);
+            for (k, &i) in idxs.iter().enumerate() {
+                let d = out[k];
+                let outcome = Outcome::OneClass {
+                    decision: d,
+                    prediction: if d >= 0.0 { 1 } else { -1 },
+                };
+                let resp = protocol::score_response(batch[i].id, &entry.name, &outcome);
+                let _ = batch[i].reply.send(resp);
+            }
+            entries
+        }
+        AnyModel::Multiclass(m) => {
+            let n_machines = m.machines.len();
+            machine_out.clear();
+            machine_out.resize(n_machines * n, 0.0);
+            let mut entries = 0u64;
+            for (j, mach) in m.machines.iter().enumerate() {
+                let scorer = Scorer::with_invariants(
+                    mach.kernel,
+                    &mach.support,
+                    &mach.coef,
+                    mach.bias,
+                    &entry.invariants[j],
+                )
+                .with_threads(threads);
+                entries += scorer.kernel_entries_per_pass(n);
+                let out = scorer.decision_scratch(scratch);
+                machine_out[j * n..(j + 1) * n].copy_from_slice(out);
+            }
+            for (k, &i) in idxs.iter().enumerate() {
+                let class = m.vote_decisions(|j| machine_out[j * n + k]);
+                let outcome = Outcome::Multiclass { prediction: class };
+                let resp = protocol::score_response(batch[i].id, &entry.name, &outcome);
+                let _ = batch[i].reply.send(resp);
+            }
+            entries
+        }
+    };
+    metrics.with_model(&entry.name, |mm| {
+        mm.requests += n as u64;
+        mm.batches += 1;
+        mm.kernel_entries += kernel_entries;
+        for &i in idxs {
+            mm.latency.record(batch[i].enqueued.elapsed().as_micros() as u64);
+        }
+    });
+}
+
+/// The scoring loop: drain micro-batches until the queue is closed and
+/// empty. Run on one dedicated thread per server.
+pub fn run_batch_loop(
+    queue: &BatchQueue,
+    metrics: &Metrics,
+    max_batch: usize,
+    max_wait: Duration,
+    threads: usize,
+) {
+    let mut sb = BatchScratch::new();
+    let mut batch: Vec<Pending> = Vec::new();
+    loop {
+        queue.next_batch(max_batch, max_wait, &mut batch);
+        if batch.is_empty() {
+            return;
+        }
+        score_batch(&batch, metrics, threads, &mut sb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::trainer::Trainer;
+    use crate::util::json::Json;
+
+    fn entry() -> (Arc<ModelEntry>, crate::data::dataset::Dataset) {
+        let data = Arc::new(chessboard(80, 4, 1));
+        let model = Trainer::rbf(10.0, 0.5).train(&data).model;
+        let e = ModelEntry::new("m".to_string(), AnyModel::Svc(model));
+        (Arc::new(e), chessboard(16, 4, 2))
+    }
+
+    fn pend(
+        entry: &Arc<ModelEntry>,
+        x: &[f32],
+        id: f64,
+    ) -> (Pending, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let p = Pending {
+            entry: Arc::clone(entry),
+            x: x.to_vec(),
+            id: Some(id),
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        (p, rx)
+    }
+
+    #[test]
+    fn batched_decisions_bit_match_the_offline_scorer() {
+        let (entry, queries) = entry();
+        let metrics = Metrics::new();
+        let mut sb = BatchScratch::new();
+        let mut batch = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..queries.len() {
+            let (p, rx) = pend(&entry, queries.row(i), i as f64);
+            batch.push(p);
+            rxs.push(rx);
+        }
+        score_batch(&batch, &metrics, 1, &mut sb);
+        let AnyModel::Svc(m) = &entry.model else { unreachable!() };
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            let v = Json::parse(&resp).unwrap();
+            let got = v.get("decision").and_then(Json::as_f64).unwrap();
+            let want = m.decision(queries.row(i));
+            assert_eq!(got.to_bits(), want.to_bits(), "query {i}");
+            assert_eq!(v.get("id").and_then(Json::as_f64), Some(i as f64));
+        }
+        let snap = metrics.snapshot();
+        let mm = snap.get("m").unwrap();
+        assert_eq!((mm.requests, mm.batches), (queries.len() as u64, 1));
+        assert_eq!(mm.kernel_entries, (queries.len() * m.n_sv()) as u64);
+        assert_eq!(mm.latency.count(), queries.len() as u64);
+    }
+
+    #[test]
+    fn mixed_model_batches_group_by_entry() {
+        let (a, queries) = entry();
+        let (b, _) = entry();
+        let metrics = Metrics::new();
+        let mut sb = BatchScratch::new();
+        let mut batch = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let e = if i % 2 == 0 { &a } else { &b };
+            let (p, rx) = pend(e, queries.row(i), i as f64);
+            batch.push(p);
+            rxs.push(rx);
+        }
+        score_batch(&batch, &metrics, 1, &mut sb);
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().contains("\"ok\":true"));
+        }
+        // both entries share the name "m": 6 requests over 2 group passes
+        let snap = metrics.snapshot();
+        let mm = snap.get("m").unwrap();
+        assert_eq!((mm.requests, mm.batches), (6, 2));
+    }
+
+    #[test]
+    fn queue_drains_after_close_then_reports_empty() {
+        let q = BatchQueue::new();
+        let (entry, queries) = entry();
+        let (p1, _rx1) = pend(&entry, queries.row(0), 0.0);
+        let (p2, _rx2) = pend(&entry, queries.row(1), 1.0);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        q.close();
+        assert!(q.is_closed());
+        let (p3, _rx3) = pend(&entry, queries.row(2), 2.0);
+        assert!(q.push(p3).is_err(), "closed queue must refuse new work");
+        let mut out = Vec::new();
+        q.next_batch(10, Duration::from_micros(50), &mut out);
+        assert_eq!(out.len(), 2, "drains the backlog");
+        q.next_batch(10, Duration::from_micros(50), &mut out);
+        assert!(out.is_empty(), "then reports drained");
+    }
+
+    #[test]
+    fn next_batch_caps_at_max_batch() {
+        let q = BatchQueue::new();
+        let (entry, queries) = entry();
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (p, rx) = pend(&entry, queries.row(i), i as f64);
+            assert!(q.push(p).is_ok());
+            rxs.push(rx);
+        }
+        let mut out = Vec::new();
+        q.next_batch(3, Duration::from_micros(1), &mut out);
+        assert_eq!(out.len(), 3);
+        q.next_batch(3, Duration::from_micros(1), &mut out);
+        assert_eq!(out.len(), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! Per-model rolling serving metrics, served by `{"cmd":"stats"}`.
+//!
+//! Everything is counter-shaped and cheap: the batch loop takes one
+//! mutex acquisition per (model × micro-batch) group, never one per
+//! query. Latency quantiles come from a fixed power-of-two bucket
+//! histogram — constant memory, no per-request allocation, and p50/p99
+//! resolve to a bucket upper edge (a factor-of-two resolution, plenty
+//! for saturation dashboards).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Fixed-bucket latency histogram over power-of-two microsecond
+/// buckets: bucket `k` counts latencies in `[2^k, 2^{k+1})` µs (bucket
+/// 0 also absorbs sub-microsecond values).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; LatencyHistogram::BUCKETS],
+    total: u64,
+}
+
+impl LatencyHistogram {
+    /// Bucket count: 2^32 µs ≈ 71 minutes tops out the last bucket.
+    pub const BUCKETS: usize = 32;
+
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: [0; LatencyHistogram::BUCKETS], total: 0 }
+    }
+
+    /// Record one latency observation, in microseconds.
+    pub fn record(&mut self, us: u64) {
+        let k = (63 - us.max(1).leading_zeros() as usize).min(LatencyHistogram::BUCKETS - 1);
+        self.counts[k] += 1;
+        self.total += 1;
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `q`-quantile (`0 < q ≤ 1`), reported as the upper edge
+    /// `2^{k+1}` µs of the first bucket whose cumulative count reaches
+    /// `⌈q·total⌉`; 0 when the histogram is empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return 1u64 << (k + 1).min(63);
+            }
+        }
+        // unreachable: cum == total ≥ target by the final iteration
+        1u64 << LatencyHistogram::BUCKETS
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+/// One model's rolling counters.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    /// Queries scored (admitted, batched, and answered).
+    pub requests: u64,
+    /// Per-model request errors (dimension mismatches and the like).
+    pub errors: u64,
+    /// Micro-batches this model appeared in (a mixed batch counts once
+    /// per model group).
+    pub batches: u64,
+    /// Kernel entries evaluated on this model's behalf, summed over
+    /// every machine × batch pass
+    /// ([`Scorer::kernel_entries_per_pass`](crate::svm::scorer::Scorer::kernel_entries_per_pass)).
+    pub kernel_entries: u64,
+    /// Admission→response latency histogram, microseconds.
+    pub latency: LatencyHistogram,
+}
+
+impl ModelMetrics {
+    /// Mean scored queries per micro-batch group (0 before traffic).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The per-model metrics table.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    per_model: Mutex<BTreeMap<String, ModelMetrics>>,
+}
+
+impl Metrics {
+    /// An empty table.
+    pub fn new() -> Metrics {
+        Metrics { per_model: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Run `f` against `name`'s counters under one lock acquisition —
+    /// the batch loop records a whole batch group in one call.
+    pub fn with_model(&self, name: &str, f: impl FnOnce(&mut ModelMetrics)) {
+        let mut map = self.per_model.lock().unwrap_or_else(|p| p.into_inner());
+        if !map.contains_key(name) {
+            map.insert(name.to_string(), ModelMetrics::default());
+        }
+        if let Some(m) = map.get_mut(name) {
+            f(m);
+        }
+    }
+
+    /// Clone the whole table (the stats handler renders from this).
+    pub fn snapshot(&self) -> BTreeMap<String, ModelMetrics> {
+        self.per_model.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_power_of_two() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        for us in [0, 1, 3, 100, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        // 0→bucket0, 1→bucket0, 3→bucket1, 100→bucket6, 1000→bucket9
+        // p50 target = ⌈0.5·5⌉ = 3rd obs → bucket 1 → upper edge 4 µs
+        assert_eq!(h.quantile_us(0.5), 4);
+        // p99 target = 5th obs → bucket 9 → upper edge 1024 µs
+        assert_eq!(h.quantile_us(0.99), 1024);
+        // p-min resolves to the first non-empty bucket's edge
+        assert_eq!(h.quantile_us(1e-9), 2);
+    }
+
+    #[test]
+    fn huge_latencies_saturate_the_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.quantile_us(1.0), 1u64 << 32);
+    }
+
+    #[test]
+    fn metrics_accumulate_per_model() {
+        let m = Metrics::new();
+        m.with_model("a", |mm| {
+            mm.requests += 3;
+            mm.batches += 1;
+            mm.kernel_entries += 300;
+            for us in [10, 20, 30] {
+                mm.latency.record(us);
+            }
+        });
+        m.with_model("a", |mm| {
+            mm.requests += 1;
+            mm.batches += 1;
+        });
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        assert_eq!((a.requests, a.batches, a.kernel_entries), (4, 2, 300));
+        assert_eq!(a.mean_batch(), 2.0);
+        assert_eq!(a.latency.count(), 3);
+        assert!(snap.get("b").is_none());
+    }
+}

@@ -1,0 +1,655 @@
+//! `pasmo serve` — a persistent micro-batching inference tier.
+//!
+//! A std-only TCP server (no HTTP, no external crates) speaking
+//! newline-delimited JSON ([`protocol`]): each connection gets a thread
+//! that parses request lines and answers admin commands inline; score
+//! requests are enqueued into the shared admission queue and a single
+//! scoring loop ([`batcher`]) drains them in micro-batches, scoring
+//! each batch in one tiled SV×query pass per model. Models live in a
+//! hot-swappable named [`registry`]; per-model counters ([`metrics`])
+//! are served by `{"cmd":"stats"}`.
+//!
+//! Served decision values are **bit-identical** to offline
+//! `pasmo predict` on the same inputs: the scorer accumulates each
+//! query independently in support order, so batch composition, batch
+//! size, and thread count never perturb a result.
+//!
+//! Shutdown (`{"cmd":"shutdown"}`) is graceful: admissions close,
+//! in-flight batches drain and their responses flush, then the accept
+//! loop and every connection thread exit and [`Server::run`] returns.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead as _, Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::ensure;
+use crate::svm::schema::AnyModel;
+use crate::util::error::{Context as _, Result};
+use crate::util::json::{write_json_string, Json};
+
+use batcher::{BatchQueue, Pending};
+use metrics::Metrics;
+use protocol::Request;
+use registry::Registry;
+
+/// How often blocked connection reads wake to poll the shutdown flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Serving configuration (the `pasmo serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, `host:port`; port 0 binds an ephemeral port
+    /// (read it back via [`Server::local_addr`]).
+    pub addr: String,
+    /// Admission cap: a micro-batch scores at most this many queries.
+    pub max_batch: usize,
+    /// Admission window: after a batch's first query arrives, wait at
+    /// most this many microseconds for more before scoring.
+    pub max_wait_us: u64,
+    /// Scoring worker threads per batch pass (1 = inline).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            max_batch: 64,
+            max_wait_us: 200,
+            threads: 1,
+        }
+    }
+}
+
+/// State shared by the accept loop, connection threads, and batch loop.
+#[derive(Debug)]
+struct ServerState {
+    registry: Registry,
+    queue: BatchQueue,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+    protocol_errors: AtomicU64,
+    started: Instant,
+    local_addr: SocketAddr,
+    config: ServeConfig,
+}
+
+/// A bound, not-yet-running server. [`Server::bind`] then
+/// [`Server::run`]; `run` blocks until a shutdown command.
+#[derive(Debug)]
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind the listen socket and preload `(name, model)` pairs into
+    /// the registry.
+    pub fn bind(config: ServeConfig, models: Vec<(String, AnyModel)>) -> Result<Server> {
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("bind {}", config.addr))?;
+        let local_addr = listener.local_addr().context("listener local_addr")?;
+        let state = Arc::new(ServerState {
+            registry: Registry::new(models),
+            queue: BatchQueue::new(),
+            metrics: Metrics::new(),
+            shutdown: AtomicBool::new(false),
+            protocol_errors: AtomicU64::new(0),
+            started: Instant::now(),
+            local_addr,
+            config,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves `host:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.local_addr
+    }
+
+    /// Serve until `{"cmd":"shutdown"}`: one scoped batch-loop thread,
+    /// one thread per accepted connection. Returns after every
+    /// connection has flushed and the admission queue has drained.
+    pub fn run(self) -> Result<()> {
+        let state = &self.state;
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                batcher::run_batch_loop(
+                    &state.queue,
+                    &state.metrics,
+                    state.config.max_batch,
+                    Duration::from_micros(state.config.max_wait_us),
+                    state.config.threads,
+                );
+            });
+            for stream in self.listener.incoming() {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(conn) = stream {
+                    s.spawn(move || handle_connection(state, conn));
+                }
+            }
+            // Idempotent on the shutdown path; on an accept-loop error
+            // path it is what lets the batch loop (and scope) exit.
+            state.queue.close();
+        });
+        Ok(())
+    }
+}
+
+/// A queued reply slot: admin replies are ready immediately, score
+/// replies resolve when the batch loop gets to them. Slots flush in
+/// request order, so pipelined clients see responses in send order.
+enum Reply {
+    Ready(String),
+    Score(mpsc::Receiver<String>),
+}
+
+fn handle_connection(state: &ServerState, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(POLL));
+    let _ = stream.set_nodelay(true);
+    let Ok(mut reader) = stream.try_clone() else { return };
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut inflight: VecDeque<Reply> = VecDeque::new();
+    loop {
+        match reader.read(&mut chunk) {
+            Ok(0) => break, // client hung up
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                let mut shutdown_after = false;
+                // Admit every complete line before writing any reply:
+                // a pipelined burst of K score lines lands in the queue
+                // together and can drain as one micro-batch.
+                while let Some(line) = take_line(&mut buf) {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let (reply, is_shutdown) = process_line(state, &line);
+                    inflight.push_back(reply);
+                    if is_shutdown {
+                        shutdown_after = true;
+                        break;
+                    }
+                }
+                if !flush_replies(&mut inflight, &mut writer) || shutdown_after {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = writer.flush();
+}
+
+/// Split one `\n`-terminated line off the front of `buf` (newline
+/// removed, trailing `\r` trimmed). `None` = no complete line yet.
+fn take_line(buf: &mut Vec<u8>) -> Option<String> {
+    let pos = buf.iter().position(|&b| b == b'\n')?;
+    let line: Vec<u8> = buf.drain(..=pos).collect();
+    let mut s = String::from_utf8_lossy(&line[..pos]).into_owned();
+    if s.ends_with('\r') {
+        s.pop();
+    }
+    Some(s)
+}
+
+/// Write queued replies in request order; score slots block until the
+/// batch loop answers. `false` = the connection is gone.
+fn flush_replies(inflight: &mut VecDeque<Reply>, w: &mut impl std::io::Write) -> bool {
+    while let Some(r) = inflight.pop_front() {
+        let line = match r {
+            Reply::Ready(s) => s,
+            Reply::Score(rx) => rx.recv().unwrap_or_else(|_| {
+                protocol::error_response(None, "server dropped the query (shutting down)")
+            }),
+        };
+        if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+            return false;
+        }
+    }
+    w.flush().is_ok()
+}
+
+/// Handle one request line: admin commands answer inline, score
+/// requests are admitted to the queue. The bool flags a shutdown
+/// command (the connection closes after flushing its reply).
+fn process_line(state: &ServerState, line: &str) -> (Reply, bool) {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            state.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return (Reply::Ready(protocol::error_response(None, &e)), false);
+        }
+    };
+    match req {
+        Request::Score(sr) => {
+            let entry = match state.registry.resolve(sr.model.as_deref()) {
+                Ok(e) => e,
+                Err(e) => {
+                    state.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    return (Reply::Ready(protocol::error_response(sr.id, &e)), false);
+                }
+            };
+            let dim = entry.model.dim();
+            if sr.x.len() != dim {
+                state.metrics.with_model(&entry.name, |mm| mm.errors += 1);
+                let msg = format!(
+                    "x has {} features but model {:?} expects {dim}",
+                    sr.x.len(),
+                    entry.name
+                );
+                return (Reply::Ready(protocol::error_response(sr.id, &msg)), false);
+            }
+            let (tx, rx) = mpsc::channel();
+            let pending = Pending {
+                entry,
+                x: sr.x,
+                id: sr.id,
+                enqueued: Instant::now(),
+                reply: tx,
+            };
+            match state.queue.push(pending) {
+                Ok(()) => (Reply::Score(rx), false),
+                Err(p) => (
+                    Reply::Ready(protocol::error_response(p.id, "server is shutting down")),
+                    false,
+                ),
+            }
+        }
+        Request::Load { name, path } => {
+            match state.registry.load_file(&name, Path::new(&path)) {
+                Ok(entry) => {
+                    let mut s = String::from("{\"ok\":true,\"loaded\":");
+                    write_json_string(&mut s, &name);
+                    let kind = entry.model.task_name();
+                    let (n_sv, dim) = (entry.model.n_sv(), entry.model.dim());
+                    s.push_str(&format!(
+                        ",\"kind\":\"{kind}\",\"n_sv\":{n_sv},\"dim\":{dim}}}"
+                    ));
+                    (Reply::Ready(s), false)
+                }
+                Err(e) => {
+                    state.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!("load {name:?}: {e}");
+                    (Reply::Ready(protocol::error_response(None, &msg)), false)
+                }
+            }
+        }
+        Request::Stats => (Reply::Ready(stats_response(state)), false),
+        Request::Models => (Reply::Ready(models_response(state)), false),
+        Request::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            state.queue.close();
+            // Wake the blocked accept loop so Server::run can return.
+            let _ = TcpStream::connect(state.local_addr);
+            (
+                Reply::Ready("{\"ok\":true,\"shutting_down\":true}".to_string()),
+                true,
+            )
+        }
+    }
+}
+
+/// Render the `{"cmd":"stats"}` response: uptime, protocol errors, and
+/// the full metrics catalog per registered model.
+fn stats_response(state: &ServerState) -> String {
+    let snap = state.metrics.snapshot();
+    let mut models = BTreeMap::new();
+    for entry in state.registry.list() {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(entry.model.task_name().to_string()));
+        o.insert("n_sv".to_string(), Json::Num(entry.model.n_sv() as f64));
+        o.insert("dim".to_string(), Json::Num(entry.model.dim() as f64));
+        let zero = metrics::ModelMetrics::default();
+        let mm = snap.get(&entry.name).unwrap_or(&zero);
+        o.insert("requests".to_string(), Json::Num(mm.requests as f64));
+        o.insert("errors".to_string(), Json::Num(mm.errors as f64));
+        o.insert("batches".to_string(), Json::Num(mm.batches as f64));
+        o.insert("mean_batch".to_string(), Json::Num(mm.mean_batch()));
+        o.insert("p50_us".to_string(), Json::Num(mm.latency.quantile_us(0.50) as f64));
+        o.insert("p99_us".to_string(), Json::Num(mm.latency.quantile_us(0.99) as f64));
+        o.insert("kernel_entries".to_string(), Json::Num(mm.kernel_entries as f64));
+        models.insert(entry.name.clone(), Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("ok".to_string(), Json::Bool(true));
+    top.insert(
+        "uptime_us".to_string(),
+        Json::Num(state.started.elapsed().as_micros() as f64),
+    );
+    top.insert(
+        "protocol_errors".to_string(),
+        Json::Num(state.protocol_errors.load(Ordering::Relaxed) as f64),
+    );
+    top.insert("models".to_string(), Json::Obj(models));
+    Json::Obj(top).to_string()
+}
+
+/// Render the `{"cmd":"models"}` response: the registry listing.
+fn models_response(state: &ServerState) -> String {
+    let mut models = BTreeMap::new();
+    for entry in state.registry.list() {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(entry.model.task_name().to_string()));
+        o.insert("n_sv".to_string(), Json::Num(entry.model.n_sv() as f64));
+        o.insert("dim".to_string(), Json::Num(entry.model.dim() as f64));
+        models.insert(entry.name.clone(), Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("ok".to_string(), Json::Bool(true));
+    top.insert("models".to_string(), Json::Obj(models));
+    Json::Obj(top).to_string()
+}
+
+/// Connect, send one request line, read one response line — the
+/// one-shot client behind admin calls (stats, load, shutdown), the CI
+/// smoke gate, and the bench driver's bookkeeping.
+pub fn request_once(addr: SocketAddr, line: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .context("set read timeout")?;
+    stream.write_all(line.as_bytes()).context("send request")?;
+    if !line.ends_with('\n') {
+        stream.write_all(b"\n").context("send newline")?;
+    }
+    let mut r = std::io::BufReader::new(stream);
+    let mut resp = String::new();
+    r.read_line(&mut resp).context("read response")?;
+    Ok(resp.trim_end().to_string())
+}
+
+/// Open-loop load configuration for [`drive_open_loop`].
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Offered arrival rate, queries/second. Open loop: send times are
+    /// scheduled up front and never slowed by responses, so queueing
+    /// shows up in latency instead of being silently absorbed
+    /// (coordinated omission is measured, not hidden).
+    pub rate: f64,
+    /// Total queries to send.
+    pub queries: usize,
+    /// Client connections the schedule round-robins over.
+    pub conns: usize,
+}
+
+/// What an open-loop run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Queries sent.
+    pub sent: usize,
+    /// `"ok":true` responses received.
+    pub ok: usize,
+    /// Error responses received (plus dropped connections' shortfall).
+    pub errors: usize,
+    /// Achieved throughput: responses ÷ (last response − schedule start).
+    pub qps: f64,
+    /// Median latency, µs, measured from each query's *scheduled* send
+    /// time (not the actual write), per open-loop convention.
+    pub p50_us: f64,
+    /// 99th-percentile latency, µs, same clock.
+    pub p99_us: f64,
+    /// Wall-clock span of the run, seconds.
+    pub wall_s: f64,
+}
+
+/// Drive a running server open-loop: `cfg.queries` score requests for
+/// `model` (rows cycled from `rows`, row-major with `dim` features) at
+/// `cfg.rate` queries/s across `cfg.conns` connections. Per-query
+/// latency is measured against the query's scheduled send time.
+pub fn drive_open_loop(
+    addr: SocketAddr,
+    model: Option<&str>,
+    dim: usize,
+    rows: &[f32],
+    cfg: &LoadConfig,
+) -> Result<LoadReport> {
+    ensure!(dim > 0 && !rows.is_empty() && rows.len() % dim == 0, "rows/dim mismatch");
+    ensure!(cfg.rate > 0.0, "rate must be positive");
+    ensure!(cfg.queries > 0 && cfg.conns > 0, "queries/conns must be positive");
+    let nrows = rows.len() / dim;
+    let mut lines: Vec<String> = Vec::with_capacity(cfg.queries);
+    for i in 0..cfg.queries {
+        use std::fmt::Write as _;
+        let mut s = String::from("{\"x\":[");
+        let row = &rows[(i % nrows) * dim..(i % nrows + 1) * dim];
+        for (k, v) in row.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{v}");
+        }
+        let _ = write!(s, "],\"id\":{i}");
+        if let Some(m) = model {
+            s.push_str(",\"model\":");
+            write_json_string(&mut s, m);
+        }
+        s.push_str("}\n");
+        lines.push(s);
+    }
+    let interval = Duration::from_secs_f64(1.0 / cfg.rate);
+    let start = Instant::now() + Duration::from_millis(5);
+    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.queries);
+    let (mut ok, mut errors) = (0usize, 0usize);
+    let mut last_resp = start;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..cfg.conns {
+            let lines = &lines;
+            handles.push(
+                s.spawn(move || conn_worker(addr, lines, c, cfg.conns, start, interval)),
+            );
+        }
+        for h in handles {
+            if let Ok((lat, o, e, last)) = h.join() {
+                latencies.extend(lat);
+                ok += o;
+                errors += e;
+                if last > last_resp {
+                    last_resp = last;
+                }
+            }
+        }
+    });
+    latencies.sort_unstable();
+    let quantile = |q: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((q * latencies.len() as f64).ceil() as usize).clamp(1, latencies.len());
+        latencies[idx - 1] as f64
+    };
+    let wall = last_resp.saturating_duration_since(start).as_secs_f64().max(1e-9);
+    Ok(LoadReport {
+        sent: cfg.queries,
+        ok,
+        errors,
+        qps: (ok + errors) as f64 / wall,
+        p50_us: quantile(0.50),
+        p99_us: quantile(0.99),
+        wall_s: wall,
+    })
+}
+
+/// One load-driver connection: a paced writer thread sends this
+/// connection's share of the schedule; the reader (this thread)
+/// correlates responses by id and measures latency vs scheduled send.
+fn conn_worker(
+    addr: SocketAddr,
+    lines: &[String],
+    c: usize,
+    conns: usize,
+    start: Instant,
+    interval: Duration,
+) -> (Vec<u64>, usize, usize, Instant) {
+    let empty = (Vec::new(), 0, 0, start);
+    let Ok(stream) = TcpStream::connect(addr) else { return empty };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let Ok(write_half) = stream.try_clone() else { return empty };
+    let my: Vec<usize> = (c..lines.len()).step_by(conns).collect();
+    let expected = my.len();
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut w = write_half;
+            for &i in &my {
+                let target = start + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if target > now {
+                    let wait = target - now;
+                    if wait > Duration::from_millis(2) {
+                        std::thread::sleep(wait - Duration::from_millis(1));
+                    }
+                    while Instant::now() < target {
+                        std::hint::spin_loop();
+                    }
+                }
+                if w.write_all(lines[i].as_bytes()).is_err() {
+                    return;
+                }
+            }
+            let _ = w.flush();
+        });
+        let mut reader = std::io::BufReader::new(&stream);
+        let mut lat = Vec::with_capacity(expected);
+        let (mut ok, mut err) = (0usize, 0usize);
+        let mut last = start;
+        let mut line = String::new();
+        for _ in 0..expected {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    let now = Instant::now();
+                    last = now;
+                    if let Some(id) = extract_id(&line) {
+                        let sched = start + interval.mul_f64(id as f64);
+                        lat.push(now.saturating_duration_since(sched).as_micros() as u64);
+                    }
+                    if line.contains("\"ok\":true") {
+                        ok += 1;
+                    } else {
+                        err += 1;
+                    }
+                }
+            }
+        }
+        (lat, ok, err, last)
+    })
+}
+
+/// Pull the numeric `"id":N` out of a response line without a full JSON
+/// parse — the load driver's per-response hot path.
+fn extract_id(line: &str) -> Option<u64> {
+    let p = line.find("\"id\":")?;
+    let rest = &line[p + 5..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::trainer::Trainer;
+
+    fn tiny_server(max_batch: usize) -> (std::thread::JoinHandle<()>, SocketAddr) {
+        let data = Arc::new(chessboard(80, 4, 1));
+        let model = AnyModel::Svc(Trainer::rbf(10.0, 0.5).train(&data).model);
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch,
+            max_wait_us: 100,
+            threads: 1,
+        };
+        let server = Server::bind(cfg, vec![("m".to_string(), model)]).unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        (handle, addr)
+    }
+
+    #[test]
+    fn serves_scores_stats_and_shuts_down() {
+        let (handle, addr) = tiny_server(8);
+        let resp = request_once(addr, r#"{"x":[0.5,0.5],"id":1}"#).unwrap();
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(v.get("decision").and_then(Json::as_f64).is_some());
+
+        let stats = request_once(addr, r#"{"cmd":"stats"}"#).unwrap();
+        let v = Json::parse(&stats).unwrap();
+        let m = v.get("models").and_then(|m| m.get("m")).unwrap();
+        assert_eq!(m.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(m.get("kind").and_then(Json::as_str), Some("svc"));
+
+        let bye = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        assert!(bye.contains("\"ok\":true"));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_lines_get_errors_and_the_connection_survives() {
+        let (handle, addr) = tiny_server(4);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        stream.write_all(b"this is not json\n").unwrap();
+        stream
+            .write_all(b"{\"x\":[1.0],\"id\":2}\n{\"x\":[0.1,0.2],\"id\":3}\n")
+            .unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false") && line.contains("bad json"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false") && line.contains("expects 2"), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true") && line.contains("\"id\":3"), "{line}");
+        let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn open_loop_driver_reports_throughput() {
+        let (handle, addr) = tiny_server(16);
+        let queries = chessboard(8, 4, 2);
+        let cfg = LoadConfig { rate: 2000.0, queries: 40, conns: 2 };
+        let report =
+            drive_open_loop(addr, Some("m"), queries.dim(), queries.features(), &cfg)
+                .unwrap();
+        assert_eq!(report.sent, 40);
+        assert_eq!(report.ok, 40, "errors: {}", report.errors);
+        assert!(report.qps > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+        let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn extract_id_finds_the_correlation_id() {
+        assert_eq!(extract_id(r#"{"ok":true,"id":42,"model":"m"}"#), Some(42));
+        assert_eq!(extract_id(r#"{"ok":true}"#), None);
+    }
+}

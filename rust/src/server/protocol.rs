@@ -1,0 +1,258 @@
+//! The serve wire protocol: newline-delimited JSON, one object per line.
+//!
+//! Requests are either **score** lines — `{"x": [..], "model": "name"?,
+//! "id": N?}` — or **admin** lines carrying a `"cmd"` key (`load`,
+//! `stats`, `models`, `shutdown`). Responses are single JSON objects
+//! with `"ok": true|false`; score responses echo the request `id` so
+//! clients may pipeline.
+//!
+//! Parsing reuses [`crate::util::json::Json`]; response lines are built
+//! by hand here (no intermediate tree on the scoring hot path), with
+//! every user-provided string routed through
+//! [`write_json_string`](crate::util::json::write_json_string) and every
+//! number through [`write_json_num`](crate::util::json::write_json_num)
+//! — the same shortest-round-trip policy the offline artifacts use, so
+//! served decision values bit-match `pasmo predict` output.
+
+use std::fmt::Write as _;
+
+use crate::util::json::{write_json_num, write_json_string, Json};
+
+/// A parsed request line.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// `{"x": [..], "model": "name"?, "id": N?}` — score one query.
+    Score(ScoreRequest),
+    /// `{"cmd": "load", "name": .., "path": ..}` — (re)load a model
+    /// file under `name` (hot-swap when the name already exists).
+    Load {
+        /// Registry name to (re)bind.
+        name: String,
+        /// Model file path, as sent by the client.
+        path: String,
+    },
+    /// `{"cmd": "stats"}` — per-model serving metrics.
+    Stats,
+    /// `{"cmd": "models"}` — the registry listing.
+    Models,
+    /// `{"cmd": "shutdown"}` — drain in-flight batches and exit.
+    Shutdown,
+}
+
+/// The score-request payload.
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    /// Target model name; may be omitted when exactly one model is loaded.
+    pub model: Option<String>,
+    /// Query features (JSON numbers are narrowed to `f32`, the dataset
+    /// element type — the narrowing every offline loader applies too).
+    pub x: Vec<f32>,
+    /// Client correlation id, echoed verbatim in the response.
+    pub id: Option<f64>,
+}
+
+/// Parse one request line. The error string is client-facing (it comes
+/// back in an `{"ok":false}` response), so it names the offending key.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if v.as_obj().is_none() {
+        return Err("request must be a json object".to_string());
+    }
+    if let Some(cmd) = v.get("cmd") {
+        let cmd = cmd.as_str().ok_or_else(|| "cmd: expected a string".to_string())?;
+        return match cmd {
+            "load" => {
+                let name = v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "load: missing string \"name\"".to_string())?;
+                let path = v
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "load: missing string \"path\"".to_string())?;
+                Ok(Request::Load { name: name.to_string(), path: path.to_string() })
+            }
+            "stats" => Ok(Request::Stats),
+            "models" => Ok(Request::Models),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown cmd {other:?}")),
+        };
+    }
+    let xs = v.get("x").ok_or_else(|| "missing \"x\" array (or \"cmd\")".to_string())?;
+    let arr = xs.as_arr().ok_or_else(|| "x: expected an array of numbers".to_string())?;
+    if arr.is_empty() {
+        return Err("x: must be non-empty".to_string());
+    }
+    let mut x = Vec::with_capacity(arr.len());
+    for (i, j) in arr.iter().enumerate() {
+        let n = j.as_f64().ok_or_else(|| format!("x[{i}]: expected a number"))?;
+        x.push(n as f32);
+    }
+    let model = match v.get("model") {
+        None => None,
+        Some(m) => Some(
+            m.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| "model: expected a string".to_string())?,
+        ),
+    };
+    let id = match v.get("id") {
+        None => None,
+        Some(j) => Some(j.as_f64().ok_or_else(|| "id: expected a number".to_string())?),
+    };
+    Ok(Request::Score(ScoreRequest { model, x, id }))
+}
+
+/// One scored query's outcome, rendered by [`score_response`]. The
+/// variants mirror the model kinds of
+/// [`AnyModel`](crate::svm::schema::AnyModel).
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// Binary svc: decision value, ±1 prediction, Platt probability
+    /// when the model was trained with one.
+    Classify {
+        /// Raw decision-function value.
+        decision: f64,
+        /// `+1` (decision ≥ 0) or `−1`.
+        prediction: i32,
+        /// Platt-scaled P(y = +1 | x), when available.
+        probability: Option<f64>,
+    },
+    /// svr: the regressed target.
+    Regress {
+        /// Predicted value (the decision function itself).
+        prediction: f64,
+    },
+    /// oneclass: decision value, `+1` inlier / `−1` outlier.
+    OneClass {
+        /// Raw decision-function value (offset by −ρ).
+        decision: f64,
+        /// `+1` (inlier) or `−1` (outlier).
+        prediction: i32,
+    },
+    /// multiclass: the majority-vote class id.
+    Multiclass {
+        /// Voted class label.
+        prediction: i32,
+    },
+}
+
+/// Render a successful score response line (no trailing newline).
+pub fn score_response(id: Option<f64>, model: &str, out: &Outcome) -> String {
+    let mut s = String::from("{\"ok\":true");
+    if let Some(id) = id {
+        s.push_str(",\"id\":");
+        write_json_num(&mut s, id);
+    }
+    s.push_str(",\"model\":");
+    write_json_string(&mut s, model);
+    match out {
+        Outcome::Classify { decision, prediction, probability } => {
+            s.push_str(",\"kind\":\"classify\",\"decision\":");
+            write_json_num(&mut s, *decision);
+            let _ = write!(s, ",\"prediction\":{prediction}");
+            if let Some(p) = probability {
+                s.push_str(",\"probability\":");
+                write_json_num(&mut s, *p);
+            }
+        }
+        Outcome::Regress { prediction } => {
+            s.push_str(",\"kind\":\"regress\",\"prediction\":");
+            write_json_num(&mut s, *prediction);
+        }
+        Outcome::OneClass { decision, prediction } => {
+            s.push_str(",\"kind\":\"oneclass\",\"decision\":");
+            write_json_num(&mut s, *decision);
+            let _ = write!(s, ",\"prediction\":{prediction}");
+        }
+        Outcome::Multiclass { prediction } => {
+            let _ = write!(s, ",\"kind\":\"multiclass\",\"prediction\":{prediction}");
+        }
+    }
+    s.push('}');
+    s
+}
+
+/// Render an error response line (no trailing newline). `msg` passes
+/// through [`write_json_string`], so arbitrary client input — bad model
+/// names with quotes, say — cannot break the response framing.
+pub fn error_response(id: Option<f64>, msg: &str) -> String {
+    let mut s = String::from("{\"ok\":false");
+    if let Some(id) = id {
+        s.push_str(",\"id\":");
+        write_json_num(&mut s, id);
+    }
+    s.push_str(",\"error\":");
+    write_json_string(&mut s, msg);
+    s.push('}');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_request_round_trips_f32_features() {
+        let req = parse_request(r#"{"x":[0.1,-2.5,3],"model":"m","id":7}"#);
+        let Ok(Request::Score(sr)) = req else { panic!("expected score: {req:?}") };
+        assert_eq!(sr.x, vec![0.1f32, -2.5, 3.0]);
+        assert_eq!(sr.model.as_deref(), Some("m"));
+        assert_eq!(sr.id, Some(7.0));
+        // f32 Display → f64 parse → f32 narrow recovers identical bits,
+        // so JSON queries can bit-match in-process scoring.
+        for v in [0.1f32, -2.5, 1e-8, 3.25e7] {
+            let text = format!("{v}");
+            let back = text.parse::<f64>().map(|d| d as f32);
+            assert_eq!(back.map(f32::to_bits), Ok(v.to_bits()), "{text}");
+        }
+    }
+
+    #[test]
+    fn admin_commands_parse() {
+        assert!(matches!(parse_request(r#"{"cmd":"stats"}"#), Ok(Request::Stats)));
+        assert!(matches!(parse_request(r#"{"cmd":"models"}"#), Ok(Request::Models)));
+        assert!(matches!(parse_request(r#"{"cmd":"shutdown"}"#), Ok(Request::Shutdown)));
+        let load = parse_request(r#"{"cmd":"load","name":"a","path":"/p.json"}"#);
+        let Ok(Request::Load { name, path }) = load else { panic!("load: {load:?}") };
+        assert_eq!((name.as_str(), path.as_str()), ("a", "/p.json"));
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_with_the_offending_key() {
+        for (line, needle) in [
+            ("not json", "bad json"),
+            ("[1,2]", "must be a json object"),
+            (r#"{"cmd":"frobnicate"}"#, "unknown cmd"),
+            (r#"{"cmd":"load","name":"a"}"#, "\"path\""),
+            (r#"{"y":[1]}"#, "missing \"x\""),
+            (r#"{"x":[]}"#, "non-empty"),
+            (r#"{"x":[1,"two"]}"#, "x[1]"),
+            (r#"{"x":[1],"model":3}"#, "model"),
+            (r#"{"x":[1],"id":"seven"}"#, "id"),
+        ] {
+            let err = parse_request(line).err().unwrap_or_default();
+            assert!(err.contains(needle), "{line} → {err}");
+        }
+    }
+
+    #[test]
+    fn responses_escape_user_strings_and_round_trip() {
+        let resp = score_response(
+            Some(3.0),
+            "na\"me",
+            &Outcome::Classify { decision: 0.1 + 0.2, prediction: 1, probability: Some(0.75) },
+        );
+        let v = Json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("model").and_then(Json::as_str), Some("na\"me"));
+        // shortest-round-trip rendering: parsed bits match the input
+        let d = v.get("decision").and_then(Json::as_f64);
+        assert_eq!(d.map(f64::to_bits), Some((0.1f64 + 0.2).to_bits()));
+
+        let err = error_response(None, "quo\"te\\path\n");
+        let v = Json::parse(&err).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("error").and_then(Json::as_str), Some("quo\"te\\path\n"));
+    }
+}

@@ -1,0 +1,184 @@
+//! The model registry: named models behind an `RwLock`, hot-swappable.
+//!
+//! Each entry pairs a loaded [`AnyModel`] with its precomputed
+//! [`SupportInvariants`] (squared SV norms for RBF, the collapsed
+//! weight vector for linear) so the batch loop constructs scorers via
+//! [`Scorer::with_invariants`](crate::svm::scorer::Scorer::with_invariants)
+//! without touching the allocator. Entries are `Arc`-shared: a score
+//! request captures its entry at admission, so a concurrent hot-swap
+//! (`{"cmd":"load"}`) never changes which model generation scores an
+//! already-admitted query.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use crate::svm::schema::{load_any, AnyModel};
+use crate::svm::scorer::SupportInvariants;
+use crate::util::error::Result;
+
+/// A registered model plus the support-side invariants its scorers
+/// borrow.
+#[derive(Debug)]
+pub struct ModelEntry {
+    /// The name this model is registered under.
+    pub name: String,
+    /// The model itself.
+    pub model: AnyModel,
+    /// Precomputed support invariants, one per underlying machine:
+    /// a single entry for svc/svr/oneclass, one per pairwise machine
+    /// (aligned with `OvoModel::machines`) for multiclass.
+    pub invariants: Vec<SupportInvariants>,
+}
+
+impl ModelEntry {
+    /// Wrap a model, precomputing the scoring invariants once.
+    pub fn new(name: String, model: AnyModel) -> ModelEntry {
+        let invariants = match &model {
+            AnyModel::Svc(m) => {
+                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+            }
+            AnyModel::Svr(m) => {
+                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+            }
+            AnyModel::OneClass(m) => {
+                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+            }
+            AnyModel::Multiclass(m) => m
+                .machines
+                .iter()
+                .map(|b| SupportInvariants::compute(b.kernel, &b.support, &b.coef))
+                .collect(),
+        };
+        ModelEntry { name, model, invariants }
+    }
+}
+
+/// Name → model map. Reads (every score request resolves its model)
+/// take the shared lock; writes happen only on `{"cmd":"load"}`.
+#[derive(Debug)]
+pub struct Registry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl Registry {
+    /// Build a registry preloaded with `(name, model)` pairs.
+    pub fn new(initial: Vec<(String, AnyModel)>) -> Registry {
+        let mut map = BTreeMap::new();
+        for (name, model) in initial {
+            map.insert(name.clone(), Arc::new(ModelEntry::new(name, model)));
+        }
+        Registry { models: RwLock::new(map) }
+    }
+
+    /// Look up a model by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.read_map(|map| map.get(name).cloned())
+    }
+
+    /// Resolve the model a score request targets. `None` is accepted
+    /// only while exactly one model is loaded (the single-model fast
+    /// path); the error strings are client-facing.
+    pub fn resolve(&self, name: Option<&str>) -> std::result::Result<Arc<ModelEntry>, String> {
+        self.read_map(|map| match name {
+            Some(n) => map
+                .get(n)
+                .cloned()
+                .ok_or_else(|| format!("unknown model {n:?}")),
+            None if map.len() == 1 => map
+                .values()
+                .next()
+                .cloned()
+                .ok_or_else(|| "no models loaded".to_string()),
+            None if map.is_empty() => Err("no models loaded".to_string()),
+            None => Err(format!(
+                "{} models loaded; the request must name one (\"model\": ...)",
+                map.len()
+            )),
+        })
+    }
+
+    /// Register (or hot-swap) `model` under `name`. Queries admitted
+    /// against the old generation still score against it; new requests
+    /// resolve to the replacement.
+    pub fn insert(&self, name: &str, model: AnyModel) -> Arc<ModelEntry> {
+        let entry = Arc::new(ModelEntry::new(name.to_string(), model));
+        let mut map = self.models.write().unwrap_or_else(|p| p.into_inner());
+        map.insert(name.to_string(), Arc::clone(&entry));
+        entry
+    }
+
+    /// Load a model file (any schema kind) and register it under
+    /// `name`, replacing a same-named entry if present.
+    pub fn load_file(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        let model = load_any(path)?;
+        Ok(self.insert(name, model))
+    }
+
+    /// All entries, in name order.
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        self.read_map(|map| map.values().cloned().collect())
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.read_map(BTreeMap::len)
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn read_map<T>(&self, f: impl FnOnce(&BTreeMap<String, Arc<ModelEntry>>) -> T) -> T {
+        let map = self.models.read().unwrap_or_else(|p| p.into_inner());
+        f(&map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chessboard;
+    use crate::svm::trainer::Trainer;
+
+    fn tiny_model() -> AnyModel {
+        let data = std::sync::Arc::new(chessboard(60, 4, 1));
+        AnyModel::Svc(Trainer::rbf(10.0, 0.5).train(&data).model)
+    }
+
+    #[test]
+    fn resolve_falls_back_to_the_single_model() {
+        let reg = Registry::new(vec![("only".to_string(), tiny_model())]);
+        assert_eq!(reg.resolve(None).unwrap().name, "only");
+        assert_eq!(reg.resolve(Some("only")).unwrap().name, "only");
+        assert!(reg.resolve(Some("nope")).unwrap_err().contains("unknown model"));
+
+        reg.insert("second", tiny_model());
+        assert_eq!(reg.len(), 2);
+        let err = reg.resolve(None).unwrap_err();
+        assert!(err.contains("must name one"), "{err}");
+    }
+
+    #[test]
+    fn hot_swap_replaces_the_entry_but_not_held_arcs() {
+        let reg = Registry::new(vec![("m".to_string(), tiny_model())]);
+        let before = reg.resolve(Some("m")).unwrap();
+        let after = reg.insert("m", tiny_model());
+        assert!(!Arc::ptr_eq(&before, &after));
+        assert!(Arc::ptr_eq(&reg.resolve(Some("m")).unwrap(), &after));
+        // the captured generation still scores: its invariants line up
+        assert_eq!(before.invariants.len(), 1);
+    }
+
+    #[test]
+    fn entries_precompute_one_invariant_per_machine() {
+        let entry = ModelEntry::new("m".to_string(), tiny_model());
+        assert_eq!(entry.invariants.len(), 1);
+        let blobs = crate::svm::multiclass::blobs(90, 3, 4.0, 0.5, 1);
+        let ovo = crate::svm::multiclass::train_ovo(&blobs, &Trainer::rbf(10.0, 0.5));
+        let n_machines = ovo.machines.len();
+        let entry = ModelEntry::new("ovo".to_string(), AnyModel::Multiclass(ovo));
+        assert_eq!(entry.invariants.len(), n_machines);
+    }
+}

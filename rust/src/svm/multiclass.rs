@@ -82,6 +82,17 @@ impl OvoModel {
         self.classes[best.map(|(i, _)| i).unwrap_or(0)]
     }
 
+    /// Majority vote from precomputed per-machine decision values for
+    /// one example: `decision_of(m)` is machine `m`'s decision, aligned
+    /// with [`OvoModel::machines`] / [`OvoModel::pairs`]. This is the
+    /// exact tally [`OvoModel::predict`] / [`OvoModel::predict_all`] use
+    /// (ties → smaller class id), exposed so callers that already hold
+    /// batch decisions — the serving tier's batch loop — predict
+    /// bit-identically to the offline paths.
+    pub fn vote_decisions(&self, decision_of: impl Fn(usize) -> f64) -> i32 {
+        self.vote(decision_of)
+    }
+
     /// Majority vote over all pairwise machines (ties → smaller class id,
     /// LIBSVM convention). One-off convenience — batch callers use
     /// [`OvoModel::predict_all`], which builds each machine's scorer

@@ -69,6 +69,18 @@ impl AnyModel {
             AnyModel::Multiclass(m) => m.machines[0].support.dim(),
         }
     }
+
+    /// Total support vectors (summed over the machines of a multiclass
+    /// model) — the size driver of a scoring pass, reported by the
+    /// serving tier's registry.
+    pub fn n_sv(&self) -> usize {
+        match self {
+            AnyModel::Svc(m) => m.n_sv(),
+            AnyModel::Svr(m) => m.n_sv(),
+            AnyModel::OneClass(m) => m.n_sv(),
+            AnyModel::Multiclass(m) => m.machines.iter().map(SvmModel::n_sv).sum(),
+        }
+    }
 }
 
 /// Load any model file, dispatching on its `kind` tag (absent = v1

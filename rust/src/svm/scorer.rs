@@ -28,6 +28,8 @@
 //! in the last floating-point bits; the dot-product kernels
 //! (linear/poly/sigmoid) are bit-identical to [`KernelFunction::eval`].
 
+use std::borrow::Cow;
+
 use crate::data::dataset::Dataset;
 use crate::kernel::function::KernelFunction;
 use crate::kernel::tile;
@@ -66,11 +68,66 @@ pub struct Scorer<'m> {
     support: &'m Dataset,
     coef: &'m [f64],
     offset: f64,
-    /// ‖x_s‖² per support row (RBF only; empty otherwise).
-    sv_sqnorms: Vec<f64>,
+    /// ‖x_s‖² per support row (RBF only; empty otherwise). Owned by
+    /// [`Scorer::new`], borrowed from a [`SupportInvariants`] by
+    /// [`Scorer::with_invariants`].
+    sv_sqnorms: Cow<'m, [f64]>,
     /// Collapsed primal weights for the linear kernel (None = expansion).
-    w: Option<Vec<f64>>,
+    w: Option<Cow<'m, [f64]>>,
     threads: usize,
+}
+
+/// Collapsed primal weights `w = Σ_s coef_s · x_s` for the linear
+/// kernel, accumulated per-row in support order.
+fn linear_w(support: &Dataset, coef: &[f64]) -> Vec<f64> {
+    let mut w = vec![0f64; support.dim()];
+    for s in 0..support.len() {
+        let c = coef[s];
+        for (wk, &v) in w.iter_mut().zip(support.row(s)) {
+            *wk += c * v as f64;
+        }
+    }
+    w
+}
+
+/// Precomputed support-side invariants of one kernel expansion — the
+/// RBF squared norms and the collapsed linear `w` that [`Scorer::new`]
+/// otherwise recomputes on every construction.
+///
+/// A long-lived owner (the serving tier's model registry) computes them
+/// once per loaded model and builds per-batch scorers with
+/// [`Scorer::with_invariants`], so constructing a scorer in a hot loop
+/// allocates nothing and the resulting decision values are bit-identical
+/// to the owned construction (same values, same association order).
+#[derive(Debug, Clone)]
+pub struct SupportInvariants {
+    sv_sqnorms: Vec<f64>,
+    w: Option<Vec<f64>>,
+}
+
+impl SupportInvariants {
+    /// Compute the invariants `Scorer::new(kernel, support, coef, _)`
+    /// would compute internally.
+    pub fn compute(
+        kernel: KernelFunction,
+        support: &Dataset,
+        coef: &[f64],
+    ) -> SupportInvariants {
+        assert_eq!(
+            support.len(),
+            coef.len(),
+            "support rows and coefficients must align"
+        );
+        let sv_sqnorms = match kernel {
+            KernelFunction::Rbf { .. } => tile::squared_norms(support),
+            _ => Vec::new(),
+        };
+        let w = match kernel {
+            KernelFunction::Linear => Some(linear_w(support, coef)),
+            _ => None,
+        };
+        SupportInvariants { sv_sqnorms, w }
+    }
 }
 
 impl<'m> Scorer<'m> {
@@ -97,12 +154,48 @@ impl<'m> Scorer<'m> {
             support,
             coef,
             offset,
-            sv_sqnorms,
+            sv_sqnorms: Cow::Owned(sv_sqnorms),
             w: None,
             threads: 1,
         };
         s = s.collapse_linear(true);
         s
+    }
+
+    /// Like [`Scorer::new`] but borrowing support-side invariants
+    /// precomputed by [`SupportInvariants::compute`] for this exact
+    /// `(kernel, support, coef)` triple, instead of recomputing them —
+    /// the zero-allocation construction the serving tier's batch loop
+    /// uses once per micro-batch. Decision values are bit-identical to
+    /// the owned construction.
+    pub fn with_invariants(
+        kernel: KernelFunction,
+        support: &'m Dataset,
+        coef: &'m [f64],
+        offset: f64,
+        inv: &'m SupportInvariants,
+    ) -> Scorer<'m> {
+        assert_eq!(
+            support.len(),
+            coef.len(),
+            "support rows and coefficients must align"
+        );
+        if matches!(kernel, KernelFunction::Rbf { .. }) {
+            assert_eq!(
+                inv.sv_sqnorms.len(),
+                support.len(),
+                "invariants were computed for a different support set"
+            );
+        }
+        Scorer {
+            kernel,
+            support,
+            coef,
+            offset,
+            sv_sqnorms: Cow::Borrowed(&inv.sv_sqnorms),
+            w: inv.w.as_deref().map(Cow::Borrowed),
+            threads: 1,
+        }
     }
 
     /// Worker threads for batch scoring (0/1 = inline). Threaded batches
@@ -120,15 +213,7 @@ impl<'m> Scorer<'m> {
     pub fn collapse_linear(mut self, enabled: bool) -> Scorer<'m> {
         self.w = match (enabled, self.kernel) {
             (true, KernelFunction::Linear) => {
-                let d = self.support.dim();
-                let mut w = vec![0f64; d];
-                for s in 0..self.support.len() {
-                    let c = self.coef[s];
-                    for (wk, &v) in w.iter_mut().zip(self.support.row(s)) {
-                        *wk += c * v as f64;
-                    }
-                }
-                Some(w)
+                Some(Cow::Owned(linear_w(self.support, self.coef)))
             }
             _ => None,
         };
@@ -218,6 +303,24 @@ impl<'m> Scorer<'m> {
         });
     }
 
+    /// Score every row pushed into `scratch` since its last
+    /// [`ScoreScratch::reset`], returning the decision values in push
+    /// order. This **is** [`Scorer::decision_block`] over the scratch's
+    /// row buffer — results are bit-identical to any other batch shape —
+    /// but both the query rows and the output live in the caller's
+    /// scratch, so a loop calling this once per micro-batch performs
+    /// zero steady-state allocation.
+    pub fn decision_scratch<'s>(&self, scratch: &'s mut ScoreScratch) -> &'s [f64] {
+        let n = scratch.len();
+        scratch.out.clear();
+        if n == 0 {
+            return &scratch.out;
+        }
+        scratch.out.resize(n, 0.0);
+        self.decision_block(scratch.dim, &scratch.rows, &mut scratch.out);
+        &scratch.out
+    }
+
     /// Score one contiguous query chunk through blocked SV×query tiles.
     /// Each query's value threads through the blocks as one running f64
     /// (`f = offset; f += coef_s·k_s` in ascending SV order — blocks in
@@ -252,6 +355,71 @@ impl<'m> Scorer<'m> {
             }
             s0 += block;
         }
+    }
+}
+
+/// Reusable query-side buffers for [`Scorer::decision_scratch`].
+///
+/// The serving tier's batch loop scores an unbounded stream of
+/// micro-batches; pushing each batch's rows into one long-lived scratch
+/// means the steady state allocates nothing — the row and output
+/// vectors grow to the high-water mark once and are reused thereafter.
+///
+/// ```
+/// use pasmo::svm::Trainer;
+/// use pasmo::svm::scorer::ScoreScratch;
+/// let data = std::sync::Arc::new(pasmo::data::synth::chessboard(120, 4, 1));
+/// let model = Trainer::rbf(10.0, 0.5).train(&data).model;
+/// let scorer = model.scorer();
+/// let mut scratch = ScoreScratch::new();
+/// scratch.reset(data.dim());
+/// scratch.push(data.row(0));
+/// scratch.push(data.row(1));
+/// let out = scorer.decision_scratch(&mut scratch);
+/// assert_eq!(out.len(), 2);
+/// assert_eq!(out[0], model.decision(data.row(0)));
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ScoreScratch {
+    dim: usize,
+    rows: Vec<f32>,
+    out: Vec<f64>,
+}
+
+impl ScoreScratch {
+    /// An empty scratch; buffers grow on first use.
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
+    }
+
+    /// Drop the pushed rows and fix the query dimensionality for the
+    /// next batch. Buffer capacity is kept.
+    pub fn reset(&mut self, dim: usize) {
+        assert!(dim > 0, "query dim must be positive");
+        self.dim = dim;
+        self.rows.clear();
+    }
+
+    /// Append one query row (length must match the [`reset`] dim).
+    ///
+    /// [`reset`]: ScoreScratch::reset
+    pub fn push(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim, "query dim != scratch dim");
+        self.rows.extend_from_slice(x);
+    }
+
+    /// Rows pushed since the last reset.
+    pub fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.rows.len() / self.dim
+        }
+    }
+
+    /// No rows pushed?
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
     }
 }
 
@@ -442,6 +610,61 @@ mod tests {
         let scorer = Scorer::new(KernelFunction::Rbf { gamma: 1.0 }, &sv, &coef, offset);
         let mut out: Vec<f64> = Vec::new();
         scorer.decision_block(2, &[], &mut out);
+    }
+
+    #[test]
+    fn with_invariants_is_bit_identical_to_owned_construction() {
+        for kernel in KERNELS {
+            let (sv, coef, offset) = random_expansion(48, 5, 91);
+            let inv = SupportInvariants::compute(kernel, &sv, &coef);
+            let owned = Scorer::new(kernel, &sv, &coef, offset);
+            let borrowed = Scorer::with_invariants(kernel, &sv, &coef, offset, &inv);
+            assert_eq!(owned.is_collapsed(), borrowed.is_collapsed());
+            let queries = random_queries(13, 5, 92);
+            let (mut a, mut b) = (vec![0f64; 13], vec![0f64; 13]);
+            owned.decision_block(5, &queries, &mut a);
+            borrowed.decision_block(5, &queries, &mut b);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{kernel:?}: invariant-borrowing scorer diverges"
+            );
+        }
+    }
+
+    #[test]
+    fn decision_scratch_is_bit_identical_and_reuses_capacity() {
+        let (sv, coef, offset) = random_expansion(37, 4, 95);
+        let scorer = Scorer::new(KernelFunction::Rbf { gamma: 0.9 }, &sv, &coef, offset);
+        let queries = random_queries(12, 4, 96);
+        let mut want = vec![0f64; 12];
+        scorer.decision_block(4, &queries, &mut want);
+
+        let mut scratch = ScoreScratch::new();
+        // Warm the buffers once, then assert later batches never grow them.
+        scratch.reset(4);
+        for q in 0..12 {
+            scratch.push(&queries[q * 4..(q + 1) * 4]);
+        }
+        assert_eq!(scratch.len(), 12);
+        let got: Vec<f64> = scorer.decision_scratch(&mut scratch).to_vec();
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let (rows_cap, out_cap) = (scratch.rows.capacity(), scratch.out.capacity());
+        for _ in 0..3 {
+            scratch.reset(4);
+            for q in 0..12 {
+                scratch.push(&queries[q * 4..(q + 1) * 4]);
+            }
+            let again = scorer.decision_scratch(&mut scratch);
+            assert!(again.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        assert_eq!(scratch.rows.capacity(), rows_cap, "rows reallocated");
+        assert_eq!(scratch.out.capacity(), out_cap, "out reallocated");
+
+        // An empty batch is fine and returns an empty slice.
+        scratch.reset(4);
+        assert!(scratch.is_empty());
+        assert!(scorer.decision_scratch(&mut scratch).is_empty());
     }
 
     #[test]

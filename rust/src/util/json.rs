@@ -92,30 +92,8 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
-            Json::Str(s) => {
-                out.push('"');
-                for c in s.chars() {
-                    match c {
-                        '"' => out.push_str("\\\""),
-                        '\\' => out.push_str("\\\\"),
-                        '\n' => out.push_str("\\n"),
-                        '\t' => out.push_str("\\t"),
-                        '\r' => out.push_str("\\r"),
-                        c if (c as u32) < 0x20 => {
-                            let _ = write!(out, "\\u{:04x}", c as u32);
-                        }
-                        c => out.push(c),
-                    }
-                }
-                out.push('"');
-            }
+            Json::Num(n) => write_json_num(out, *n),
+            Json::Str(s) => write_json_string(out, s),
             Json::Arr(a) => {
                 out.push('[');
                 for (k, v) in a.iter().enumerate() {
@@ -132,13 +110,65 @@ impl Json {
                     if k > 0 {
                         out.push(',');
                     }
-                    Json::Str(key.clone()).write(out);
+                    write_json_string(out, key);
                     out.push(':');
                     v.write(out);
                 }
                 out.push('}');
             }
         }
+    }
+}
+
+/// Append `s` to `out` as a JSON string literal, quotes included.
+///
+/// This is the one escaping routine in the crate: everywhere a
+/// user-provided string (a model name, an error message, a file path)
+/// is embedded in JSON output — server responses, model files, bench
+/// artifacts — it must pass through here so that `"`/`\`/control
+/// characters cannot break the surrounding document.
+///
+/// ```
+/// let mut s = String::new();
+/// pasmo::util::json::write_json_string(&mut s, "a\"b\\c\nd");
+/// assert_eq!(s, r#""a\"b\\c\nd""#);
+/// ```
+pub fn write_json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append `n` to `out` as a JSON number, with the crate's one number
+/// policy: integer-valued floats render without a decimal point,
+/// everything else via Rust's shortest round-trip `Display` (parsing the
+/// text back recovers the identical f64 bits). [`Json::to_string`] and
+/// the serving tier's hand-built response lines share this routine, so
+/// a served decision value prints exactly as the offline artifacts do.
+///
+/// ```
+/// let mut s = String::new();
+/// pasmo::util::json::write_json_num(&mut s, 3.0);
+/// pasmo::util::json::write_json_num(&mut s, 0.1);
+/// assert_eq!(s, "30.1");
+/// ```
+pub fn write_json_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
     }
 }
 
@@ -362,5 +392,25 @@ mod tests {
     fn writer_escapes_control_chars() {
         let s = Json::Str("a\"b\\c\nd".into()).to_string();
         assert_eq!(s, r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn write_json_string_escapes_round_trip() {
+        // Quotes, backslashes, every named escape, raw control chars and
+        // a non-ASCII scalar: the emitted literal must parse back to the
+        // identical string, and object *keys* go through the same path.
+        let nasty = "q\"uote \\back\\slash\nnl\ttab\rcr \u{1}\u{1f} é ok";
+        let mut lit = String::new();
+        write_json_string(&mut lit, nasty);
+        assert!(lit.starts_with('"') && lit.ends_with('"'));
+        assert!(lit.contains(r#"\""#) && lit.contains(r"\\"));
+        assert!(lit.contains("\\u0001") && lit.contains("\\u001f"));
+        assert_eq!(Json::parse(&lit).unwrap().as_str(), Some(nasty));
+
+        let mut obj = BTreeMap::new();
+        obj.insert(nasty.to_string(), Json::Bool(true));
+        let doc = Json::Obj(obj).to_string();
+        let back = Json::parse(&doc).unwrap();
+        assert_eq!(back.get(nasty).and_then(Json::as_bool), Some(true));
     }
 }

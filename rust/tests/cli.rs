@@ -57,13 +57,14 @@ fn no_args_prints_usage() {
 /// A flag added to the code without a help line fails this test.
 #[test]
 fn help_documents_every_flag_the_code_reads() {
-    const SUBCOMMANDS: [&str; 8] = [
+    const SUBCOMMANDS: [&str; 9] = [
         "datasets",
         "train",
         "predict",
         "gridsearch",
         "bench",
         "experiment",
+        "serve",
         "audit",
         "info",
     ];
@@ -655,4 +656,384 @@ fn info_reports_environment() {
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("pasmo 0.1.0"));
+}
+
+// ---------------------------------------------------------------------------
+// `pasmo serve`: the micro-batching TCP inference tier, driven over real
+// sockets against a real child process.
+// ---------------------------------------------------------------------------
+
+/// A `pasmo serve` child on an ephemeral port. The startup banner is
+/// parsed for the bound address; the process is killed on drop so a
+/// failing assertion can never leak a listening server.
+struct ServeChild {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl ServeChild {
+    fn spawn(model_spec: &str, extra: &[&str]) -> ServeChild {
+        use std::io::BufRead;
+        let mut child = pasmo()
+            .args(["serve", "--addr", "127.0.0.1:0", "--model", model_spec])
+            .args(extra)
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()
+            .unwrap();
+        let stdout = child.stdout.take().unwrap();
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut banner = String::new();
+        let mut addr = None;
+        for _ in 0..64 {
+            let mut line = String::new();
+            if reader.read_line(&mut line).unwrap() == 0 {
+                break;
+            }
+            banner.push_str(&line);
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                addr = Some(rest.split_whitespace().next().unwrap().to_string());
+                break;
+            }
+        }
+        let Some(addr) = addr else {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("serve printed no listening banner:\n{banner}");
+        };
+        ServeChild { child, addr }
+    }
+
+    fn connect(&self) -> ServeConn {
+        let stream = std::net::TcpStream::connect(&self.addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+        let reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        ServeConn { reader, writer: stream }
+    }
+
+    /// Request a clean shutdown and demand the child drains and exits 0.
+    fn shutdown(mut self) {
+        let reply = self.connect().roundtrip("{\"cmd\":\"shutdown\"}");
+        assert!(reply.contains("\"shutting_down\":true"), "{reply}");
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "serve exited {status}");
+    }
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+/// One client connection: newline-delimited request/response pairs.
+struct ServeConn {
+    reader: std::io::BufReader<std::net::TcpStream>,
+    writer: std::net::TcpStream,
+}
+
+impl ServeConn {
+    fn send(&mut self, line: &str) {
+        use std::io::Write;
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        use std::io::BufRead;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server closed the connection");
+        reply.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+/// Render a score request. Features go through `f32` `Display`
+/// (shortest round-trip), so the server's f64-parse → f32-narrow
+/// recovers the exact bits we started from.
+fn score_line(model: Option<&str>, x: &[f32], id: usize) -> String {
+    let mut s = String::from("{");
+    if let Some(m) = model {
+        s.push_str(&format!("\"model\":\"{m}\","));
+    }
+    s.push_str("\"x\":[");
+    for (i, v) in x.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str(&format!("],\"id\":{id}}}"));
+    s
+}
+
+fn parse_reply(line: &str) -> pasmo::util::json::Json {
+    pasmo::util::json::Json::parse(line)
+        .unwrap_or_else(|e| panic!("bad reply {line:?}: {e:#}"))
+}
+
+/// The tentpole acceptance contract: every decision value served over
+/// the socket is bit-identical to the same query through offline
+/// `pasmo predict --out`. A burst of pipelined queries exercises the
+/// admission micro-batcher (stats confirm multi-query batches) without
+/// changing a single bit.
+#[test]
+fn serve_decisions_bit_match_offline_predict() {
+    use pasmo::util::json::Json;
+    let dir = TempDir::new("serve-parity");
+
+    // Train a model through the CLI, exactly as a user would.
+    let model_path = dir.path("model.json");
+    let out = pasmo()
+        .args(["train", "--dataset", "chess-board-1000", "--len", "300", "--out"])
+        .arg(&model_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Offline half: `pasmo predict --out` writes full-precision
+    // decisions (prediction + shortest-round-trip decision per line).
+    let queries = pasmo::data::synth::chessboard(60, 4, 99);
+    let test_path = dir.path("test.libsvm");
+    pasmo::data::libsvm::write(&queries, &test_path).unwrap();
+    let preds_path = dir.path("preds.txt");
+    let out = pasmo()
+        .args(["predict", "--model"])
+        .arg(&model_path)
+        .args(["--libsvm"])
+        .arg(&test_path)
+        .args(["--out"])
+        .arg(&preds_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let offline: Vec<(i32, f64)> = std::fs::read_to_string(&preds_path)
+        .unwrap()
+        .lines()
+        .map(|l| {
+            let mut it = l.split_whitespace();
+            (
+                it.next().unwrap().parse().unwrap(),
+                it.next().unwrap().parse().unwrap(),
+            )
+        })
+        .collect();
+    assert_eq!(offline.len(), queries.len());
+
+    // Online half: one pipelined burst through a small admission window
+    // so queries actually coalesce into micro-batches.
+    let server = ServeChild::spawn(
+        &format!("m={}", model_path.display()),
+        &["--max-batch", "16", "--max-wait-us", "500"],
+    );
+    let mut conn = server.connect();
+    for i in 0..queries.len() {
+        // a model-less query is legal while exactly one model is loaded
+        conn.send(&score_line(None, queries.row(i), i));
+    }
+    for (i, &(pred, decision)) in offline.iter().enumerate() {
+        let v = parse_reply(&conn.recv());
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "query {i}");
+        assert_eq!(v.get("id").and_then(Json::as_f64), Some(i as f64), "reply order");
+        assert_eq!(v.get("model").and_then(Json::as_str), Some("m"));
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("classify"));
+        assert_eq!(
+            v.get("prediction").and_then(Json::as_f64),
+            Some(pred as f64),
+            "query {i}"
+        );
+        let served = v.get("decision").and_then(Json::as_f64).unwrap();
+        assert_eq!(
+            served.to_bits(),
+            decision.to_bits(),
+            "query {i}: served {served} != offline {decision}"
+        );
+    }
+
+    // The burst actually micro-batched: 60 requests, fewer batches.
+    let stats = parse_reply(&conn.roundtrip("{\"cmd\":\"stats\"}"));
+    let m = stats.get("models").and_then(|v| v.get("m")).unwrap();
+    assert_eq!(m.get("requests").and_then(Json::as_f64), Some(queries.len() as f64));
+    let batches = m.get("batches").and_then(Json::as_f64).unwrap();
+    assert!(
+        batches >= 1.0 && batches < queries.len() as f64,
+        "expected micro-batching: {batches} batches for {} requests",
+        queries.len()
+    );
+    server.shutdown();
+}
+
+/// Multi-model routing, every error path, and hot-swap — all over one
+/// live socket, with expectations computed from the same model files
+/// through the library.
+#[test]
+fn serve_routes_models_rejects_bad_input_and_hot_swaps() {
+    use pasmo::util::json::Json;
+    let dir = TempDir::new("serve-routing");
+
+    // Three model kinds, saved through the library.
+    let train = std::sync::Arc::new(pasmo::data::synth::chessboard(200, 4, 21));
+    let svc = pasmo::svm::Trainer::rbf(100.0, 0.5).train(&train).model;
+    let svc_path = dir.path("svc.json");
+    svc.save(&svc_path).unwrap();
+
+    let (oc, _) = pasmo::svm::oneclass::train_one_class(
+        &train,
+        &pasmo::svm::oneclass::OneClassConfig::new(0.2, 0.5),
+    );
+    let oc_path = dir.path("oc.json");
+    oc.save(&oc_path).unwrap();
+
+    let blobs = pasmo::data::multiclass::blobs(150, 3, 5.0, 0.4, 22);
+    let ovo = pasmo::svm::multiclass::train_ovo(&blobs, &pasmo::svm::Trainer::rbf(10.0, 0.3));
+    let ovo_path = dir.path("ovo.json");
+    ovo.save(&ovo_path).unwrap();
+
+    let server = ServeChild::spawn(
+        &format!(
+            "svc={},oc={},ovo={}",
+            svc_path.display(),
+            oc_path.display(),
+            ovo_path.display()
+        ),
+        &[],
+    );
+    let mut conn = server.connect();
+
+    // Expectations come from reloading the exact files the server loaded.
+    let svc = pasmo::svm::SvmModel::load(&svc_path).unwrap();
+    let oc = pasmo::svm::oneclass::OneClassModel::load(&oc_path).unwrap();
+    let ovo = pasmo::svm::multiclass::OvoModel::load(&ovo_path).unwrap();
+
+    let x2 = train.row(0);
+    let v = parse_reply(&conn.roundtrip(&score_line(Some("svc"), x2, 1)));
+    assert_eq!(v.get("kind").and_then(Json::as_str), Some("classify"));
+    let served = v.get("decision").and_then(Json::as_f64).unwrap();
+    assert_eq!(served.to_bits(), svc.decision(x2).to_bits(), "svc decision bits");
+
+    let v = parse_reply(&conn.roundtrip(&score_line(Some("oc"), x2, 2)));
+    assert_eq!(v.get("kind").and_then(Json::as_str), Some("oneclass"));
+    let served = v.get("decision").and_then(Json::as_f64).unwrap();
+    assert_eq!(served.to_bits(), oc.decision(x2).to_bits(), "oneclass decision bits");
+
+    let x_multi = blobs.row(3);
+    let v = parse_reply(&conn.roundtrip(&score_line(Some("ovo"), x_multi, 3)));
+    assert_eq!(v.get("kind").and_then(Json::as_str), Some("multiclass"));
+    assert_eq!(
+        v.get("prediction").and_then(Json::as_f64),
+        Some(ovo.predict(x_multi) as f64)
+    );
+
+    // Error paths: each gets `ok:false` + a pointed message, and the
+    // connection survives every one of them.
+    let cases = [
+        (score_line(None, x2, 4), "must name one"),
+        (score_line(Some("nope"), x2, 5), "unknown model"),
+        (score_line(Some("svc"), &x2[..1], 6), "expects 2"),
+        ("this is not json".to_string(), "bad json"),
+    ];
+    for (line, needle) in &cases {
+        let v = parse_reply(&conn.roundtrip(line));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        let err = v.get("error").and_then(Json::as_str).unwrap_or("");
+        assert!(err.contains(needle), "{line:?} → {err:?} (wanted {needle:?})");
+    }
+
+    // `{"cmd":"models"}` lists all three.
+    let v = parse_reply(&conn.roundtrip("{\"cmd\":\"models\"}"));
+    let listed = v.get("models").unwrap();
+    for name in ["svc", "oc", "ovo"] {
+        assert!(listed.get(name).is_some(), "{name} missing from listing");
+    }
+
+    // Hot-swap: retrain under different hyperparameters, load over the
+    // same name, and the served decision switches to the new model's
+    // bits without dropping the connection.
+    let svc2 = pasmo::svm::Trainer::rbf(10.0, 1.5).train(&train).model;
+    let svc2_path = dir.path("svc2.json");
+    svc2.save(&svc2_path).unwrap();
+    let v = parse_reply(&conn.roundtrip(&format!(
+        "{{\"cmd\":\"load\",\"name\":\"svc\",\"path\":{:?}}}",
+        svc2_path.to_str().unwrap()
+    )));
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "hot-swap failed");
+    assert_eq!(v.get("loaded").and_then(Json::as_str), Some("svc"));
+    let svc2 = pasmo::svm::SvmModel::load(&svc2_path).unwrap();
+    let v = parse_reply(&conn.roundtrip(&score_line(Some("svc"), x2, 7)));
+    let served = v.get("decision").and_then(Json::as_f64).unwrap();
+    assert_eq!(served.to_bits(), svc2.decision(x2).to_bits(), "post-swap bits");
+    assert_ne!(
+        served.to_bits(),
+        svc.decision(x2).to_bits(),
+        "swap should change the decision function"
+    );
+
+    server.shutdown();
+}
+
+/// `pasmo serve` argument validation fails fast, before binding.
+#[test]
+fn serve_rejects_bad_model_specs() {
+    let out = pasmo().args(["serve", "--addr", "127.0.0.1:0"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+
+    let dir = TempDir::new("serve-badspec");
+    let model = dir.path("model.json");
+    let out = pasmo()
+        .args(["train", "--dataset", "banana", "--len", "150", "--out"])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let spec = format!("a={},a={}", model.display(), model.display());
+    let out = pasmo()
+        .args(["serve", "--addr", "127.0.0.1:0", "--model", &spec])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("duplicate model name"));
+}
+
+/// `pasmo bench --serve` writes the BENCH_serve.json artifact with one
+/// run per `--batches` config, each reporting queries/s and tail
+/// latency.
+#[test]
+fn bench_serve_writes_saturation_json() {
+    let dir = TempDir::new("bench-serve");
+    let path = dir.path("BENCH_serve.json");
+    let out = pasmo()
+        .args([
+            "bench", "--serve", "--len", "150", "--rate", "800", "--queries", "160",
+            "--conns", "2", "--batches", "1,16", "--out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench --serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc =
+        pasmo::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str(), Some("serve"));
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 2, "one run per --batches config");
+    for (r, want_batch) in runs.iter().zip([1.0, 16.0]) {
+        assert_eq!(r.get("max_batch").unwrap().as_f64(), Some(want_batch));
+        assert!(r.get("queries_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(r.get("errors").unwrap().as_f64(), Some(0.0));
+        assert_eq!(r.get("ok").unwrap().as_f64(), Some(160.0));
+    }
 }

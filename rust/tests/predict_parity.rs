@@ -13,7 +13,7 @@ use pasmo::kernel::KernelFunction;
 use pasmo::svm::multiclass::{train_ovo, OvoModel};
 use pasmo::svm::oneclass::{train_one_class, OneClassConfig, OneClassModel};
 use pasmo::svm::predict;
-use pasmo::svm::scorer::Scorer;
+use pasmo::svm::scorer::{ScoreScratch, Scorer, SupportInvariants};
 use pasmo::svm::svr::{train_svr_native, SvrConfig, SvrModel};
 use pasmo::svm::{SvmModel, Trainer};
 use pasmo::util::prng::Pcg;
@@ -114,6 +114,72 @@ fn quickcheck_scorer_matches_scalar_decision_across_kernels() {
             for q in 0..queries.len() {
                 if threaded[q].to_bits() != batch[q].to_bits() {
                     return Err(format!("q={q}: threaded diverges"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The serving-tier construction path: a scorer rebuilt per micro-batch
+/// from precomputed [`SupportInvariants`], scoring queries pushed into
+/// one reused [`ScoreScratch`], is bit-identical to the owned
+/// `Scorer::new` + `decision_values` pass — across kernels, uneven
+/// batch splits and thread counts. This is the contract that lets
+/// `pasmo serve` answer with the same bits as offline `pasmo predict`
+/// while allocating nothing in its steady state.
+#[test]
+fn quickcheck_invariants_and_scratch_reuse_are_bit_identical() {
+    forall(
+        "serve-scratch-vs-owned",
+        24,
+        |g| {
+            let d = 1 + g.below(8);
+            let n_sv = 1 + g.below(60);
+            let n_q = 1 + g.below(40);
+            let sv = random_ds(n_sv, d, g);
+            let coef: Vec<f64> = (0..n_sv).map(|_| g.normal() * 3.0).collect();
+            let offset = g.normal();
+            let queries = random_ds(n_q, d, g);
+            let kernel = match g.below(4) {
+                0 => KernelFunction::Rbf { gamma: g.range(0.05, 2.0) },
+                1 => KernelFunction::Linear,
+                2 => KernelFunction::Poly {
+                    gamma: g.range(0.1, 1.0),
+                    coef0: 1.0,
+                    degree: 2 + g.below(3) as u32,
+                },
+                _ => KernelFunction::Sigmoid { gamma: g.range(0.05, 0.5), coef0: 0.1 },
+            };
+            (kernel, sv, coef, offset, queries)
+        },
+        |(kernel, sv, coef, offset, queries)| {
+            let want = Scorer::new(*kernel, sv, coef, *offset).decision_values(queries);
+            let inv = SupportInvariants::compute(*kernel, sv, coef);
+            let mut scratch = ScoreScratch::new();
+            let mut got = Vec::new();
+            // Replay the stream in uneven micro-batches (1, 3, 5, …),
+            // rebuilding the scorer per batch exactly as the serving
+            // loop does, alternating thread counts along the way.
+            let (mut q, mut step) = (0usize, 1usize);
+            while q < queries.len() {
+                let n = step.min(queries.len() - q);
+                scratch.reset(queries.dim());
+                for i in q..q + n {
+                    scratch.push(queries.row(i));
+                }
+                let scorer = Scorer::with_invariants(*kernel, sv, coef, *offset, &inv)
+                    .with_threads(1 + (step / 2) % 3);
+                got.extend_from_slice(scorer.decision_scratch(&mut scratch));
+                q += n;
+                step += 2;
+            }
+            for i in 0..queries.len() {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!(
+                        "q={i}: scratch {} != owned {} (bitwise)",
+                        got[i], want[i]
+                    ));
                 }
             }
             Ok(())
