@@ -19,9 +19,19 @@
 #   4e3. pasmo serve smoke: train a model, serve it on an ephemeral
 #                                port, score one query + stats over
 #                                /dev/tcp, then a clean shutdown
+#   4e3b. pasmo serve overload smoke: a one-slot admission queue floods
+#                                with a pipelined burst; the overflow is
+#                                shed with explicit replies and the
+#                                server still drains + exits 0
 #   4e4. pasmo bench --serve at tiny scale → BENCH_serve.json
 #                               (serving-tier saturation trajectory:
-#                                queries/s + p50/p99 per max-batch)
+#                                queries/s + p50/p99 + shed/expired per
+#                                max-batch)
+#   4e5. chaos gate: cargo test -q --features fault-injection --test chaos
+#                               (overload shedding, injected scoring
+#                                panics → quarantine, injected write
+#                                faults, checkpoint kill/resume, hot-swap
+#                                under load)
 #   4f. docs gate: RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 #                               (zero rustdoc warnings — missing docs on
 #                                any public item or a broken doc link
@@ -121,10 +131,50 @@ serve_req '{"cmd":"shutdown"}' | grep -q '"shutting_down":true' \
     || { echo "serve smoke: shutdown refused"; exit 1; }
 wait "$SERVE_PID" || { echo "serve smoke: nonzero exit"; exit 1; }
 
+# Overload smoke: a one-slot admission queue behind a long window. A
+# pipelined burst of 6 queries admits exactly one; the rest must come
+# back as explicit load-shed errors, and the server still shuts down
+# cleanly with exit 0 (overload never wedges or kills the process).
+step "pasmo serve overload smoke (bounded queue sheds with explicit replies)"
+cargo run --release --quiet -- serve --model "smoke=$SERVE_DIR/model.json" \
+    --addr 127.0.0.1:0 --max-batch 2 --max-wait-us 200000 --max-queue 1 \
+    >"$SERVE_DIR/overload.log" &
+SERVE_PID=$!
+SERVE_ADDR=""
+for _ in $(seq 1 100); do
+    SERVE_ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SERVE_DIR/overload.log")
+    [ -n "$SERVE_ADDR" ] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || { cat "$SERVE_DIR/overload.log"; exit 1; }
+    sleep 0.1
+done
+[ -n "$SERVE_ADDR" ] || { echo "overload smoke: no address"; exit 1; }
+SERVE_PORT=${SERVE_ADDR##*:}
+exec 3<>"/dev/tcp/127.0.0.1/$SERVE_PORT"
+for i in $(seq 1 6); do
+    printf '{"model":"smoke","x":[0.25,-0.75],"id":%s}\n' "$i" >&3
+done
+BURST=$(head -n 6 <&3)
+exec 3<&- 3>&-
+echo "$BURST" | grep -q '"ok":true' || { echo "overload smoke: nothing scored"; exit 1; }
+SHED=$(echo "$BURST" | grep -c 'queue is full' || true)
+[ "$SHED" -eq 5 ] || { echo "overload smoke: expected 5 shed replies, got $SHED"; echo "$BURST"; exit 1; }
+serve_req '{"cmd":"shutdown"}' | grep -q '"shutting_down":true' \
+    || { echo "overload smoke: shutdown refused"; exit 1; }
+wait "$SERVE_PID" || { echo "overload smoke: nonzero exit"; exit 1; }
+
 # Serving saturation artifact: the micro-batching sweep at tiny scale.
 step "pasmo bench --serve (writes ../BENCH_serve.json)"
 cargo run --release -- bench --serve --len 200 --rate 1000 --queries 400 \
     --conns 2 --batches 1,8,64 --out ../BENCH_serve.json
+
+# Chaos gate: the fault-injection hooks armed, the chaos suite green.
+# Covers flood → shed (established connections intact), injected scoring
+# panic → model quarantine + hot-reload recovery, injected write faults
+# (previous artifact survives bit-for-bit), corrupt-checkpoint refusal,
+# kill-at-iteration-N + resume to the uninterrupted objective, and
+# registry hot-swap under concurrent load.
+step "cargo test -q --features fault-injection --test chaos"
+cargo test -q --features fault-injection --test chaos
 
 # Docs gate: the public surface is fully documented (#![warn(missing_docs)]
 # promoted to an error here) and every doctest runs green.

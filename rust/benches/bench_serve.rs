@@ -48,6 +48,7 @@ fn main() {
                 max_batch,
                 max_wait_us: 200,
                 threads,
+                ..ServeConfig::default()
             };
             let server = match Server::bind(
                 config,

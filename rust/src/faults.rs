@@ -1,0 +1,240 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! The server and artifact layers call the `maybe_*` hooks at their
+//! failure seams (`artifact.write`, `server.score_group`, …). With the
+//! `fault-injection` cargo feature **off** — the default — every hook is
+//! an empty `#[inline(always)]` function: zero code, zero branches, zero
+//! cost. With the feature on, a process-global *fault plan* decides,
+//! deterministically, which hit of which site fires.
+//!
+//! # Fault-plan grammar
+//!
+//! A plan is a comma-separated list of entries:
+//!
+//! ```text
+//! plan  := entry (',' entry)*
+//! entry := site '@' hit ('x' count)?
+//! ```
+//!
+//! `site@N` fires the fault on the Nth hit of `site` (1-based), once.
+//! `site@NxM` fires on hits N through N+M−1. Sites are plain strings
+//! chosen by the instrumented code; hits are counted per site from the
+//! last [`reset`]. Example: `artifact.write@2,server.score_group@1x3`
+//! fails the second artifact write and the first three scored batches.
+//!
+//! Plans are installed programmatically with [`set_plan`] (chaos tests)
+//! or inherited from the `PASMO_FAULT_PLAN` environment variable at the
+//! first hook hit (child processes under test). The same plan always
+//! produces the same faults — no wall clock, no RNG at fire time.
+
+#[cfg(feature = "fault-injection")]
+mod armed {
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+
+    /// One parsed plan entry: fire at hits `[hit, hit + count)` of `site`.
+    #[derive(Debug, Clone)]
+    struct Entry {
+        site: String,
+        hit: u64,
+        count: u64,
+    }
+
+    #[derive(Default)]
+    struct PlanState {
+        entries: Vec<Entry>,
+        hits: BTreeMap<String, u64>,
+        /// Env plan already consulted (avoid re-reading on every hit).
+        env_loaded: bool,
+    }
+
+    fn state() -> &'static Mutex<PlanState> {
+        static STATE: Mutex<PlanState> = Mutex::new(PlanState {
+            entries: Vec::new(),
+            hits: BTreeMap::new(),
+            env_loaded: false,
+        });
+        &STATE
+    }
+
+    fn lock() -> std::sync::MutexGuard<'static, PlanState> {
+        state().lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn parse(plan: &str) -> Result<Vec<Entry>, String> {
+        let mut entries = Vec::new();
+        for raw in plan.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (site, spec) = raw
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry {raw:?}: expected site@hit"))?;
+            let (hit_s, count_s) = match spec.split_once('x') {
+                Some((h, c)) => (h, c),
+                None => (spec, "1"),
+            };
+            let hit: u64 = hit_s
+                .parse()
+                .map_err(|_| format!("fault entry {raw:?}: bad hit number {hit_s:?}"))?;
+            let count: u64 = count_s
+                .parse()
+                .map_err(|_| format!("fault entry {raw:?}: bad count {count_s:?}"))?;
+            if hit == 0 {
+                return Err(format!("fault entry {raw:?}: hits are 1-based"));
+            }
+            entries.push(Entry { site: site.trim().to_string(), hit, count });
+        }
+        Ok(entries)
+    }
+
+    pub fn set_plan(plan: &str) -> Result<(), String> {
+        let entries = parse(plan)?;
+        let mut st = lock();
+        st.entries = entries;
+        st.hits.clear();
+        st.env_loaded = true; // explicit plan overrides the environment
+        Ok(())
+    }
+
+    pub fn reset() {
+        let mut st = lock();
+        st.entries.clear();
+        st.hits.clear();
+        st.env_loaded = true;
+    }
+
+    /// Count a hit of `site` and report whether a fault fires on it.
+    pub fn fired(site: &str) -> bool {
+        let mut st = lock();
+        if !st.env_loaded {
+            st.env_loaded = true;
+            if let Ok(plan) = std::env::var("PASMO_FAULT_PLAN") {
+                if let Ok(entries) = parse(&plan) {
+                    st.entries = entries;
+                }
+            }
+        }
+        if st.entries.is_empty() {
+            return false;
+        }
+        let hit = st.hits.entry(site.to_string()).or_insert(0);
+        *hit += 1;
+        let n = *hit;
+        st.entries
+            .iter()
+            .any(|e| e.site == site && n >= e.hit && n < e.hit + e.count)
+    }
+}
+
+/// Install a fault plan (see the module docs for the grammar), replacing
+/// any previous plan and resetting all per-site hit counters. Only
+/// meaningful with the `fault-injection` feature; a no-op returning `Ok`
+/// otherwise.
+pub fn set_plan(plan: &str) -> Result<(), String> {
+    #[cfg(feature = "fault-injection")]
+    return armed::set_plan(plan);
+    #[cfg(not(feature = "fault-injection"))]
+    {
+        let _ = plan;
+        Ok(())
+    }
+}
+
+/// Clear the fault plan and all hit counters.
+pub fn reset() {
+    #[cfg(feature = "fault-injection")]
+    armed::reset();
+}
+
+/// Injected IO failure seam. Returns an `Err` styled like a real IO
+/// error when the plan fires at `site`; `Ok(())` otherwise (and always,
+/// with the feature off).
+#[inline(always)]
+pub fn maybe_io_error(site: &str) -> std::io::Result<()> {
+    #[cfg(feature = "fault-injection")]
+    if armed::fired(site) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected IO fault at {site}"),
+        ));
+    }
+    let _ = site;
+    Ok(())
+}
+
+/// Injected panic seam (used inside the scoring loop to test panic
+/// containment). Panics when the plan fires at `site`.
+#[inline(always)]
+pub fn maybe_panic(site: &str) {
+    #[cfg(feature = "fault-injection")]
+    if armed::fired(site) {
+        panic!("injected panic at {site}");
+    }
+    let _ = site;
+}
+
+/// Injected latency seam: sleeps 25 ms when the plan fires at `site`
+/// (models a stalled peer or slow disk without touching the clock
+/// elsewhere).
+#[inline(always)]
+pub fn maybe_delay(site: &str) {
+    #[cfg(feature = "fault-injection")]
+    if armed::fired(site) {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    let _ = site;
+}
+
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard};
+
+    /// The plan is process-global: serialize the tests that touch it.
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn plan_fires_on_the_exact_hit_window() {
+        let _g = guard();
+        set_plan("io.test@2x2").unwrap();
+        assert!(maybe_io_error("io.test").is_ok()); // hit 1
+        assert!(maybe_io_error("io.test").is_err()); // hit 2
+        assert!(maybe_io_error("io.test").is_err()); // hit 3
+        assert!(maybe_io_error("io.test").is_ok()); // hit 4
+        assert!(maybe_io_error("other.site").is_ok());
+        reset();
+    }
+
+    #[test]
+    fn reset_clears_counters_and_entries() {
+        let _g = guard();
+        set_plan("io.reset@1").unwrap();
+        assert!(maybe_io_error("io.reset").is_err());
+        reset();
+        assert!(maybe_io_error("io.reset").is_ok());
+    }
+
+    #[test]
+    fn bad_plans_are_rejected_with_a_reason() {
+        let _g = guard();
+        assert!(set_plan("no-at-sign").unwrap_err().contains("site@hit"));
+        assert!(set_plan("site@0").unwrap_err().contains("1-based"));
+        assert!(set_plan("site@x2").unwrap_err().contains("bad hit"));
+        reset();
+    }
+
+    #[test]
+    fn injected_panic_carries_the_site_name() {
+        let _g = guard();
+        set_plan("panic.here@1").unwrap();
+        let err = std::panic::catch_unwind(|| maybe_panic("panic.here")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("panic.here"), "{msg}");
+        reset();
+    }
+}

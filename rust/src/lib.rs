@@ -72,6 +72,8 @@ pub mod audit;
 pub mod coordinator;
 /// Datasets: dense storage, LIBSVM IO, splits, the synthetic suite.
 pub mod data;
+/// Deterministic fault injection (active only with `fault-injection`).
+pub mod faults;
 /// Kernel functions, the LRU row cache and the `Gram` facade.
 pub mod kernel;
 /// PJRT/XLA runtime (compiled only with the `pjrt` cargo feature).

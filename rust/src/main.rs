@@ -24,6 +24,7 @@ use std::sync::Arc;
 use pasmo::coordinator::experiments::{self, ExpOptions};
 use pasmo::coordinator::report::Report;
 use pasmo::data::{libsvm, suite, Dataset};
+use pasmo::solver::{Checkpoint, StopReason};
 use pasmo::svm::multiclass::OvoModel;
 use pasmo::svm::oneclass::OneClassModel;
 use pasmo::svm::platt::PlattScaler;
@@ -111,6 +112,16 @@ fn subcommand_help(cmd: &str) -> Option<String> {
              solver:\n{HELP_SOLVER_FLAG}\n\
                --eps E               KKT stopping accuracy (default 1e-3)\n\
                --threads N           kernel-row worker threads (bit-identical results)\n\n\
+             crash safety:\n\
+               --checkpoint FILE     snapshot the solve to FILE (atomic temp+rename,\n\
+                                     checksummed); with --checkpoint-iters the file is\n\
+                                     rewritten every N iterations, otherwise once at the\n\
+                                     end — a kill never leaves a partial file\n\
+               --checkpoint-iters N  checkpoint cadence in iterations (0 = final only)\n\
+               --resume FILE         warm-start from a checkpoint written against the\n\
+                                     same data (α is clamped/repaired to the current\n\
+                                     box, so C / weights may differ); iteration counts\n\
+                                     continue from the snapshot\n\n\
              output / backend:\n\
                --probability         fit Platt (A, B) on the training set and save it\n\
                                      in the model (enables `pasmo predict --probability`)\n\
@@ -175,7 +186,11 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --queries N           total queries per config (default 2000)\n\
                --conns N             client connections (default 4)\n\
                --batches a,b,c       max-batch configs to sweep (default 1,8,64)\n\
-               --max-wait-us U       admission window in µs (default 200)"
+               --max-wait-us U       admission window in µs (default 200)\n\
+               --max-queue N         admission queue bound (default 0 = unbounded);\n\
+                                     shed queries are counted per config\n\
+               --deadline-us U       per-query deadline in µs (default 0 = none);\n\
+                                     expired queries are counted per config"
         ),
         "serve" => "usage: pasmo serve --model FILE[,NAME=FILE...] [options]\n\n\
              Persistent micro-batching inference tier: a std-only TCP server\n\
@@ -195,6 +210,16 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --max-wait-us U       admission window in µs after a batch's\n\
                                      first query arrives (default 200)\n\
                --threads N           scoring worker threads per batch pass\n\n\
+             overload handling (see DESIGN.md §4e):\n\
+               --max-queue N         admission queue bound (default 1024; 0 = unbounded).\n\
+                                     Queries arriving at a full queue get an explicit\n\
+                                     `overloaded` error reply instead of queueing\n\
+               --deadline-us U       per-query deadline in µs (0 = none). Queries that\n\
+                                     out-wait it in the queue are answered\n\
+                                     `deadline_exceeded` and never scored\n\
+               --max-conns N         concurrent connection cap (0 = unlimited); over-\n\
+                                     capacity connections get one polite error line.\n\
+                                     Established connections are never dropped\n\n\
              protocol (one JSON object per line, responses in request order):\n\
                {\"x\":[..], \"model\":\"name\"?, \"id\":n?}    score a query\n\
                {\"cmd\":\"stats\"}                           per-model metrics\n\
@@ -259,6 +284,8 @@ fn print_usage() {
                       [--w-pos W --w-neg W] (per-class cost multipliers)\n\
                       [--threads N] (kernel-row worker threads)\n\
                       [--probability] (save Platt calibration in the model)\n\
+                      [--checkpoint ck.json --checkpoint-iters N] (crash-safe\n\
+                       periodic snapshots) [--resume ck.json] (continue one)\n\
                       [--len N --seed S] [--runtime pjrt] [--out model.json]\n\
            predict    --model model.json --libsvm FILE\n\
                       [--task classify|svr|oneclass|multiclass] [--threads N]\n\
@@ -276,8 +303,10 @@ fn print_usage() {
                       into BENCH_serve.json\n\
            serve      --model FILE[,NAME=FILE...] [--addr HOST:PORT]\n\
                       [--max-batch N] [--max-wait-us U] [--threads N]\n\
+                      [--max-queue N] [--deadline-us U] [--max-conns N]\n\
                       micro-batching TCP inference tier (newline-delimited\n\
-                      JSON; responses bit-match offline predict)\n\
+                      JSON; responses bit-match offline predict; bounded\n\
+                      admission sheds overload explicitly)\n\
            experiment table1|table2|fig2|fig3|fig4|wss|heuristic|\n\
                       engine_shootout|all\n\
                       [--perms N --scale S --max-len N --full\n\
@@ -364,11 +393,56 @@ fn cmd_train(args: &Args) -> Result<()> {
             args.get_parse_or("w-neg", 1.0),
         );
 
-    let TrainOutcome { mut model, result: res } = if args.get("runtime") == Some("pjrt") {
-        train_pjrt(&ds, &trainer, gamma)?
+    // Crash safety: --checkpoint snapshots the solve so a kill loses at
+    // most --checkpoint-iters of progress, and --resume continues from
+    // the last snapshot through the ordinary warm-start path.
+    let checkpoint_path = args.get("checkpoint").map(Path::new);
+    let checkpoint_iters = args.get_parse_or("checkpoint-iters", 0u64);
+    let mut base_iters = 0u64;
+    let trainer = if let Some(resume) = args.get("resume") {
+        let ck = Checkpoint::load(Path::new(resume))?;
+        ensure!(
+            ck.alpha.len() == ds.len(),
+            "cannot resume: {resume} snapshots α for ℓ={} but this dataset \
+             has ℓ={} (resuming needs the same data in the same order)",
+            ck.alpha.len(),
+            ds.len()
+        );
+        base_iters = ck.iterations;
+        println!(
+            "resuming from {resume}: {} iterations done, objective {:.6}",
+            ck.iterations, ck.objective
+        );
+        trainer.warm_start(ck.alpha)
     } else {
-        trainer.train(&ds)
+        trainer
     };
+
+    let chunked = checkpoint_path.is_some() && checkpoint_iters > 0;
+    let TrainOutcome { mut model, result: mut res } =
+        match (args.get("runtime"), checkpoint_path) {
+            (Some("pjrt"), _) => train_pjrt(&ds, &trainer, gamma)?,
+            (_, Some(ck)) if checkpoint_iters > 0 => {
+                train_checkpointed(&trainer, &ds, ck, checkpoint_iters, base_iters)?
+            }
+            _ => trainer.train(&ds),
+        };
+    if !chunked {
+        // the chunked path already reports cumulative iterations
+        res.iterations += base_iters;
+    }
+    if let (Some(ck), false) = (checkpoint_path, chunked) {
+        // --checkpoint without a cadence: leave one final resumable
+        // snapshot (same atomic, checksummed write as the periodic one)
+        Checkpoint {
+            alpha: res.alpha.clone(),
+            iterations: res.iterations,
+            objective: res.objective,
+            eps: trainer.solver_config.eps,
+        }
+        .save(ck)?;
+        println!("checkpoint saved to {}", ck.display());
+    }
     if args.flag("probability") {
         // One batch scoring pass over the training set calibrates the
         // sigmoid; the (A, B) pair is saved inside the model file.
@@ -379,7 +453,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     println!(
         "trained on ℓ={} d={} | C={c} γ={gamma} solver={:?}\n\
-         iterations={} time={:.3}s objective={:.6} gap={:.2e} converged={}\n\
+         iterations={} time={:.3}s objective={:.6} gap={:.2e} converged={} stop={}\n\
          SV={} BSV={} free/bounded/planning/conjugate steps = {}/{}/{}/{}\n\
          train accuracy = {:.4}",
         ds.len(),
@@ -390,6 +464,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.objective,
         res.gap,
         res.converged,
+        res.stop_reason,
         res.sv,
         res.bsv,
         res.telemetry.free_steps,
@@ -403,6 +478,52 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("model saved to {out}");
     }
     Ok(())
+}
+
+/// Chunked crash-safe training: run the solve `every` iterations at a
+/// time, warm-starting each chunk from the previous chunk's α and
+/// rewriting `path` atomically (checksummed temp file + rename) after
+/// every chunk. A kill at any moment loses at most one chunk of
+/// progress; `pasmo train --resume PATH` continues from the snapshot.
+/// `base` carries the iteration count of a resumed checkpoint so the
+/// snapshots and the returned result report cumulative iterations.
+fn train_checkpointed(
+    trainer: &Trainer,
+    ds: &Arc<Dataset>,
+    path: &Path,
+    every: u64,
+    base: u64,
+) -> Result<TrainOutcome> {
+    let full_cap = trainer.solver_config.max_iter;
+    let mut done = base;
+    let mut chunked = trainer.clone();
+    loop {
+        let mut cfg = chunked.solver_config;
+        cfg.max_iter = match full_cap {
+            0 => every,
+            cap => every.min(cap.saturating_sub(done)).max(1),
+        };
+        chunked = chunked.solver_config(cfg);
+        let mut outcome = chunked.train(ds);
+        done += outcome.result.iterations;
+        Checkpoint {
+            alpha: outcome.result.alpha.clone(),
+            iterations: done,
+            objective: outcome.result.objective,
+            eps: cfg.eps,
+        }
+        .save(path)?;
+        // keep going only when the *chunk* cap cut the solve short; a
+        // converged chunk (or the caller's own --max-iter budget spent)
+        // ends the loop with that chunk's outcome
+        let chunk_cap_only = outcome.result.stop_reason == StopReason::IterLimit
+            && (full_cap == 0 || done < full_cap);
+        if !chunk_cap_only {
+            outcome.result.iterations = done;
+            return Ok(outcome);
+        }
+        chunked = chunked.warm_start(outcome.result.alpha);
+    }
 }
 
 /// Train over the PJRT kernel path (the `--runtime pjrt` flag).
@@ -754,7 +875,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     doc.insert("runs".into(), Json::Arr(runs));
     let doc = Json::Obj(doc);
     if let Some(out) = args.get("out") {
-        std::fs::write(out, doc.to_string())
+        // atomic + checksummed, like every other artifact: a killed
+        // bench never leaves a truncated BENCH_*.json behind
+        pasmo::util::artifact::save_json(Path::new(out), doc)
             .with_context(|| format!("write bench report {out}"))?;
         println!("\nreport written to {out}");
     }
@@ -901,7 +1024,7 @@ fn cmd_bench_predict(args: &Args) -> Result<()> {
     doc.insert("runs".into(), Json::Arr(runs));
     let doc = Json::Obj(doc);
     if let Some(out) = args.get("out") {
-        std::fs::write(out, doc.to_string())
+        pasmo::util::artifact::save_json(Path::new(out), doc)
             .with_context(|| format!("write bench report {out}"))?;
         println!("\nreport written to {out}");
     }
@@ -955,9 +1078,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_parse_or("max-batch", 64usize).max(1),
         max_wait_us: args.get_parse_or("max-wait-us", 200u64),
         threads: args.get_parse_or("threads", 1usize),
+        max_queue: args.get_parse_or("max-queue", 1024usize),
+        deadline_us: args.get_parse_or("deadline-us", 0u64),
+        max_conns: args.get_parse_or("max-conns", 0usize),
     };
     let (max_batch, max_wait_us, threads) =
         (config.max_batch, config.max_wait_us, config.threads);
+    let (max_queue, deadline_us, max_conns) =
+        (config.max_queue, config.deadline_us, config.max_conns);
     for (name, m) in &models {
         println!(
             "model {name:?}: kind={} n_sv={} dim={}",
@@ -969,7 +1097,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::bind(config, models)?;
     println!(
         "pasmo serve listening on {} (max-batch={max_batch} max-wait-us={max_wait_us} \
-         threads={threads})",
+         threads={threads} max-queue={max_queue} deadline-us={deadline_us} \
+         max-conns={max_conns})",
         server.local_addr()
     );
     std::io::stdout().flush().context("flush startup banner")?;
@@ -996,6 +1125,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let queries = args.get_parse_or("queries", 2000usize);
     let conns = args.get_parse_or("conns", 4usize);
     let max_wait_us = args.get_parse_or("max-wait-us", 200u64);
+    // overload knobs (0 = off, matching an unbounded/undeadlined server):
+    // with them set, the shed/expired columns show how much offered load
+    // each config refused instead of absorbing into its latency tail
+    let max_queue = args.get_parse_or("max-queue", 0usize);
+    let deadline_us = args.get_parse_or("deadline-us", 0u64);
     let batches_spec = args.get_or("batches", "1,8,64");
     let batch_sizes: Vec<usize> = batches_spec
         .split(',')
@@ -1022,11 +1156,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     println!("==== pasmo bench --serve (serving saturation) ====");
     println!(
         "dataset={name} ℓ={len} SVs={n_sv} rate={rate}/s queries={queries} \
-         conns={conns} threads={threads} max-wait-us={max_wait_us}\n"
+         conns={conns} threads={threads} max-wait-us={max_wait_us} \
+         max-queue={max_queue} deadline-us={deadline_us}\n"
     );
     println!(
-        "{:<10} {:>10} {:>10} {:>10} {:>11} {:>8}",
-        "max-batch", "qps", "p50-us", "p99-us", "mean-batch", "errors"
+        "{:<10} {:>10} {:>10} {:>10} {:>11} {:>8} {:>8} {:>8}",
+        "max-batch", "qps", "p50-us", "p99-us", "mean-batch", "shed", "expired", "errors"
     );
 
     let mut runs: Vec<Json> = Vec::new();
@@ -1036,6 +1171,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             max_batch,
             max_wait_us,
             threads,
+            max_queue,
+            deadline_us,
+            ..ServeConfig::default()
         };
         let server = Server::bind(
             config,
@@ -1047,9 +1185,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         let report =
             drive_open_loop(addr, Some("bench"), query_set.dim(), query_set.features(), &cfg)?;
         let stats = request_once(addr, "{\"cmd\":\"stats\"}")?;
-        let mean_batch = Json::parse(&stats)
-            .ok()
+        let stats_doc = Json::parse(&stats).ok();
+        let mean_batch = stats_doc
+            .as_ref()
             .and_then(|v| v.get("models")?.get("bench")?.get("mean_batch")?.as_f64())
+            .unwrap_or(0.0);
+        // server-side overload counters (top-level totals in the stats
+        // reply): queries refused at admission / expired in the queue
+        let shed = stats_doc
+            .as_ref()
+            .and_then(|v| v.get("shed")?.as_f64())
+            .unwrap_or(0.0);
+        let expired = stats_doc
+            .as_ref()
+            .and_then(|v| v.get("expired")?.as_f64())
             .unwrap_or(0.0);
         let _ = request_once(addr, "{\"cmd\":\"shutdown\"}")?;
         match handle.join() {
@@ -1057,8 +1206,15 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             Err(_) => bail!("server thread panicked (max-batch={max_batch})"),
         }
         println!(
-            "{:<10} {:>10.1} {:>10.0} {:>10.0} {:>11.2} {:>8}",
-            max_batch, report.qps, report.p50_us, report.p99_us, mean_batch, report.errors
+            "{:<10} {:>10.1} {:>10.0} {:>10.0} {:>11.2} {:>8.0} {:>8.0} {:>8}",
+            max_batch,
+            report.qps,
+            report.p50_us,
+            report.p99_us,
+            mean_batch,
+            shed,
+            expired,
+            report.errors
         );
         let mut obj = BTreeMap::new();
         obj.insert("max_batch".into(), Json::Num(max_batch as f64));
@@ -1066,6 +1222,8 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         obj.insert("p50_us".into(), Json::Num(report.p50_us));
         obj.insert("p99_us".into(), Json::Num(report.p99_us));
         obj.insert("mean_batch".into(), Json::Num(mean_batch));
+        obj.insert("shed".into(), Json::Num(shed));
+        obj.insert("expired".into(), Json::Num(expired));
         obj.insert("sent".into(), Json::Num(report.sent as f64));
         obj.insert("ok".into(), Json::Num(report.ok as f64));
         obj.insert("errors".into(), Json::Num(report.errors as f64));
@@ -1083,10 +1241,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     doc.insert("conns".into(), Json::Num(conns as f64));
     doc.insert("threads".into(), Json::Num(threads as f64));
     doc.insert("max_wait_us".into(), Json::Num(max_wait_us as f64));
+    doc.insert("max_queue".into(), Json::Num(max_queue as f64));
+    doc.insert("deadline_us".into(), Json::Num(deadline_us as f64));
     doc.insert("runs".into(), Json::Arr(runs));
     let doc = Json::Obj(doc);
     if let Some(out) = args.get("out") {
-        std::fs::write(out, doc.to_string())
+        pasmo::util::artifact::save_json(Path::new(out), doc)
             .with_context(|| format!("write bench report {out}"))?;
         println!("\nreport written to {out}");
     }

@@ -12,6 +12,7 @@
 //! results.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -36,6 +37,10 @@ pub struct Pending {
     pub id: Option<f64>,
     /// Admission timestamp; response latency = scored − enqueued.
     pub enqueued: Instant,
+    /// Scoring deadline (`--deadline-us`): a query still queued past
+    /// this instant is answered `deadline_exceeded` instead of scored.
+    /// `None` = no deadline.
+    pub deadline: Option<Instant>,
     /// Where the rendered response line goes; the connection thread
     /// blocks on the paired receiver when it is this reply's turn.
     pub reply: mpsc::Sender<String>,
@@ -47,11 +52,24 @@ struct QueueState {
     closed: bool,
 }
 
-/// The shared admission queue (mutex + condvar; std only).
+/// Why an admission was refused; the query is handed back so the
+/// caller can answer it with the matching error response.
+#[derive(Debug)]
+pub enum PushError {
+    /// The queue is at its `--max-queue` bound: shed this query
+    /// explicitly rather than letting the backlog grow without limit.
+    Full(Pending),
+    /// The queue has been closed (shutdown is draining).
+    Closed(Pending),
+}
+
+/// The shared admission queue (mutex + condvar; std only), bounded at
+/// `capacity` waiting queries (0 = unbounded).
 #[derive(Debug)]
 pub struct BatchQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
+    capacity: usize,
 }
 
 fn lock(state: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
@@ -59,21 +77,28 @@ fn lock(state: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
 }
 
 impl BatchQueue {
-    /// An open, empty queue.
-    pub fn new() -> BatchQueue {
+    /// An open, empty queue admitting at most `capacity` waiting
+    /// queries (0 = unbounded).
+    pub fn new(capacity: usize) -> BatchQueue {
         BatchQueue {
             state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
             ready: Condvar::new(),
+            capacity,
         }
     }
 
-    /// Enqueue an admitted query. `Err` hands the item back when the
-    /// queue has been closed (shutdown is draining): the caller answers
-    /// it with an error response instead.
-    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+    /// Enqueue an admitted query. [`PushError::Full`] sheds the query
+    /// when the backlog is at capacity; [`PushError::Closed`] hands it
+    /// back when shutdown is draining. Either way the caller answers
+    /// the client with an explicit error response — admission never
+    /// blocks and never silently drops.
+    pub fn push(&self, p: Pending) -> Result<(), PushError> {
         let mut st = lock(&self.state);
         if st.closed {
-            return Err(p);
+            return Err(PushError::Closed(p));
+        }
+        if self.capacity > 0 && st.items.len() >= self.capacity {
+            return Err(PushError::Full(p));
         }
         st.items.push_back(p);
         self.ready.notify_all();
@@ -97,6 +122,9 @@ impl BatchQueue {
     /// holds the window open up to `max_wait` for more. An empty `out`
     /// on return means closed **and** fully drained — the batch loop's
     /// exit condition.
+    ///
+    /// `max_wait` = 0 drains whatever is pending immediately (no window,
+    /// and no busy-wait — the zero case never enters the timed loop).
     pub fn next_batch(&self, max_batch: usize, max_wait: Duration, out: &mut Vec<Pending>) {
         let max_batch = max_batch.max(1);
         out.clear();
@@ -108,20 +136,23 @@ impl BatchQueue {
             st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
         }
         if max_batch > 1 && !max_wait.is_zero() {
+            // The wall-clock deadline is the single source of truth for
+            // the admission window: after *every* wakeup — a push, a
+            // timeout, or a spurious one — the loop re-checks the fill
+            // and close conditions and recomputes the time left, rather
+            // than trusting the condvar's timed-out flag (which races
+            // with concurrent pushes and can fire spuriously).
             let deadline = Instant::now() + max_wait;
             while st.items.len() < max_batch && !st.closed {
                 let left = deadline.saturating_duration_since(Instant::now());
                 if left.is_zero() {
                     break;
                 }
-                let (guard, timeout) = self
+                let (guard, _timeout) = self
                     .ready
                     .wait_timeout(st, left)
                     .unwrap_or_else(|p| p.into_inner());
                 st = guard;
-                if timeout.timed_out() {
-                    break;
-                }
             }
         }
         let n = st.items.len().min(max_batch);
@@ -131,7 +162,7 @@ impl BatchQueue {
 
 impl Default for BatchQueue {
     fn default() -> BatchQueue {
-        BatchQueue::new()
+        BatchQueue::new(0)
     }
 }
 
@@ -157,6 +188,13 @@ impl BatchScratch {
 /// (pointer identity, so two generations of a hot-swapped name score
 /// separately), run one tiled pass per (model × group), send every
 /// response, and record metrics per group.
+///
+/// A panic inside a group's scoring pass is contained here: the
+/// offending model generation is quarantined (new requests to it are
+/// refused by the registry until a reload), the group's queries get
+/// error replies, and the loop moves on to the next group — one bad
+/// model never takes the scoring thread (and with it the whole server)
+/// down.
 pub fn score_batch(batch: &[Pending], metrics: &Metrics, threads: usize, sb: &mut BatchScratch) {
     sb.order.clear();
     sb.order.extend(0..batch.len());
@@ -168,17 +206,40 @@ pub fn score_batch(batch: &[Pending], metrics: &Metrics, threads: usize, sb: &mu
         while g1 < sb.order.len() && Arc::ptr_eq(&entry, &batch[sb.order[g1]].entry) {
             g1 += 1;
         }
-        score_group(
-            &sb.order[g0..g1],
-            batch,
-            &entry,
-            metrics,
-            threads,
-            &mut sb.scratch,
-            &mut sb.machine_out,
-        );
+        // AssertUnwindSafe: on a caught panic the group's replies are
+        // answered with errors and the scratch buffers are never read
+        // before being reset (score_group begins with scratch.reset and
+        // machine_out is resized before use), so no torn state escapes.
+        let scored = catch_unwind(AssertUnwindSafe(|| {
+            score_group(
+                &sb.order[g0..g1],
+                batch,
+                &entry,
+                metrics,
+                threads,
+                &mut sb.scratch,
+                &mut sb.machine_out,
+            );
+        }));
+        if scored.is_err() {
+            quarantine_group(&sb.order[g0..g1], batch, &entry, metrics);
+        }
         g0 = g1;
     }
+}
+
+/// A scoring pass panicked: mark the model generation unhealthy and
+/// answer the group's queries with an error reply naming the quarantine.
+fn quarantine_group(idxs: &[usize], batch: &[Pending], entry: &ModelEntry, metrics: &Metrics) {
+    entry.quarantine();
+    let msg = format!(
+        "model {:?} quarantined: scoring panicked (reload it to restore)",
+        entry.name
+    );
+    for &i in idxs {
+        let _ = batch[i].reply.send(protocol::error_response(batch[i].id, &msg));
+    }
+    metrics.with_model(&entry.name, |mm| mm.errors += idxs.len() as u64);
 }
 
 /// Score the `idxs` members of `batch`, all targeting `entry`.
@@ -192,6 +253,8 @@ fn score_group(
     machine_out: &mut Vec<f64>,
 ) {
     let n = idxs.len();
+    crate::faults::maybe_panic("server.score_group");
+    crate::faults::maybe_delay("server.score_group");
     scratch.reset(entry.model.dim());
     for &i in idxs {
         scratch.push(&batch[i].x);
@@ -297,8 +360,28 @@ fn score_group(
     });
 }
 
+/// Answer and drop queries whose deadline passed while they waited in
+/// the admission queue: each gets a `deadline_exceeded` error reply and
+/// never reaches a scorer — spending a kernel pass on an answer the
+/// client has already given up on only deepens an overload.
+fn expire_overdue(batch: &mut Vec<Pending>, metrics: &Metrics) {
+    let now = Instant::now();
+    batch.retain(|p| {
+        let expired = matches!(p.deadline, Some(d) if now >= d);
+        if expired {
+            metrics.with_model(&p.entry.name, |mm| mm.expired += 1);
+            let _ = p.reply.send(protocol::error_response(
+                p.id,
+                "deadline_exceeded: query expired in the admission queue",
+            ));
+        }
+        !expired
+    });
+}
+
 /// The scoring loop: drain micro-batches until the queue is closed and
-/// empty. Run on one dedicated thread per server.
+/// empty, expiring overdue queries before each scoring pass. Run on one
+/// dedicated thread per server.
 pub fn run_batch_loop(
     queue: &BatchQueue,
     metrics: &Metrics,
@@ -313,6 +396,7 @@ pub fn run_batch_loop(
         if batch.is_empty() {
             return;
         }
+        expire_overdue(&mut batch, metrics);
         score_batch(&batch, metrics, threads, &mut sb);
     }
 }
@@ -342,6 +426,7 @@ mod tests {
             x: x.to_vec(),
             id: Some(id),
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         (p, rx)
@@ -402,7 +487,7 @@ mod tests {
 
     #[test]
     fn queue_drains_after_close_then_reports_empty() {
-        let q = BatchQueue::new();
+        let q = BatchQueue::new(0);
         let (entry, queries) = entry();
         let (p1, _rx1) = pend(&entry, queries.row(0), 0.0);
         let (p2, _rx2) = pend(&entry, queries.row(1), 1.0);
@@ -421,7 +506,7 @@ mod tests {
 
     #[test]
     fn next_batch_caps_at_max_batch() {
-        let q = BatchQueue::new();
+        let q = BatchQueue::new(0);
         let (entry, queries) = entry();
         let mut rxs = Vec::new();
         for i in 0..5 {
@@ -435,4 +520,83 @@ mod tests {
         q.next_batch(3, Duration::from_micros(1), &mut out);
         assert_eq!(out.len(), 2);
     }
+
+    #[test]
+    fn bounded_queue_sheds_at_capacity_and_recovers_after_drain() {
+        let q = BatchQueue::new(2);
+        let (entry, queries) = entry();
+        let (p1, _r1) = pend(&entry, queries.row(0), 0.0);
+        let (p2, _r2) = pend(&entry, queries.row(1), 1.0);
+        let (p3, _r3) = pend(&entry, queries.row(2), 2.0);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        match q.push(p3) {
+            Err(PushError::Full(p)) => assert_eq!(p.id, Some(2.0)),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        let mut out = Vec::new();
+        q.next_batch(10, Duration::ZERO, &mut out);
+        assert_eq!(out.len(), 2);
+        let (p4, _r4) = pend(&entry, queries.row(3), 3.0);
+        assert!(q.push(p4).is_ok(), "drained queue admits again");
+    }
+
+    #[test]
+    fn window_survives_early_wakeups_and_collects_the_late_arrival() {
+        // Regression: a condvar wakeup that neither fills the batch nor
+        // exhausts the window (a push below max_batch, or a spurious
+        // wake) must keep the window open — the loop re-checks the
+        // drain condition against the wall-clock deadline.
+        let q = Arc::new(BatchQueue::new(0));
+        let (entry, queries) = entry();
+        let (p1, _r1) = pend(&entry, queries.row(0), 0.0);
+        assert!(q.push(p1).is_ok());
+        let q2 = Arc::clone(&q);
+        let (p2, _r2) = pend(&entry, queries.row(1), 1.0);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(q2.push(p2).is_ok());
+        });
+        let mut out = Vec::new();
+        // max_batch 3 > 2 pushes: the second push wakes the window but
+        // does not fill it, so the loop must keep waiting (not break)
+        // and return both items when the deadline lapses.
+        q.next_batch(3, Duration::from_millis(300), &mut out);
+        pusher.join().unwrap();
+        assert_eq!(out.len(), 2, "late arrival joined the open window");
+    }
+
+    #[test]
+    fn zero_wait_drains_immediately_without_spinning() {
+        let q = BatchQueue::new(0);
+        let (entry, queries) = entry();
+        let (p1, _r1) = pend(&entry, queries.row(0), 0.0);
+        assert!(q.push(p1).is_ok());
+        let started = Instant::now();
+        let mut out = Vec::new();
+        q.next_batch(8, Duration::ZERO, &mut out);
+        assert_eq!(out.len(), 1);
+        // No admission window at --max-wait-us 0: the call returns as
+        // soon as the pending item is drained.
+        assert!(started.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn overdue_queries_get_deadline_exceeded_and_skip_scoring() {
+        let (entry, queries) = entry();
+        let metrics = Metrics::new();
+        let (mut expired, rx_expired) = pend(&entry, queries.row(0), 0.0);
+        expired.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (mut live, _rx_live) = pend(&entry, queries.row(1), 1.0);
+        live.deadline = Some(Instant::now() + Duration::from_secs(60));
+        let mut batch = vec![expired, live];
+        expire_overdue(&mut batch, &metrics);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, Some(1.0));
+        let reply = rx_expired.recv().unwrap();
+        assert!(reply.contains("deadline_exceeded"), "{reply}");
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        assert_eq!(metrics.snapshot().get("m").unwrap().expired, 1);
+    }
+
 }

@@ -73,6 +73,12 @@ pub struct ModelMetrics {
     pub requests: u64,
     /// Per-model request errors (dimension mismatches and the like).
     pub errors: u64,
+    /// Queries shed at admission: the queue was at its `--max-queue`
+    /// bound, so the client got an explicit overload reply instead.
+    pub shed: u64,
+    /// Queries that out-waited their `--deadline-us` in the queue and
+    /// were answered `deadline_exceeded` without being scored.
+    pub expired: u64,
     /// Micro-batches this model appeared in (a mixed batch counts once
     /// per model group).
     pub batches: u64,

@@ -17,6 +17,18 @@
 //! Shutdown (`{"cmd":"shutdown"}`) is graceful: admissions close,
 //! in-flight batches drain and their responses flush, then the accept
 //! loop and every connection thread exit and [`Server::run`] returns.
+//!
+//! Overload is handled explicitly rather than by unbounded queueing:
+//! the admission queue is bounded (`--max-queue`; over-bound queries
+//! are shed with an error reply), queries carry optional deadlines
+//! (`--deadline-us`; overdue queries are answered `deadline_exceeded`
+//! instead of scored), concurrent connections are capped
+//! (`--max-conns`; over-cap connections get one polite error line),
+//! slow readers hit a write timeout instead of wedging their
+//! connection thread, and a panic inside a scoring pass quarantines
+//! that model generation (new requests are refused until a reload)
+//! while the server keeps serving every other model. Shed and expired
+//! counts are surfaced per model by `{"cmd":"stats"}`.
 
 pub mod batcher;
 pub mod metrics;
@@ -27,7 +39,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead as _, Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -36,13 +48,19 @@ use crate::svm::schema::AnyModel;
 use crate::util::error::{Context as _, Result};
 use crate::util::json::{write_json_string, Json};
 
-use batcher::{BatchQueue, Pending};
+use batcher::{BatchQueue, Pending, PushError};
 use metrics::Metrics;
 use protocol::Request;
 use registry::Registry;
 
 /// How often blocked connection reads wake to poll the shutdown flag.
 const POLL: Duration = Duration::from_millis(25);
+
+/// Per-socket write timeout: a client that stops reading its replies
+/// stalls only its own connection thread for this long, then the write
+/// errors and the connection closes — slow readers cannot wedge the
+/// server or pin buffers forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Serving configuration (the `pasmo serve` flags).
 #[derive(Debug, Clone)]
@@ -57,6 +75,18 @@ pub struct ServeConfig {
     pub max_wait_us: u64,
     /// Scoring worker threads per batch pass (1 = inline).
     pub threads: usize,
+    /// Admission-queue bound (`--max-queue`, 0 = unbounded): when this
+    /// many queries are already waiting, new score requests are shed
+    /// with an explicit error reply instead of growing the backlog.
+    pub max_queue: usize,
+    /// Per-query deadline in microseconds (`--deadline-us`, 0 = none):
+    /// a query still waiting in the admission queue past its deadline
+    /// is answered `deadline_exceeded` and never scored.
+    pub deadline_us: u64,
+    /// Concurrent-connection cap (`--max-conns`, 0 = unlimited): a
+    /// connection over the cap gets one polite error line and is
+    /// closed; established connections are unaffected.
+    pub max_conns: usize,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +96,9 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait_us: 200,
             threads: 1,
+            max_queue: 1024,
+            deadline_us: 0,
+            max_conns: 0,
         }
     }
 }
@@ -78,6 +111,7 @@ struct ServerState {
     metrics: Metrics,
     shutdown: AtomicBool,
     protocol_errors: AtomicU64,
+    active_conns: AtomicUsize,
     started: Instant,
     local_addr: SocketAddr,
     config: ServeConfig,
@@ -100,10 +134,11 @@ impl Server {
         let local_addr = listener.local_addr().context("listener local_addr")?;
         let state = Arc::new(ServerState {
             registry: Registry::new(models),
-            queue: BatchQueue::new(),
+            queue: BatchQueue::new(config.max_queue),
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),
             protocol_errors: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
             started: Instant::now(),
             local_addr,
             config,
@@ -136,7 +171,19 @@ impl Server {
                     break;
                 }
                 if let Ok(conn) = stream {
-                    s.spawn(move || handle_connection(state, conn));
+                    // The accept loop is the only incrementer, so the
+                    // check-then-spawn pair cannot race itself; the
+                    // decrement pairs with the connection thread's exit.
+                    let active = state.active_conns.fetch_add(1, Ordering::SeqCst);
+                    if state.config.max_conns > 0 && active >= state.config.max_conns {
+                        state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        s.spawn(move || refuse_connection(conn));
+                        continue;
+                    }
+                    s.spawn(move || {
+                        handle_connection(state, conn);
+                        state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
                 }
             }
             // Idempotent on the shutdown path; on an accept-loop error
@@ -155,8 +202,21 @@ enum Reply {
     Score(mpsc::Receiver<String>),
 }
 
+/// Answer an over-capacity connection with one polite error line and
+/// close it. Established connections are never touched by the cap.
+fn refuse_connection(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let line = protocol::error_response(
+        None,
+        "server at connection capacity (--max-conns); retry later",
+    );
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
 fn handle_connection(state: &ServerState, stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let _ = stream.set_nodelay(true);
     let Ok(mut reader) = stream.try_clone() else { return };
     let mut writer = std::io::BufWriter::new(stream);
@@ -261,16 +321,31 @@ fn process_line(state: &ServerState, line: &str) -> (Reply, bool) {
                 return (Reply::Ready(protocol::error_response(sr.id, &msg)), false);
             }
             let (tx, rx) = mpsc::channel();
+            let deadline = match state.config.deadline_us {
+                0 => None,
+                us => Some(Instant::now() + Duration::from_micros(us)),
+            };
             let pending = Pending {
                 entry,
                 x: sr.x,
                 id: sr.id,
                 enqueued: Instant::now(),
+                deadline,
                 reply: tx,
             };
             match state.queue.push(pending) {
                 Ok(()) => (Reply::Score(rx), false),
-                Err(p) => (
+                Err(PushError::Full(p)) => {
+                    state.metrics.with_model(&p.entry.name, |mm| mm.shed += 1);
+                    (
+                        Reply::Ready(protocol::error_response(
+                            p.id,
+                            "overloaded: admission queue is full (query shed)",
+                        )),
+                        false,
+                    )
+                }
+                Err(PushError::Closed(p)) => (
                     Reply::Ready(protocol::error_response(p.id, "server is shutting down")),
                     false,
                 ),
@@ -315,20 +390,26 @@ fn process_line(state: &ServerState, line: &str) -> (Reply, bool) {
 fn stats_response(state: &ServerState) -> String {
     let snap = state.metrics.snapshot();
     let mut models = BTreeMap::new();
+    let (mut shed_total, mut expired_total) = (0u64, 0u64);
     for entry in state.registry.list() {
         let mut o = BTreeMap::new();
         o.insert("kind".to_string(), Json::Str(entry.model.task_name().to_string()));
         o.insert("n_sv".to_string(), Json::Num(entry.model.n_sv() as f64));
         o.insert("dim".to_string(), Json::Num(entry.model.dim() as f64));
+        o.insert("healthy".to_string(), Json::Bool(entry.is_healthy()));
         let zero = metrics::ModelMetrics::default();
         let mm = snap.get(&entry.name).unwrap_or(&zero);
         o.insert("requests".to_string(), Json::Num(mm.requests as f64));
         o.insert("errors".to_string(), Json::Num(mm.errors as f64));
+        o.insert("shed".to_string(), Json::Num(mm.shed as f64));
+        o.insert("expired".to_string(), Json::Num(mm.expired as f64));
         o.insert("batches".to_string(), Json::Num(mm.batches as f64));
         o.insert("mean_batch".to_string(), Json::Num(mm.mean_batch()));
         o.insert("p50_us".to_string(), Json::Num(mm.latency.quantile_us(0.50) as f64));
         o.insert("p99_us".to_string(), Json::Num(mm.latency.quantile_us(0.99) as f64));
         o.insert("kernel_entries".to_string(), Json::Num(mm.kernel_entries as f64));
+        shed_total += mm.shed;
+        expired_total += mm.expired;
         models.insert(entry.name.clone(), Json::Obj(o));
     }
     let mut top = BTreeMap::new();
@@ -341,6 +422,8 @@ fn stats_response(state: &ServerState) -> String {
         "protocol_errors".to_string(),
         Json::Num(state.protocol_errors.load(Ordering::Relaxed) as f64),
     );
+    top.insert("shed".to_string(), Json::Num(shed_total as f64));
+    top.insert("expired".to_string(), Json::Num(expired_total as f64));
     top.insert("models".to_string(), Json::Obj(models));
     Json::Obj(top).to_string()
 }
@@ -574,19 +657,26 @@ mod tests {
     use crate::data::synth::chessboard;
     use crate::svm::trainer::Trainer;
 
-    fn tiny_server(max_batch: usize) -> (std::thread::JoinHandle<()>, SocketAddr) {
+    fn tiny_model() -> AnyModel {
         let data = Arc::new(chessboard(80, 4, 1));
-        let model = AnyModel::Svc(Trainer::rbf(10.0, 0.5).train(&data).model);
-        let cfg = ServeConfig {
+        AnyModel::Svc(Trainer::rbf(10.0, 0.5).train(&data).model)
+    }
+
+    fn spawn_server(cfg: ServeConfig) -> (std::thread::JoinHandle<()>, SocketAddr) {
+        let server = Server::bind(cfg, vec![("m".to_string(), tiny_model())]).unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        (handle, addr)
+    }
+
+    fn tiny_server(max_batch: usize) -> (std::thread::JoinHandle<()>, SocketAddr) {
+        spawn_server(ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             max_batch,
             max_wait_us: 100,
             threads: 1,
-        };
-        let server = Server::bind(cfg, vec![("m".to_string(), model)]).unwrap();
-        let addr = server.local_addr();
-        let handle = std::thread::spawn(move || server.run().unwrap());
-        (handle, addr)
+            ..ServeConfig::default()
+        })
     }
 
     #[test]
@@ -643,6 +733,125 @@ mod tests {
         assert_eq!(report.ok, 40, "errors: {}", report.errors);
         assert!(report.qps > 0.0);
         assert!(report.p99_us >= report.p50_us);
+        let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn expired_queries_get_deadline_exceeded_replies() {
+        // A 1 ms deadline against a 100 ms admission window: the lone
+        // query always out-waits its deadline inside the window, so the
+        // expiry path is exercised deterministically.
+        let (handle, addr) = spawn_server(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 8,
+            max_wait_us: 100_000,
+            threads: 1,
+            deadline_us: 1_000,
+            ..ServeConfig::default()
+        });
+        let resp = request_once(addr, r#"{"x":[0.5,0.5],"id":9}"#).unwrap();
+        assert!(resp.contains("deadline_exceeded"), "{resp}");
+        assert!(resp.contains("\"id\":9"), "{resp}");
+        let stats = request_once(addr, r#"{"cmd":"stats"}"#).unwrap();
+        let v = Json::parse(&stats).unwrap();
+        assert_eq!(v.get("expired").and_then(Json::as_f64), Some(1.0), "{stats}");
+        let m = v.get("models").and_then(|m| m.get("m")).unwrap();
+        assert_eq!(m.get("expired").and_then(Json::as_f64), Some(1.0));
+        let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn connection_cap_refuses_politely_without_touching_established_conns() {
+        let (handle, addr) = spawn_server(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 4,
+            max_wait_us: 100,
+            threads: 1,
+            max_conns: 1,
+            ..ServeConfig::default()
+        });
+        // First connection occupies the only slot…
+        let mut first = TcpStream::connect(addr).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        first.write_all(b"{\"x\":[0.5,0.5],\"id\":1}\n").unwrap();
+        let mut reader = std::io::BufReader::new(first.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        // …so a second one is refused with a single error line, while
+        // the first keeps serving.
+        let mut second = TcpStream::connect(addr).unwrap();
+        second.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut line2 = String::new();
+        std::io::BufReader::new(&second)
+            .read_line(&mut line2)
+            .unwrap();
+        assert!(line2.contains("connection capacity"), "{line2}");
+        drop(second);
+        first.write_all(b"{\"x\":[0.1,0.9],\"id\":2}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true") && line.contains("\"id\":2"), "{line}");
+        // Closing the first connection frees the slot for the shutdown
+        // client.
+        drop(reader);
+        drop(first);
+        // The slot release races the next accept: retry briefly.
+        let mut bye = String::new();
+        for _ in 0..100 {
+            bye = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
+            if bye.contains("shutting_down") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(bye.contains("shutting_down"), "{bye}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn overfull_queue_sheds_with_an_explicit_reply() {
+        // max_queue = 1 with a wide-open admission window: the first
+        // query sits undrained in the queue for the whole 100 ms window
+        // (next_batch only drains when the window closes), so the rest
+        // of the pipelined burst finds the queue at capacity
+        // deterministically.
+        let (handle, addr) = spawn_server(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 2,
+            max_wait_us: 100_000,
+            threads: 1,
+            max_queue: 1,
+            ..ServeConfig::default()
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        stream
+            .write_all(b"{\"x\":[0.5,0.5],\"id\":1}\n{\"x\":[0.5,0.5],\"id\":2}\n{\"x\":[0.5,0.5],\"id\":3}\n")
+            .unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let (mut ok, mut shed) = (0, 0);
+        let mut line = String::new();
+        for _ in 0..3 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            if line.contains("\"ok\":true") {
+                ok += 1;
+            } else if line.contains("queue is full") {
+                shed += 1;
+            }
+        }
+        assert_eq!(ok, 1, "exactly the first query scores");
+        assert_eq!(shed, 2, "the rest of the burst is shed");
+        let stats = request_once(addr, r#"{"cmd":"stats"}"#).unwrap();
+        let v = Json::parse(&stats).unwrap();
+        assert_eq!(
+            v.get("shed").and_then(Json::as_f64),
+            Some(shed as f64),
+            "{stats}"
+        );
         let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
         handle.join().unwrap();
     }

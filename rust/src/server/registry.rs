@@ -11,6 +11,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::svm::schema::{load_any, AnyModel};
@@ -29,6 +30,11 @@ pub struct ModelEntry {
     /// a single entry for svc/svr/oneclass, one per pairwise machine
     /// (aligned with `OvoModel::machines`) for multiclass.
     pub invariants: Vec<SupportInvariants>,
+    /// Health flag: cleared when a scoring pass over this entry
+    /// panics. Unhealthy entries are refused by [`Registry::resolve`]
+    /// until the name is reloaded (a reload installs a fresh, healthy
+    /// entry).
+    healthy: AtomicBool,
 }
 
 impl ModelEntry {
@@ -50,7 +56,20 @@ impl ModelEntry {
                 .map(|b| SupportInvariants::compute(b.kernel, &b.support, &b.coef))
                 .collect(),
         };
-        ModelEntry { name, model, invariants }
+        ModelEntry { name, model, invariants, healthy: AtomicBool::new(true) }
+    }
+
+    /// Is this entry still serving? (Cleared by [`ModelEntry::quarantine`].)
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::SeqCst)
+    }
+
+    /// Mark this entry unhealthy after a scoring fault: queries that
+    /// already captured the `Arc` get error replies, and
+    /// [`Registry::resolve`] refuses new ones until a reload replaces
+    /// the entry.
+    pub fn quarantine(&self) {
+        self.healthy.store(false, Ordering::SeqCst);
     }
 }
 
@@ -78,9 +97,10 @@ impl Registry {
 
     /// Resolve the model a score request targets. `None` is accepted
     /// only while exactly one model is loaded (the single-model fast
-    /// path); the error strings are client-facing.
+    /// path); quarantined entries are refused until reloaded. The error
+    /// strings are client-facing.
     pub fn resolve(&self, name: Option<&str>) -> std::result::Result<Arc<ModelEntry>, String> {
-        self.read_map(|map| match name {
+        let entry = self.read_map(|map| match name {
             Some(n) => map
                 .get(n)
                 .cloned()
@@ -95,7 +115,15 @@ impl Registry {
                 "{} models loaded; the request must name one (\"model\": ...)",
                 map.len()
             )),
-        })
+        })?;
+        if !entry.is_healthy() {
+            return Err(format!(
+                "model {:?} is quarantined after a scoring fault; reload it \
+                 ({{\"cmd\":\"load\"}}) to restore",
+                entry.name
+            ));
+        }
+        Ok(entry)
     }
 
     /// Register (or hot-swap) `model` under `name`. Queries admitted
@@ -169,6 +197,21 @@ mod tests {
         assert!(Arc::ptr_eq(&reg.resolve(Some("m")).unwrap(), &after));
         // the captured generation still scores: its invariants line up
         assert_eq!(before.invariants.len(), 1);
+    }
+
+    #[test]
+    fn quarantined_entries_are_refused_until_reload() {
+        let reg = Registry::new(vec![("m".to_string(), tiny_model())]);
+        let entry = reg.resolve(Some("m")).unwrap();
+        assert!(entry.is_healthy());
+        entry.quarantine();
+        let err = reg.resolve(Some("m")).unwrap_err();
+        assert!(err.contains("quarantined"), "{err}");
+        // the single-model fallback path refuses it too
+        assert!(reg.resolve(None).unwrap_err().contains("quarantined"));
+        // a hot-swap installs a fresh, healthy generation
+        reg.insert("m", tiny_model());
+        assert!(reg.resolve(Some("m")).is_ok());
     }
 
     #[test]

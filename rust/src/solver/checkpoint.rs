@@ -1,0 +1,234 @@
+//! Solver checkpoints: crash-safe snapshots of a long-running solve.
+//!
+//! A checkpoint captures everything needed to resume a training solve
+//! after the process dies: the dual iterate α **in original
+//! coordinates** (the shrink permutation is undone before serialization
+//! — see [`crate::solver::SolverState::alpha_original`] — so the stored
+//! vector is a plain identity-ordered snapshot and no permutation needs
+//! to be persisted alongside it), the cumulative iteration count, and
+//! the objective at snapshot time for sanity reporting. Resuming feeds
+//! the α back through [`crate::solver::QpProblem::warm_start`], which
+//! clamps/repairs it against the (possibly different) box and
+//! reconstructs the gradient — the same path grid-search warm starts
+//! use, so a resumed solve is an ordinary warm-started solve.
+//!
+//! On disk a checkpoint is a schema-v2-style JSON envelope written
+//! atomically with an embedded content checksum
+//! ([`crate::util::artifact`]): a kill mid-write leaves the previous
+//! checkpoint intact, and a truncated or bit-flipped file is refused at
+//! load with a positioned parse error or a checksum mismatch instead of
+//! resuming from garbage.
+//!
+//! ```
+//! use pasmo::solver::Checkpoint;
+//!
+//! let dir = std::env::temp_dir().join("pasmo-checkpoint-doc");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join("ck.json");
+//! let ck = Checkpoint {
+//!     alpha: vec![0.5, -0.5],
+//!     iterations: 42,
+//!     objective: 1.25,
+//!     eps: 1e-3,
+//! };
+//! ck.save(&path).unwrap();
+//! let back = Checkpoint::load(&path).unwrap();
+//! assert_eq!(back.alpha, ck.alpha);
+//! assert_eq!(back.iterations, 42);
+//! std::fs::remove_file(&path).unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::artifact;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{bail, ensure};
+
+/// The on-disk `format` tag of a checkpoint envelope.
+pub const FORMAT: &str = "pasmo-checkpoint";
+/// Current envelope version.
+pub const VERSION: u64 = 1;
+
+/// A resumable snapshot of a training solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Dual variables in original coordinates (permutation undone).
+    pub alpha: Vec<f64>,
+    /// Cumulative iterations performed up to this snapshot (across all
+    /// resumed segments).
+    pub iterations: u64,
+    /// Dual objective at snapshot time (reporting only; recomputed on
+    /// resume).
+    pub objective: f64,
+    /// Stopping accuracy ε the interrupted solve was running with.
+    pub eps: f64,
+}
+
+impl Checkpoint {
+    /// Serialize to the JSON envelope (without the checksum — the
+    /// artifact writer stamps that).
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("format".to_string(), Json::Str(FORMAT.to_string()));
+        obj.insert("version".to_string(), Json::Num(VERSION as f64));
+        obj.insert("n".to_string(), Json::Num(self.alpha.len() as f64));
+        obj.insert(
+            "alpha".to_string(),
+            Json::Arr(self.alpha.iter().map(|&a| Json::Num(a)).collect()),
+        );
+        obj.insert("iterations".to_string(), Json::Num(self.iterations as f64));
+        obj.insert("objective".to_string(), Json::Num(self.objective));
+        obj.insert("eps".to_string(), Json::Num(self.eps));
+        Json::Obj(obj)
+    }
+
+    /// Write the checkpoint atomically (temp file + rename, checksummed).
+    /// A crash at any point leaves either the previous checkpoint or
+    /// nothing — never a partial file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        artifact::save_json(path, self.to_json())
+            .with_context(|| format!("save checkpoint {}", path.display()))
+    }
+
+    /// Load and validate a checkpoint. Refuses wrong formats/versions,
+    /// corrupted content (checksum), truncated files (positioned parse
+    /// error) and malformed fields.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let doc = artifact::load_json(path)
+            .with_context(|| format!("load checkpoint {}", path.display()))?;
+        let format = doc
+            .get("format")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("{}: missing format tag", path.display()))?;
+        ensure!(
+            format == FORMAT,
+            "{}: not a checkpoint (format {format:?}, expected {FORMAT:?})",
+            path.display()
+        );
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("{}: missing version", path.display()))?;
+        ensure!(
+            version as u64 == VERSION,
+            "{}: unsupported checkpoint version {version} (expected {VERSION})",
+            path.display()
+        );
+        let n = doc
+            .get("n")
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("{}: missing n", path.display()))?;
+        let alpha_json = doc
+            .get("alpha")
+            .and_then(|v| v.as_arr())
+            .with_context(|| format!("{}: missing alpha array", path.display()))?;
+        let mut alpha = Vec::with_capacity(alpha_json.len());
+        for (i, v) in alpha_json.iter().enumerate() {
+            match v.as_f64() {
+                Some(a) => alpha.push(a),
+                None => bail!("{}: alpha[{i}]: expected a number", path.display()),
+            }
+        }
+        ensure!(
+            alpha.len() == n,
+            "{}: alpha has {} entries, envelope says n={n}",
+            path.display(),
+            alpha.len()
+        );
+        let iterations = doc
+            .get("iterations")
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("{}: missing iterations", path.display()))?
+            as u64;
+        let objective = doc
+            .get("objective")
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("{}: missing objective", path.display()))?;
+        let eps = doc
+            .get("eps")
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("{}: missing eps", path.display()))?;
+        Ok(Checkpoint { alpha, iterations, objective, eps })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pasmo-checkpoint-{tag}-{}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir.join("ck.json")
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            alpha: vec![0.25, -0.25, 1.5, -1.5],
+            iterations: 1234,
+            objective: 9.875,
+            eps: 1e-3,
+        }
+    }
+
+    #[test]
+    fn round_trips_bit_exact() {
+        let path = tmp("roundtrip");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        // f64 bits survive the shortest-round-trip number rendering
+        for (a, b) in ck.alpha.iter().zip(&back.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_refused_with_a_positioned_error() {
+        let path = tmp("truncated");
+        sample().save(&path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() / 3]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("parse"), "{err}");
+        assert!(err.contains("byte"), "{err}");
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bit_flipped_checkpoint_fails_the_checksum() {
+        let path = tmp("bitflip");
+        sample().save(&path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace("1234", "1235")).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn wrong_format_and_length_mismatch_are_refused() {
+        let path = tmp("format");
+        fs::write(&path, "{\"format\":\"pasmo-model\",\"version\":1}").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a checkpoint"), "{err}");
+        fs::write(
+            &path,
+            "{\"format\":\"pasmo-checkpoint\",\"version\":1,\"n\":3,\"alpha\":[0.5],\
+             \"iterations\":1,\"objective\":0,\"eps\":0.001}",
+        )
+        .unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("envelope says n=3"), "{err}");
+        fs::remove_file(&path).unwrap();
+    }
+}

@@ -68,7 +68,7 @@ use crate::kernel::matrix::Gram;
 
 use super::engine::Engine;
 use super::events::StepKind;
-use super::smo::{SolveResult, SolverConfig, SolverCore};
+use super::smo::{SolveResult, SolverConfig, SolverCore, StopReason};
 use super::state::SolverState;
 use super::step::{clamp, SubProblem, TAU};
 use super::wss::GainKind;
@@ -294,13 +294,13 @@ impl ConjugateSmoSolver {
         let mut mom = Momentum::new(core.state.len(), core.state.active_len);
         // Combined-direction scratch, reused across iterations.
         let mut dir: Vec<(usize, f64)> = Vec::new();
-        let converged = loop {
-            if let Some(done) = core.check_stop_and_shrink() {
-                break done;
+        let reason = loop {
+            if let Some(stop) = core.check_stop_and_shrink() {
+                break stop;
             }
             mom.revalidate(&core.state);
             let Some(sel) = core.select(GainKind::Approx, &[]) else {
-                break true; // no violating pair on the active set
+                break StopReason::Converged; // no violating pair on the active set
             };
             core.iterations += 1;
             let (i, j) = (sel.i, sel.j);
@@ -369,7 +369,7 @@ impl ConjugateSmoSolver {
                 core.telemetry.record_objective(it, || obj);
             }
         };
-        core.finish(converged, started)
+        core.finish(reason, started)
     }
 }
 

@@ -28,7 +28,11 @@
 //!   dual (linear term, per-index bounds, equality target, warm start).
 //! * [`engine`] — the [`Engine`] trait every solver implements, plus the
 //!   single [`SolverChoice`] → engine factory ([`EngineConfig`]).
+//! * [`checkpoint`] — crash-safe solver snapshots (α in original
+//!   coordinates, atomic checksummed envelope) resumed through the
+//!   [`QpProblem`] warm-start path.
 
+pub mod checkpoint;
 pub mod conjugate;
 pub mod engine;
 pub mod events;
@@ -41,10 +45,11 @@ pub mod state;
 pub mod step;
 pub mod wss;
 
+pub use checkpoint::Checkpoint;
 pub use conjugate::ConjugateSmoSolver;
 pub use engine::{Engine, EngineConfig, SolverChoice};
 pub use events::{StepKind, Telemetry, TelemetryConfig};
 pub use pasmo::PasmoSolver;
 pub use problem::QpProblem;
-pub use smo::{SmoSolver, SolveResult, SolverConfig, StepPolicy, WssKind};
+pub use smo::{SmoSolver, SolveResult, SolverConfig, StepPolicy, StopReason, WssKind};
 pub use state::SolverState;

@@ -22,7 +22,7 @@ use crate::kernel::matrix::Gram;
 
 use super::engine::Engine;
 use super::events::StepKind;
-use super::smo::{SolveResult, SolverConfig, SolverCore};
+use super::smo::{SolveResult, SolverConfig, SolverCore, StopReason};
 use super::state::SolverState;
 use super::step::{PlanningSystem, SubProblem};
 use super::wss::{GainKind, Selection};
@@ -114,9 +114,9 @@ impl PasmoSolver {
         // μ^(t−1)/μ* of the most recent planning step.
         let mut prev_ratio = 1.0f64;
 
-        let converged = loop {
-            if let Some(done) = core.check_stop_and_shrink() {
-                break done;
+        let reason = loop {
+            if let Some(stop) = core.check_stop_and_shrink() {
+                break stop;
             }
             // Map an original-coordinate pair to current active positions.
             let to_pos = |st: &SolverState, (a, b): (usize, usize)| {
@@ -152,7 +152,7 @@ impl PasmoSolver {
                 GainKind::Exact
             };
             let Some(sel) = core.select(kind, &extras) else {
-                break true;
+                break StopReason::Converged;
             };
             core.iterations += 1;
 
@@ -207,7 +207,7 @@ impl PasmoSolver {
             history.push_front((core.state.perm[sel.i], core.state.perm[sel.j]));
             history.truncate(n_cand + 2);
         };
-        core.finish(converged, started)
+        core.finish(reason, started)
     }
 }
 

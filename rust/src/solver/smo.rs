@@ -2,6 +2,7 @@
 //! equivalent to LIBSVM 2.84's solver with second-order working-set
 //! selection — plus the shared iteration core reused by PA-SMO.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use crate::kernel::cache::CacheStats;
@@ -25,6 +26,31 @@ pub enum WssKind {
 
 /// Step policy re-export (§7.3's over-relaxation ablation lives here).
 pub type StepPolicy = OverStep;
+
+/// Why a solve stopped — surfaced in [`SolveResult::stop_reason`] so
+/// callers can distinguish a real ε-approximate KKT point from a run
+/// that merely hit its iteration budget or was asked to checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The ε-approximate KKT condition held on the full problem.
+    Converged,
+    /// The iteration cap (`SolverConfig::max_iter` or the LIBSVM-style
+    /// default) was reached before convergence.
+    IterLimit,
+    /// The cooperative stop flag ([`SolverConfig::stop_flag`]) was raised
+    /// — the caller intends to checkpoint and resume this solve.
+    Checkpointed,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            StopReason::Converged => "converged",
+            StopReason::IterLimit => "iteration-limit",
+            StopReason::Checkpointed => "checkpointed",
+        })
+    }
+}
 
 /// Solver configuration shared by SMO and PA-SMO.
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +84,13 @@ pub struct SolverConfig {
     /// Threaded rows are bit-identical to single-threaded ones, so the
     /// solve path — and `SolveResult::alpha` — does not depend on this.
     pub threads: usize,
+    /// Cooperative early-stop flag (SIGTERM-style). When the referenced
+    /// flag turns `true` the solver stops at the next iteration boundary
+    /// and reports [`StopReason::Checkpointed`]; the caller snapshots
+    /// `SolveResult::alpha` (already in original coordinates) and later
+    /// resumes through the `QpProblem` warm-start path. `None` (the
+    /// default) compiles to a no-op check.
+    pub stop_flag: Option<&'static AtomicBool>,
 }
 
 impl Default for SolverConfig {
@@ -75,6 +108,7 @@ impl Default for SolverConfig {
             planning_candidates: 1,
             ablation_wss_only: false,
             threads: 1,
+            stop_flag: None,
         }
     }
 }
@@ -96,6 +130,10 @@ pub struct SolveResult {
     /// Did the solve reach the ε-approximate KKT point (vs hitting the
     /// iteration cap)?
     pub converged: bool,
+    /// Why the solve stopped (convergence, iteration cap, or a raised
+    /// checkpoint flag) — `converged` is exactly
+    /// `stop_reason == StopReason::Converged`.
+    pub stop_reason: StopReason,
     /// Support vectors (|αᵢ| > 0) in the solution.
     pub sv: usize,
     /// Bounded support vectors (αᵢ at its box bound).
@@ -181,10 +219,15 @@ impl<'a> SolverCore<'a> {
     }
 
     /// Stopping / shrinking bookkeeping run at the top of each iteration.
-    /// Returns `Some(converged)` if the loop should stop.
-    pub fn check_stop_and_shrink(&mut self) -> Option<bool> {
+    /// Returns `Some(reason)` if the loop should stop.
+    pub fn check_stop_and_shrink(&mut self) -> Option<StopReason> {
         #[cfg(feature = "debug-invariants")]
         self.state.check_invariants(self.equality_sum);
+        if let Some(flag) = self.config.stop_flag {
+            if flag.load(Ordering::Relaxed) {
+                return Some(StopReason::Checkpointed);
+            }
+        }
         let (m, big_m, gap, argmax) = match self.cached_scan.take() {
             Some(scan) => scan,
             None => {
@@ -203,12 +246,12 @@ impl<'a> SolverCore<'a> {
                 let (_, _, full_gap, full_argmax) = self.state.kkt_scan();
                 self.hint_argmax_up = full_argmax.map(|p| self.state.perm[p]);
                 if full_gap <= self.config.eps {
-                    return Some(true);
+                    return Some(StopReason::Converged);
                 }
                 // keep optimizing on the full set
                 return None;
             }
-            return Some(true);
+            return Some(StopReason::Converged);
         }
         if self.config.shrinking && !self.unshrunk {
             self.shrink_counter -= 1;
@@ -218,7 +261,7 @@ impl<'a> SolverCore<'a> {
             }
         }
         if self.iterations >= self.max_iter() {
-            return Some(false);
+            return Some(StopReason::IterLimit);
         }
         None
     }
@@ -353,7 +396,7 @@ impl<'a> SolverCore<'a> {
         (mu, free)
     }
 
-    pub fn finish(mut self, converged: bool, started: Instant) -> SolveResult {
+    pub fn finish(mut self, reason: StopReason, started: Instant) -> SolveResult {
         // Always report on the full problem, in original coordinates.
         shrink::unshrink_and_reconstruct(&mut self.state, self.gram);
         #[cfg(feature = "debug-invariants")]
@@ -366,7 +409,8 @@ impl<'a> SolverCore<'a> {
             alpha: self.state.alpha_original(),
             iterations: self.iterations,
             gap,
-            converged,
+            converged: reason == StopReason::Converged,
+            stop_reason: reason,
             sv,
             bsv,
             wall_time_s: started.elapsed().as_secs_f64(),
@@ -432,12 +476,12 @@ impl SmoSolver {
     }
 
     fn run(&self, mut core: SolverCore, started: Instant) -> SolveResult {
-        let converged = loop {
-            if let Some(done) = core.check_stop_and_shrink() {
-                break done;
+        let reason = loop {
+            if let Some(stop) = core.check_stop_and_shrink() {
+                break stop;
             }
             let Some(sel) = core.select(GainKind::Approx, &[]) else {
-                break true; // no violating pair on the active set
+                break StopReason::Converged; // no violating pair on the active set
             };
             core.iterations += 1;
             core.smo_step(sel);
@@ -448,7 +492,7 @@ impl SmoSolver {
                 core.telemetry.record_objective(it, || obj);
             }
         };
-        core.finish(converged, started)
+        core.finish(reason, started)
     }
 }
 
@@ -639,7 +683,35 @@ pub(crate) mod tests {
         let cfg = SolverConfig { max_iter: 3, ..Default::default() };
         let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
         assert!(!res.converged);
+        assert_eq!(res.stop_reason, StopReason::IterLimit);
         assert!(res.iterations <= 4);
+    }
+
+    #[test]
+    fn stop_reason_is_converged_on_a_full_solve() {
+        let ds = random_problem(60, 4);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        let res = solve_cls(&SmoSolver::new(SolverConfig::default()), ds.labels(), 1.0, &mut gram);
+        assert!(res.converged);
+        assert_eq!(res.stop_reason, StopReason::Converged);
+    }
+
+    #[test]
+    fn raised_stop_flag_checkpoints_at_the_next_iteration_boundary() {
+        static FLAG: AtomicBool = AtomicBool::new(false);
+        let ds = random_problem(80, 12);
+        let mut gram = make_gram(&ds, 1.0, 1 << 22);
+        FLAG.store(true, Ordering::Relaxed);
+        let cfg = SolverConfig { stop_flag: Some(&FLAG), ..Default::default() };
+        let res = solve_cls(&SmoSolver::new(cfg), ds.labels(), 1.0, &mut gram);
+        assert_eq!(res.stop_reason, StopReason::Checkpointed);
+        assert!(!res.converged);
+        // The flag fires before the first step: nothing was optimized,
+        // but the result is still a feasible original-coordinate iterate.
+        assert_eq!(res.iterations, 0);
+        let sum: f64 = res.alpha.iter().sum();
+        assert!(sum.abs() < 1e-9);
+        FLAG.store(false, Ordering::Relaxed);
     }
 
     #[test]

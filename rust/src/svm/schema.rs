@@ -22,6 +22,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::util::artifact;
 use crate::util::error::{Context, Error, Result};
 use crate::util::json::Json;
 use crate::{bail, ensure};
@@ -89,6 +90,9 @@ pub fn load_any(path: &Path) -> Result<AnyModel> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("read {}", path.display()))?;
     let v = Json::parse(&text).map_err(|e| Error::msg(format!("parse model: {e}")))?;
+    // Artifacts written by `save` carry a content checksum; verify it
+    // before trusting any field. Older files without one still load.
+    artifact::verify_checksum(&v).with_context(|| format!("load {}", path.display()))?;
     let kind = match v.get("kind") {
         None => "svc", // v1 files predate the tag
         Some(k) => k.as_str().context("kind: expected a string")?,
@@ -103,9 +107,12 @@ pub fn load_any(path: &Path) -> Result<AnyModel> {
     Ok(loaded)
 }
 
-/// Write a schema document to disk (compact JSON).
+/// Write a schema document to disk: checksummed, then atomically via a
+/// temp file + rename in the target directory ([`crate::util::artifact`]).
+/// A crash or IO failure mid-save leaves the previous file (or nothing)
+/// on disk — never a truncated model.
 pub fn save(path: &Path, doc: &Json) -> Result<()> {
-    std::fs::write(path, doc.to_string())
+    artifact::save_json(path, doc.clone())
         .with_context(|| format!("write {}", path.display()))
 }
 
@@ -475,6 +482,52 @@ mod tests {
         let err = load_any(&path).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("machines[0]") && msg.contains("dim"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn saved_models_carry_a_verified_checksum() {
+        let path = dir().join("checksummed.json");
+        let doc = Json::parse(
+            "{\"kernel\":\"rbf\",\"gamma\":0.5,\"coef0\":0,\"degree\":0,\
+             \"bias\":0.25,\"dim\":2,\"coef\":[1.5,-0.5],\
+             \"labels\":[1,-1],\"sv\":[[1,0],[0,1]]}",
+        )
+        .unwrap();
+        save(&path, &doc).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"checksum\":\"fnv1a:"), "{text}");
+        // Round trip succeeds with the checksum verified…
+        assert!(matches!(load_any(&path).unwrap(), AnyModel::Svc(_)));
+        // …and a single corrupted digit is refused.
+        std::fs::write(&path, text.replace("0.25", "0.26")).unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_model_is_refused_and_save_is_atomic() {
+        let path = dir().join("truncated-model.json");
+        let doc = Json::parse(
+            "{\"kernel\":\"linear\",\"gamma\":0,\"coef0\":0,\"degree\":0,\
+             \"bias\":0,\"dim\":1,\"coef\":[1],\"labels\":[1],\"sv\":[[1]]}",
+        )
+        .unwrap();
+        save(&path, &doc).unwrap();
+        let good = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("byte"), "{err:#}");
+        // Re-saving replaces the corrupt file atomically; no temp files
+        // remain next to it.
+        save(&path, &doc).unwrap();
+        assert!(matches!(load_any(&path).unwrap(), AnyModel::Svc(_)));
+        let tmp_left = std::fs::read_dir(dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().contains(".tmp."));
+        assert!(!tmp_left, "temp artifact files left behind");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,260 @@
+//! Crash-safe artifact IO: atomic temp-file + rename writes with an
+//! embedded content checksum verified on load.
+//!
+//! Every artifact the system persists (model files, solver checkpoints,
+//! `BENCH_*.json` reports) goes through [`save_json`]: the document is
+//! stamped with an FNV-1a 64 checksum over its canonical serialization,
+//! written to a temporary file *in the same directory* as the target,
+//! flushed, and only then renamed into place. A crash or injected IO
+//! fault at any point leaves either the old artifact or nothing — never
+//! a half-written file. [`load_json`] re-verifies the checksum when the
+//! field is present (older artifacts without one still load), so silent
+//! on-disk corruption is refused with a clear error instead of being
+//! parsed into a subtly wrong model.
+//!
+//! ```
+//! use pasmo::util::artifact;
+//! use pasmo::util::json::Json;
+//! use std::collections::BTreeMap;
+//!
+//! let dir = std::env::temp_dir().join("pasmo-artifact-doc");
+//! std::fs::create_dir_all(&dir).unwrap();
+//! let path = dir.join("doc.json");
+//! let mut obj = BTreeMap::new();
+//! obj.insert("answer".to_string(), Json::Num(42.0));
+//! artifact::save_json(&path, Json::Obj(obj)).unwrap();
+//! let doc = artifact::load_json(&path).unwrap();
+//! assert_eq!(doc.get("answer").and_then(|v| v.as_f64()), Some(42.0));
+//! assert!(doc.get("checksum").is_some());
+//! std::fs::remove_file(&path).unwrap();
+//! ```
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::faults;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// Name of the checksum field stamped into saved JSON artifacts.
+pub const CHECKSUM_FIELD: &str = "checksum";
+
+/// FNV-1a 64-bit hash of a byte string (the artifact checksum basis).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Render a checksum as the stored field value (`fnv1a:` + 16 hex digits).
+fn checksum_string(h: u64) -> String {
+    format!("fnv1a:{h:016x}")
+}
+
+/// Distinguishes concurrent writers targeting the same path so their
+/// temporary files never collide.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_path_for(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".to_string());
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp_name = format!(".{name}.tmp.{}.{seq}", std::process::id());
+    match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(tmp_name),
+        _ => PathBuf::from(tmp_name),
+    }
+}
+
+/// Write `bytes` to `path` atomically: a temporary sibling file is
+/// written and flushed first, then renamed over the target. On any
+/// failure the temporary file is removed and the target is untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path_for(path);
+    let attempt = (|| -> std::io::Result<()> {
+        faults::maybe_io_error("artifact.write")?;
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        faults::maybe_io_error("artifact.sync")?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)
+    })();
+    if let Err(e) = attempt {
+        let _ = fs::remove_file(&tmp);
+        return Err(Error::msg(e.to_string()))
+            .with_context(|| format!("write {}", path.display()));
+    }
+    Ok(())
+}
+
+/// Stamp a JSON object with its content checksum and write it
+/// atomically. The checksum covers the canonical serialization of the
+/// document *without* the checksum field, so [`load_json`] can recompute
+/// and compare it.
+pub fn save_json(path: &Path, doc: Json) -> Result<()> {
+    let mut obj = match doc {
+        Json::Obj(obj) => obj,
+        other => {
+            let mut text = other.to_string();
+            text.push('\n');
+            return write_atomic(path, text.as_bytes());
+        }
+    };
+    obj.remove(CHECKSUM_FIELD);
+    let stripped = Json::Obj(obj);
+    let sum = checksum_string(fnv1a64(stripped.to_string().as_bytes()));
+    let mut obj = match stripped {
+        Json::Obj(obj) => obj,
+        _ => return Err(Error::msg("artifact document must be an object")),
+    };
+    obj.insert(CHECKSUM_FIELD.to_string(), Json::Str(sum));
+    let mut text = Json::Obj(obj).to_string();
+    text.push('\n');
+    write_atomic(path, text.as_bytes())
+}
+
+/// Verify the embedded checksum of a parsed artifact, if present.
+///
+/// Documents without a `checksum` field pass (artifacts written before
+/// checksumming existed, and hand-written fixtures). A present field
+/// must be a `fnv1a:<16 hex>` string matching the recomputed hash of the
+/// document minus the field.
+pub fn verify_checksum(doc: &Json) -> Result<()> {
+    let Json::Obj(obj) = doc else { return Ok(()) };
+    let Some(field) = obj.get(CHECKSUM_FIELD) else { return Ok(()) };
+    let stored = field
+        .as_str()
+        .context("checksum field: expected a string")?;
+    let hex = stored
+        .strip_prefix("fnv1a:")
+        .with_context(|| format!("checksum field: unknown scheme in {stored:?}"))?;
+    let want = u64::from_str_radix(hex, 16)
+        .with_context(|| format!("checksum field: bad hex in {stored:?}"))?;
+    let mut stripped = obj.clone();
+    stripped.remove(CHECKSUM_FIELD);
+    let got = fnv1a64(Json::Obj(stripped).to_string().as_bytes());
+    if got != want {
+        bail_checksum(want, got)?;
+    }
+    Ok(())
+}
+
+fn bail_checksum(want: u64, got: u64) -> Result<()> {
+    Err(Error::msg(format!(
+        "checksum mismatch: stored {}, computed {} (artifact corrupted or truncated)",
+        checksum_string(want),
+        checksum_string(got)
+    )))
+}
+
+/// Read and parse a JSON artifact, verifying its checksum when present.
+/// Parse errors carry the byte position reported by the parser; checksum
+/// failures name both hashes.
+pub fn load_json(path: &Path) -> Result<Json> {
+    let text =
+        fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| Error::msg(format!("parse {}: {e}", path.display())))?;
+    verify_checksum(&doc).with_context(|| format!("load {}", path.display()))?;
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pasmo-artifact-{tag}-{}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn small_doc() -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str("test".to_string()));
+        obj.insert("n".to_string(), Json::Num(3.0));
+        Json::Obj(obj)
+    }
+
+    #[test]
+    fn fnv1a_matches_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn save_then_load_round_trips_and_verifies() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("doc.json");
+        save_json(&path, small_doc()).unwrap();
+        let doc = load_json(&path).unwrap();
+        assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("test"));
+        let sum = doc.get(CHECKSUM_FIELD).and_then(|v| v.as_str()).unwrap();
+        assert!(sum.starts_with("fnv1a:"), "{sum}");
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_artifact_is_refused() {
+        let dir = tmp_dir("corrupt");
+        let path = dir.join("doc.json");
+        save_json(&path, small_doc()).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace("\"n\":3", "\"n\":4")).unwrap();
+        let err = load_json(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_artifact_reports_a_positioned_parse_error() {
+        let dir = tmp_dir("truncate");
+        let path = dir.join("doc.json");
+        save_json(&path, small_doc()).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = load_json(&path).unwrap_err().to_string();
+        assert!(err.contains("parse"), "{err}");
+        assert!(err.contains("byte"), "positioned error expected: {err}");
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn checksum_less_documents_still_load() {
+        let dir = tmp_dir("legacy");
+        let path = dir.join("doc.json");
+        fs::write(&path, "{\"kind\":\"legacy\"}").unwrap();
+        let doc = load_json(&path).unwrap();
+        assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("legacy"));
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn write_atomic_replaces_without_leaving_temp_files() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("doc.json");
+        write_atomic(&path, b"one").unwrap();
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "two");
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,5 +1,6 @@
 //! In-repo substrates replacing crates.io dependencies (offline build).
 
+pub mod artifact;
 pub mod cli;
 pub mod error;
 pub mod invariant;

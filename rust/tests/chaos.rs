@@ -1,0 +1,488 @@
+//! Chaos suite: overload shedding, panic quarantine, artifact write
+//! faults, checkpoint kill/resume, and hot-swap under concurrent load.
+//!
+//! Run with `cargo test --features fault-injection --test chaos` (ci.sh
+//! does). The fault-driven tests are compiled out without the feature —
+//! [`pasmo::faults::set_plan`] is a no-op there — while the purely
+//! behavioral tests (flood shedding, kill/resume, hot-swap) run either
+//! way. The fault plan is process-global, so every test in this file
+//! serializes on one lock: a plan armed for one server must never fire
+//! inside another test's scoring loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use pasmo::data::synth::chessboard;
+use pasmo::server::{request_once, ServeConfig, Server};
+use pasmo::solver::{Checkpoint, StopReason};
+use pasmo::svm::schema::AnyModel;
+use pasmo::svm::Trainer;
+use pasmo::util::json::Json;
+
+/// Serialize every chaos test (see the module docs).
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Per-test scratch directory, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(test: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!(
+            "pasmo-chaos-{test}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+/// One persistent client connection speaking newline-delimited JSON.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Conn {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server closed the connection");
+        reply.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn score_line(x: &[f32], id: usize) -> String {
+    let feats: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"x\":[{}],\"id\":{id}}}", feats.join(","))
+}
+
+/// Train a tiny 2-d classifier for serving tests.
+fn tiny_model(seed: u64) -> pasmo::svm::SvmModel {
+    let ds = Arc::new(chessboard(120, 4, seed));
+    Trainer::rbf(10.0, 0.5).train(&ds).model
+}
+
+/// Bind a server, run it on a thread, return the handle + address.
+fn spawn_server(
+    config: ServeConfig,
+    models: Vec<(String, AnyModel)>,
+) -> (std::thread::JoinHandle<pasmo::util::error::Result<()>>, SocketAddr) {
+    let server = Server::bind(config, models).unwrap();
+    let addr = server.local_addr();
+    (std::thread::spawn(move || server.run()), addr)
+}
+
+fn shutdown(addr: SocketAddr, handle: std::thread::JoinHandle<pasmo::util::error::Result<()>>) {
+    let _ = request_once(addr, "{\"cmd\":\"shutdown\"}").unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+/// Flood a bounded admission queue: the overflow is shed with an
+/// explicit reply, and an established connection keeps working across
+/// the whole storm — overload never turns into dropped connections.
+#[test]
+fn flood_sheds_overflow_without_dropping_established_connections() {
+    let _g = chaos_lock();
+    pasmo::faults::reset();
+    let (handle, addr) = spawn_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // max_batch 2 keeps the 200 ms admission window open (the
+            // queue drains only at window close), so a pipelined burst
+            // deterministically finds the one-slot queue full
+            max_batch: 2,
+            max_wait_us: 200_000,
+            threads: 1,
+            max_queue: 1,
+            ..ServeConfig::default()
+        },
+        vec![("m".to_string(), AnyModel::Svc(tiny_model(3)))],
+    );
+
+    let mut established = Conn::open(addr);
+    let first = established.roundtrip(&score_line(&[0.25, 0.75], 1));
+    assert!(first.contains("\"ok\":true"), "{first}");
+
+    let mut flood = Conn::open(addr);
+    let burst = 8;
+    for i in 0..burst {
+        flood.send(&score_line(&[0.5, 0.5], 100 + i));
+    }
+    let (mut ok, mut shed) = (0, 0);
+    for _ in 0..burst {
+        let reply = flood.recv();
+        if reply.contains("queue is full") {
+            assert!(reply.contains("\"ok\":false"), "{reply}");
+            shed += 1;
+        } else {
+            assert!(reply.contains("\"ok\":true"), "{reply}");
+            ok += 1;
+        }
+    }
+    assert_eq!(
+        (ok, shed),
+        (1, burst - 1),
+        "one slot admits one query; the rest shed"
+    );
+
+    // the established connection survived the flood untouched
+    let again = established.roundtrip(&score_line(&[0.25, 0.75], 2));
+    assert!(again.contains("\"ok\":true"), "{again}");
+
+    // the stats counters saw the shed queries
+    let stats = Json::parse(&established.roundtrip("{\"cmd\":\"stats\"}")).unwrap();
+    assert_eq!(
+        stats.get("shed").and_then(|v| v.as_f64()),
+        Some((burst - 1) as f64),
+        "shed total"
+    );
+    drop(established);
+    drop(flood);
+    shutdown(addr, handle);
+}
+
+/// An injected panic inside one scoring pass quarantines the model —
+/// in-flight queries get error replies, later ones are refused at
+/// admission — while the server itself keeps serving, and a hot-reload
+/// of the same file restores service on the same connection.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn injected_scoring_panic_quarantines_the_model_not_the_server() {
+    let _g = chaos_lock();
+    pasmo::faults::reset();
+    let dir = TempDir::new("quarantine");
+    let model = tiny_model(5);
+    let path = dir.path("m.json");
+    model.save(&path).unwrap();
+
+    let (handle, addr) = spawn_server(
+        ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() },
+        vec![("m".to_string(), AnyModel::Svc(model))],
+    );
+    let mut conn = Conn::open(addr);
+
+    // hit 1 of `server.score_group` is the panic seam of the first
+    // scored group (the delay seam of the same group is hit 2)
+    pasmo::faults::set_plan("server.score_group@1").unwrap();
+    let reply = conn.roundtrip(&score_line(&[0.1, 0.9], 1));
+    assert!(reply.contains("quarantined"), "{reply}");
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    pasmo::faults::reset();
+
+    // the connection is alive; the model is refused at admission now
+    let reply = conn.roundtrip(&score_line(&[0.1, 0.9], 2));
+    assert!(reply.contains("quarantined"), "{reply}");
+
+    // stats surface the unhealthy entry
+    let stats = conn.roundtrip("{\"cmd\":\"stats\"}");
+    assert!(stats.contains("\"healthy\":false"), "{stats}");
+
+    // reloading the same file installs a fresh, healthy generation
+    let load = conn.roundtrip(&format!(
+        "{{\"cmd\":\"load\",\"name\":\"m\",\"path\":{:?}}}",
+        path.to_str().unwrap()
+    ));
+    assert!(load.contains("\"ok\":true"), "{load}");
+    let reply = conn.roundtrip(&score_line(&[0.1, 0.9], 3));
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    drop(conn);
+    shutdown(addr, handle);
+}
+
+/// An injected IO fault mid-save leaves the previous artifact intact,
+/// bit for bit, with no temp-file litter — and the very next save
+/// succeeds and replaces it atomically.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn injected_write_fault_preserves_the_previous_checkpoint() {
+    let _g = chaos_lock();
+    pasmo::faults::reset();
+    let dir = TempDir::new("write-fault");
+    let path = dir.path("ck.json");
+    let old = Checkpoint {
+        alpha: vec![0.5, 1.0, 0.0],
+        iterations: 10,
+        objective: 1.5,
+        eps: 1e-3,
+    };
+    old.save(&path).unwrap();
+
+    pasmo::faults::set_plan("artifact.write@1").unwrap();
+    let new = Checkpoint {
+        alpha: vec![0.25, 0.75, 0.5],
+        iterations: 20,
+        objective: 2.5,
+        eps: 1e-3,
+    };
+    let err = new.save(&path).unwrap_err().to_string();
+    assert!(err.contains("injected IO fault"), "{err}");
+    pasmo::faults::reset();
+
+    assert_eq!(Checkpoint::load(&path).unwrap(), old, "old checkpoint must survive");
+    let litter: Vec<String> = std::fs::read_dir(&dir.0)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n != "ck.json")
+        .collect();
+    assert!(litter.is_empty(), "temp files left behind: {litter:?}");
+
+    // a sync-stage fault behaves the same way
+    pasmo::faults::set_plan("artifact.sync@1").unwrap();
+    assert!(new.save(&path).is_err());
+    pasmo::faults::reset();
+    assert_eq!(Checkpoint::load(&path).unwrap(), old);
+
+    new.save(&path).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), new);
+}
+
+/// Corrupt checkpoints are refused loudly: truncation yields a
+/// positioned parse error, a bit-flip a checksum mismatch — neither is
+/// ever resumed from.
+#[test]
+fn corrupt_checkpoints_are_refused_with_positioned_errors() {
+    let _g = chaos_lock();
+    let dir = TempDir::new("corrupt-ck");
+    let path = dir.path("ck.json");
+    let ck = Checkpoint {
+        alpha: vec![0.125; 40],
+        iterations: 777,
+        objective: -3.5,
+        eps: 1e-3,
+    };
+    ck.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("byte"), "positioned error expected: {err}");
+
+    std::fs::write(&path, text.replace("777", "778")).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    std::fs::write(&path, &text).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+}
+
+/// Kill-at-iteration-N: snapshot a solve cut off by its iteration cap
+/// (exactly what `pasmo train --checkpoint` persists), resume it in a
+/// "fresh process" through the warm-start path, and land on the
+/// uninterrupted solve's objective within the stopping accuracy.
+#[test]
+fn killed_training_resumes_to_the_uninterrupted_objective() {
+    let _g = chaos_lock();
+    let dir = TempDir::new("kill-resume");
+    let ds = Arc::new(chessboard(300, 4, 7));
+    let trainer = Trainer::rbf(10.0, 0.5);
+
+    let full = trainer.train(&ds).result;
+    assert!(full.converged, "baseline must converge");
+    assert!(full.iterations > 80, "need room to interrupt at 60");
+
+    // "crash" at iteration 60: cap the solve and snapshot the iterate
+    let mut cfg = trainer.solver_config;
+    cfg.max_iter = 60;
+    let partial = trainer.clone().solver_config(cfg).train(&ds).result;
+    assert_eq!(partial.stop_reason, StopReason::IterLimit);
+    assert_eq!(partial.iterations, 60);
+    let ck_path = dir.path("ck.json");
+    Checkpoint {
+        alpha: partial.alpha,
+        iterations: partial.iterations,
+        objective: partial.objective,
+        eps: cfg.eps,
+    }
+    .save(&ck_path)
+    .unwrap();
+
+    // resume from disk only — no state carried over but the file
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.iterations, 60);
+    let resumed = Trainer::rbf(10.0, 0.5).warm_start(ck.alpha).train(&ds).result;
+    assert!(resumed.converged, "resumed solve must converge");
+    let scale = full.objective.abs().max(1.0);
+    assert!(
+        (resumed.objective - full.objective).abs() <= 1e-3 * scale,
+        "resumed objective {} vs uninterrupted {} (tolerance {})",
+        resumed.objective,
+        full.objective,
+        1e-3 * scale
+    );
+    // resuming saved work: the tail is shorter than the whole solve
+    assert!(
+        resumed.iterations < full.iterations,
+        "resumed tail {} !< full solve {}",
+        resumed.iterations,
+        full.iterations
+    );
+}
+
+/// Registry hot-swap under concurrent load: clients hammer one model
+/// name while the main thread swaps two generations back and forth.
+/// Every reply must bit-match one of the two generations — a query
+/// scored half-against-one, half-against-the-other is impossible
+/// because each query captures its entry Arc at admission.
+#[test]
+fn hot_swap_under_load_serves_only_whole_generations() {
+    let _g = chaos_lock();
+    let dir = TempDir::new("hot-swap");
+    let ds = Arc::new(chessboard(120, 4, 11));
+    let gen_a = Trainer::rbf(100.0, 0.5).train(&ds).model;
+    let gen_b = Trainer::rbf(10.0, 1.5).train(&ds).model;
+    let path_a = dir.path("a.json");
+    let path_b = dir.path("b.json");
+    gen_a.save(&path_a).unwrap();
+    gen_b.save(&path_b).unwrap();
+
+    let query: Vec<f32> = ds.row(0).to_vec();
+    let bits_a = gen_a.decision(&query).to_bits();
+    let bits_b = gen_b.decision(&query).to_bits();
+    assert_ne!(bits_a, bits_b, "generations must be distinguishable");
+
+    let (handle, addr) = spawn_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 8,
+            max_wait_us: 100,
+            threads: 1,
+            ..ServeConfig::default()
+        },
+        vec![("m".to_string(), AnyModel::Svc(gen_a))],
+    );
+
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let query = query.clone();
+            std::thread::spawn(move || {
+                let mut conn = Conn::open(addr);
+                let mut seen = [0u64; 2];
+                for i in 0..60 {
+                    let reply = conn.roundtrip(&score_line(&query, c * 1000 + i));
+                    let v = Json::parse(&reply).unwrap();
+                    assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true), "{reply}");
+                    let bits =
+                        v.get("decision").and_then(|d| d.as_f64()).unwrap().to_bits();
+                    if bits == bits_a {
+                        seen[0] += 1;
+                    } else if bits == bits_b {
+                        seen[1] += 1;
+                    } else {
+                        panic!("reply matches neither generation: {reply}");
+                    }
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // swap generations under the clients' feet
+    let mut admin = Conn::open(addr);
+    for round in 0..10 {
+        let path = if round % 2 == 0 { &path_b } else { &path_a };
+        let reply = admin.roundtrip(&format!(
+            "{{\"cmd\":\"load\",\"name\":\"m\",\"path\":{:?}}}",
+            path.to_str().unwrap()
+        ));
+        assert!(reply.contains("\"ok\":true"), "{reply}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut totals = [0u64; 2];
+    for c in clients {
+        let seen = c.join().unwrap();
+        totals[0] += seen[0];
+        totals[1] += seen[1];
+    }
+    assert_eq!(totals[0] + totals[1], 3 * 60, "every reply matched a generation");
+    // the swaps really interleaved with traffic: both generations served
+    assert!(
+        totals[0] > 0 && totals[1] > 0,
+        "expected both generations under load, saw {totals:?}"
+    );
+    drop(admin);
+    shutdown(addr, handle);
+}
+
+/// Deadline expiry under injected slowness: a fault-plan delay stretches
+/// the first scoring pass past the per-query deadline, and the queries
+/// stuck behind it are answered `deadline_exceeded` instead of being
+/// scored late.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn injected_slow_pass_expires_queued_queries_at_their_deadline() {
+    let _g = chaos_lock();
+    pasmo::faults::reset();
+    let (handle, addr) = spawn_server(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // one query per batch: the injected 25 ms delay on the
+            // first scored group holds the second query in the queue
+            // well past its 5 ms deadline
+            max_batch: 1,
+            max_wait_us: 0,
+            threads: 1,
+            deadline_us: 5_000,
+            ..ServeConfig::default()
+        },
+        vec![("m".to_string(), AnyModel::Svc(tiny_model(13)))],
+    );
+    // hit 2 of `server.score_group` is the delay seam of the first
+    // scored group (hit 1 is its panic seam, which must not fire)
+    pasmo::faults::set_plan("server.score_group@2").unwrap();
+
+    let mut conn = Conn::open(addr);
+    conn.send(&score_line(&[0.3, 0.7], 1));
+    conn.send(&score_line(&[0.6, 0.4], 2));
+    let first = conn.recv();
+    let second = conn.recv();
+    pasmo::faults::reset();
+
+    // query 1 scored (slowly); query 2 sat in the queue past its
+    // deadline and was expired without scoring
+    assert!(first.contains("\"ok\":true"), "{first}");
+    assert!(second.contains("deadline_exceeded"), "{second}");
+    let stats = Json::parse(&conn.roundtrip("{\"cmd\":\"stats\"}")).unwrap();
+    assert_eq!(stats.get("expired").and_then(|v| v.as_f64()), Some(1.0));
+    drop(conn);
+    shutdown(addr, handle);
+}
