@@ -16,6 +16,12 @@
 #   4e2. pasmo bench --predict at tiny scale → BENCH_predict.json
 #                               (inference-side trajectory: scalar vs
 #                                tiled vs threaded vs linear-collapse)
+#   4e2b. pasmo bench --sparse at tiny scale → BENCH_sparse.json
+#                               (density sweep 1.0/0.1/0.001; the binary
+#                                itself fails the run if CSR resident
+#                                bytes don't beat the dense twin at low
+#                                density) + a sparse train → predict
+#                                round trip over a CSR-backed LIBSVM file
 #   4e3. pasmo serve smoke: train a model, serve it on an ephemeral
 #                                port, score one query + stats over
 #                                /dev/tcp, then a clean shutdown
@@ -95,6 +101,38 @@ cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --ou
 # and kernel entries for scalar vs tiled vs threaded vs linear-collapse).
 step "pasmo bench --predict --len 300 (writes ../BENCH_predict.json)"
 cargo run --release -- bench --predict --len 300 --out ../BENCH_predict.json
+
+# Sparse substrate gate: the density sweep (the binary enforces the
+# CSR-beats-dense resident-bytes claim itself via its internal check),
+# then a train → predict round trip over a genuinely sparse LIBSVM file
+# through both the streaming and mapped readers.
+step "pasmo bench --sparse --len 60 --dim 500 (writes ../BENCH_sparse.json)"
+cargo run --release -- bench --sparse --len 60 --dim 500 --out ../BENCH_sparse.json
+
+step "sparse train -> predict round trip (--storage sparse / --mmap)"
+SPARSE_DIR=$(mktemp -d)
+# A deterministic 2-of-400 density LIBSVM file, no interpreter required:
+# two stored entries per row with strictly increasing 1-based indices.
+awk 'BEGIN {
+    srand(7)
+    for (i = 0; i < 120; i++) {
+        label = (rand() < 0.5) ? "+1" : "-1"
+        a = int(rand() * 200) + 1
+        b = a + int(rand() * 199) + 1
+        printf "%s %d:%.3f %d:%.3f\n", label, a, rand() * 2 - 1, b, rand() * 2 - 1
+    }
+}' > "$SPARSE_DIR/train.libsvm"
+cargo run --release --quiet -- train --libsvm "$SPARSE_DIR/train.libsvm" \
+    --storage sparse --out "$SPARSE_DIR/model.json" >/dev/null
+cargo run --release --quiet -- predict --model "$SPARSE_DIR/model.json" \
+    --libsvm "$SPARSE_DIR/train.libsvm" --storage sparse --mmap \
+    --out "$SPARSE_DIR/preds-sparse.txt" >/dev/null
+cargo run --release --quiet -- predict --model "$SPARSE_DIR/model.json" \
+    --libsvm "$SPARSE_DIR/train.libsvm" --storage dense \
+    --out "$SPARSE_DIR/preds-dense.txt" >/dev/null
+cmp "$SPARSE_DIR/preds-sparse.txt" "$SPARSE_DIR/preds-dense.txt" \
+    || { echo "sparse gate: CSR and dense decisions diverge"; exit 1; }
+rm -rf "$SPARSE_DIR"
 
 # Serving-tier smoke: a real `pasmo serve` process on an ephemeral port
 # answers a score line, reports the request in its stats, and drains on

@@ -137,4 +137,33 @@ fn main() {
         bench_pjrt(&engine, &ds, n, d, &mut out);
         println!();
     }
+
+    // Density sweep: the same gram-row kernel over the CSR backend at
+    // decreasing stored density, against each dataset's dense twin. The
+    // bytes-resident column is what the sparse substrate buys; rows/s
+    // shows where the merge-style sparse dot crosses the dense SIMD loop.
+    println!("---- density sweep (CSR vs dense twin, RBF γ=0.5) ----");
+    let n = 4096usize;
+    let d = 2000usize;
+    for &(label, nnz) in &[("1.0  ", d), ("0.1  ", d / 10), ("0.001", d / 1000)] {
+        let sparse = Arc::new(pasmo::data::synth::sparse_blobs(n, d, nnz, 42));
+        let dense = Arc::new(sparse.to_dense());
+        for (tag, ds) in [("csr  ", &sparse), ("dense", &dense)] {
+            let native = NativeRowComputer::new(ds.clone(), KernelFunction::Rbf { gamma: 0.5 });
+            let mut out = vec![0f32; n];
+            let mut i = 0usize;
+            let r = bench(&format!("{tag} density={label} l={n:<6} d={d:<4}"), 10, || {
+                i = (i + 17) % n;
+                native.compute_row(i, &mut out);
+                out[0]
+            });
+            println!(
+                "{}   {:>8.1} rows/s  {:>12} bytes resident",
+                r.line(),
+                1.0 / r.mean_s,
+                ds.resident_bytes()
+            );
+        }
+        println!();
+    }
 }

@@ -1,21 +1,27 @@
-//! Dense binary-classification dataset.
+//! Binary-classification dataset over the [`Features`] substrate.
 //!
-//! SMO's hot path is full-row kernel evaluation, so features are stored
-//! dense row-major f32 (the layout both the native SIMD-friendly path and
-//! the PJRT artifacts consume). Labels are ±1.
+//! SMO's hot path is full-row kernel evaluation, so features live in a
+//! [`Features`] matrix — dense row-major f32 (the layout both the
+//! native SIMD-friendly path and the PJRT artifacts consume) or CSR
+//! sparse for the high-dimensional low-density regime. Labels are ±1.
+//! The kernel/scorer layers consume rows through [`Dataset::row_ref`],
+//! which is backend-agnostic; [`Dataset::row`] and
+//! [`Dataset::features`] remain as the dense-only fast accessors for
+//! paths that require the row-major layout (they panic on sparse
+//! storage rather than silently densifying).
 
-/// A dense binary-classification dataset: `len` rows of `dim` f32 features
-/// plus ±1 labels.
+use super::features::{Features, Row};
+
+/// A binary-classification dataset: `len` rows of `dim` features (dense
+/// or CSR sparse storage) plus ±1 labels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dataset {
-    dim: usize,
-    /// Row-major `[len, dim]`.
-    features: Vec<f32>,
+    features: Features,
     labels: Vec<i8>,
 }
 
 impl Dataset {
-    /// Build from row-major features and ±1 labels.
+    /// Build from row-major dense features and ±1 labels.
     pub fn new(dim: usize, features: Vec<f32>, labels: Vec<i8>) -> Dataset {
         assert!(dim > 0, "dim must be positive");
         assert_eq!(features.len(), labels.len() * dim, "features/labels mismatch");
@@ -23,19 +29,49 @@ impl Dataset {
             labels.iter().all(|&y| y == 1 || y == -1),
             "labels must be +/-1"
         );
-        Dataset { dim, features, labels }
+        Dataset { features: Features::dense(dim, features), labels }
     }
 
-    /// Empty dataset with a fixed feature dimension.
+    /// Build from a [`Features`] matrix (either backend) and ±1 labels.
+    pub fn from_features(features: Features, labels: Vec<i8>) -> Dataset {
+        assert_eq!(features.len(), labels.len(), "features/labels mismatch");
+        assert!(
+            labels.iter().all(|&y| y == 1 || y == -1),
+            "labels must be +/-1"
+        );
+        Dataset { features, labels }
+    }
+
+    /// Empty dense dataset with a fixed feature dimension.
     pub fn with_dim(dim: usize) -> Dataset {
-        Dataset { dim, features: Vec::new(), labels: Vec::new() }
+        assert!(dim > 0, "dim must be positive");
+        Dataset { features: Features::dense_with_dim(dim), labels: Vec::new() }
     }
 
-    /// Append one example.
+    /// Empty CSR-sparse dataset with a fixed feature dimension.
+    pub fn sparse_with_dim(dim: usize) -> Dataset {
+        Dataset { features: Features::sparse_with_dim(dim), labels: Vec::new() }
+    }
+
+    /// Empty dataset with the same backend and dimension as `self`.
+    pub fn empty_like(&self) -> Dataset {
+        Dataset { features: self.features.empty_like(), labels: Vec::new() }
+    }
+
+    /// Append one dense example (the sparse backend keeps only its
+    /// non-zero coordinates — see `data::features` for why that is
+    /// bit-exact).
     pub fn push(&mut self, x: &[f32], y: i8) {
-        assert_eq!(x.len(), self.dim);
         assert!(y == 1 || y == -1);
-        self.features.extend_from_slice(x);
+        self.features.push_dense(x);
+        self.labels.push(y);
+    }
+
+    /// Append one example from a row view, preserving this dataset's
+    /// backend.
+    pub fn push_row(&mut self, x: Row<'_>, y: i8) {
+        assert!(y == 1 || y == -1);
+        self.features.push_row(x);
         self.labels.push(y);
     }
 
@@ -51,13 +87,30 @@ impl Dataset {
 
     /// Feature dimension d.
     pub fn dim(&self) -> usize {
-        self.dim
+        self.features.dim()
     }
 
-    /// Feature row `i`.
+    /// Feature row `i` as a dense slice. Dense storage only — sparse
+    /// datasets panic here; backend-agnostic callers use
+    /// [`Dataset::row_ref`].
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.features[i * self.dim..(i + 1) * self.dim]
+        match &self.features {
+            Features::Dense { dim, rows } => &rows[i * dim..(i + 1) * dim],
+            Features::Sparse { .. } => {
+                assert!(
+                    !self.features.is_sparse(),
+                    "row(): dense slice requested from sparse storage; use row_ref()"
+                );
+                &[]
+            }
+        }
+    }
+
+    /// Zero-copy view of feature row `i`, from either backend.
+    #[inline]
+    pub fn row_ref(&self, i: usize) -> Row<'_> {
+        self.features.row(i)
     }
 
     /// Label of example `i` (±1).
@@ -71,9 +124,52 @@ impl Dataset {
         &self.labels
     }
 
-    /// Raw row-major feature buffer.
+    /// Raw row-major feature buffer. Dense storage only — sparse
+    /// datasets panic here; backend-agnostic callers go through
+    /// [`Dataset::storage`] / [`Dataset::row_ref`].
     pub fn features(&self) -> &[f32] {
+        match &self.features {
+            Features::Dense { rows, .. } => rows,
+            Features::Sparse { .. } => {
+                assert!(
+                    !self.features.is_sparse(),
+                    "features(): row-major buffer requested from sparse storage"
+                );
+                &[]
+            }
+        }
+    }
+
+    /// The backing feature matrix.
+    pub fn storage(&self) -> &Features {
         &self.features
+    }
+
+    /// True when features are CSR-sparse.
+    pub fn is_sparse(&self) -> bool {
+        self.features.is_sparse()
+    }
+
+    /// Stored feature entries (dense rows store every coordinate).
+    pub fn nnz(&self) -> usize {
+        self.features.nnz()
+    }
+
+    /// Heap bytes held by features + labels (the bytes-resident column
+    /// of the density-sweep benches).
+    pub fn resident_bytes(&self) -> usize {
+        self.features.resident_bytes() + self.labels.len()
+    }
+
+    /// A dense-storage copy of this dataset (identity when already
+    /// dense).
+    pub fn to_dense(&self) -> Dataset {
+        Dataset { features: self.features.to_dense(), labels: self.labels.clone() }
+    }
+
+    /// A CSR-sparse copy of this dataset (identity when already sparse).
+    pub fn to_sparse(&self) -> Dataset {
+        Dataset { features: self.features.to_sparse(), labels: self.labels.clone() }
     }
 
     /// Counts of (positive, negative) labels.
@@ -82,19 +178,17 @@ impl Dataset {
         (pos, self.labels.len() - pos)
     }
 
-    /// New dataset with rows gathered by `idx` (`idx[i]` = source row).
-    /// One up-front reservation and a bulk row copy per index — the
-    /// already-validated source rows need no per-row shape/label asserts,
-    /// which matters on the CV-split path where every fold of every grid
-    /// point re-materializes its subsets.
+    /// New dataset with rows gathered by `idx` (`idx[i]` = source row),
+    /// preserving the storage backend. One bulk gather on the feature
+    /// matrix — the already-validated source rows need no per-row
+    /// shape/label asserts, which matters on the CV-split path where
+    /// every fold of every grid point re-materializes its subsets.
     fn gather(&self, idx: &[usize]) -> Dataset {
-        let mut features = Vec::with_capacity(idx.len() * self.dim);
         let mut labels = Vec::with_capacity(idx.len());
         for &src in idx {
-            features.extend_from_slice(self.row(src));
             labels.push(self.labels[src]);
         }
-        Dataset { dim: self.dim, features, labels }
+        Dataset { features: self.features.gather(idx), labels }
     }
 
     /// New dataset with rows reordered by `perm` (perm[i] = source index).
@@ -108,17 +202,66 @@ impl Dataset {
         self.gather(idx)
     }
 
-    /// Squared Euclidean distance between rows i and j (f64 accumulate).
+    /// Squared Euclidean distance between rows i and j. Differences are
+    /// taken in f32 then squared/accumulated in f64 (the historical
+    /// dense arithmetic, preserved bit-for-bit; sparse rows skip
+    /// both-zero coordinates, which contribute exactly `+0.0`).
     #[inline]
     pub fn sqdist(&self, i: usize, j: usize) -> f64 {
-        let (a, b) = (self.row(i), self.row(j));
-        let mut s = 0.0f64;
-        for k in 0..self.dim {
-            let d = (a[k] - b[k]) as f64;
-            s += d * d;
+        match &self.features {
+            Features::Dense { dim, rows } => {
+                let (a, b) = (&rows[i * dim..(i + 1) * dim], &rows[j * dim..(j + 1) * dim]);
+                let mut s = 0.0f64;
+                for k in 0..*dim {
+                    let d = (a[k] - b[k]) as f64;
+                    s += d * d;
+                }
+                s
+            }
+            Features::Sparse { .. } => sqdist_f32(self.row_ref(i), self.row_ref(j)),
         }
-        s
     }
+}
+
+/// Union-merge sqdist with f32 differences (the [`Dataset::sqdist`]
+/// arithmetic), for sparse rows.
+fn sqdist_f32(a: Row<'_>, b: Row<'_>) -> f64 {
+    let mut s = 0.0f64;
+    match (a, b) {
+        (
+            Row::Sparse { indices: ia, values: va, .. },
+            Row::Sparse { indices: ib, values: vb, .. },
+        ) => {
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ia.len() || q < ib.len() {
+                let d = if q >= ib.len() || (p < ia.len() && ia[p] < ib[q]) {
+                    let d = va[p] - 0.0;
+                    p += 1;
+                    d
+                } else if p >= ia.len() || ib[q] < ia[p] {
+                    let d = 0.0 - vb[q];
+                    q += 1;
+                    d
+                } else {
+                    let d = va[p] - vb[q];
+                    p += 1;
+                    q += 1;
+                    d
+                };
+                let d = d as f64;
+                s += d * d;
+            }
+        }
+        (a, b) => {
+            // Mixed backends: walk every coordinate of the dense side.
+            let (av, bv) = (a.to_vec(), b.to_vec());
+            for k in 0..av.len().min(bv.len()) {
+                let d = (av[k] - bv[k]) as f64;
+                s += d * d;
+            }
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -137,6 +280,8 @@ mod tests {
         assert_eq!(d.row(1), &[1.0, 0.0]);
         assert_eq!(d.label(1), -1);
         assert_eq!(d.class_counts(), (2, 1));
+        assert!(!d.is_sparse());
+        assert_eq!(d.features().len(), 6);
     }
 
     #[test]
@@ -194,5 +339,55 @@ mod tests {
     #[should_panic(expected = "mismatch")]
     fn rejects_shape_mismatch() {
         Dataset::new(2, vec![0.0; 5], vec![1, -1]);
+    }
+
+    #[test]
+    fn sparse_dataset_mirrors_dense_semantics() {
+        let dense = toy();
+        let sparse = dense.to_sparse();
+        assert!(sparse.is_sparse());
+        assert_eq!(sparse.len(), 3);
+        assert_eq!(sparse.dim(), 2);
+        assert_eq!(sparse.labels(), dense.labels());
+        for i in 0..3 {
+            assert_eq!(sparse.row_ref(i).to_vec(), dense.row(i));
+            for j in 0..3 {
+                assert_eq!(
+                    sparse.sqdist(i, j).to_bits(),
+                    dense.sqdist(i, j).to_bits(),
+                    "sqdist {i},{j}"
+                );
+            }
+        }
+        // round trip back to dense restores equality
+        assert_eq!(sparse.to_dense(), dense);
+        // permuted/subset stay sparse and match the dense gather
+        let p = sparse.permuted(&[2, 0, 1]);
+        assert!(p.is_sparse());
+        assert_eq!(p.to_dense(), dense.permuted(&[2, 0, 1]));
+        let s = sparse.subset(&[0, 2, 2]);
+        assert!(s.is_sparse());
+        assert_eq!(s.to_dense(), dense.subset(&[0, 2, 2]));
+    }
+
+    #[test]
+    #[should_panic(expected = "dense slice requested from sparse storage")]
+    fn dense_row_accessor_refuses_sparse_storage() {
+        let sparse = toy().to_sparse();
+        let _ = sparse.row(0);
+    }
+
+    #[test]
+    fn push_row_preserves_backend_and_bytes_track_storage() {
+        let dense = toy();
+        let mut sp = Dataset::sparse_with_dim(2);
+        for i in 0..dense.len() {
+            sp.push_row(dense.row_ref(i), dense.label(i));
+        }
+        assert!(sp.is_sparse());
+        assert_eq!(sp.to_dense(), dense);
+        // toy() rows are mostly zeros: CSR holds 3 of 6 cells
+        assert_eq!(sp.nnz(), 3);
+        assert!(sp.resident_bytes() > 0);
     }
 }

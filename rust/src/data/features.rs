@@ -1,0 +1,672 @@
+//! The feature substrate: one [`Features`] value holds a dataset's rows
+//! in either dense row-major or CSR sparse form, and [`Row`] is the
+//! zero-copy per-row view the kernel and scorer layers consume.
+//!
+//! ## Bit-parity contract
+//!
+//! Every arithmetic helper here ([`Row::dot`], [`Row::sqnorm`],
+//! [`Row::sqdist`]) is **bit-identical** across backends, not merely
+//! close: the sparse paths visit stored entries in ascending column
+//! order and skip only coordinates whose densified value is exactly
+//! `+0.0`. On an `f64` accumulator seeded at `+0.0`, adding
+//! `x·(±0.0) = ±0.0` (dot) or `(0−0)² = +0.0` (sqdist) is the identity
+//! — the accumulator can never itself become `-0.0` once any term is
+//! added, because IEEE-754 round-to-nearest gives `(+0.0) + (±0.0) =
+//! +0.0` and exact cancellation of nonzeros also yields `+0.0`. Skipping
+//! those terms therefore reproduces the dense feature-order sum bit for
+//! bit. The dense↔sparse parity wall in `tests/sparse_parity.rs` pins
+//! this contract across the whole train/score stack.
+//!
+//! Sparsification keeps every entry whose bits are not `±0.0` — NaN and
+//! infinities are preserved, so converting storage never changes what a
+//! kernel sees.
+
+/// True when `v` must be stored by a sparse row: anything but `±0.0`.
+/// (Bit test rather than `v != 0.0`, so NaN is kept and no float
+/// equality is involved.)
+#[inline]
+fn is_stored(v: f32) -> bool {
+    v.to_bits() << 1 != 0
+}
+
+/// Feature storage for a row-indexed `len × dim` matrix: dense
+/// row-major, or CSR sparse (`offsets`/`indices`/`values`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Features {
+    /// Dense row-major storage: `rows.len() == len · dim`.
+    Dense {
+        /// Feature dimension d (> 0).
+        dim: usize,
+        /// Row-major `len × dim` feature block.
+        rows: Vec<f32>,
+    },
+    /// CSR sparse storage: row `i` owns
+    /// `indices[offsets[i]..offsets[i+1]]` (0-based column ids, strictly
+    /// increasing within the row) and the matching `values` slice.
+    Sparse {
+        /// Feature dimension d (> 0); every stored index is `< dim`.
+        dim: usize,
+        /// Row start offsets: `len + 1` entries, `offsets[0] == 0`,
+        /// non-decreasing, last entry `== indices.len()`.
+        offsets: Vec<usize>,
+        /// 0-based column indices, strictly increasing within each row.
+        indices: Vec<u32>,
+        /// Stored values, parallel to `indices`.
+        values: Vec<f32>,
+    },
+}
+
+impl Features {
+    /// Dense storage from a row-major block (`rows.len()` must be a
+    /// multiple of `dim`).
+    pub fn dense(dim: usize, rows: Vec<f32>) -> Features {
+        assert!(dim > 0, "feature dimension must be positive");
+        assert!(
+            rows.len() % dim == 0,
+            "feature block of {} floats is not a multiple of dim {dim}",
+            rows.len()
+        );
+        Features::Dense { dim, rows }
+    }
+
+    /// An empty dense matrix of the given dimension.
+    pub fn dense_with_dim(dim: usize) -> Features {
+        Features::dense(dim, Vec::new())
+    }
+
+    /// An empty CSR sparse matrix of the given dimension.
+    pub fn sparse_with_dim(dim: usize) -> Features {
+        assert!(dim > 0, "feature dimension must be positive");
+        Features::Sparse { dim, offsets: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// CSR storage from raw parts, validating the representation
+    /// invariants (offset shape, index bounds and per-row ordering).
+    pub fn from_csr(
+        dim: usize,
+        offsets: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Features {
+        assert!(dim > 0, "feature dimension must be positive");
+        assert!(!offsets.is_empty() && offsets[0] == 0, "offsets must start at 0");
+        assert!(
+            *offsets.last().unwrap_or(&0) == indices.len(),
+            "last offset {} != {} stored entries",
+            offsets.last().unwrap_or(&0),
+            indices.len()
+        );
+        assert!(indices.len() == values.len(), "indices/values length mismatch");
+        for w in offsets.windows(2) {
+            assert!(w[0] <= w[1], "offsets must be non-decreasing");
+            let row = &indices[w[0]..w[1]];
+            for pair in row.windows(2) {
+                assert!(
+                    pair[0] < pair[1],
+                    "indices within a row must be strictly increasing"
+                );
+            }
+            if let Some(&last) = row.last() {
+                assert!((last as usize) < dim, "index {last} out of range for dim {dim}");
+            }
+        }
+        Features::Sparse { dim, offsets, indices, values }
+    }
+
+    /// An empty matrix with this matrix's backend and dimension.
+    pub fn empty_like(&self) -> Features {
+        match self {
+            Features::Dense { dim, .. } => Features::dense_with_dim(*dim),
+            Features::Sparse { dim, .. } => Features::sparse_with_dim(*dim),
+        }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Features::Dense { dim, rows } => rows.len() / dim,
+            Features::Sparse { offsets, .. } => offsets.len() - 1,
+        }
+    }
+
+    /// True when the matrix holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension d.
+    pub fn dim(&self) -> usize {
+        match self {
+            Features::Dense { dim, .. } | Features::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// True for the CSR backend.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Features::Sparse { .. })
+    }
+
+    /// Stored entries. Dense rows store every coordinate (`len · dim`);
+    /// sparse rows store only their explicit entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Features::Dense { rows, .. } => rows.len(),
+            Features::Sparse { indices, .. } => indices.len(),
+        }
+    }
+
+    /// Stored entries as a fraction of the full `len · dim` grid
+    /// (1.0 for dense storage and for an empty matrix).
+    pub fn density(&self) -> f64 {
+        let cells = self.len() * self.dim();
+        if cells == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// Heap bytes held by the feature storage (the bytes-resident column
+    /// of the density-sweep benches).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Features::Dense { rows, .. } => rows.len() * std::mem::size_of::<f32>(),
+            Features::Sparse { offsets, indices, values, .. } => {
+                offsets.len() * std::mem::size_of::<usize>()
+                    + indices.len() * std::mem::size_of::<u32>()
+                    + values.len() * std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    /// Zero-copy view of row `i`.
+    pub fn row(&self, i: usize) -> Row<'_> {
+        match self {
+            Features::Dense { dim, rows } => Row::Dense(&rows[i * dim..(i + 1) * dim]),
+            Features::Sparse { dim, offsets, indices, values } => {
+                let (lo, hi) = (offsets[i], offsets[i + 1]);
+                Row::Sparse { dim: *dim, indices: &indices[lo..hi], values: &values[lo..hi] }
+            }
+        }
+    }
+
+    /// Append one dense row. The sparse backend keeps only the stored
+    /// (non-`±0.0`) coordinates — bit-parity is unaffected (module
+    /// docs).
+    pub fn push_dense(&mut self, x: &[f32]) {
+        assert!(x.len() == self.dim(), "row has {} features, expected {}", x.len(), self.dim());
+        match self {
+            Features::Dense { rows, .. } => rows.extend_from_slice(x),
+            Features::Sparse { offsets, indices, values, .. } => {
+                for (k, &v) in x.iter().enumerate() {
+                    if is_stored(v) {
+                        indices.push(k as u32);
+                        values.push(v);
+                    }
+                }
+                offsets.push(indices.len());
+            }
+        }
+    }
+
+    /// Append one sparse row given `(column, value)` entries with
+    /// strictly increasing 0-based columns. The dense backend scatters
+    /// them into a zero row.
+    pub fn push_entries(&mut self, entries: &[(u32, f32)]) {
+        let dim = self.dim();
+        let mut last: Option<u32> = None;
+        for &(idx, _) in entries {
+            assert!((idx as usize) < dim, "index {idx} out of range for dim {dim}");
+            assert!(
+                last.map(|l| l < idx).unwrap_or(true),
+                "entry columns must be strictly increasing"
+            );
+            last = Some(idx);
+        }
+        match self {
+            Features::Dense { dim, rows } => {
+                let base = rows.len();
+                rows.resize(base + *dim, 0.0);
+                for &(idx, v) in entries {
+                    rows[base + idx as usize] = v;
+                }
+            }
+            Features::Sparse { offsets, indices, values, .. } => {
+                for &(idx, v) in entries {
+                    indices.push(idx);
+                    values.push(v);
+                }
+                offsets.push(indices.len());
+            }
+        }
+    }
+
+    /// Append a row view (from either backend) preserving *this*
+    /// matrix's backend.
+    pub fn push_row(&mut self, r: Row<'_>) {
+        assert!(r.dim() == self.dim(), "row dim {} != matrix dim {}", r.dim(), self.dim());
+        match r {
+            Row::Dense(x) => self.push_dense(x),
+            Row::Sparse { indices, values, .. } => match self {
+                Features::Dense { dim, rows } => {
+                    let base = rows.len();
+                    rows.resize(base + *dim, 0.0);
+                    for (k, &idx) in indices.iter().enumerate() {
+                        rows[base + idx as usize] = values[k];
+                    }
+                }
+                Features::Sparse { offsets, indices: di, values: dv, .. } => {
+                    di.extend_from_slice(indices);
+                    dv.extend_from_slice(values);
+                    offsets.push(di.len());
+                }
+            },
+        }
+    }
+
+    /// Gather the rows named by `idx` (with repetition allowed) into a
+    /// new matrix with the same backend.
+    pub fn gather(&self, idx: &[usize]) -> Features {
+        let mut out = self.empty_like();
+        match (self, &mut out) {
+            (Features::Dense { dim, rows }, Features::Dense { rows: or, .. }) => {
+                or.reserve(idx.len() * dim);
+                for &i in idx {
+                    or.extend_from_slice(&rows[i * dim..(i + 1) * dim]);
+                }
+            }
+            (
+                Features::Sparse { offsets, indices, values, .. },
+                Features::Sparse { offsets: oo, indices: oi, values: ov, .. },
+            ) => {
+                for &i in idx {
+                    let (lo, hi) = (offsets[i], offsets[i + 1]);
+                    oi.extend_from_slice(&indices[lo..hi]);
+                    ov.extend_from_slice(&values[lo..hi]);
+                    oo.push(oi.len());
+                }
+            }
+            // `empty_like` returns the same variant as `self`.
+            _ => unreachable!("gather target backend matches the source"),
+        }
+        out
+    }
+
+    /// A dense copy (identity on the dense backend).
+    pub fn to_dense(&self) -> Features {
+        match self {
+            Features::Dense { .. } => self.clone(),
+            Features::Sparse { dim, offsets, indices, values } => {
+                let len = offsets.len() - 1;
+                let mut rows = vec![0f32; len * dim];
+                for i in 0..len {
+                    let base = i * dim;
+                    for p in offsets[i]..offsets[i + 1] {
+                        rows[base + indices[p] as usize] = values[p];
+                    }
+                }
+                Features::Dense { dim: *dim, rows }
+            }
+        }
+    }
+
+    /// A CSR copy keeping only stored (non-`±0.0`) entries (identity on
+    /// the sparse backend).
+    pub fn to_sparse(&self) -> Features {
+        match self {
+            Features::Sparse { .. } => self.clone(),
+            Features::Dense { dim, rows } => {
+                let mut out = Features::sparse_with_dim(*dim);
+                for r in rows.chunks_exact(*dim) {
+                    out.push_dense(r);
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Zero-copy view of one feature row, from either backend. `Copy`, so
+/// it can be captured by the scoped-thread closures of the tiled kernel
+/// loops.
+#[derive(Debug, Clone, Copy)]
+pub enum Row<'a> {
+    /// A dense row: one `f32` per coordinate.
+    Dense(&'a [f32]),
+    /// A sparse row: `values[k]` lives at column `indices[k]`; every
+    /// other coordinate is `+0.0`.
+    Sparse {
+        /// Feature dimension of the owning matrix.
+        dim: usize,
+        /// Strictly increasing 0-based column indices.
+        indices: &'a [u32],
+        /// Stored values, parallel to `indices`.
+        values: &'a [f32],
+    },
+}
+
+impl Row<'_> {
+    /// The row's feature dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            Row::Dense(x) => x.len(),
+            Row::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Stored entries (dense rows store every coordinate).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Row::Dense(x) => x.len(),
+            Row::Sparse { indices, .. } => indices.len(),
+        }
+    }
+
+    /// ⟨self, other⟩ on an `f64` accumulator, bit-identical across
+    /// backends (module docs: skipped zero terms are exact no-ops).
+    pub fn dot(&self, other: Row<'_>) -> f64 {
+        match (*self, other) {
+            (Row::Dense(a), Row::Dense(b)) => {
+                let n = a.len().min(b.len());
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += a[k] as f64 * b[k] as f64;
+                }
+                s
+            }
+            (Row::Dense(a), Row::Sparse { indices, values, .. }) => {
+                let mut s = 0f64;
+                for (p, &idx) in indices.iter().enumerate() {
+                    s += a[idx as usize] as f64 * values[p] as f64;
+                }
+                s
+            }
+            (Row::Sparse { indices, values, .. }, Row::Dense(b)) => {
+                let mut s = 0f64;
+                for (p, &idx) in indices.iter().enumerate() {
+                    s += values[p] as f64 * b[idx as usize] as f64;
+                }
+                s
+            }
+            (
+                Row::Sparse { indices: ia, values: va, .. },
+                Row::Sparse { indices: ib, values: vb, .. },
+            ) => {
+                let (mut p, mut q) = (0usize, 0usize);
+                let mut s = 0f64;
+                while p < ia.len() && q < ib.len() {
+                    match ia[p].cmp(&ib[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += va[p] as f64 * vb[q] as f64;
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// ‖self‖² = ⟨self, self⟩, same accumulation as [`Row::dot`].
+    pub fn sqnorm(&self) -> f64 {
+        match self {
+            Row::Dense(x) => x.iter().map(|&v| v as f64 * v as f64).sum(),
+            Row::Sparse { values, .. } => values.iter().map(|&v| v as f64 * v as f64).sum(),
+        }
+    }
+
+    /// ‖self − other‖² with differences taken in `f64` (matching the
+    /// dense kernel's direct path). Sparse×sparse merges the index
+    /// union; mixed pairs walk every coordinate of the dense side so the
+    /// term order — and therefore every bit — matches the dense loop.
+    pub fn sqdist(&self, other: Row<'_>) -> f64 {
+        match (*self, other) {
+            (Row::Dense(a), Row::Dense(b)) => {
+                let n = a.len().min(b.len());
+                let mut s = 0f64;
+                for k in 0..n {
+                    let d = a[k] as f64 - b[k] as f64;
+                    s += d * d;
+                }
+                s
+            }
+            (Row::Dense(a), Row::Sparse { indices, values, .. }) => {
+                let mut s = 0f64;
+                let mut p = 0usize;
+                for (k, &av) in a.iter().enumerate() {
+                    let bv = if p < indices.len() && indices[p] as usize == k {
+                        let v = values[p];
+                        p += 1;
+                        v
+                    } else {
+                        0.0
+                    };
+                    let d = av as f64 - bv as f64;
+                    s += d * d;
+                }
+                s
+            }
+            (Row::Sparse { indices, values, .. }, Row::Dense(b)) => {
+                let mut s = 0f64;
+                let mut p = 0usize;
+                for (k, &bv) in b.iter().enumerate() {
+                    let av = if p < indices.len() && indices[p] as usize == k {
+                        let v = values[p];
+                        p += 1;
+                        v
+                    } else {
+                        0.0
+                    };
+                    let d = av as f64 - bv as f64;
+                    s += d * d;
+                }
+                s
+            }
+            (
+                Row::Sparse { indices: ia, values: va, .. },
+                Row::Sparse { indices: ib, values: vb, .. },
+            ) => {
+                let (mut p, mut q) = (0usize, 0usize);
+                let mut s = 0f64;
+                while p < ia.len() || q < ib.len() {
+                    let d = if q >= ib.len() || (p < ia.len() && ia[p] < ib[q]) {
+                        let d = va[p] as f64 - 0.0;
+                        p += 1;
+                        d
+                    } else if p >= ia.len() || ib[q] < ia[p] {
+                        let d = 0.0 - vb[q] as f64;
+                        q += 1;
+                        d
+                    } else {
+                        let d = va[p] as f64 - vb[q] as f64;
+                        p += 1;
+                        q += 1;
+                        d
+                    };
+                    s += d * d;
+                }
+                s
+            }
+        }
+    }
+
+    /// Densify into `out` (length `dim`), zero-filling the gaps.
+    pub fn densify_into(&self, out: &mut [f32]) {
+        assert!(out.len() == self.dim(), "buffer len {} != dim {}", out.len(), self.dim());
+        match self {
+            Row::Dense(x) => out.copy_from_slice(x),
+            Row::Sparse { indices, values, .. } => {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                for (p, &idx) in indices.iter().enumerate() {
+                    out[idx as usize] = values[p];
+                }
+            }
+        }
+    }
+
+    /// The row as an owned dense vector.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim()];
+        self.densify_into(&mut out);
+        out
+    }
+
+    /// Visit the stored entries in ascending column order (dense rows
+    /// visit every coordinate).
+    pub fn for_each_entry(&self, mut f: impl FnMut(u32, f32)) {
+        match self {
+            Row::Dense(x) => {
+                for (k, &v) in x.iter().enumerate() {
+                    f(k as u32, v);
+                }
+            }
+            Row::Sparse { indices, values, .. } => {
+                for (p, &idx) in indices.iter().enumerate() {
+                    f(idx, values[p]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    /// A random dense block with a controllable fraction of exact zeros
+    /// (the interesting regime for the skip-zeros parity argument).
+    fn random_rows(n: usize, d: usize, density: f64, rng: &mut Pcg) -> Vec<f32> {
+        (0..n * d)
+            .map(|_| {
+                if rng.bernoulli(density) {
+                    rng.normal() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_bitwise_on_dot_sqnorm_sqdist() {
+        let mut rng = Pcg::new(7);
+        for &density in &[1.0, 0.5, 0.05] {
+            let (n, d) = (17, 23);
+            let block = random_rows(n, d, density, &mut rng);
+            let dense = Features::dense(d, block);
+            let sparse = dense.to_sparse();
+            assert_eq!(sparse.len(), n);
+            for i in 0..n {
+                for j in 0..n {
+                    let (di, dj) = (dense.row(i), dense.row(j));
+                    let (si, sj) = (sparse.row(i), sparse.row(j));
+                    // all four backend pairings, every helper
+                    for (a, b) in [(di, dj), (di, sj), (si, dj), (si, sj)] {
+                        assert_eq!(
+                            a.dot(b).to_bits(),
+                            di.dot(dj).to_bits(),
+                            "dot i={i} j={j} density={density}"
+                        );
+                        assert_eq!(
+                            a.sqdist(b).to_bits(),
+                            di.sqdist(dj).to_bits(),
+                            "sqdist i={i} j={j} density={density}"
+                        );
+                    }
+                    assert_eq!(si.sqnorm().to_bits(), di.sqnorm().to_bits(), "sqnorm {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_trips_preserve_logical_content() {
+        let mut rng = Pcg::new(8);
+        let block = random_rows(9, 11, 0.3, &mut rng);
+        let dense = Features::dense(11, block);
+        let sparse = dense.to_sparse();
+        assert_eq!(sparse.to_dense(), dense);
+        assert_eq!(sparse.to_sparse(), sparse);
+        for i in 0..dense.len() {
+            assert_eq!(sparse.row(i).to_vec(), dense.row(i).to_vec(), "row {i}");
+            assert_eq!(sparse.row(i).dim(), 11);
+        }
+    }
+
+    #[test]
+    fn push_paths_agree_across_backends() {
+        let mut dense = Features::dense_with_dim(5);
+        let mut sparse = Features::sparse_with_dim(5);
+        dense.push_dense(&[0.0, 1.5, 0.0, -2.0, 0.0]);
+        sparse.push_dense(&[0.0, 1.5, 0.0, -2.0, 0.0]);
+        dense.push_entries(&[(0, 3.0), (4, 0.5)]);
+        sparse.push_entries(&[(0, 3.0), (4, 0.5)]);
+        // cross-backend push_row
+        dense.push_row(sparse.row(0));
+        sparse.push_row(dense.row(0));
+        assert_eq!(dense.len(), 3);
+        assert_eq!(sparse.len(), 3);
+        for i in 0..3 {
+            assert_eq!(dense.row(i).to_vec(), sparse.row(i).to_vec(), "row {i}");
+        }
+        assert_eq!(sparse.nnz(), 6);
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+    }
+
+    #[test]
+    fn gather_preserves_backend_and_rows() {
+        let mut rng = Pcg::new(9);
+        let dense = Features::dense(6, random_rows(8, 6, 0.4, &mut rng));
+        let sparse = dense.to_sparse();
+        let idx = [3usize, 0, 3, 7];
+        let gd = dense.gather(&idx);
+        let gs = sparse.gather(&idx);
+        assert!(!gd.is_sparse() && gs.is_sparse());
+        assert_eq!(gd.len(), 4);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(gd.row(k).to_vec(), dense.row(i).to_vec());
+            assert_eq!(gs.row(k).to_vec(), dense.row(i).to_vec());
+        }
+    }
+
+    #[test]
+    fn sparsification_keeps_nan_and_negative_zero_semantics() {
+        let mut sparse = Features::sparse_with_dim(3);
+        sparse.push_dense(&[f32::NAN, -0.0, 1.0]);
+        // NaN is stored; -0.0 densifies back to +0.0, which every kernel
+        // helper treats identically (module docs).
+        assert_eq!(sparse.nnz(), 2);
+        let v = sparse.row(0).to_vec();
+        assert!(v[0].is_nan());
+        assert_eq!(v[1].to_bits(), 0.0f32.to_bits());
+        assert_eq!(v[2], 1.0);
+    }
+
+    #[test]
+    fn density_and_resident_bytes_reflect_storage() {
+        let mut rng = Pcg::new(10);
+        let dense = Features::dense(100, random_rows(50, 100, 0.02, &mut rng));
+        let sparse = dense.to_sparse();
+        assert!(sparse.density() < 0.1, "density {}", sparse.density());
+        assert!(
+            sparse.resident_bytes() < dense.resident_bytes(),
+            "sparse {} !< dense {}",
+            sparse.resident_bytes(),
+            dense.resident_bytes()
+        );
+        assert!((dense.density() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_csr_validates_and_matches_pushes() {
+        let f = Features::from_csr(4, vec![0, 2, 2, 3], vec![0, 3, 1], vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.row(0).to_vec(), vec![1.0, 0.0, 0.0, 2.0]);
+        assert_eq!(f.row(1).to_vec(), vec![0.0; 4]);
+        assert_eq!(f.row(2).to_vec(), vec![0.0, 3.0, 0.0, 0.0]);
+    }
+}

@@ -1,12 +1,28 @@
-//! LIBSVM sparse text format reader/writer.
+//! LIBSVM sparse text format: strict positioned parsing, streaming
+//! CSR-building readers, and writers.
 //!
 //! Format: one example per line, `<label> <index>:<value> ...` with
-//! 1-based, strictly increasing indices. We densify on read (the solver
-//! and the PJRT artifacts are dense); `dim` is the max index seen unless
-//! an explicit dimension is forced (to align train/test files).
+//! 1-based, strictly increasing indices. Whole-line comments (`# ...`)
+//! and trailing comments (`... # note`) are allowed; anything else that
+//! deviates from the grammar — empty lines, duplicate or out-of-order
+//! indices, index `0`, indices beyond `u32::MAX`, non-numeric labels,
+//! indices or values, stray tokens — is refused with a positioned
+//! `line N, col C` error instead of being skipped or silently repaired.
 //!
-//! Three label interpretations share one line parser:
-//! * [`read`] — binary ±1 labels (sign of the value, zero rejected),
+//! Reading is **streaming**: lines are parsed one at a time (a reused
+//! buffer per line, [`read_with`]) or as borrowed slices of one
+//! whole-file buffer ([`read_mapped`], the std-only stand-in for an
+//! mmap'd view), and each example's entries are appended directly to a
+//! CSR accumulation — a dense matrix is never materialized unless dense
+//! storage is actually requested. [`Storage`] selects the final backend;
+//! [`Storage::Auto`] keeps CSR for files at or below
+//! [`AUTO_SPARSE_MAX_DENSITY`] stored density and densifies above it.
+//! `dim` is the max index seen unless an explicit dimension is forced
+//! (to align train/test files).
+//!
+//! Three label interpretations share the strict parser:
+//! * [`read`] / [`read_auto`] / [`read_with`] — binary ±1 labels (sign
+//!   of the value, zero rejected),
 //! * [`read_regression`] — real-valued targets,
 //! * [`read_multiclass`] — arbitrary integer class labels.
 
@@ -17,52 +33,248 @@ use crate::bail;
 use crate::util::error::{Context, Result};
 
 use super::dataset::Dataset;
+use super::features::{Features, Row};
 use super::multiclass::MulticlassDataset;
 use super::regression::RegressionDataset;
 
-/// One parsed sparse example.
+/// [`Storage::Auto`] threshold: a file whose stored-entry density is at
+/// or below this fraction keeps its CSR representation; denser files
+/// are scattered into the dense row-major layout (at which point CSR
+/// bookkeeping would cost more than it saves).
+pub const AUTO_SPARSE_MAX_DENSITY: f64 = 0.25;
+
+/// Which feature backend a LIBSVM read materializes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Storage {
+    /// Choose by stored density: CSR at or below
+    /// [`AUTO_SPARSE_MAX_DENSITY`], dense above it.
+    Auto,
+    /// Scatter into dense row-major storage (the historical behavior).
+    Dense,
+    /// Keep the CSR representation built while streaming.
+    Sparse,
+}
+
+impl Storage {
+    /// Parse a `--storage` flag value (`auto` / `dense` / `sparse`).
+    pub fn parse(s: &str) -> Result<Storage> {
+        match s {
+            "auto" => Ok(Storage::Auto),
+            "dense" => Ok(Storage::Dense),
+            "sparse" => Ok(Storage::Sparse),
+            other => bail!("unknown storage {other:?} (expected auto|dense|sparse)"),
+        }
+    }
+}
+
+/// One parsed sparse example (the single-line entry point's shape).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparseExample {
     /// Class label (±1, sign of the parsed value).
     pub label: i8,
-    /// (0-based index, value), strictly increasing by index.
+    /// (0-based index, value), strictly increasing by index. Values that
+    /// parse to exact `±0.0` are dropped (they are indistinguishable
+    /// from absent coordinates to every consumer).
     pub entries: Vec<(usize, f32)>,
 }
 
-/// Parse one LIBSVM line without interpreting the label: the raw f64
-/// label value plus the sparse entries.
-fn parse_line_raw(line: &str) -> Result<(f64, Vec<(usize, f32)>)> {
-    let mut parts = line.split_ascii_whitespace();
-    let label_tok = parts.next().context("empty line")?;
-    let label_val: f64 = label_tok
-        .parse()
-        .with_context(|| format!("bad label {label_tok:?}"))?;
-    let mut entries = Vec::new();
-    let mut last = 0usize; // 1-based last index
-    for tok in parts {
-        if tok.starts_with('#') {
-            break; // trailing comment
+/// Tokens of a line paired with their 1-based byte column — the `col`
+/// every parse error reports.
+fn tokens(line: &str) -> impl Iterator<Item = (usize, &str)> + '_ {
+    let base = line.as_ptr() as usize;
+    line.split_ascii_whitespace()
+        .map(move |tok| (tok.as_ptr() as usize - base + 1, tok))
+}
+
+/// Streaming CSR accumulation: every fed line appends its stored
+/// entries in place; no per-line or whole-matrix dense buffer exists.
+struct CsrAccum {
+    /// Row start offsets (`examples + 1` entries).
+    offsets: Vec<usize>,
+    /// 0-based column indices, strictly increasing within each row.
+    indices: Vec<u32>,
+    /// Stored values, parallel to `indices`.
+    values: Vec<f32>,
+    /// Raw f64 label column, one per example.
+    labels: Vec<f64>,
+    /// 1-based source line of each example (for positioned label errors).
+    linenos: Vec<usize>,
+    /// Highest 1-based feature index seen (zero-valued entries count).
+    max_index: u64,
+}
+
+impl CsrAccum {
+    fn new() -> CsrAccum {
+        CsrAccum {
+            offsets: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            linenos: Vec::new(),
+            max_index: 0,
         }
-        let (idx, val) = tok
-            .split_once(':')
-            .with_context(|| format!("bad feature token {tok:?}"))?;
-        let idx: usize = idx.parse().with_context(|| format!("bad index {idx:?}"))?;
-        if idx == 0 {
-            bail!("indices are 1-based, got 0");
-        }
-        if idx <= last {
-            bail!("indices must be strictly increasing ({last} then {idx})");
-        }
-        last = idx;
-        let val: f32 = val.parse().with_context(|| format!("bad value {val:?}"))?;
-        entries.push((idx - 1, val));
     }
-    Ok((label_val, entries))
+
+    /// Parse one source line (1-based `lineno`). Comment lines are
+    /// skipped; anything else must be a grammatical example or the whole
+    /// read fails with a `line N, col C` position.
+    fn feed(&mut self, lineno: usize, line: &str) -> Result<()> {
+        let line = line.trim_end_matches(|c| c == '\n' || c == '\r');
+        let trimmed = line.trim();
+        if trimmed.starts_with('#') {
+            return Ok(()); // whole-line comment
+        }
+        if trimmed.is_empty() {
+            bail!("line {lineno}, col 1: empty line (remove it or comment it out with '#')");
+        }
+        let mut toks = tokens(line);
+        let (lcol, ltok) = toks.next().unwrap_or((1, ""));
+        let label: f64 = ltok
+            .parse()
+            .ok()
+            .with_context(|| format!("line {lineno}, col {lcol}: bad label {ltok:?}"))?;
+        let mut last = 0u64; // 1-based previous index
+        for (col, tok) in toks {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (itok, vtok) = tok.split_once(':').with_context(|| {
+                format!("line {lineno}, col {col}: bad feature token {tok:?} (expected index:value)")
+            })?;
+            let idx: u64 = itok
+                .parse()
+                .ok()
+                .with_context(|| format!("line {lineno}, col {col}: bad index {itok:?}"))?;
+            if idx == 0 {
+                bail!("line {lineno}, col {col}: indices are 1-based, got 0");
+            }
+            if idx > u32::MAX as u64 {
+                bail!(
+                    "line {lineno}, col {col}: index {idx} exceeds the supported maximum {}",
+                    u32::MAX
+                );
+            }
+            if idx == last {
+                bail!("line {lineno}, col {col}: duplicate index {idx}");
+            }
+            if idx < last {
+                bail!("line {lineno}, col {col}: out-of-order index {idx} after {last}");
+            }
+            last = idx;
+            let val: f32 = vtok
+                .parse()
+                .ok()
+                .with_context(|| format!("line {lineno}, col {col}: bad value {vtok:?}"))?;
+            // Exact ±0.0 is indistinguishable from an absent coordinate;
+            // dropping it keeps CSR reads identical to densify→sparsify.
+            if val.to_bits() << 1 != 0 {
+                self.indices.push((idx - 1) as u32);
+                self.values.push(val);
+            }
+            self.max_index = self.max_index.max(idx);
+        }
+        self.offsets.push(self.indices.len());
+        self.labels.push(label);
+        self.linenos.push(lineno);
+        Ok(())
+    }
+
+    /// Resolve the dense dimension and freeze the accumulation.
+    fn finish(self, force_dim: Option<usize>) -> Result<LibsvmFile> {
+        let max_dim = self.max_index as usize;
+        let dim = match force_dim {
+            Some(d) => {
+                if d < max_dim {
+                    bail!("force_dim {d} < max feature index {max_dim}");
+                }
+                d
+            }
+            None => max_dim.max(1),
+        };
+        Ok(LibsvmFile { dim, accum: self })
+    }
+}
+
+/// A fully parsed LIBSVM file: the CSR accumulation plus its resolved
+/// dense dimension, ready to materialize under any [`Storage`].
+struct LibsvmFile {
+    dim: usize,
+    accum: CsrAccum,
+}
+
+impl LibsvmFile {
+    fn len(&self) -> usize {
+        self.accum.labels.len()
+    }
+
+    /// Stored entries over the full `len × dim` grid.
+    fn density(&self) -> f64 {
+        let cells = self.len() * self.dim;
+        if cells == 0 {
+            1.0
+        } else {
+            self.accum.indices.len() as f64 / cells as f64
+        }
+    }
+
+    /// Scatter example `r` into a dense row buffer.
+    fn densify_row(&self, r: usize, row: &mut [f32]) {
+        row.iter_mut().for_each(|v| *v = 0.0);
+        for p in self.accum.offsets[r]..self.accum.offsets[r + 1] {
+            row[self.accum.indices[p] as usize] = self.accum.values[p];
+        }
+    }
+
+    /// Materialize the feature matrix under the requested storage.
+    fn into_features(self, storage: Storage) -> Features {
+        let keep_csr = match storage {
+            Storage::Sparse => true,
+            Storage::Dense => false,
+            Storage::Auto => self.density() <= AUTO_SPARSE_MAX_DENSITY,
+        };
+        if keep_csr {
+            Features::from_csr(self.dim, self.accum.offsets, self.accum.indices, self.accum.values)
+        } else {
+            let (len, dim) = (self.len(), self.dim);
+            let mut rows = vec![0f32; len * dim];
+            for r in 0..len {
+                let base = r * dim;
+                for p in self.accum.offsets[r]..self.accum.offsets[r + 1] {
+                    rows[base + self.accum.indices[p] as usize] = self.accum.values[p];
+                }
+            }
+            Features::dense(dim, rows)
+        }
+    }
+
+    /// Interpret the label column as binary ±1 (sign of the value, zero
+    /// refused with its source line).
+    fn binary_labels(&self) -> Result<Vec<i8>> {
+        let mut out = Vec::with_capacity(self.len());
+        for (r, &label) in self.accum.labels.iter().enumerate() {
+            if label > 0.0 {
+                out.push(1);
+            } else if label < 0.0 {
+                out.push(-1);
+            } else {
+                bail!(
+                    "line {}: label must be nonzero (+1/-1), got {label:?}",
+                    self.accum.linenos[r]
+                );
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// Parse one LIBSVM line. Accepts labels `+1/-1/1/-1.0` etc. (sign only).
 pub fn parse_line(line: &str) -> Result<SparseExample> {
-    let (label_val, entries) = parse_line_raw(line)?;
+    let mut accum = CsrAccum::new();
+    accum.feed(1, line)?;
+    let label_val = *accum
+        .labels
+        .first()
+        .context("comment line holds no example")?;
     let label = if label_val > 0.0 {
         1
     } else if label_val < 0.0 {
@@ -70,75 +282,100 @@ pub fn parse_line(line: &str) -> Result<SparseExample> {
     } else {
         bail!("label must be nonzero (+1/-1), got {label_val:?}");
     };
+    let entries = accum
+        .indices
+        .iter()
+        .zip(&accum.values)
+        .map(|(&i, &v)| (i as usize, v))
+        .collect();
     Ok(SparseExample { label, entries })
 }
 
-/// One raw example: 1-based source line, raw f64 label, sparse entries.
-type RawExample = (usize, f64, Vec<(usize, f32)>);
-
-/// Shared reading loop: every non-comment line's raw (label, entries)
-/// plus the resolved dense dimension.
-fn read_raw<R: BufRead>(reader: R, force_dim: Option<usize>) -> Result<(usize, Vec<RawExample>)> {
-    let mut examples = Vec::new();
-    let mut max_dim = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
+/// Stream every line of `reader` through the strict parser into a CSR
+/// accumulation, reusing one line buffer (the constant-memory path for
+/// arbitrarily long files).
+fn accum_from<R: BufRead>(mut reader: R) -> Result<CsrAccum> {
+    let mut accum = CsrAccum::new();
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .with_context(|| format!("line {}: read failed (invalid UTF-8?)", lineno + 1))?;
+        if n == 0 {
+            break;
         }
-        let (label, entries) = parse_line_raw(trimmed)
-            .with_context(|| format!("line {}", lineno + 1))?;
-        if let Some((idx, _)) = entries.last() {
-            max_dim = max_dim.max(idx + 1);
-        }
-        examples.push((lineno + 1, label, entries));
+        lineno += 1;
+        accum.feed(lineno, &line)?;
     }
-    let dim = match force_dim {
-        Some(d) => {
-            if d < max_dim {
-                bail!("force_dim {d} < max feature index {max_dim}");
-            }
-            d
-        }
-        None => max_dim.max(1),
-    };
-    Ok((dim, examples))
-}
-
-/// Scatter sparse entries into a zeroed dense row.
-fn densify(entries: &[(usize, f32)], row: &mut [f32]) {
-    row.iter_mut().for_each(|v| *v = 0.0);
-    for &(i, v) in entries {
-        row[i] = v;
-    }
+    Ok(accum)
 }
 
 /// Read a LIBSVM file into a dense [`Dataset`]. `force_dim` overrides the
 /// inferred dimension (must be >= max index).
 pub fn read(path: &Path, force_dim: Option<usize>) -> Result<Dataset> {
-    let file = std::fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?;
-    read_from(std::io::BufReader::new(file), force_dim)
+    read_with(path, force_dim, Storage::Dense)
 }
 
-/// Read from any buffered reader (unit-testable without touching disk).
+/// Read a LIBSVM file, keeping CSR storage when the file is sparse
+/// enough ([`Storage::Auto`]).
+pub fn read_auto(path: &Path, force_dim: Option<usize>) -> Result<Dataset> {
+    read_with(path, force_dim, Storage::Auto)
+}
+
+/// Read a LIBSVM file (streaming, buffered line at a time) into the
+/// requested [`Storage`].
+pub fn read_with(path: &Path, force_dim: Option<usize>, storage: Storage) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_with_from(std::io::BufReader::new(file), force_dim, storage)
+}
+
+/// Read from any buffered reader into a dense [`Dataset`]
+/// (unit-testable without touching disk).
 pub fn read_from<R: BufRead>(reader: R, force_dim: Option<usize>) -> Result<Dataset> {
-    let (dim, examples) = read_raw(reader, force_dim)?;
-    let mut ds = Dataset::with_dim(dim);
-    let mut row = vec![0f32; dim];
-    for (lineno, label, entries) in &examples {
-        let y = if *label > 0.0 {
-            1
-        } else if *label < 0.0 {
-            -1
-        } else {
-            bail!("line {lineno}: label must be nonzero (+1/-1)");
+    read_with_from(reader, force_dim, Storage::Dense)
+}
+
+/// [`read_with`] from any buffered reader.
+pub fn read_with_from<R: BufRead>(
+    reader: R,
+    force_dim: Option<usize>,
+    storage: Storage,
+) -> Result<Dataset> {
+    let file = accum_from(reader)?.finish(force_dim)?;
+    let labels = file.binary_labels()?;
+    Ok(Dataset::from_features(file.into_features(storage), labels))
+}
+
+/// Whole-file read: the file is pulled into one resident buffer and
+/// parsed as borrowed per-line slices — no per-line allocation or
+/// copying, the std-only stand-in for an mmap'd view (the toolchain
+/// image carries no mmap crate and `unsafe` is audited out of this
+/// layer). Produces a dataset identical to the streaming [`read_with`].
+pub fn read_mapped(path: &Path, force_dim: Option<usize>, storage: Storage) -> Result<Dataset> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut accum = CsrAccum::new();
+    let mut pieces = bytes.split(|&b| b == b'\n').enumerate().peekable();
+    while let Some((i, raw)) = pieces.next() {
+        let raw = match raw.last() {
+            Some(&b'\r') => &raw[..raw.len() - 1],
+            _ => raw,
         };
-        densify(entries, &mut row);
-        ds.push(&row, y);
+        if pieces.peek().is_none() && raw.is_empty() {
+            break; // the remainder after a final newline, not a line
+        }
+        let line = match std::str::from_utf8(raw) {
+            Ok(s) => s,
+            Err(_) => bail!("line {}: invalid UTF-8", i + 1),
+        };
+        accum.feed(i + 1, line)?;
     }
-    Ok(ds)
+    let file = accum.finish(force_dim)?;
+    let labels = file.binary_labels()?;
+    Ok(Dataset::from_features(file.into_features(storage), labels))
 }
 
 /// Read a LIBSVM file as a regression set: the label column is the
@@ -154,12 +391,12 @@ pub fn read_regression_from<R: BufRead>(
     reader: R,
     force_dim: Option<usize>,
 ) -> Result<RegressionDataset> {
-    let (dim, examples) = read_raw(reader, force_dim)?;
-    let mut ds = RegressionDataset::with_dim(dim);
-    let mut row = vec![0f32; dim];
-    for (_, target, entries) in &examples {
-        densify(entries, &mut row);
-        ds.push(&row, *target);
+    let file = accum_from(reader)?.finish(force_dim)?;
+    let mut ds = RegressionDataset::with_dim(file.dim);
+    let mut row = vec![0f32; file.dim];
+    for r in 0..file.len() {
+        file.densify_row(r, &mut row);
+        ds.push(&row, file.accum.labels[r]);
     }
     Ok(ds)
 }
@@ -177,38 +414,53 @@ pub fn read_multiclass_from<R: BufRead>(
     reader: R,
     force_dim: Option<usize>,
 ) -> Result<MulticlassDataset> {
-    let (dim, examples) = read_raw(reader, force_dim)?;
-    let mut ds = MulticlassDataset::with_dim(dim);
-    let mut row = vec![0f32; dim];
-    for (lineno, label, entries) in &examples {
+    let file = accum_from(reader)?.finish(force_dim)?;
+    let mut ds = MulticlassDataset::with_dim(file.dim);
+    let mut row = vec![0f32; file.dim];
+    for r in 0..file.len() {
+        let label = file.accum.labels[r];
         if label.fract() != 0.0 || label.abs() > i32::MAX as f64 {
-            bail!("line {lineno}: multiclass label {label} is not an integer class id");
+            bail!(
+                "line {}: multiclass label {label} is not an integer class id",
+                file.accum.linenos[r]
+            );
         }
-        densify(entries, &mut row);
-        ds.push(&row, *label as i32);
+        file.densify_row(r, &mut row);
+        ds.push(&row, label as i32);
     }
     Ok(ds)
 }
 
-/// Write one dense row's non-zero entries as ` index:value` tokens.
-fn write_entries<W: Write>(w: &mut W, row: &[f32]) -> Result<()> {
-    for (j, &v) in row.iter().enumerate() {
+/// Write one row's stored non-zero entries as ` index:value` tokens
+/// (either backend; dense rows skip their zeros, so a dense↔sparse pair
+/// of the same logical dataset writes byte-identical files).
+fn write_entries<W: Write>(w: &mut W, row: Row<'_>) -> Result<()> {
+    let mut io_err: Option<std::io::Error> = None;
+    row.for_each_entry(|idx, v| {
         if v != 0.0 {
-            write!(w, " {}:{}", j + 1, v)?;
+            if io_err.is_none() {
+                if let Err(e) = write!(w, " {}:{}", idx + 1, v) {
+                    io_err = Some(e);
+                }
+            }
         }
+    });
+    if let Some(e) = io_err {
+        return Err(e.into());
     }
     writeln!(w)?;
     Ok(())
 }
 
-/// Write a dataset in LIBSVM format (zero entries skipped).
+/// Write a dataset in LIBSVM format (zero entries skipped; both storage
+/// backends accepted).
 pub fn write(ds: &Dataset, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
     for i in 0..ds.len() {
         write!(w, "{}", if ds.label(i) > 0 { "+1" } else { "-1" })?;
-        write_entries(&mut w, ds.row(i))?;
+        write_entries(&mut w, ds.row_ref(i))?;
     }
     Ok(())
 }
@@ -221,7 +473,7 @@ pub fn write_regression(ds: &RegressionDataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(file);
     for i in 0..ds.len() {
         write!(w, "{}", ds.target(i))?;
-        write_entries(&mut w, ds.row(i))?;
+        write_entries(&mut w, Row::Dense(ds.row(i)))?;
     }
     Ok(())
 }
@@ -234,7 +486,7 @@ pub fn write_multiclass(ds: &MulticlassDataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(file);
     for i in 0..ds.len() {
         write!(w, "{}", ds.label(i))?;
-        write_entries(&mut w, ds.row(i))?;
+        write_entries(&mut w, Row::Dense(ds.row(i)))?;
     }
     Ok(())
 }
@@ -269,9 +521,46 @@ mod tests {
         assert!(parse_line("").is_err());
     }
 
+    /// The malformed-input table: every deviation from the grammar is
+    /// refused with a `line N, col C` position, never skipped.
+    #[test]
+    fn malformed_lines_are_refused_with_positions() {
+        let cases: &[(&str, &str)] = &[
+            ("+1 2:1 2:3", "duplicate index 2"),
+            ("+1 3:1 2:3", "out-of-order index 2 after 3"),
+            ("+1 0:2", "indices are 1-based"),
+            ("+1 5000000000:1", "exceeds the supported maximum"),
+            ("+1 2:abc", "bad value \"abc\""),
+            ("x 1:1", "bad label \"x\""),
+            ("+1 junk", "bad feature token"),
+            ("+1 :5", "bad index"),
+            ("", "empty line"),
+            ("   ", "empty line"),
+        ];
+        for &(bad, want) in cases {
+            let text = format!("+1 1:1\n{bad}\n-1 2:2\n");
+            for reader in [Storage::Dense, Storage::Sparse] {
+                let err = read_with_from(Cursor::new(text.as_str()), None, reader).unwrap_err();
+                let msg = format!("{err:#}");
+                assert!(msg.contains("line 2"), "{bad:?}: no line position in {msg:?}");
+                assert!(msg.contains("col"), "{bad:?}: no column position in {msg:?}");
+                assert!(msg.contains(want), "{bad:?}: {msg:?} does not mention {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn comments_are_allowed_everywhere_but_blank_lines_are_not() {
+        let ok = "# leading comment\n+1 1:1 # trailing\n  # indented comment\n-1 2:2\n";
+        let ds = read_from(Cursor::new(ok), None).unwrap();
+        assert_eq!(ds.len(), 2);
+        let err = read_from(Cursor::new("+1 1:1\n\n-1 2:2\n"), None).unwrap_err();
+        assert!(format!("{err:#}").contains("empty line"));
+    }
+
     #[test]
     fn read_densifies_and_infers_dim() {
-        let text = "+1 1:1 3:3\n-1 2:2\n\n# comment\n+1 1:9\n";
+        let text = "+1 1:1 3:3\n-1 2:2\n# comment\n+1 1:9\n";
         let ds = read_from(Cursor::new(text), None).unwrap();
         assert_eq!(ds.len(), 3);
         assert_eq!(ds.dim(), 3);
@@ -285,6 +574,71 @@ mod tests {
         let ds = read_from(Cursor::new("+1 1:1\n"), Some(5)).unwrap();
         assert_eq!(ds.dim(), 5);
         assert!(read_from(Cursor::new("+1 9:1\n"), Some(3)).is_err());
+    }
+
+    #[test]
+    fn storage_selection_tracks_density() {
+        // 4 stored entries over 2×8 cells = 0.25 density: at the
+        // threshold, Auto keeps CSR.
+        let sparse_text = "+1 1:1 8:2\n-1 2:1 5:-3\n";
+        let dense = read_from(Cursor::new(sparse_text), None).unwrap();
+        let sparse = read_with_from(Cursor::new(sparse_text), None, Storage::Sparse).unwrap();
+        let auto = read_with_from(Cursor::new(sparse_text), None, Storage::Auto).unwrap();
+        assert!(!dense.is_sparse());
+        assert!(sparse.is_sparse());
+        assert!(auto.is_sparse(), "0.25 density must stay CSR under Auto");
+        assert_eq!(sparse, dense.to_sparse(), "CSR read == densify→sparsify");
+        assert_eq!(sparse.to_dense(), dense);
+        assert_eq!(auto, sparse);
+        // A dense file (density 1.0) densifies under Auto.
+        let dense_text = "+1 1:1 2:2\n-1 1:3 2:4\n";
+        let auto = read_with_from(Cursor::new(dense_text), None, Storage::Auto).unwrap();
+        assert!(!auto.is_sparse());
+    }
+
+    #[test]
+    fn zero_valued_entries_are_dropped_but_count_for_dim() {
+        let ds = read_with_from(Cursor::new("+1 2:1 7:0\n"), None, Storage::Sparse).unwrap();
+        assert_eq!(ds.dim(), 7, "index 7 sets the dimension even at value 0");
+        assert_eq!(ds.nnz(), 1, "the zero-valued entry is not stored");
+        let dense = read_from(Cursor::new("+1 2:1 7:0\n"), None).unwrap();
+        assert_eq!(ds.to_dense(), dense);
+    }
+
+    #[test]
+    fn mapped_read_is_identical_to_streamed_read() {
+        let dir = std::env::temp_dir().join("pasmo-libsvm-mapped-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.libsvm");
+        // CRLF line, comment, negative values, no trailing newline
+        std::fs::write(&path, "+1 1:0.5 4:-2\r\n# note\n-1 2:1e-3\n+1 3:7").unwrap();
+        for storage in [Storage::Dense, Storage::Sparse, Storage::Auto] {
+            let streamed = read_with(&path, None, storage).unwrap();
+            let mapped = read_mapped(&path, None, storage).unwrap();
+            assert_eq!(streamed, mapped, "{storage:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_a_positioned_error_not_a_partial_dataset() {
+        let dir = std::env::temp_dir().join("pasmo-libsvm-trunc-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.libsvm");
+        let full = "+1 1:0.5 3:1.25\n-1 2:0.75 4:-1.5\n+1 1:2.5 4:0.125\n";
+        // Cut right after the last ':' — the final token has no value.
+        let cut = full.rfind(':').unwrap() + 1;
+        std::fs::write(&path, &full.as_bytes()[..cut]).unwrap();
+        for result in [
+            read_with(&path, None, Storage::Sparse),
+            read_mapped(&path, None, Storage::Sparse),
+        ] {
+            let err = result.unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("line 3"), "no position in {msg:?}");
+            assert!(msg.contains("bad value"), "{msg:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -355,6 +709,15 @@ mod tests {
         write(&ds, &path).unwrap();
         let rt = read(&path, Some(3)).unwrap();
         assert_eq!(ds, rt);
+        // the sparse twin writes a byte-identical file
+        let spath = dir.join("toy-sparse.libsvm");
+        write(&ds.to_sparse(), &spath).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&spath).unwrap(),
+            "dense and sparse writers must produce identical bytes"
+        );
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&spath).ok();
     }
 }

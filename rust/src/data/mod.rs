@@ -1,9 +1,10 @@
-//! Dataset substrate: dense dataset types (binary, regression,
-//! multiclass), LIBSVM-format IO, feature scaling, synthetic generators
-//! for the paper's 22-dataset suite, and permutation /
-//! cross-validation splits.
+//! Dataset substrate: the dense/CSR-sparse feature matrix, dataset
+//! types (binary, regression, multiclass), LIBSVM-format IO, feature
+//! scaling, synthetic generators for the paper's 22-dataset suite, and
+//! permutation / cross-validation splits.
 
 pub mod dataset;
+pub mod features;
 pub mod libsvm;
 pub mod multiclass;
 pub mod regression;
@@ -13,3 +14,4 @@ pub mod suite;
 pub mod synth;
 
 pub use dataset::Dataset;
+pub use features::{Features, Row};

@@ -3,6 +3,11 @@
 //! The paper's benchmarks (following Rätsch et al.) are normalized before
 //! training; RBF-kernel SVMs are scale-sensitive, so generators and
 //! LIBSVM-loaded data go through one of these before solving.
+//!
+//! Scaling shifts exact zeros to nonzero values, so it inherently
+//! destroys sparsity: fitting reads rows through densifying views (both
+//! backends accepted) and [`Scaler::apply`] always produces a
+//! dense-storage dataset.
 
 use super::dataset::Dataset;
 
@@ -20,8 +25,10 @@ impl Scaler {
         let d = ds.dim();
         let mut lo = vec![f32::INFINITY; d];
         let mut hi = vec![f32::NEG_INFINITY; d];
+        let mut buf = vec![0f32; d];
         for i in 0..ds.len() {
-            for (k, &v) in ds.row(i).iter().enumerate() {
+            ds.row_ref(i).densify_into(&mut buf);
+            for (k, &v) in buf.iter().enumerate() {
                 lo[k] = lo[k].min(v);
                 hi[k] = hi[k].max(v);
             }
@@ -45,15 +52,18 @@ impl Scaler {
         let d = ds.dim();
         let n = ds.len().max(1) as f64;
         let mut mean = vec![0f64; d];
+        let mut buf = vec![0f32; d];
         for i in 0..ds.len() {
-            for (k, &v) in ds.row(i).iter().enumerate() {
+            ds.row_ref(i).densify_into(&mut buf);
+            for (k, &v) in buf.iter().enumerate() {
                 mean[k] += v as f64;
             }
         }
         mean.iter_mut().for_each(|m| *m /= n);
         let mut var = vec![0f64; d];
         for i in 0..ds.len() {
-            for (k, &v) in ds.row(i).iter().enumerate() {
+            ds.row_ref(i).densify_into(&mut buf);
+            for (k, &v) in buf.iter().enumerate() {
                 let dlt = v as f64 - mean[k];
                 var[k] += dlt * dlt;
             }
@@ -73,12 +83,16 @@ impl Scaler {
         Scaler { shift, factor }
     }
 
-    /// Apply to a dataset, producing a new one.
+    /// Apply to a dataset, producing a new dense-storage dataset
+    /// (scaled zeros are generally nonzero, so sparsity does not
+    /// survive the transform).
     pub fn apply(&self, ds: &Dataset) -> Dataset {
         let mut out = Dataset::with_dim(ds.dim());
+        let mut buf = vec![0f32; ds.dim()];
         let mut row = vec![0f32; ds.dim()];
         for i in 0..ds.len() {
-            for (k, &v) in ds.row(i).iter().enumerate() {
+            ds.row_ref(i).densify_into(&mut buf);
+            for (k, &v) in buf.iter().enumerate() {
                 row[k] = (v - self.shift[k]) * self.factor[k];
             }
             out.push(&row, ds.label(i));

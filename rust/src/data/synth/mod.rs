@@ -9,9 +9,11 @@
 pub mod banana;
 pub mod breiman;
 pub mod chessboard;
+pub mod sparse;
 pub mod surrogate;
 
 pub use banana::banana;
 pub use breiman::{ringnorm, twonorm, waveform};
 pub use chessboard::chessboard;
+pub use sparse::sparse_blobs;
 pub use surrogate::{surrogate, SurrogateSpec};

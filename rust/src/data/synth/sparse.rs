@@ -1,0 +1,92 @@
+//! Sparse synthetic classification data — the high-dimensional
+//! low-density regime the CSR feature backend exists for (bag-of-words
+//! style rows: a few stored coordinates out of thousands).
+//!
+//! Each example stores `nnz` of `dim` coordinates (so the dataset's
+//! density is `nnz/dim` by construction), with values ~ N(0, 1) and the
+//! label given by the sign of a fixed ±1 hyperplane drawn once from the
+//! seed — a linearly separable-ish problem every kernel can learn, with
+//! deterministic generation in the seed like the rest of the suite.
+
+use crate::data::dataset::Dataset;
+use crate::data::features::Features;
+use crate::util::prng::Pcg;
+
+/// Generate `n` sparse examples of dimension `dim` with exactly
+/// `min(nnz, dim)` stored entries per row (values that happen to round
+/// to ±0.0 are dropped by the CSR builder). The result uses CSR storage;
+/// call [`Dataset::to_dense`] for the dense twin.
+pub fn sparse_blobs(n: usize, dim: usize, nnz: usize, seed: u64) -> Dataset {
+    assert!(dim > 0, "dim must be positive");
+    let nnz = nnz.clamp(1, dim);
+    let mut rng = Pcg::new(seed);
+    // The labeling hyperplane: a dense ±1 weight vector, fixed per seed.
+    let w: Vec<f64> = (0..dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    let mut features = Features::sparse_with_dim(dim);
+    let mut labels = Vec::with_capacity(n);
+    let mut entries: Vec<(u32, f32)> = Vec::with_capacity(nnz);
+    let mut picked = vec![false; dim];
+    for _ in 0..n {
+        entries.clear();
+        // Sample `nnz` distinct coordinates by rejection (nnz ≪ dim in
+        // the target regime, so collisions are rare).
+        let mut chosen = 0usize;
+        while chosen < nnz {
+            let k = rng.below(dim);
+            if !picked[k] {
+                picked[k] = true;
+                entries.push((k as u32, rng.normal() as f32));
+                chosen += 1;
+            }
+        }
+        entries.sort_unstable_by_key(|&(k, _)| k);
+        let margin: f64 = entries.iter().map(|&(k, v)| w[k as usize] * v as f64).sum();
+        labels.push(if margin >= 0.0 { 1 } else { -1 });
+        features.push_entries(&entries);
+        for &(k, _) in &entries {
+            picked[k as usize] = false;
+        }
+    }
+    Dataset::from_features(features, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_is_by_construction() {
+        let ds = sparse_blobs(200, 1000, 10, 1);
+        assert!(ds.is_sparse());
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.dim(), 1000);
+        // exactly 10 sampled per row; a handful may round to ±0.0
+        assert!(ds.nnz() <= 2000 && ds.nnz() >= 1990, "nnz={}", ds.nnz());
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_rows_are_valid_csr() {
+        let a = sparse_blobs(50, 300, 5, 7);
+        let b = sparse_blobs(50, 300, 5, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, sparse_blobs(50, 300, 5, 8));
+        // round trip through dense preserves everything
+        assert_eq!(a.to_dense().to_sparse(), a);
+    }
+
+    #[test]
+    fn both_classes_appear() {
+        let ds = sparse_blobs(300, 500, 8, 3);
+        let (pos, neg) = ds.class_counts();
+        assert!(pos > 30 && neg > 30, "pos={pos} neg={neg}");
+    }
+
+    #[test]
+    fn nnz_clamps_to_dim() {
+        let ds = sparse_blobs(10, 3, 50, 2);
+        assert_eq!(ds.dim(), 3);
+        for i in 0..ds.len() {
+            assert!(ds.row_ref(i).nnz() <= 3);
+        }
+    }
+}

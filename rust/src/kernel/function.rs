@@ -3,6 +3,14 @@
 //! The paper's experiments use the Gaussian kernel exclusively; linear,
 //! polynomial and sigmoid are provided for API completeness and to test
 //! the solver on semi-definite / indefinite-direction edge cases.
+//!
+//! Evaluation comes in two equivalent forms: [`KernelFunction::eval`]
+//! over dense slices (the historical API) and
+//! [`KernelFunction::eval_rows`] over [`Row`] views from either feature
+//! backend. The two are bit-identical — the sparse row arithmetic skips
+//! only exact-zero terms (see `data::features` for the argument).
+
+use crate::data::features::Row;
 
 /// A kernel function `k(x, z)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -68,12 +76,37 @@ impl KernelFunction {
         }
     }
 
+    /// Evaluate `k(a, b)` over row views from either feature backend.
+    /// Bit-identical to [`KernelFunction::eval`] on the densified rows:
+    /// [`Row::dot`] / [`Row::sqdist`] reproduce the dense feature-order
+    /// accumulation exactly.
+    #[inline]
+    pub fn eval_rows(&self, a: Row<'_>, b: Row<'_>) -> f64 {
+        match *self {
+            KernelFunction::Rbf { gamma } => (-gamma * a.sqdist(b)).exp(),
+            KernelFunction::Linear => a.dot(b),
+            KernelFunction::Poly { gamma, coef0, degree } => {
+                (gamma * a.dot(b) + coef0).powi(degree as i32)
+            }
+            KernelFunction::Sigmoid { gamma, coef0 } => (gamma * a.dot(b) + coef0).tanh(),
+        }
+    }
+
     /// `k(x, x)` — cheap for RBF (always 1).
     #[inline]
     pub fn eval_self(&self, a: &[f32]) -> f64 {
         match *self {
             KernelFunction::Rbf { .. } => 1.0,
             _ => self.eval(a, a),
+        }
+    }
+
+    /// [`KernelFunction::eval_self`] over a row view.
+    #[inline]
+    pub fn eval_self_row(&self, a: Row<'_>) -> f64 {
+        match *self {
+            KernelFunction::Rbf { .. } => 1.0,
+            _ => self.eval_rows(a, a),
         }
     }
 
@@ -135,5 +168,38 @@ mod tests {
     fn gamma_accessor() {
         assert_eq!(KernelFunction::Rbf { gamma: 0.25 }.gamma(), Some(0.25));
         assert_eq!(KernelFunction::Linear.gamma(), None);
+    }
+
+    #[test]
+    fn eval_rows_is_bit_identical_to_dense_eval() {
+        use crate::data::features::Features;
+        // zeros included so the sparse rows actually skip terms
+        let a = [1.0f32, 0.0, 2.0, 0.0, -0.5];
+        let b = [0.0f32, 1.0, 2.0, 0.0, 3.0];
+        let mut sparse = Features::sparse_with_dim(5);
+        sparse.push_dense(&a);
+        sparse.push_dense(&b);
+        let kernels = [
+            KernelFunction::Rbf { gamma: 0.7 },
+            KernelFunction::Linear,
+            KernelFunction::Poly { gamma: 0.5, coef0: 1.0, degree: 3 },
+            KernelFunction::Sigmoid { gamma: 0.3, coef0: -0.1 },
+        ];
+        for k in kernels {
+            let want = k.eval(&a, &b);
+            for (ra, rb) in [
+                (Row::Dense(&a), Row::Dense(&b)),
+                (Row::Dense(&a), sparse.row(1)),
+                (sparse.row(0), Row::Dense(&b)),
+                (sparse.row(0), sparse.row(1)),
+            ] {
+                assert_eq!(k.eval_rows(ra, rb).to_bits(), want.to_bits(), "{k:?}");
+            }
+            assert_eq!(
+                k.eval_self_row(sparse.row(0)).to_bits(),
+                k.eval_self(&a).to_bits(),
+                "{k:?} self"
+            );
+        }
     }
 }

@@ -28,6 +28,11 @@ use super::tile;
 /// are chunked across a `std::thread::scope` ([`tile::chunked`]) —
 /// entries are computed by exactly the same arithmetic regardless of the
 /// chunking, so threaded rows are bit-identical to single-threaded ones.
+///
+/// The computer is backend-agnostic: CSR-sparse datasets route through
+/// the same [`tile`] entry points (merged sparse dots, same bits as the
+/// dense tile — see `data::features`), so the solver above never learns
+/// which storage it trained on.
 pub struct NativeRowComputer {
     data: Arc<Dataset>,
     kernel: KernelFunction,
@@ -70,7 +75,7 @@ impl NativeRowComputer {
     /// the worker gate, the chunking and the 4-wide tiled value loop are
     /// the same code the batch scorer runs.
     fn fill<C: Fn(usize) -> usize + Sync>(&self, i: usize, col: C, out: &mut [f32]) {
-        let xi = self.data.row(i);
+        let xi = self.data.row_ref(i);
         let ni = self.sqnorms[i];
         let workers = tile::workers_for(self.threads, out.len(), self.data.dim());
         let kernel = self.kernel;
@@ -103,11 +108,11 @@ impl RowComputer for NativeRowComputer {
     }
 
     fn diag(&self, i: usize) -> f64 {
-        self.kernel.eval_self(self.data.row(i))
+        self.kernel.eval_self_row(self.data.row_ref(i))
     }
 
     fn entry(&self, i: usize, j: usize) -> f64 {
-        self.kernel.eval(self.data.row(i), self.data.row(j))
+        self.kernel.eval_rows(self.data.row_ref(i), self.data.row_ref(j))
     }
 }
 
@@ -260,6 +265,49 @@ mod tests {
         nc.compute_cols(0, &cols, &mut g);
         for (p, &c) in cols.iter().enumerate() {
             assert_eq!(g[p].to_bits(), row[c].to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_gram_rows_bit_identical_to_dense() {
+        let mut rng = Pcg::new(21);
+        let mut dense = Dataset::with_dim(9);
+        let mut row = vec![0f32; 9];
+        for _ in 0..61 {
+            row.iter_mut().for_each(|v| {
+                *v = if rng.bernoulli(0.25) { rng.normal() as f32 } else { 0.0 }
+            });
+            dense.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+        }
+        let sparse = Arc::new(dense.to_sparse());
+        let dense = Arc::new(dense);
+        for k in [
+            KernelFunction::Rbf { gamma: 0.8 },
+            KernelFunction::Linear,
+            KernelFunction::Poly { gamma: 0.4, coef0: 1.0, degree: 2 },
+            KernelFunction::Sigmoid { gamma: 0.3, coef0: -0.2 },
+        ] {
+            let nd = NativeRowComputer::new(dense.clone(), k);
+            let ns = NativeRowComputer::new(sparse.clone(), k);
+            let mut a = vec![0f32; 61];
+            let mut b = vec![0f32; 61];
+            for i in [0usize, 30, 60] {
+                nd.compute_row(i, &mut a);
+                ns.compute_row(i, &mut b);
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{k:?} row {i} diverges across storage backends"
+                );
+                assert_eq!(nd.diag(i).to_bits(), ns.diag(i).to_bits());
+                assert_eq!(nd.entry(i, 7).to_bits(), ns.entry(i, 7).to_bits());
+            }
+            // gathered columns through the permutation path
+            let cols: Vec<usize> = (0..61).rev().step_by(2).collect();
+            let mut ga = vec![0f32; cols.len()];
+            let mut gb = vec![0f32; cols.len()];
+            nd.compute_cols(4, &cols, &mut ga);
+            ns.compute_cols(4, &cols, &mut gb);
+            assert!(ga.iter().zip(&gb).all(|(x, y)| x.to_bits() == y.to_bits()));
         }
     }
 

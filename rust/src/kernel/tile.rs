@@ -15,8 +15,18 @@
 //! tests on both the Gram and the scorer side). Tiling is purely a
 //! memory-locality optimization: the 4-wide tile streams the query row
 //! once per four dot products.
+//!
+//! Queries are [`Row`] views, so the same entry points serve both
+//! feature backends: dense query × dense data takes the historical
+//! 4-wide tile verbatim, while any pairing that involves a CSR side
+//! takes the merged sparse dot ([`Row::dot`]) per entry — which skips
+//! only exact-zero terms and is therefore bit-identical to the dense
+//! loop (see `data::features`). The RBF arm always uses the
+//! `‖a‖²+‖b‖²−2a·b` decomposition with the precomputed
+//! [`squared_norms`], dense or sparse alike.
 
 use crate::data::dataset::Dataset;
+use crate::data::features::{Features, Row};
 
 use super::function::KernelFunction;
 
@@ -31,9 +41,7 @@ pub const PAR_MIN_MADDS: usize = 1 << 16;
 /// accumulation in feature order) — the RBF fast path's input for the
 /// `‖a‖²+‖b‖²−2a·b` decomposition.
 pub fn squared_norms(data: &Dataset) -> Vec<f64> {
-    (0..data.len())
-        .map(|i| data.row(i).iter().map(|&v| v as f64 * v as f64).sum())
-        .collect()
+    (0..data.len()).map(|i| data.row_ref(i).sqnorm()).collect()
 }
 
 /// How many scoped workers a block of `entries` kernel entries over
@@ -91,18 +99,33 @@ pub fn chunked<T: Send, F: Fn(usize, &mut [T]) + Sync>(workers: usize, out: &mut
 /// The tiled dot-product loop: `emit(p, j, dot)` is called for
 /// `p ∈ [0, n)` in index order with `j = col(base + p)` and
 /// `dot = Σ_k xi[k]·data[j][k]` accumulated in f64 feature order.
-/// Four output entries are produced per tile so `xi` is streamed once
-/// per four dot products; each entry still owns its accumulator, so the
-/// dots are bit-identical to a scalar per-entry loop.
+/// Dense query × dense data produces four output entries per tile so
+/// `xi` is streamed once per four dot products; each entry still owns
+/// its accumulator, so the dots are bit-identical to a scalar per-entry
+/// loop. Any pairing with a CSR side takes [`Row::dot`] per entry —
+/// the same bits, skipping only exact-zero terms.
 #[inline]
 fn dot_block<C: Fn(usize) -> usize, E: FnMut(usize, usize, f64)>(
-    xi: &[f32],
+    xi: Row<'_>,
     data: &Dataset,
     col: &C,
     base: usize,
     n: usize,
     mut emit: E,
 ) {
+    let xi = match (xi, data.storage()) {
+        (Row::Dense(xi), Features::Dense { .. }) => xi,
+        _ => {
+            // Sparse on either side: the merged dot per entry. Bit-parity
+            // with the dense tile holds because skipped terms are exact
+            // zero products (see `data::features`).
+            for p in 0..n {
+                let j = col(base + p);
+                emit(p, j, xi.dot(data.row_ref(j)));
+            }
+            return;
+        }
+    };
     let d = data.dim();
     let mut p = 0usize;
     while p + 4 <= n {
@@ -157,7 +180,7 @@ fn dot_block<C: Fn(usize) -> usize, E: FnMut(usize, usize, f64)>(
 #[inline]
 pub fn kernel_block<C: Fn(usize) -> usize, E: FnMut(usize, f64)>(
     kernel: KernelFunction,
-    xi: &[f32],
+    xi: Row<'_>,
     xi_sqnorm: f64,
     sqnorms: &[f64],
     data: &Dataset,
@@ -195,7 +218,7 @@ pub fn kernel_block<C: Fn(usize) -> usize, E: FnMut(usize, f64)>(
 #[allow(clippy::too_many_arguments)]
 pub fn kernel_block_f32<C: Fn(usize) -> usize>(
     kernel: KernelFunction,
-    xi: &[f32],
+    xi: Row<'_>,
     xi_sqnorm: f64,
     sqnorms: &[f64],
     data: &Dataset,
@@ -243,7 +266,9 @@ mod tests {
             KernelFunction::Sigmoid { gamma: 0.2, coef0: -0.5 },
         ] {
             let mut got = vec![0f64; ds.len()];
-            kernel_block(k, &xi, sq[5], &sq, &ds, &|p| p, 0, ds.len(), |p, v| got[p] = v);
+            kernel_block(k, Row::Dense(&xi), sq[5], &sq, &ds, &|p| p, 0, ds.len(), |p, v| {
+                got[p] = v
+            });
             for j in 0..ds.len() {
                 let want = k.eval(&xi, ds.row(j));
                 assert_eq!(
@@ -264,7 +289,9 @@ mod tests {
         let k = KernelFunction::Rbf { gamma };
         let xi: Vec<f32> = ds.row(3).to_vec();
         let mut got = vec![0f64; ds.len()];
-        kernel_block(k, &xi, sq[3], &sq, &ds, &|p| p, 0, ds.len(), |p, v| got[p] = v);
+        kernel_block(k, Row::Dense(&xi), sq[3], &sq, &ds, &|p| p, 0, ds.len(), |p, v| {
+            got[p] = v
+        });
         for j in 0..ds.len() {
             let mut dot = 0f64;
             for t in 0..ds.dim() {
@@ -284,10 +311,10 @@ mod tests {
         let k = KernelFunction::Rbf { gamma: 1.1 };
         let cols: Vec<usize> = (0..30).rev().collect();
         let mut full = vec![0f32; 30];
-        kernel_block_f32(k, ds.row(7), sq[7], &sq, &ds, &|p| p, 0, &mut full);
+        kernel_block_f32(k, ds.row_ref(7), sq[7], &sq, &ds, &|p| p, 0, &mut full);
         // gather through cols with a non-zero base, as the chunked path does
         let mut part = vec![0f32; 10];
-        kernel_block_f32(k, ds.row(7), sq[7], &sq, &ds, &|p| cols[p], 12, &mut part);
+        kernel_block_f32(k, ds.row_ref(7), sq[7], &sq, &ds, &|p| cols[p], 12, &mut part);
         for p in 0..10 {
             assert_eq!(part[p].to_bits(), full[cols[12 + p]].to_bits(), "p={p}");
         }
@@ -300,16 +327,59 @@ mod tests {
         let k = KernelFunction::Rbf { gamma: 0.6 };
         let xi: Vec<f32> = ds.row(0).to_vec();
         let mut inline = vec![0f32; 257];
-        kernel_block_f32(k, &xi, sq[0], &sq, &ds, &|p| p, 0, &mut inline);
+        kernel_block_f32(k, Row::Dense(&xi), sq[0], &sq, &ds, &|p| p, 0, &mut inline);
         for workers in [2usize, 3, 8] {
             let mut par = vec![0f32; 257];
             chunked(workers, &mut par, |base, chunk| {
-                kernel_block_f32(k, &xi, sq[0], &sq, &ds, &|p| p, base, chunk);
+                kernel_block_f32(k, Row::Dense(&xi), sq[0], &sq, &ds, &|p| p, base, chunk);
             });
             assert!(
                 inline.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "workers={workers} diverges"
             );
+        }
+    }
+
+    #[test]
+    fn sparse_blocks_are_bit_identical_to_dense_blocks() {
+        // Densities chosen so rows contain exact zeros (the skipped terms).
+        let dense = {
+            let mut rng = Pcg::new(11);
+            let mut ds = Dataset::with_dim(7);
+            let mut row = vec![0f32; 7];
+            for _ in 0..43 {
+                row.iter_mut().for_each(|v| {
+                    *v = if rng.bernoulli(0.3) { rng.normal() as f32 } else { 0.0 }
+                });
+                ds.push(&row, if rng.bernoulli(0.5) { 1 } else { -1 });
+            }
+            ds
+        };
+        let sparse = dense.to_sparse();
+        let sq_d = squared_norms(&dense);
+        let sq_s = squared_norms(&sparse);
+        assert!(sq_d.iter().zip(&sq_s).all(|(a, b)| a.to_bits() == b.to_bits()));
+        for k in [
+            KernelFunction::Rbf { gamma: 0.9 },
+            KernelFunction::Linear,
+            KernelFunction::Poly { gamma: 0.4, coef0: 1.0, degree: 3 },
+            KernelFunction::Sigmoid { gamma: 0.2, coef0: -0.5 },
+        ] {
+            let mut want = vec![0f32; dense.len()];
+            kernel_block_f32(k, dense.row_ref(5), sq_d[5], &sq_d, &dense, &|p| p, 0, &mut want);
+            // sparse query × sparse data, sparse × dense, dense × sparse
+            for (xi, data, sq) in [
+                (sparse.row_ref(5), &sparse, &sq_s),
+                (sparse.row_ref(5), &dense, &sq_d),
+                (dense.row_ref(5), &sparse, &sq_s),
+            ] {
+                let mut got = vec![0f32; data.len()];
+                kernel_block_f32(k, xi, sq_s[5], sq, data, &|p| p, 0, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{k:?} sparse block diverges from dense"
+                );
+            }
         }
     }
 

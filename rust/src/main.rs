@@ -83,7 +83,12 @@ fn dispatch(args: &Args) -> Result<()> {
 /// Shared flag descriptions (referenced from several subcommand pages).
 const HELP_DATA_FLAGS: &str = "\
   --dataset NAME        synthetic-suite dataset (see `pasmo datasets`)\n\
-  --libsvm FILE         load a LIBSVM-format file instead\n\
+  --libsvm FILE         load a LIBSVM-format file instead (streaming reader:\n\
+                        one line at a time into CSR, never a dense matrix)\n\
+  --storage MODE        auto | dense | sparse — feature storage for --libsvm\n\
+                        (auto keeps CSR at ≤ 25% stored density; default auto)\n\
+  --mmap                parse --libsvm from one whole-file buffer instead of\n\
+                        buffered line-at-a-time streaming (same dataset)\n\
   --len N               generated dataset size ℓ (suite datasets only)\n\
   --seed S              generation / protocol seed (default 42)";
 
@@ -136,6 +141,9 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                                      library save() of SVR / one-class / multiclass models\n\
                --libsvm FILE         evaluation data (targets for svr, class ids for\n\
                                      multiclass, ±1 with +1 = inlier for oneclass)\n\
+               --storage MODE        auto | dense | sparse feature storage for the\n\
+                                     evaluation file (classify/oneclass; default auto)\n\
+               --mmap                whole-file-buffer parse instead of streaming\n\
                --task NAME           classify | svr | oneclass | multiclass — assert the\n\
                                      model kind (defaults to whatever the file holds)\n\
                --threads N           batch-scoring worker threads (bit-identical results)\n\
@@ -175,6 +183,15 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                                      BENCH_predict.json; --datasets takes the first\n\
                                      name, --len sizes both the model and the queries,\n\
                                      --threads the threaded row)\n\n\
+             sparse mode:\n\
+               --sparse              density sweep instead: train + score synthetic\n\
+                                     sparse data at stored densities 1.0 / 0.1 / 0.001\n\
+                                     (the lowest at 10× --len rows), reporting rows/s\n\
+                                     and resident bytes vs the dense twin — the run\n\
+                                     fails if CSR storage does not beat dense at low\n\
+                                     density (--out writes the sweep; --dim sets the\n\
+                                     feature dimension, default 2000)\n\
+               --dim D               sparse-sweep feature dimension\n\n\
              serve mode:\n\
                --serve               benchmark the serving tier instead: per\n\
                                      --batches config, bind an in-process server\n\
@@ -222,6 +239,10 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                                      Established connections are never dropped\n\n\
              protocol (one JSON object per line, responses in request order):\n\
                {\"x\":[..], \"model\":\"name\"?, \"id\":n?}    score a query\n\
+               {\"x\":{\"7\":0.5,..}, ...}                  sparse query: 1-based\n\
+                                                         index → value, omitted\n\
+                                                         features are 0 (scores\n\
+                                                         bit-match the dense form)\n\
                {\"cmd\":\"stats\"}                           per-model metrics\n\
                {\"cmd\":\"models\"}                          registry listing\n\
                {\"cmd\":\"load\",\"name\":..,\"path\":..}       load / hot-swap\n\
@@ -329,10 +350,21 @@ fn load_dataset(args: &Args) -> Result<(Arc<Dataset>, Option<suite::DatasetSpec>
         let seed = args.get_parse_or("seed", 42u64);
         Ok((Arc::new(spec.generate(len, seed)), Some(spec)))
     } else if let Some(file) = args.get("libsvm") {
-        let ds = libsvm::read(Path::new(file), None)?;
+        let ds = read_libsvm_file(args, Path::new(file), None)?;
         Ok((Arc::new(ds), None))
     } else {
         bail!("need --dataset NAME or --libsvm FILE");
+    }
+}
+
+/// Read a binary-classification LIBSVM file honoring the shared
+/// `--storage auto|dense|sparse` and `--mmap` flags.
+fn read_libsvm_file(args: &Args, path: &Path, force_dim: Option<usize>) -> Result<Dataset> {
+    let storage = libsvm::Storage::parse(&args.get_or("storage", "auto"))?;
+    if args.flag("mmap") {
+        libsvm::read_mapped(path, force_dim, storage)
+    } else {
+        libsvm::read_with(path, force_dim, storage)
     }
 }
 
@@ -570,9 +602,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
         any.task_name()
     );
     match &any {
-        AnyModel::Svc(model) => predict_classify(model, file, threads, probability, out),
+        AnyModel::Svc(model) => predict_classify(model, args, file, threads, probability, out),
         AnyModel::Svr(model) => predict_svr(model, file, threads, out),
-        AnyModel::OneClass(model) => predict_oneclass(model, file, threads, out),
+        AnyModel::OneClass(model) => predict_oneclass(model, args, file, threads, out),
         AnyModel::Multiclass(model) => predict_multiclass(model, file, threads, out),
     }
 }
@@ -595,13 +627,14 @@ fn write_column<T: std::fmt::Display>(out: Option<&str>, values: &[T]) -> Result
 /// a Platt-calibrated model) per-example probabilities.
 fn predict_classify(
     model: &SvmModel,
+    args: &Args,
     file: &str,
     threads: usize,
     probability: bool,
     out: Option<&str>,
 ) -> Result<()> {
     use pasmo::svm::predict::evaluate;
-    let ds = libsvm::read(Path::new(file), Some(model.support.dim()))?;
+    let ds = read_libsvm_file(args, Path::new(file), Some(model.support.dim()))?;
     let ev = evaluate(model, &ds, threads);
     let (tp, fp, tn, fnn) = ev.confusion;
     println!(
@@ -678,11 +711,12 @@ fn predict_svr(model: &SvrModel, file: &str, threads: usize, out: Option<&str>) 
 /// with the file's ±1 labels (+1 = inlier ground truth).
 fn predict_oneclass(
     model: &OneClassModel,
+    args: &Args,
     file: &str,
     threads: usize,
     out: Option<&str>,
 ) -> Result<()> {
-    let data = libsvm::read(Path::new(file), Some(model.support.dim()))?;
+    let data = read_libsvm_file(args, Path::new(file), Some(model.support.dim()))?;
     let decisions = model.decision_values(&data, threads);
     let n = data.len().max(1) as f64;
     let inliers = decisions.iter().filter(|&&f| f >= 0.0).count();
@@ -777,6 +811,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use pasmo::util::json::Json;
     use std::collections::BTreeMap;
 
+    if args.flag("sparse") {
+        return cmd_bench_sparse(args);
+    }
     if args.flag("predict") {
         return cmd_bench_predict(args);
     }
@@ -1019,6 +1056,108 @@ fn cmd_bench_predict(args: &Args) -> Result<()> {
     doc.insert("len".into(), Json::Num(len as f64));
     doc.insert("queries".into(), Json::Num(q as f64));
     doc.insert("n_sv".into(), Json::Num(n_sv as f64));
+    doc.insert("seed".into(), Json::Num(seed as f64));
+    doc.insert("threads".into(), Json::Num(threads as f64));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let doc = Json::Obj(doc);
+    if let Some(out) = args.get("out") {
+        pasmo::util::artifact::save_json(Path::new(out), doc)
+            .with_context(|| format!("write bench report {out}"))?;
+        println!("\nreport written to {out}");
+    }
+    Ok(())
+}
+
+/// Density-sweep benchmark (`pasmo bench --sparse`): train + one batch
+/// scoring pass on synthetic sparse data at stored densities 1.0, 0.1
+/// and 0.001 — the lowest at 10× the row count, where dense storage
+/// starts to hurt. Reports rows/s (scoring) and resident bytes against
+/// the dense twin, and fails outright if CSR storage does not beat the
+/// dense layout at low density (the memory claim is a gate, not prose).
+fn cmd_bench_sparse(args: &Args) -> Result<()> {
+    use pasmo::data::synth::sparse_blobs;
+    use pasmo::util::json::Json;
+    use pasmo::util::timer::{black_box, Stopwatch};
+    use std::collections::BTreeMap;
+
+    let len = args.get_parse_or("len", 600usize);
+    let dim = args.get_parse_or("dim", 2000usize).max(1);
+    let seed = args.get_parse_or("seed", 42u64);
+    let threads = args.get_parse_or("threads", 1usize);
+
+    println!("==== pasmo bench --sparse (density sweep) ====");
+    println!("base ℓ={len} d={dim} seed={seed} threads={threads}\n");
+    println!(
+        "{:<8} {:>7} {:>6} {:>9} {:>8} {:>9} {:>12} {:>12} {:>12}",
+        "density", "rows", "nnz/r", "train", "iters", "storage", "rows/s", "resident", "dense-twin"
+    );
+
+    // (label, nnz numerator over dim, row multiplier): the 0.001 cell
+    // runs at 10× rows — the regime the CSR backend exists for.
+    let sweep: [(&str, usize, usize); 3] =
+        [("1.0", dim, 1), ("0.1", dim / 10, 1), ("0.001", dim / 1000, 10)];
+    let mut runs: Vec<Json> = Vec::new();
+    for (label, nnz, mult) in sweep {
+        let nnz = nnz.clamp(1, dim);
+        let rows = len * mult;
+        let ds = Arc::new(sparse_blobs(rows, dim, nnz, seed));
+        let sparse_storage = ds.is_sparse();
+        let t = Stopwatch::start();
+        let trained = Trainer::rbf(1.0, 0.5)
+            .threads(threads)
+            .train(&ds);
+        let train_s = t.secs();
+        let scorer = trained.model.scorer().with_threads(threads);
+        // One warmup, one timed full scoring pass over the training set.
+        black_box(scorer.decision_values(&ds).iter().sum::<f64>());
+        let t = Stopwatch::start();
+        black_box(scorer.decision_values(&ds).iter().sum::<f64>());
+        let score_s = t.secs().max(1e-9);
+        let rows_per_s = rows as f64 / score_s;
+        let resident = ds.resident_bytes();
+        // The dense twin's bytes, computed (not materialized): full
+        // row-major f32 grid + the i8 label column.
+        let dense_twin = rows * dim * std::mem::size_of::<f32>() + rows;
+        println!(
+            "{:<8} {:>7} {:>6} {:>8.3}s {:>8} {:>9} {:>12.1} {:>12} {:>12}",
+            label,
+            rows,
+            nnz,
+            train_s,
+            trained.result.iterations,
+            if sparse_storage { "csr" } else { "dense" },
+            rows_per_s,
+            resident,
+            dense_twin
+        );
+        // The acceptance gate: at low density the CSR working set must
+        // actually be smaller than the dense layout it replaces.
+        if nnz * 4 <= dim {
+            ensure!(
+                resident < dense_twin,
+                "density {label}: CSR resident bytes {resident} are not below \
+                 the dense twin's {dense_twin}"
+            );
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("density".into(), Json::Str(label.to_string()));
+        obj.insert("rows".into(), Json::Num(rows as f64));
+        obj.insert("dim".into(), Json::Num(dim as f64));
+        obj.insert("nnz_per_row".into(), Json::Num(nnz as f64));
+        obj.insert("sparse_storage".into(), Json::Bool(sparse_storage));
+        obj.insert("train_wall_s".into(), Json::Num(train_s));
+        obj.insert("iterations".into(), Json::Num(trained.result.iterations as f64));
+        obj.insert("converged".into(), Json::Bool(trained.result.converged));
+        obj.insert("rows_per_s".into(), Json::Num(rows_per_s));
+        obj.insert("bytes_resident".into(), Json::Num(resident as f64));
+        obj.insert("dense_bytes".into(), Json::Num(dense_twin as f64));
+        runs.push(Json::Obj(obj));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("sparse".into()));
+    doc.insert("len".into(), Json::Num(len as f64));
+    doc.insert("dim".into(), Json::Num(dim as f64));
     doc.insert("seed".into(), Json::Num(seed as f64));
     doc.insert("threads".into(), Json::Num(threads as f64));
     doc.insert("runs".into(), Json::Arr(runs));

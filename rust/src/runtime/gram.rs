@@ -49,7 +49,13 @@ unsafe impl Send for PjrtRowComputer {}
 
 impl PjrtRowComputer {
     /// Build the device-resident view of `data` for RBF width `gamma`.
+    /// The PJRT path stages dense row-major blocks on device; CSR
+    /// datasets must be densified first ([`Dataset::to_dense`]).
     pub fn new(engine: Rc<PjrtEngine>, data: Arc<Dataset>, gamma: f64) -> Result<Self> {
+        ensure!(
+            !data.is_sparse(),
+            "the pjrt gram path requires dense storage; densify with Dataset::to_dense first"
+        );
         let meta = engine
             .manifest
             .gram_artifact_for(data.dim())
@@ -158,7 +164,9 @@ pub struct PjrtDecision {
 }
 
 impl PjrtDecision {
-    /// Stage support vectors + signed coefficients on device.
+    /// Stage support vectors + signed coefficients on device. Like the
+    /// gram path, dense storage only — densify sparse support sets
+    /// first.
     pub fn new(
         engine: Rc<PjrtEngine>,
         support: &Dataset,
@@ -167,6 +175,10 @@ impl PjrtDecision {
         gamma: f64,
     ) -> Result<PjrtDecision> {
         assert_eq!(support.len(), coef.len());
+        ensure!(
+            !support.is_sparse(),
+            "the pjrt decision path requires dense storage; densify with Dataset::to_dense first"
+        );
         let meta = engine
             .manifest
             .decision_artifact_for(support.dim())

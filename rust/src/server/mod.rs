@@ -311,15 +311,17 @@ fn process_line(state: &ServerState, line: &str) -> (Reply, bool) {
                 }
             };
             let dim = entry.model.dim();
-            if sr.x.len() != dim {
-                state.metrics.with_model(&entry.name, |mm| mm.errors += 1);
-                let msg = format!(
-                    "x has {} features but model {:?} expects {dim}",
-                    sr.x.len(),
-                    entry.name
-                );
-                return (Reply::Ready(protocol::error_response(sr.id, &msg)), false);
-            }
+            // Densify at admission: both wire shapes (dense array,
+            // sparse 1-based object) become the same dim-length vector,
+            // so the batcher tier never sees storage shape.
+            let x = match sr.x.densify(dim) {
+                Ok(x) => x,
+                Err(e) => {
+                    state.metrics.with_model(&entry.name, |mm| mm.errors += 1);
+                    let msg = format!("{e} but model {:?} expects {dim}", entry.name);
+                    return (Reply::Ready(protocol::error_response(sr.id, &msg)), false);
+                }
+            };
             let (tx, rx) = mpsc::channel();
             let deadline = match state.config.deadline_us {
                 0 => None,
@@ -327,7 +329,7 @@ fn process_line(state: &ServerState, line: &str) -> (Reply, bool) {
             };
             let pending = Pending {
                 entry,
-                x: sr.x,
+                x,
                 id: sr.id,
                 enqueued: Instant::now(),
                 deadline,
@@ -695,6 +697,24 @@ mod tests {
 
         let bye = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
         assert!(bye.contains("\"ok\":true"));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sparse_query_lines_score_bit_identically_to_dense_ones() {
+        let (handle, addr) = tiny_server(8);
+        let dense = request_once(addr, r#"{"x":[0.5,0.0],"id":1}"#).unwrap();
+        let sparse = request_once(addr, r#"{"x":{"1":0.5},"id":2}"#).unwrap();
+        let d = Json::parse(&dense).unwrap();
+        let s = Json::parse(&sparse).unwrap();
+        assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true), "{sparse}");
+        let dv = d.get("decision").and_then(Json::as_f64).unwrap();
+        let sv = s.get("decision").and_then(Json::as_f64).unwrap();
+        assert_eq!(dv.to_bits(), sv.to_bits(), "dense {dv} vs sparse {sv}");
+        // sparse shape errors are positioned like dense ones
+        let err = request_once(addr, r#"{"x":{"9":1},"id":3}"#).unwrap();
+        assert!(err.contains("\"ok\":false") && err.contains("expects 2"), "{err}");
+        let _ = request_once(addr, r#"{"cmd":"shutdown"}"#).unwrap();
         handle.join().unwrap();
     }
 

@@ -6,6 +6,12 @@
 //! with `"ok": true|false`; score responses echo the request `id` so
 //! clients may pipeline.
 //!
+//! `"x"` takes two shapes: a dense number array, or a sparse object
+//! keyed by **1-based** feature index — `{"x":{"7":0.5,"12":-2}}` —
+//! mirroring the LIBSVM convention, so a client holding sparse rows
+//! never renders the zeros. Both shapes densify to the identical query
+//! vector ([`Query::densify`]), so they score bit-identically.
+//!
 //! Parsing reuses [`crate::util::json::Json`]; response lines are built
 //! by hand here (no intermediate tree on the scoring hot path), with
 //! every user-provided string routed through
@@ -46,9 +52,45 @@ pub struct ScoreRequest {
     pub model: Option<String>,
     /// Query features (JSON numbers are narrowed to `f32`, the dataset
     /// element type — the narrowing every offline loader applies too).
-    pub x: Vec<f32>,
+    pub x: Query,
     /// Client correlation id, echoed verbatim in the response.
     pub id: Option<f64>,
+}
+
+/// A query's features, in whichever shape the client sent them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Query {
+    /// `"x": [..]` — a dense feature array.
+    Dense(Vec<f32>),
+    /// `"x": {"7":0.5,..}` — sparse entries, held as (0-based index,
+    /// value) sorted ascending (the wire keys are 1-based).
+    Sparse(Vec<(u32, f32)>),
+}
+
+impl Query {
+    /// Render into the model's dense `dim`-feature layout. The error
+    /// string is client-facing; it keeps the historical `expects {dim}`
+    /// phrasing for the dense length mismatch.
+    pub fn densify(self, dim: usize) -> Result<Vec<f32>, String> {
+        match self {
+            Query::Dense(x) => {
+                if x.len() != dim {
+                    return Err(format!("x has {} features", x.len()));
+                }
+                Ok(x)
+            }
+            Query::Sparse(entries) => {
+                let mut out = vec![0f32; dim];
+                for &(i, v) in &entries {
+                    if i as usize >= dim {
+                        return Err(format!("x has feature index {}", i as u64 + 1));
+                    }
+                    out[i as usize] = v;
+                }
+                Ok(out)
+            }
+        }
+    }
 }
 
 /// Parse one request line. The error string is client-facing (it comes
@@ -79,15 +121,37 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         };
     }
     let xs = v.get("x").ok_or_else(|| "missing \"x\" array (or \"cmd\")".to_string())?;
-    let arr = xs.as_arr().ok_or_else(|| "x: expected an array of numbers".to_string())?;
-    if arr.is_empty() {
-        return Err("x: must be non-empty".to_string());
-    }
-    let mut x = Vec::with_capacity(arr.len());
-    for (i, j) in arr.iter().enumerate() {
-        let n = j.as_f64().ok_or_else(|| format!("x[{i}]: expected a number"))?;
-        x.push(n as f32);
-    }
+    let x = if let Some(arr) = xs.as_arr() {
+        if arr.is_empty() {
+            return Err("x: must be non-empty".to_string());
+        }
+        let mut x = Vec::with_capacity(arr.len());
+        for (i, j) in arr.iter().enumerate() {
+            let n = j.as_f64().ok_or_else(|| format!("x[{i}]: expected a number"))?;
+            x.push(n as f32);
+        }
+        Query::Dense(x)
+    } else if let Some(obj) = xs.as_obj() {
+        let mut entries = Vec::with_capacity(obj.len());
+        for (k, j) in obj {
+            let idx: u64 = k
+                .parse()
+                .map_err(|_| format!("x key {k:?}: expected a 1-based feature index"))?;
+            if idx == 0 {
+                return Err("x key \"0\": feature indices are 1-based".to_string());
+            }
+            if idx > u32::MAX as u64 {
+                return Err(format!("x key {k:?}: index exceeds the supported maximum"));
+            }
+            let n = j.as_f64().ok_or_else(|| format!("x[{k:?}]: expected a number"))?;
+            entries.push(((idx - 1) as u32, n as f32));
+        }
+        // BTreeMap orders keys as strings ("10" < "2"); re-sort numerically.
+        entries.sort_unstable_by_key(|&(i, _)| i);
+        Query::Sparse(entries)
+    } else {
+        return Err("x: expected an array of numbers or a {\"index\":value} object".to_string());
+    };
     let model = match v.get("model") {
         None => None,
         Some(m) => Some(
@@ -196,7 +260,7 @@ mod tests {
     fn score_request_round_trips_f32_features() {
         let req = parse_request(r#"{"x":[0.1,-2.5,3],"model":"m","id":7}"#);
         let Ok(Request::Score(sr)) = req else { panic!("expected score: {req:?}") };
-        assert_eq!(sr.x, vec![0.1f32, -2.5, 3.0]);
+        assert_eq!(sr.x, Query::Dense(vec![0.1f32, -2.5, 3.0]));
         assert_eq!(sr.model.as_deref(), Some("m"));
         assert_eq!(sr.id, Some(7.0));
         // f32 Display → f64 parse → f32 narrow recovers identical bits,
@@ -206,6 +270,48 @@ mod tests {
             let back = text.parse::<f64>().map(|d| d as f32);
             assert_eq!(back.map(f32::to_bits), Ok(v.to_bits()), "{text}");
         }
+    }
+
+    #[test]
+    fn sparse_queries_parse_sorted_and_densify_like_dense_ones() {
+        // keys arrive in string order ("12" < "3" as strings); parsing
+        // re-sorts numerically and shifts to 0-based.
+        let req = parse_request(r#"{"x":{"12":-2,"3":0.5},"id":1}"#);
+        let Ok(Request::Score(sr)) = req else { panic!("expected score: {req:?}") };
+        assert_eq!(sr.x, Query::Sparse(vec![(2, 0.5), (11, -2.0)]));
+        let dense = sr.x.densify(16).unwrap();
+        let mut want = vec![0f32; 16];
+        (want[2], want[11]) = (0.5, -2.0);
+        assert_eq!(dense, want);
+        // both wire shapes densify to the identical vector
+        let req = parse_request(r#"{"x":[0,0,0.5,0]}"#);
+        let Ok(Request::Score(sr)) = req else { panic!("{req:?}") };
+        let sparse = Query::Sparse(vec![(2, 0.5)]).densify(4).unwrap();
+        assert_eq!(sr.x.densify(4).unwrap(), sparse);
+        // an empty object is a legal all-zeros query
+        let req = parse_request(r#"{"x":{}}"#);
+        let Ok(Request::Score(sr)) = req else { panic!("{req:?}") };
+        assert_eq!(sr.x.densify(3).unwrap(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn sparse_query_errors_name_the_offending_key() {
+        for (line, needle) in [
+            (r#"{"x":{"0":1}}"#, "1-based"),
+            (r#"{"x":{"abc":1}}"#, "\"abc\""),
+            (r#"{"x":{"-3":1}}"#, "\"-3\""),
+            (r#"{"x":{"5000000000":1}}"#, "supported maximum"),
+            (r#"{"x":{"2":"v"}}"#, "expected a number"),
+            (r#"{"x":"nope"}"#, "array of numbers or a"),
+        ] {
+            let err = parse_request(line).err().unwrap_or_default();
+            assert!(err.contains(needle), "{line} → {err}");
+        }
+        // out-of-range index surfaces at densify time with its 1-based key
+        let err = Query::Sparse(vec![(9, 1.0)]).densify(4).unwrap_err();
+        assert!(err.contains("index 10"), "{err}");
+        let err = Query::Dense(vec![1.0; 3]).densify(4).unwrap_err();
+        assert!(err.contains("3 features"), "{err}");
     }
 
     #[test]

@@ -33,7 +33,9 @@ pub struct SvmModel {
 
 impl SvmModel {
     /// Build from a full training set and its dual solution, keeping only
-    /// the support vectors.
+    /// the support vectors. The support set inherits the training set's
+    /// storage backend — a CSR-sparse training run yields CSR-sparse
+    /// support vectors, so serving never densifies.
     pub fn from_solution(
         data: &Dataset,
         alpha: &[f64],
@@ -42,11 +44,11 @@ impl SvmModel {
         tol: f64,
     ) -> SvmModel {
         assert_eq!(data.len(), alpha.len());
-        let mut support = Dataset::with_dim(data.dim());
+        let mut support = data.empty_like();
         let mut coef = Vec::new();
         for i in 0..data.len() {
             if alpha[i].abs() > tol {
-                support.push(data.row(i), data.label(i));
+                support.push_row(data.row_ref(i), data.label(i));
                 coef.push(alpha[i]);
             }
         }

@@ -80,14 +80,10 @@ impl OneClassModel {
         self.scorer().decision(x)
     }
 
-    /// Decision values for every row of `data` — one batch scoring pass
-    /// with `threads` workers.
+    /// Decision values for every row of `data` (either storage backend)
+    /// — one batch scoring pass with `threads` workers.
     pub fn decision_values(&self, data: &Dataset, threads: usize) -> Vec<f64> {
-        let mut out = vec![0f64; data.len()];
-        self.scorer()
-            .with_threads(threads)
-            .decision_block(data.dim(), data.features(), &mut out);
-        out
+        self.scorer().with_threads(threads).decision_values(data)
     }
 
     /// Is `x` on the inlier side of the decision surface?
@@ -124,11 +120,11 @@ pub fn train_one_class(data: &Arc<Dataset>, cfg: &OneClassConfig) -> (OneClassMo
     let engine = EngineConfig::new(cfg.solver, cfg.solver_config).build();
     let result = engine.solve(&problem, &mut gram);
 
-    let mut support = Dataset::with_dim(data.dim());
+    let mut support = data.empty_like();
     let mut coef = Vec::new();
     for i in 0..l {
         if result.alpha[i] > 1e-12 {
-            support.push(data.row(i), 1);
+            support.push_row(data.row_ref(i), 1);
             coef.push(result.alpha[i]);
         }
     }

@@ -173,13 +173,16 @@ fn num_array(v: &Json, name: &str) -> Result<Vec<f64>> {
     Ok(out)
 }
 
-/// Serialize support rows as an array of row arrays.
+/// Serialize support rows as an array of dense row arrays. CSR-sparse
+/// support sets are densified row by row — the on-disk schema is dense
+/// regardless of the training-time backend (loads also build dense
+/// storage; see DESIGN.md §4f).
 fn sv_json(support: &Dataset) -> Json {
     let mut rows = Vec::with_capacity(support.len());
+    let mut buf = vec![0f32; support.dim()];
     for i in 0..support.len() {
-        rows.push(Json::Arr(
-            support.row(i).iter().map(|&v| Json::Num(v as f64)).collect(),
-        ));
+        support.row_ref(i).densify_into(&mut buf);
+        rows.push(Json::Arr(buf.iter().map(|&v| Json::Num(v as f64)).collect()));
     }
     Json::Arr(rows)
 }

@@ -9,7 +9,8 @@
 //! tiles on the same [`crate::kernel::tile`] primitives the training
 //! side uses for Gram rows:
 //!
-//! * support vectors stay in the dense row-major [`Dataset`] layout;
+//! * support vectors stay in the support [`Dataset`]'s own storage —
+//!   dense row-major or CSR sparse, whichever the model trained on;
 //!   queries are scored against L2-sized SV blocks so a support row is
 //!   streamed from memory once per query *chunk*, not once per query;
 //! * within a block the 4-wide tiled dot loop of
@@ -31,6 +32,7 @@
 use std::borrow::Cow;
 
 use crate::data::dataset::Dataset;
+use crate::data::features::{Features, Row};
 use crate::kernel::function::KernelFunction;
 use crate::kernel::tile;
 
@@ -40,11 +42,30 @@ use crate::kernel::tile;
 /// (512 rows × 64 dims × 4 B = 128 KiB).
 const SV_BLOCK: usize = 512;
 
-/// ‖x‖² with f64 accumulation in feature order (the RBF decomposition's
-/// query-side input).
-#[inline]
-fn sqnorm(x: &[f32]) -> f64 {
-    x.iter().map(|&v| v as f64 * v as f64).sum()
+/// Where a batch's query rows come from: a raw row-major f32 block (the
+/// wire/scratch shape) or a [`Features`] matrix in either backend. Both
+/// yield [`Row`] views, so the scoring loops below are written once.
+#[derive(Clone, Copy)]
+enum QuerySrc<'q> {
+    /// Row-major dense block: query `q` is `rows[q·dim..(q+1)·dim]`.
+    Raw {
+        /// Query dimension.
+        dim: usize,
+        /// Row-major query block.
+        rows: &'q [f32],
+    },
+    /// Queries are the rows of a feature matrix (dense or CSR).
+    Feats(&'q Features),
+}
+
+impl<'q> QuerySrc<'q> {
+    #[inline]
+    fn row(&self, q: usize) -> Row<'q> {
+        match *self {
+            QuerySrc::Raw { dim, rows } => Row::Dense(&rows[q * dim..(q + 1) * dim]),
+            QuerySrc::Feats(f) => f.row(q),
+        }
+    }
 }
 
 /// Batch decision-function evaluator over a borrowed support set.
@@ -78,14 +99,16 @@ pub struct Scorer<'m> {
 }
 
 /// Collapsed primal weights `w = Σ_s coef_s · x_s` for the linear
-/// kernel, accumulated per-row in support order.
+/// kernel, accumulated per-row in support order. Dense support rows
+/// visit every coordinate (the historical loop); sparse rows accumulate
+/// only their stored entries.
 fn linear_w(support: &Dataset, coef: &[f64]) -> Vec<f64> {
     let mut w = vec![0f64; support.dim()];
     for s in 0..support.len() {
         let c = coef[s];
-        for (wk, &v) in w.iter_mut().zip(support.row(s)) {
-            *wk += c * v as f64;
-        }
+        support
+            .row_ref(s)
+            .for_each_entry(|idx, v| w[idx as usize] += c * v as f64);
     }
     w
 }
@@ -261,32 +284,43 @@ impl<'m> Scorer<'m> {
         out[0]
     }
 
-    /// Decision values for every row of a dataset.
+    /// Decision values for every row of a dataset, in the dataset's own
+    /// storage backend — CSR queries are scored without densification.
     pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
+        assert_eq!(data.dim(), self.support.dim(), "query dim != support dim");
         let mut out = vec![0f64; data.len()];
-        self.decision_block(data.dim(), data.features(), &mut out);
+        self.decide(QuerySrc::Feats(data.storage()), &mut out);
         out
     }
 
     /// Decision values for `out.len()` row-major `dim`-dimensional query
-    /// rows — the raw batch entry point shared by every dataset shape
-    /// (binary, regression, multiclass all expose `features()`).
+    /// rows — the raw batch entry point for wire/scratch-shaped queries.
     pub fn decision_block(&self, dim: usize, rows: &[f32], out: &mut [f64]) {
         assert_eq!(dim, self.support.dim(), "query dim != support dim");
         assert_eq!(rows.len(), out.len() * dim, "rows/out length mismatch");
+        self.decide(QuerySrc::Raw { dim, rows }, out);
+    }
+
+    /// The one batch loop behind [`Scorer::decision_values`] and
+    /// [`Scorer::decision_block`] — results are bit-identical for the
+    /// same logical queries regardless of source shape or backend.
+    fn decide(&self, src: QuerySrc<'_>, out: &mut [f64]) {
         if out.is_empty() {
             return;
         }
+        let dim = self.support.dim();
         if let Some(w) = &self.w {
             let workers = tile::workers_for(self.threads, out.len(), dim);
             let offset = self.offset;
+            let w = &w[..];
             tile::chunked(workers, out, |base, chunk| {
                 for (q, o) in chunk.iter_mut().enumerate() {
-                    let x = &rows[(base + q) * dim..(base + q + 1) * dim];
+                    // Dense queries visit every coordinate in order (the
+                    // historical w·x loop); sparse queries visit stored
+                    // entries only.
                     let mut f = 0f64;
-                    for (wk, &v) in w.iter().zip(x) {
-                        f += wk * v as f64;
-                    }
+                    src.row(base + q)
+                        .for_each_entry(|idx, v| f += w[idx as usize] * v as f64);
                     *o = f + offset;
                 }
             });
@@ -298,9 +332,7 @@ impl<'m> Scorer<'m> {
             dim,
         )
         .min(out.len());
-        tile::chunked(workers, out, |base, chunk| {
-            self.score_chunk(dim, rows, base, chunk)
-        });
+        tile::chunked(workers, out, |base, chunk| self.score_chunk(src, base, chunk));
     }
 
     /// Score every row pushed into `scratch` since its last
@@ -327,7 +359,7 @@ impl<'m> Scorer<'m> {
     /// order, entries within a block in order), exactly the association
     /// order of the scalar per-SV loop: chunking and blocking never
     /// change a result bit.
-    fn score_chunk(&self, dim: usize, rows: &[f32], base: usize, out: &mut [f64]) {
+    fn score_chunk(&self, src: QuerySrc<'_>, base: usize, out: &mut [f64]) {
         for o in out.iter_mut() {
             *o = self.offset;
         }
@@ -337,8 +369,8 @@ impl<'m> Scorer<'m> {
         while s0 < n_sv {
             let block = (n_sv - s0).min(SV_BLOCK);
             for (q, o) in out.iter_mut().enumerate() {
-                let x = &rows[(base + q) * dim..(base + q + 1) * dim];
-                let nq = if rbf { sqnorm(x) } else { 0.0 };
+                let x = src.row(base + q);
+                let nq = if rbf { x.sqnorm() } else { 0.0 };
                 let mut f = *o;
                 tile::kernel_block(
                     self.kernel,
@@ -665,6 +697,48 @@ mod tests {
         scratch.reset(4);
         assert!(scratch.is_empty());
         assert!(scorer.decision_scratch(&mut scratch).is_empty());
+    }
+
+    #[test]
+    fn sparse_support_and_queries_match_dense_bitwise() {
+        // Expansion with exact zeros in the support rows and queries, so
+        // the sparse backends actually skip terms.
+        let mut rng = Pcg::new(103);
+        let mut sv = Dataset::with_dim(8);
+        let mut row = vec![0f32; 8];
+        let mut coef = Vec::new();
+        for _ in 0..45 {
+            row.iter_mut().for_each(|v| {
+                *v = if rng.bernoulli(0.3) { rng.normal() as f32 } else { 0.0 }
+            });
+            sv.push(&row, 1);
+            coef.push(rng.normal() * 2.0);
+        }
+        let offset = rng.normal();
+        let sv_sparse = sv.to_sparse();
+        let mut queries = Dataset::with_dim(8);
+        for _ in 0..14 {
+            row.iter_mut().for_each(|v| {
+                *v = if rng.bernoulli(0.3) { rng.normal() as f32 } else { 0.0 }
+            });
+            queries.push(&row, 1);
+        }
+        let q_sparse = queries.to_sparse();
+        for kernel in KERNELS {
+            let dense_scorer = Scorer::new(kernel, &sv, &coef, offset);
+            let sparse_scorer = Scorer::new(kernel, &sv_sparse, &coef, offset);
+            let want = dense_scorer.decision_values(&queries);
+            for (name, got) in [
+                ("sparse SVs", sparse_scorer.decision_values(&queries)),
+                ("sparse queries", dense_scorer.decision_values(&q_sparse)),
+                ("sparse both", sparse_scorer.decision_values(&q_sparse)),
+            ] {
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kernel:?} {name} diverges from the dense run"
+                );
+            }
+        }
     }
 
     #[test]

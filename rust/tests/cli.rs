@@ -1037,3 +1037,152 @@ fn bench_serve_writes_saturation_json() {
         assert_eq!(r.get("ok").unwrap().as_f64(), Some(160.0));
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sparse substrate end to end: train → predict → serve over a CSR-backed
+// LIBSVM file, bit-matched against the same file forced dense.
+// ---------------------------------------------------------------------------
+
+/// A 0.1%-density LIBSVM file (2 stored entries out of 2000 dims) runs
+/// the whole CLI pipeline through the CSR backend — `train --storage
+/// sparse`, `predict --storage sparse --mmap`, `serve` with sparse JSON
+/// queries — and every decision is bit-identical to the same file
+/// trained and scored with `--storage dense`.
+#[test]
+fn sparse_pipeline_matches_dense_pipeline_bit_for_bit() {
+    use pasmo::util::json::Json;
+    let dir = TempDir::new("sparse-e2e");
+
+    let ds = pasmo::data::synth::sparse_blobs(300, 2000, 2, 77);
+    assert!(ds.is_sparse());
+    let data_path = dir.path("sparse.libsvm");
+    pasmo::data::libsvm::write(&ds, &data_path).unwrap();
+
+    // Train the same file through both backends.
+    let mut models = Vec::new();
+    for storage in ["sparse", "dense"] {
+        let model = dir.path(&format!("model-{storage}.json"));
+        let out = pasmo()
+            .args(["train", "--libsvm"])
+            .arg(&data_path)
+            .args(["--storage", storage, "--out"])
+            .arg(&model)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "train --storage {storage}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(model.exists());
+        models.push(model);
+    }
+
+    // Predict through each backend (the sparse leg additionally takes
+    // the mapped reader); the full-precision decision files must match
+    // byte for byte.
+    let mut preds = Vec::new();
+    for (i, (storage, extra)) in
+        [("sparse", vec!["--mmap"]), ("dense", vec![])].into_iter().enumerate()
+    {
+        let p = dir.path(&format!("preds-{storage}.txt"));
+        let out = pasmo()
+            .args(["predict", "--model"])
+            .arg(&models[i])
+            .args(["--libsvm"])
+            .arg(&data_path)
+            .args(["--storage", storage])
+            .args(&extra)
+            .args(["--out"])
+            .arg(&p)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "predict --storage {storage}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        preds.push(std::fs::read_to_string(&p).unwrap());
+    }
+    assert!(!preds[0].is_empty());
+    assert_eq!(preds[0], preds[1], "sparse and dense decision files diverge");
+    let offline: Vec<f64> = preds[0]
+        .lines()
+        .map(|l| l.split_whitespace().nth(1).unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(offline.len(), ds.len());
+
+    // Serve the sparse-trained model and replay the first rows as sparse
+    // JSON queries ({"x":{"<1-based index>":value}}): the socket answers
+    // with the offline bits.
+    let server = ServeChild::spawn(&format!("s={}", models[0].display()), &[]);
+    let mut conn = server.connect();
+    let n_q = 40usize;
+    for i in 0..n_q {
+        let mut line = String::from("{\"x\":{");
+        let mut first = true;
+        ds.row_ref(i).for_each_entry(|k, v| {
+            if v != 0.0 {
+                if !first {
+                    line.push(',');
+                }
+                first = false;
+                line.push_str(&format!("\"{}\":{v}", k + 1));
+            }
+        });
+        line.push_str(&format!("}},\"id\":{i}}}"));
+        conn.send(&line);
+    }
+    for (i, want) in offline.iter().take(n_q).enumerate() {
+        let v = parse_reply(&conn.recv());
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "query {i}: {v:?}");
+        assert_eq!(v.get("id").and_then(Json::as_f64), Some(i as f64), "reply order");
+        let served = v.get("decision").and_then(Json::as_f64).unwrap();
+        assert_eq!(
+            served.to_bits(),
+            want.to_bits(),
+            "query {i}: served {served} != offline {want}"
+        );
+    }
+    server.shutdown();
+}
+
+/// `pasmo bench --sparse` sweeps density 1.0 → 0.001 and enforces the
+/// bytes-resident gate: at the low densities CSR must actually beat the
+/// dense twin's footprint. The JSON document carries both columns.
+#[test]
+fn bench_sparse_sweeps_density_and_reports_resident_bytes() {
+    use pasmo::util::json::Json;
+    let dir = TempDir::new("bench-sparse");
+    let path = dir.path("sparse.json");
+    let out = pasmo()
+        .args(["bench", "--sparse", "--len", "60", "--dim", "500", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench --sparse failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str(), Some("sparse"));
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 3, "one run per density");
+    for r in runs {
+        let rows = r.get("rows").unwrap().as_f64().unwrap();
+        assert!(rows > 0.0);
+        assert!(r.get("rows_per_s").unwrap().as_f64().unwrap() > 0.0);
+        let resident = r.get("bytes_resident").unwrap().as_f64().unwrap();
+        let dense = r.get("dense_bytes").unwrap().as_f64().unwrap();
+        assert!(resident > 0.0 && dense > 0.0);
+        if r.get("density").unwrap().as_str() == Some("0.001") {
+            assert!(
+                resident < dense,
+                "0.001-density CSR resident {resident} !< dense {dense}"
+            );
+            // the lowest density runs at 10× the row count
+            assert_eq!(rows, 600.0, "0.001 density runs at 10x --len");
+        }
+    }
+}

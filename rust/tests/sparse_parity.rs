@@ -1,0 +1,313 @@
+//! Sparse↔dense parity wall: the CSR feature backend must be an
+//! *arithmetic no-op*. A dataset stored sparse and its densified twin
+//! hold the same numbers, so everything downstream — gram rows, solver
+//! trajectories, trained models, batch scoring — must agree: bit-for-bit
+//! for the dot-product kernels (whose sparse dot skips only exact-zero
+//! terms of the same ascending-order accumulation), and to ≤1e-12
+//! relative for RBF (both backends share the ‖a‖²+‖b‖²−2a·b
+//! decomposition, so in practice this is bitwise too; the tolerance is
+//! the contract, not the observation).
+//!
+//! Mirrors `tests/predict_parity.rs`: `forall` quickcheck over random
+//! problems, engines × shrinking × warm-start for training, all four
+//! kernels, thread-count bit-determinism on the sparse path.
+
+use std::sync::Arc;
+
+use pasmo::data::dataset::Dataset;
+use pasmo::data::synth::sparse_blobs;
+use pasmo::kernel::KernelFunction;
+use pasmo::solver::SolverChoice;
+use pasmo::svm::scorer::Scorer;
+use pasmo::svm::Trainer;
+use pasmo::util::prng::Pcg;
+use pasmo::util::quickcheck::forall;
+
+/// The ≤1e-12 agreement bound used for the RBF legs, scaled like
+/// `predict_parity::tol` by the expansion's ℓ1 mass.
+fn tol(coef: &[f64], want: f64) -> f64 {
+    1e-12 * (1.0 + want.abs() + coef.iter().map(|c| c.abs()).sum::<f64>())
+}
+
+/// A dense dataset with ~`p_zero` of its coordinates exactly 0.0 (the
+/// regime where CSR stores less), plus its CSR twin. Labels alternate so
+/// every draw is a valid two-class problem.
+fn twin_pair(g: &mut Pcg, n: usize, d: usize, p_zero: f64) -> (Arc<Dataset>, Arc<Dataset>) {
+    let mut ds = Dataset::with_dim(d);
+    let mut row = vec![0f32; d];
+    for i in 0..n {
+        for v in row.iter_mut() {
+            *v = if g.bernoulli(p_zero) { 0.0 } else { g.normal() as f32 };
+        }
+        ds.push(&row, if i % 2 == 0 { 1 } else { -1 });
+    }
+    let sparse = Arc::new(ds.to_sparse());
+    (Arc::new(ds), sparse)
+}
+
+fn random_kernel(g: &mut Pcg) -> KernelFunction {
+    match g.below(4) {
+        0 => KernelFunction::Rbf { gamma: g.range(0.05, 2.0) },
+        1 => KernelFunction::Linear,
+        2 => KernelFunction::Poly {
+            gamma: g.range(0.1, 1.0),
+            coef0: 1.0,
+            degree: 2 + g.below(3) as u32,
+        },
+        _ => KernelFunction::Sigmoid { gamma: g.range(0.05, 0.5), coef0: 0.1 },
+    }
+}
+
+fn is_rbf(k: &KernelFunction) -> bool {
+    matches!(k, KernelFunction::Rbf { .. })
+}
+
+/// Elementwise comparison of two solver/model coefficient vectors:
+/// bitwise unless `loose` (the RBF contract), which allows ≤1e-12.
+fn compare_vecs(tag: &str, got: &[f64], want: &[f64], loose: bool) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{tag}: length {} != {}", got.len(), want.len()));
+    }
+    for (i, (&a, &b)) in got.iter().zip(want).enumerate() {
+        if !loose && a.to_bits() != b.to_bits() {
+            return Err(format!("{tag}[{i}]: {a} != {b} (bitwise)"));
+        }
+        if (a - b).abs() > 1e-12 * (1.0 + b.abs()) {
+            return Err(format!("{tag}[{i}]: {a} vs {b}"));
+        }
+    }
+    Ok(())
+}
+
+/// Training parity: the same trainer over a CSR dataset and its dense
+/// twin walks the same solver trajectory — across all three engines,
+/// shrinking on and off, all four kernels.
+#[test]
+fn quickcheck_training_parity_across_engines_and_shrinking() {
+    forall(
+        "sparse-train-vs-dense-train",
+        10,
+        |g| {
+            let n = 20 + g.below(40);
+            let d = 3 + g.below(10);
+            let (dense, sparse) = twin_pair(g, n, d, 0.7);
+            let kernel = random_kernel(g);
+            let c = g.range(0.5, 20.0);
+            (dense, sparse, kernel, c)
+        },
+        |(dense, sparse, kernel, c)| {
+            let loose = is_rbf(kernel);
+            for solver in [SolverChoice::Smo, SolverChoice::Pasmo, SolverChoice::ConjugateSmo] {
+                for shrinking in [false, true] {
+                    let trainer = {
+                        let mut t = Trainer::new(*kernel).c(*c).solver(solver);
+                        t.solver_config.shrinking = shrinking;
+                        t
+                    };
+                    let on_dense = trainer.train(dense);
+                    let on_sparse = trainer.train(sparse);
+                    let tag = format!("{solver:?} shrink={shrinking}");
+                    compare_vecs(
+                        &format!("{tag} alpha"),
+                        &on_sparse.result.alpha,
+                        &on_dense.result.alpha,
+                        loose,
+                    )?;
+                    if !loose {
+                        if on_sparse.result.iterations != on_dense.result.iterations {
+                            return Err(format!(
+                                "{tag}: {} iterations vs {}",
+                                on_sparse.result.iterations, on_dense.result.iterations
+                            ));
+                        }
+                        if on_sparse.model.bias.to_bits() != on_dense.model.bias.to_bits() {
+                            return Err(format!(
+                                "{tag} bias: {} != {} (bitwise)",
+                                on_sparse.model.bias, on_dense.model.bias
+                            ));
+                        }
+                    }
+                    compare_vecs(
+                        &format!("{tag} coef"),
+                        &on_sparse.model.coef,
+                        &on_dense.model.coef,
+                        loose,
+                    )?;
+                    // The extracted support keeps its backend but holds
+                    // the same numbers.
+                    if !on_sparse.model.support.is_sparse() {
+                        return Err(format!("{tag}: sparse support was densified"));
+                    }
+                    if on_sparse.model.support.to_dense() != on_dense.model.support.to_dense() {
+                        return Err(format!("{tag}: support vectors differ"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warm starts cross the backend boundary: α from a dense solve seeds a
+/// sparse re-solve (and vice versa) exactly like a same-backend restart.
+#[test]
+fn quickcheck_warm_start_crosses_backends() {
+    forall(
+        "sparse-warm-start",
+        8,
+        |g| {
+            let n = 24 + g.below(36);
+            let d = 3 + g.below(8);
+            let (dense, sparse) = twin_pair(g, n, d, 0.7);
+            let kernel = random_kernel(g);
+            (dense, sparse, kernel)
+        },
+        |(dense, sparse, kernel)| {
+            let loose = is_rbf(kernel);
+            let cold = Trainer::new(*kernel).c(5.0).train(dense);
+            let warm_dense =
+                Trainer::new(*kernel).c(5.0).warm_start(cold.result.alpha.clone()).train(dense);
+            let warm_sparse =
+                Trainer::new(*kernel).c(5.0).warm_start(cold.result.alpha.clone()).train(sparse);
+            compare_vecs(
+                "warm alpha",
+                &warm_sparse.result.alpha,
+                &warm_dense.result.alpha,
+                loose,
+            )?;
+            if !loose && warm_sparse.result.iterations != warm_dense.result.iterations {
+                return Err(format!(
+                    "warm iterations: {} vs {}",
+                    warm_sparse.result.iterations, warm_dense.result.iterations
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Scoring parity: a fixed random expansion scored over every
+/// sparse/dense combination of support set and query set agrees with the
+/// all-dense reference — bitwise for the dot kernels (collapse disabled
+/// so both sides run the expansion), ≤1e-12 for RBF — and the sparse
+/// legs stay bit-identical across thread counts.
+#[test]
+fn quickcheck_scoring_parity_across_backends() {
+    forall(
+        "sparse-score-vs-dense-score",
+        20,
+        |g| {
+            let d = 2 + g.below(10);
+            let n_sv = 1 + g.below(50);
+            let n_q = 1 + g.below(40);
+            let (sv_dense, sv_sparse) = twin_pair(g, n_sv, d, 0.6);
+            let (q_dense, q_sparse) = twin_pair(g, n_q, d, 0.6);
+            let coef: Vec<f64> = (0..n_sv).map(|_| g.normal() * 3.0).collect();
+            let offset = g.normal();
+            let kernel = random_kernel(g);
+            (sv_dense, sv_sparse, q_dense, q_sparse, coef, offset, kernel)
+        },
+        |(sv_dense, sv_sparse, q_dense, q_sparse, coef, offset, kernel)| {
+            let loose = is_rbf(kernel);
+            let want = Scorer::new(*kernel, sv_dense, coef, *offset)
+                .collapse_linear(false)
+                .decision_values(q_dense);
+            for (tag, sv, q) in [
+                ("dense-sv/sparse-q", sv_dense, q_sparse),
+                ("sparse-sv/dense-q", sv_sparse, q_dense),
+                ("sparse-sv/sparse-q", sv_sparse, q_sparse),
+            ] {
+                let got = Scorer::new(*kernel, sv, coef, *offset)
+                    .collapse_linear(false)
+                    .decision_values(q);
+                for i in 0..want.len() {
+                    if !loose && got[i].to_bits() != want[i].to_bits() {
+                        return Err(format!("{tag} q={i}: {} != {} (bitwise)", got[i], want[i]));
+                    }
+                    if (got[i] - want[i]).abs() > tol(coef, want[i]) {
+                        return Err(format!("{tag} q={i}: {} vs {}", got[i], want[i]));
+                    }
+                }
+                let threaded = Scorer::new(*kernel, sv, coef, *offset)
+                    .collapse_linear(false)
+                    .with_threads(4)
+                    .decision_values(q);
+                for i in 0..want.len() {
+                    if threaded[i].to_bits() != got[i].to_bits() {
+                        return Err(format!("{tag} q={i}: threaded diverges"));
+                    }
+                }
+            }
+            // Default construction (collapse heuristics enabled) stays
+            // within the tolerance contract even when only one side
+            // collapses its linear expansion.
+            let def_want = Scorer::new(*kernel, sv_dense, coef, *offset).decision_values(q_dense);
+            let def_got = Scorer::new(*kernel, sv_sparse, coef, *offset).decision_values(q_sparse);
+            for i in 0..def_want.len() {
+                if (def_got[i] - def_want[i]).abs() > tol(coef, def_want[i]) {
+                    return Err(format!(
+                        "default q={i}: {} vs {}",
+                        def_got[i], def_want[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An end-to-end leg on the generator the CLI bench uses: train on a
+/// genuinely sparse dataset, score it, and check the whole pipeline
+/// against the densified twin — plus trainer thread invariance on CSR.
+#[test]
+fn sparse_blobs_train_and_score_match_densified_twin() {
+    let sparse = Arc::new(sparse_blobs(160, 400, 6, 21));
+    let dense = Arc::new(sparse.to_dense());
+    assert!(sparse.is_sparse() && !dense.is_sparse());
+    assert!(sparse.resident_bytes() < dense.resident_bytes());
+
+    for (kernel, loose) in [
+        (KernelFunction::Linear, false),
+        (KernelFunction::Rbf { gamma: 0.5 }, true),
+    ] {
+        let trainer = Trainer::new(kernel).c(2.0);
+        let on_sparse = trainer.train(&sparse);
+        let on_dense = trainer.train(&dense);
+        compare_vecs("alpha", &on_sparse.result.alpha, &on_dense.result.alpha, loose).unwrap();
+
+        let got = on_sparse.model.scorer().decision_values(&sparse);
+        let want = on_dense.model.scorer().decision_values(&dense);
+        for i in 0..want.len() {
+            assert!(
+                (got[i] - want[i]).abs() <= tol(&on_dense.model.coef, want[i]),
+                "{kernel:?} i={i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+
+        // Thread count never changes the bits, dense or sparse.
+        let threaded = trainer.clone().threads(4).train(&sparse);
+        assert_eq!(threaded.result.alpha, on_sparse.result.alpha, "{kernel:?} threads");
+    }
+}
+
+/// Subset/permutation plumbing (the cross-validation path) preserves the
+/// backend and the numbers.
+#[test]
+fn subset_and_permuted_preserve_backend_and_values() {
+    let sparse = sparse_blobs(60, 120, 4, 5);
+    let dense = sparse.to_dense();
+    let idx: Vec<usize> = (0..60).filter(|i| i % 3 != 0).collect();
+    let perm: Vec<usize> = (0..60).map(|i| (i * 7) % 60).collect();
+
+    let sub_s = sparse.subset(&idx);
+    let sub_d = dense.subset(&idx);
+    assert!(sub_s.is_sparse() && !sub_d.is_sparse());
+    assert_eq!(sub_s.to_dense(), sub_d);
+
+    let perm_s = sparse.permuted(&perm);
+    let perm_d = dense.permuted(&perm);
+    assert!(perm_s.is_sparse());
+    assert_eq!(perm_s.to_dense(), perm_d);
+}
