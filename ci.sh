@@ -5,6 +5,11 @@
 #   1. cargo fmt --check        (skipped when rustfmt is not installed)
 #   2. cargo build --release    (tier-1, default features = native path)
 #   3. cargo test -q            (tier-1)
+#   3a. cargo test -q twice more under PASMO_SIMD=off and (AVX2 hosts)
+#                               PASMO_SIMD=force: the scalar and SIMD
+#                               kernel tiles are bit-identical by
+#                               construction, so the whole suite must
+#                               pass under either selection
 #   4. cargo build --no-default-features
 #                               (the native path must never grow a hard
 #                                external dependency)
@@ -16,6 +21,11 @@
 #   4e2. pasmo bench --predict at tiny scale → BENCH_predict.json
 #                               (inference-side trajectory: scalar vs
 #                                tiled vs threaded vs linear-collapse)
+#   4e2a. pasmo bench --check-baseline against the committed
+#                               ../BENCH_baseline.json (the persistent
+#                               perf gate: regressions beyond noise
+#                               tolerance exit nonzero; an empty
+#                               committed metric map bootstraps)
 #   4e2b. pasmo bench --sparse at tiny scale → BENCH_sparse.json
 #                               (density sweep 1.0/0.1/0.001; the binary
 #                                itself fails the run if CSR resident
@@ -79,6 +89,20 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
+# The SIMD wall: the whole suite under the forced-scalar tile, and —
+# when the CPU has AVX2 — again under the forced-SIMD tile. The two
+# tiles are bit-identical by construction (DESIGN.md §4g), so every
+# test must pass under either selection.
+step "cargo test -q (PASMO_SIMD=off)"
+PASMO_SIMD=off cargo test -q
+
+if grep -q avx2 /proc/cpuinfo 2>/dev/null; then
+    step "cargo test -q (PASMO_SIMD=force)"
+    PASMO_SIMD=force cargo test -q
+else
+    step "cargo test -q PASMO_SIMD=force (SKIPPED: no AVX2 on this host)"
+fi
+
 step "cargo build --no-default-features"
 cargo build --no-default-features
 
@@ -101,6 +125,15 @@ cargo run --release -- bench --len 300 --cache-rows 32 --shrink-interval 50 --ou
 # and kernel entries for scalar vs tiled vs threaded vs linear-collapse).
 step "pasmo bench --predict --len 300 (writes ../BENCH_predict.json)"
 cargo run --release -- bench --predict --len 300 --out ../BENCH_predict.json
+
+# Perf trajectory gate: measure the tiny fixed train+predict workload
+# (medians of 5 reps) and compare against the committed baseline —
+# deterministic counters at ±2%, wall metrics at ±50%. An empty
+# committed metric map (how this file is seeded) bootstraps: the run
+# measures, saves, and passes, so the first PR on a new host class
+# establishes the trajectory the next one is gated against.
+step "pasmo bench --check-baseline (gates against ../BENCH_baseline.json)"
+cargo run --release -- bench --check-baseline --baseline ../BENCH_baseline.json --len 240
 
 # Sparse substrate gate: the density sweep (the binary enforces the
 # CSR-beats-dense resident-bytes claim itself via its internal check),
@@ -250,7 +283,10 @@ fi
 
 if cargo +nightly miri --version >/dev/null 2>&1; then
     # Scope miri to the unsafe-heavy kernel layer: full-suite miri is
-    # orders of magnitude too slow for a CI gate.
+    # orders of magnitude too slow for a CI gate. The AVX2 tile is
+    # cfg(not(miri))-gated (vendor intrinsics are unsupported there),
+    # so miri exercises the scalar tile through the same kernel::
+    # tests — the bit-identity wall makes that coverage transfer.
     step "cargo +nightly miri test kernel::"
     cargo +nightly miri test kernel::
 else

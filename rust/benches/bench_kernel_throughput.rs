@@ -10,9 +10,20 @@ use std::sync::Arc;
 
 use pasmo::data::dataset::Dataset;
 use pasmo::kernel::matrix::RowComputer;
+use pasmo::kernel::tile::simd::{self, SimdMode};
 use pasmo::kernel::{KernelFunction, NativeRowComputer};
 use pasmo::util::prng::Pcg;
 use pasmo::util::timer::bench;
+
+/// Re-select the tile the way process startup would (PASMO_SIMD or
+/// auto), after a section that forced a mode.
+fn restore_ambient_simd() {
+    let ambient = std::env::var("PASMO_SIMD")
+        .ok()
+        .and_then(|v| SimdMode::parse(&v))
+        .unwrap_or(SimdMode::Auto);
+    let _ = simd::set_simd_mode(ambient);
+}
 
 fn random_ds(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
     let mut rng = Pcg::new(seed);
@@ -164,6 +175,83 @@ fn main() {
                 ds.resident_bytes()
             );
         }
+        // scalar vs SIMD on the dense twin at this density (CSR rows
+        // always take the merged-dot fallback, so only dense splits)
+        if simd::simd_supported() {
+            let native = NativeRowComputer::new(dense.clone(), KernelFunction::Rbf { gamma: 0.5 });
+            let mut out = vec![0f32; n];
+            for (mtag, mode) in [("dense·scalar", SimdMode::Off), ("dense·simd  ", SimdMode::Force)]
+            {
+                assert!(simd::set_simd_mode(mode));
+                let mut i = 0usize;
+                let r = bench(&format!("{mtag} density={label}"), 10, || {
+                    i = (i + 17) % n;
+                    native.compute_row(i, &mut out);
+                    out[0]
+                });
+                println!("{}   {:>8.1} rows/s", r.line(), 1.0 / r.mean_s);
+            }
+            restore_ambient_simd();
+        }
         println!();
     }
+
+    // Scalar vs SIMD tile per kernel × dim. d = 2 and 3 are the
+    // sub-4-entry remainder-only shapes (the SIMD tile requires d >= 4,
+    // so they dispatch scalar under both modes and the speedup column
+    // reads ~1x); bit-identity is asserted on a full row each time.
+    println!("---- scalar vs SIMD tile (dense, bit-identical by construction) ----");
+    if !simd::simd_supported() {
+        println!("(no AVX2 on this host — SIMD rows skipped, the scalar tile is the floor)");
+        return;
+    }
+    let kernels: [(&str, KernelFunction); 4] = [
+        ("rbf    ", KernelFunction::Rbf { gamma: 0.5 }),
+        ("linear ", KernelFunction::Linear),
+        ("poly   ", KernelFunction::Poly { gamma: 0.5, coef0: 1.0, degree: 3 }),
+        ("sigmoid", KernelFunction::Sigmoid { gamma: 0.5, coef0: 0.0 }),
+    ];
+    for &(kname, kernel) in &kernels {
+        for &d in &[2usize, 3, 16, 64, 200] {
+            let n = 4096usize;
+            let ds = random_ds(n, d, 42);
+            let native = NativeRowComputer::new(ds.clone(), kernel);
+            let mut out_off = vec![0f32; n];
+            let mut out_on = vec![0f32; n];
+
+            assert!(simd::set_simd_mode(SimdMode::Off));
+            let mut i = 0usize;
+            let r_off = bench(&format!("{kname} scalar d={d:<4}"), 10, || {
+                i = (i + 17) % n;
+                native.compute_row(i, &mut out_off);
+                out_off[0]
+            });
+            assert!(simd::set_simd_mode(SimdMode::Force));
+            let mut i = 0usize;
+            let r_on = bench(&format!("{kname} simd   d={d:<4}"), 10, || {
+                i = (i + 17) % n;
+                native.compute_row(i, &mut out_on);
+                out_on[0]
+            });
+
+            // one full row under each mode: the tiles must agree bitwise
+            assert!(simd::set_simd_mode(SimdMode::Off));
+            native.compute_row(0, &mut out_off);
+            assert!(simd::set_simd_mode(SimdMode::Force));
+            native.compute_row(0, &mut out_on);
+            for (a, b) in out_off.iter().zip(&out_on) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kname} d={d}: SIMD row diverged");
+            }
+
+            println!("{}   {:>8.1} rows/s", r_off.line(), 1.0 / r_off.mean_s);
+            println!(
+                "{}   {:>8.1} rows/s   {:>5.2}x vs scalar (bits identical)",
+                r_on.line(),
+                1.0 / r_on.mean_s,
+                r_off.mean_s / r_on.mean_s
+            );
+        }
+        println!();
+    }
+    restore_ambient_simd();
 }

@@ -9,10 +9,21 @@
 //! `PASMO_BENCH_FULL=1` enlarges the shapes.
 
 use pasmo::data::dataset::Dataset;
+use pasmo::kernel::tile::simd::{self, SimdMode};
 use pasmo::kernel::KernelFunction;
 use pasmo::svm::scorer::Scorer;
 use pasmo::util::prng::Pcg;
 use pasmo::util::timer::bench;
+
+/// Re-select the tile the way process startup would (PASMO_SIMD or
+/// auto), after a section that forced a mode.
+fn restore_ambient_simd() {
+    let ambient = std::env::var("PASMO_SIMD")
+        .ok()
+        .and_then(|v| SimdMode::parse(&v))
+        .unwrap_or(SimdMode::Auto);
+    let _ = simd::set_simd_mode(ambient);
+}
 
 fn random_ds(n: usize, d: usize, seed: u64) -> Dataset {
     let mut rng = Pcg::new(seed);
@@ -90,6 +101,39 @@ fn main() {
             tiled.decision_values(&queries).iter().sum::<f64>()
         });
         report(&r, q, entries);
+
+        // explicit scalar-vs-SIMD split of the same tiled pass (the
+        // rows above/below run whatever the ambient selection picked)
+        if simd::simd_supported() {
+            let mut rows = Vec::new();
+            for (mtag, mode) in [("simd-off", SimdMode::Off), ("simd-on ", SimdMode::Force)] {
+                assert!(simd::set_simd_mode(mode));
+                let r = bench(&format!("{mtag}sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+                    tiled.decision_values(&queries).iter().sum::<f64>()
+                });
+                report(&r, q, entries);
+                rows.push(tiled.decision_values(&queries));
+            }
+            // the two passes must agree to the bit
+            for (a, b) in rows[0].iter().zip(&rows[1]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "SIMD scoring pass diverged");
+            }
+            restore_ambient_simd();
+        }
+
+        // opt-in packed-f32 SV storage (dense×dense fast path; the gate
+        // a server would apply is reported instead of asserted here)
+        let f32_fast = Scorer::new(kernel, &sv, &coef, bias).with_f32_sv(true);
+        let delta = f32_fast.f32_sv_max_delta();
+        let r = bench(&format!("f32-sv  sv={n_sv:<5} d={d:<4} q={q:<5}"), samples, || {
+            f32_fast.decision_values(&queries).iter().sum::<f64>()
+        });
+        println!(
+            "{}   {:>10.1} queries/s  {:>12} K-entries/pass  (gate delta {delta:.2e})",
+            r.line(),
+            q as f64 / r.mean_s,
+            entries
+        );
 
         let threaded = Scorer::new(kernel, &sv, &coef, bias).with_threads(threads);
         let r = bench(

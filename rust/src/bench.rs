@@ -1,0 +1,363 @@
+//! Persistent benchmark baselines — the repo's perf trajectory and its
+//! CI regression gate.
+//!
+//! `pasmo bench --save-baseline` records per-metric medians into a
+//! committed `BENCH_baseline.json` (written through
+//! [`crate::util::artifact`], so the file is checksummed and the write
+//! is crash-safe); `pasmo bench --check-baseline` re-measures the same
+//! tiny workloads and fails with a positioned diff
+//! (`BENCH_baseline.json#metrics.<name>`) when a metric moves beyond
+//! its noise tolerance in the worse direction. `ci.sh` runs the check
+//! on every build, so a SIMD path or cache layer that silently loses
+//! its win fails CI instead of decaying unnoticed.
+//!
+//! Two tolerance classes keep the gate honest on noisy shared runners:
+//! deterministic counters (`kernel_entries`, solver iterations) carry
+//! the tight [`TOL_COUNTER`] — they only move when the algorithm
+//! changes — while wall-clock-derived metrics carry the loose
+//! [`TOL_WALL`], because they move with the machine. Medians of an odd
+//! number of repetitions (not means) absorb scheduler spikes.
+//!
+//! The committed seed file starts with an *empty* metric map: a
+//! `--check-baseline` run against an empty baseline bootstraps it by
+//! measuring and saving, so the gate self-initializes on a fresh host
+//! class instead of comparing against another machine's clock.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::artifact;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// Artifact `kind` tag stamped into baseline files.
+pub const BASELINE_KIND: &str = "bench_baseline";
+/// Baseline schema version.
+pub const BASELINE_VERSION: f64 = 1.0;
+/// Tight relative tolerance for deterministic counter metrics.
+pub const TOL_COUNTER: f64 = 0.02;
+/// Loose relative tolerance for wall-clock-derived metrics.
+pub const TOL_WALL: f64 = 0.5;
+
+/// Median of `samples` under IEEE total order (sorts in place). Use an
+/// odd repetition count so deterministic counters stay exact.
+pub fn median(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len();
+    if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        0.5 * (samples[n / 2 - 1] + samples[n / 2])
+    }
+}
+
+/// Which way "better" points for a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (wall seconds, kernel entries).
+    Lower,
+    /// Larger is better (rows/s, queries/s).
+    Higher,
+}
+
+impl Direction {
+    /// The on-disk tag (`"lower"` / `"higher"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Lower => "lower",
+            Direction::Higher => "higher",
+        }
+    }
+
+    /// Parse the on-disk tag.
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "lower" => Some(Direction::Lower),
+            "higher" => Some(Direction::Higher),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded metric: the median of several measured repetitions plus
+/// how future runs compare against it.
+#[derive(Debug, Clone)]
+pub struct BaselineMetric {
+    /// Recorded median.
+    pub value: f64,
+    /// Which way better points.
+    pub direction: Direction,
+    /// Relative noise tolerance (`0.02` = ±2%).
+    pub tol_rel: f64,
+}
+
+/// A named metric set persisted as `BENCH_baseline.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    /// Metric name → recorded value, in name order (deterministic
+    /// serialization, stable diffs).
+    pub metrics: BTreeMap<String, BaselineMetric>,
+}
+
+impl Baseline {
+    /// Empty baseline — the committed bootstrap state.
+    pub fn new() -> Baseline {
+        Baseline::default()
+    }
+
+    /// No metrics recorded yet? (An empty baseline tells
+    /// `--check-baseline` to bootstrap rather than compare.)
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Record (or overwrite) one metric.
+    pub fn set(&mut self, name: &str, value: f64, direction: Direction, tol_rel: f64) {
+        self.metrics
+            .insert(name.to_string(), BaselineMetric { value, direction, tol_rel });
+    }
+
+    /// Serialize to the artifact document (the checksum is stamped by
+    /// [`Baseline::save`]).
+    pub fn to_json(&self) -> Json {
+        let mut metrics = BTreeMap::new();
+        for (name, m) in &self.metrics {
+            let mut obj = BTreeMap::new();
+            obj.insert("value".to_string(), Json::Num(m.value));
+            obj.insert(
+                "direction".to_string(),
+                Json::Str(m.direction.as_str().to_string()),
+            );
+            obj.insert("tol_rel".to_string(), Json::Num(m.tol_rel));
+            metrics.insert(name.clone(), Json::Obj(obj));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("kind".to_string(), Json::Str(BASELINE_KIND.to_string()));
+        doc.insert("version".to_string(), Json::Num(BASELINE_VERSION));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(doc)
+    }
+
+    /// Parse an artifact document. Field errors are positioned as
+    /// `metrics.<name>.<field>`.
+    pub fn from_json(doc: &Json) -> Result<Baseline> {
+        let kind = doc.get("kind").and_then(Json::as_str).unwrap_or(BASELINE_KIND);
+        if kind != BASELINE_KIND {
+            return Err(Error::msg(format!(
+                "kind: expected {BASELINE_KIND:?}, found {kind:?}"
+            )));
+        }
+        let mut out = Baseline::new();
+        let metrics = match doc.get("metrics") {
+            None => return Ok(out),
+            Some(v) => v.as_obj().context("metrics: expected an object")?,
+        };
+        for (name, v) in metrics {
+            let value = v
+                .get("value")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("metrics.{name}.value: expected a number"))?;
+            let dir_tag = v
+                .get("direction")
+                .and_then(Json::as_str)
+                .with_context(|| format!("metrics.{name}.direction: expected a string"))?;
+            let direction = Direction::parse(dir_tag).with_context(|| {
+                format!("metrics.{name}.direction: unknown tag {dir_tag:?} (lower|higher)")
+            })?;
+            let tol_rel = v
+                .get("tol_rel")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("metrics.{name}.tol_rel: expected a number"))?;
+            out.set(name, value, direction, tol_rel);
+        }
+        Ok(out)
+    }
+
+    /// Write through the checksummed atomic artifact layer.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        artifact::save_json(path, self.to_json())
+    }
+
+    /// Load and parse, verifying the artifact checksum when present.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let doc = artifact::load_json(path)?;
+        Baseline::from_json(&doc).with_context(|| format!("load {}", path.display()))
+    }
+}
+
+/// Outcome of a baseline check: positioned regression/missing lines
+/// (failures) plus informational improvement/new-metric lines.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// Metrics beyond tolerance in the worse direction; each line is
+    /// positioned as `<origin>#metrics.<name>`.
+    pub regressions: Vec<String>,
+    /// Metrics beyond tolerance in the better direction (worth
+    /// re-saving the baseline to bank the win).
+    pub improvements: Vec<String>,
+    /// Measured metrics absent from the committed baseline.
+    pub new_metrics: Vec<String>,
+    /// Committed metrics this run failed to measure — failures, because
+    /// a silently dropped metric is a regression of the gate itself.
+    pub missing: Vec<String>,
+}
+
+impl CheckReport {
+    /// Does the gate pass?
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare a fresh measurement set against the committed baseline.
+/// `origin` names the baseline file in positioned messages
+/// (e.g. `BENCH_baseline.json`).
+pub fn check(baseline: &Baseline, current: &Baseline, origin: &str) -> CheckReport {
+    let mut report = CheckReport::default();
+    for (name, base) in &baseline.metrics {
+        let Some(cur) = current.metrics.get(name) else {
+            report.missing.push(format!(
+                "{origin}#metrics.{name}: recorded in the baseline but not measured by this run"
+            ));
+            continue;
+        };
+        let rel = if base.value.abs() > f64::EPSILON {
+            (cur.value - base.value) / base.value
+        } else {
+            0.0
+        };
+        let worse = match base.direction {
+            Direction::Lower => rel > base.tol_rel,
+            Direction::Higher => rel < -base.tol_rel,
+        };
+        let better = match base.direction {
+            Direction::Lower => rel < -base.tol_rel,
+            Direction::Higher => rel > base.tol_rel,
+        };
+        let line = format!(
+            "{origin}#metrics.{name}: baseline {:.6} -> current {:.6} ({:+.1}%, tol \u{b1}{:.0}%)",
+            base.value,
+            cur.value,
+            100.0 * rel,
+            100.0 * base.tol_rel
+        );
+        if worse {
+            report.regressions.push(format!("{line} REGRESSED"));
+        } else if better {
+            report.improvements.push(line);
+        }
+    }
+    for name in current.metrics.keys() {
+        if !baseline.metrics.contains_key(name) {
+            report.new_metrics.push(format!(
+                "{origin}#metrics.{name}: new metric (not yet in the baseline)"
+            ));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_baseline() -> Baseline {
+        let mut b = Baseline::new();
+        b.set("train.kernel_entries", 1000.0, Direction::Lower, TOL_COUNTER);
+        b.set("predict.rows_per_s", 500.0, Direction::Higher, TOL_WALL);
+        b
+    }
+
+    #[test]
+    fn median_is_deterministic_and_order_free() {
+        let mut empty: [f64; 0] = [];
+        assert_eq!(median(&mut empty), 0.0);
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median(&mut [7.0]), 7.0);
+    }
+
+    #[test]
+    fn round_trips_through_the_checksummed_artifact() {
+        let dir = std::env::temp_dir()
+            .join(format!("pasmo-baseline-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_baseline.json");
+        sample_baseline().save(&path).unwrap();
+        let doc = crate::util::artifact::load_json(&path).unwrap();
+        assert!(doc.get("checksum").is_some(), "artifact layer stamps a checksum");
+        assert_eq!(doc.get("kind").and_then(Json::as_str), Some(BASELINE_KIND));
+        let loaded = Baseline::load(&path).unwrap();
+        assert_eq!(loaded.metrics.len(), 2);
+        let m = &loaded.metrics["train.kernel_entries"];
+        assert_eq!(m.value.to_bits(), 1000.0f64.to_bits());
+        assert_eq!(m.direction, Direction::Lower);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_baseline_parses_and_signals_bootstrap() {
+        let b = Baseline::from_json(&Baseline::new().to_json()).unwrap();
+        assert!(b.is_empty(), "empty metrics map = bootstrap state");
+    }
+
+    #[test]
+    fn regressions_are_positioned_and_direction_aware() {
+        let base = sample_baseline();
+        let mut cur = Baseline::new();
+        // +10% on a lower-is-better counter and -60% on a
+        // higher-is-better rate: both regress
+        cur.set("train.kernel_entries", 1100.0, Direction::Lower, TOL_COUNTER);
+        cur.set("predict.rows_per_s", 200.0, Direction::Higher, TOL_WALL);
+        let report = check(&base, &cur, "BENCH_baseline.json");
+        assert!(!report.ok());
+        assert_eq!(report.regressions.len(), 2);
+        assert!(report
+            .regressions
+            .iter()
+            .any(|r| r.contains("BENCH_baseline.json#metrics.predict.rows_per_s")));
+        assert!(report.regressions.iter().all(|r| r.contains("REGRESSED")));
+        assert!(report.missing.is_empty() && report.new_metrics.is_empty());
+    }
+
+    #[test]
+    fn improvements_new_and_missing_metrics_are_classified() {
+        let base = sample_baseline();
+        let mut cur = Baseline::new();
+        cur.set("train.kernel_entries", 900.0, Direction::Lower, TOL_COUNTER);
+        cur.set("brand.new", 1.0, Direction::Higher, TOL_WALL);
+        let report = check(&base, &cur, "BENCH_baseline.json");
+        assert_eq!(report.improvements.len(), 1);
+        assert_eq!(report.new_metrics.len(), 1);
+        assert_eq!(report.missing.len(), 1, "predict.rows_per_s was not measured");
+        assert!(!report.ok(), "missing committed metrics fail the gate");
+    }
+
+    #[test]
+    fn within_tolerance_passes_quietly() {
+        let base = sample_baseline();
+        let mut cur = Baseline::new();
+        // +1% against a 2% counter tolerance, -20% against a 50% wall
+        // tolerance: both inside the noise band
+        cur.set("train.kernel_entries", 1010.0, Direction::Lower, TOL_COUNTER);
+        cur.set("predict.rows_per_s", 400.0, Direction::Higher, TOL_WALL);
+        let report = check(&base, &cur, "BENCH_baseline.json");
+        assert!(report.ok(), "{:?}", report.regressions);
+        assert!(report.improvements.is_empty() && report.new_metrics.is_empty());
+    }
+
+    #[test]
+    fn bad_field_errors_are_positioned() {
+        let text = "{\"kind\":\"bench_baseline\",\"metrics\":{\"m\":{\"value\":1,\
+                    \"direction\":\"sideways\",\"tol_rel\":0.1}}}";
+        let doc = Json::parse(text).unwrap();
+        let err = Baseline::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("metrics.m.direction"), "{err}");
+        let wrong_kind = Json::parse("{\"kind\":\"model\"}").unwrap();
+        let err = Baseline::from_json(&wrong_kind).unwrap_err().to_string();
+        assert!(err.contains("bench_baseline"), "{err}");
+    }
+}

@@ -29,6 +29,12 @@ use super::tile;
 /// entries are computed by exactly the same arithmetic regardless of the
 /// chunking, so threaded rows are bit-identical to single-threaded ones.
 ///
+/// On AVX2 hosts the dense tile underneath runs the explicit SIMD
+/// implementation ([`tile::simd`]) selected once per process — it
+/// vectorizes *across* the four tile outputs and is `to_bits`-identical
+/// to the scalar tile (DESIGN.md §4g), so nothing at this layer or
+/// above can observe which path was dispatched.
+///
 /// The computer is backend-agnostic: CSR-sparse datasets route through
 /// the same [`tile`] entry points (merged sparse dots, same bits as the
 /// dense tile — see `data::features`), so the solver above never learns

@@ -24,6 +24,18 @@
 //! loop (see `data::features`). The RBF arm always uses the
 //! `‖a‖²+‖b‖²−2a·b` decomposition with the precomputed
 //! [`squared_norms`], dense or sparse alike.
+//!
+//! ## SIMD floor
+//!
+//! The dense 4-wide tile has an explicit AVX2 implementation ([`simd`])
+//! selected once per process by runtime feature detection
+//! (`PASMO_SIMD` / `--simd auto|force|off`). It vectorizes **across the
+//! four tile outputs** — the vector lanes are the accumulators d0..d3,
+//! not four features of one dot — so each entry still accumulates its
+//! own f64 dot in feature order with one IEEE mul + add per term (no
+//! FMA), and the SIMD tile is `to_bits`-identical to the scalar tile.
+//! CSR pairings never enter the SIMD tile: they keep the merged-dot
+//! fallback above. See DESIGN.md §4g.
 
 use crate::data::dataset::Dataset;
 use crate::data::features::{Features, Row};
@@ -42,6 +54,266 @@ pub const PAR_MIN_MADDS: usize = 1 << 16;
 /// `‖a‖²+‖b‖²−2a·b` decomposition.
 pub fn squared_norms(data: &Dataset) -> Vec<f64> {
     (0..data.len()).map(|i| data.row_ref(i).sqnorm()).collect()
+}
+
+/// Explicit AVX2 tile for dense query × dense data, behind process-wide
+/// runtime dispatch.
+///
+/// The vector lanes are the four tile *outputs* (the accumulators
+/// `d0..d3` of the dense tile), not four features of one dot product:
+/// every feature step broadcasts `xi[k]`, gathers the four rows' `k`-th
+/// coordinates into one register, and performs one IEEE-754 f64
+/// multiply followed by one add per lane (`_mm256_mul_pd` +
+/// `_mm256_add_pd`, never FMA). Each lane therefore runs exactly the
+/// scalar per-entry recurrence `d_t += xi[k] · x_t[k]` in feature
+/// order, on exactly-widened `f32 → f64` operands — so the SIMD tile is
+/// `to_bits`-identical to the scalar tile, which stays compiled in as
+/// the always-available fallback (non-x86_64 targets, miri, CPUs
+/// without AVX2, `--simd off`).
+pub mod simd {
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    const UNINIT: u8 = 0;
+    const ON: u8 = 1;
+    const OFF: u8 = 2;
+
+    /// Process-wide tile selection: resolved lazily from `PASMO_SIMD`
+    /// on the first [`simd_active`] call, or eagerly by
+    /// [`set_simd_mode`] (the `--simd` flag).
+    static SIMD_STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+    /// How the tile implementation is chosen
+    /// (`--simd auto|force|off` / `PASMO_SIMD`).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum SimdMode {
+        /// AVX2 tile when the running CPU supports it (the default).
+        Auto,
+        /// Require the AVX2 tile; selection reports failure on CPUs
+        /// without AVX2 (the scalar tile stays selected).
+        Force,
+        /// Always the scalar tile.
+        Off,
+    }
+
+    impl SimdMode {
+        /// Parse `auto` / `force` / `off` (ASCII case-insensitive).
+        pub fn parse(s: &str) -> Option<SimdMode> {
+            if s.eq_ignore_ascii_case("auto") {
+                Some(SimdMode::Auto)
+            } else if s.eq_ignore_ascii_case("force") {
+                Some(SimdMode::Force)
+            } else if s.eq_ignore_ascii_case("off") {
+                Some(SimdMode::Off)
+            } else {
+                None
+            }
+        }
+    }
+
+    /// True when this process *can* run the AVX2 tile: x86_64, not
+    /// under miri (vendor intrinsics are unsupported there), and the
+    /// CPU reports `avx2` at runtime.
+    pub fn simd_supported() -> bool {
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        {
+            std::arch::is_x86_64_feature_detected!("avx2")
+        }
+        #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+        {
+            false
+        }
+    }
+
+    /// Select the tile implementation for the whole process. Returns
+    /// `false` only for [`SimdMode::Force`] on hardware without AVX2;
+    /// the scalar tile stays selected in that case, so every caller
+    /// keeps producing (identical) results.
+    pub fn set_simd_mode(mode: SimdMode) -> bool {
+        let (state, ok) = match mode {
+            SimdMode::Off => (OFF, true),
+            SimdMode::Auto => (if simd_supported() { ON } else { OFF }, true),
+            SimdMode::Force => {
+                if simd_supported() {
+                    (ON, true)
+                } else {
+                    (OFF, false)
+                }
+            }
+        };
+        SIMD_STATE.store(state, Ordering::Relaxed);
+        ok
+    }
+
+    /// True when the AVX2 tile is currently selected. The first call
+    /// (unless [`set_simd_mode`] ran earlier) resolves the choice from
+    /// the `PASMO_SIMD` environment variable — `auto` when unset or
+    /// unparseable.
+    #[inline]
+    pub fn simd_active() -> bool {
+        match SIMD_STATE.load(Ordering::Relaxed) {
+            ON => true,
+            OFF => false,
+            _ => {
+                let mode = std::env::var("PASMO_SIMD")
+                    .ok()
+                    .and_then(|v| SimdMode::parse(&v))
+                    .unwrap_or(SimdMode::Auto);
+                set_simd_mode(mode);
+                SIMD_STATE.load(Ordering::Relaxed) == ON
+            }
+        }
+    }
+
+    /// The scalar reference tile: four f64 dots of `xi` against
+    /// `x0..x3`, each accumulated in feature order — exactly the
+    /// arithmetic of the historical dense tile (and of the SIMD lanes).
+    #[inline]
+    pub(crate) fn scalar_dot4(
+        xi: &[f32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> [f64; 4] {
+        let (mut d0, mut d1, mut d2, mut d3) = (0f64, 0f64, 0f64, 0f64);
+        for k in 0..xi.len() {
+            let v = xi[k] as f64;
+            d0 += v * x0[k] as f64;
+            d1 += v * x1[k] as f64;
+            d2 += v * x2[k] as f64;
+            d3 += v * x3[k] as f64;
+        }
+        [d0, d1, d2, d3]
+    }
+
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    mod avx2 {
+        use core::arch::x86_64::*;
+
+        /// The AVX2 tile: lane `t` of the accumulator register is the
+        /// output `d_t`. Per 4-feature step the four rows' coordinates
+        /// are transposed into per-feature columns and accumulated in
+        /// feature order `k, k+1, k+2, k+3`; the sub-4 feature tail is
+        /// broadcast one coordinate at a time in the same order.
+        ///
+        /// # Safety
+        ///
+        /// The caller must guarantee the running CPU supports AVX2
+        /// (`is_x86_64_feature_detected!("avx2")`). Slice lengths are
+        /// asserted before any raw load, so the pointer reads stay in
+        /// bounds.
+        #[target_feature(enable = "avx2")]
+        // SAFETY: the intrinsics below require AVX/AVX2, which the
+        // caller contract (runtime detection before dispatch) supplies;
+        // the unaligned raw-pointer loads read `k..k+4` with
+        // `k + 4 <= d`, in bounds of every slice by the assert below.
+        pub(super) unsafe fn dot4(
+            xi: &[f32],
+            x0: &[f32],
+            x1: &[f32],
+            x2: &[f32],
+            x3: &[f32],
+        ) -> [f64; 4] {
+            let d = xi.len();
+            assert!(
+                x0.len() >= d && x1.len() >= d && x2.len() >= d && x3.len() >= d,
+                "tile rows shorter than the query row"
+            );
+            let mut acc = _mm256_setzero_pd();
+            let mut k = 0usize;
+            while k + 4 <= d {
+                // Exact f32 → f64 widening of xi[k..k+4] and the four
+                // rows' [k..k+4] windows.
+                let q = _mm256_cvtps_pd(_mm_loadu_ps(xi.as_ptr().add(k)));
+                let r0 = _mm256_cvtps_pd(_mm_loadu_ps(x0.as_ptr().add(k)));
+                let r1 = _mm256_cvtps_pd(_mm_loadu_ps(x1.as_ptr().add(k)));
+                let r2 = _mm256_cvtps_pd(_mm_loadu_ps(x2.as_ptr().add(k)));
+                let r3 = _mm256_cvtps_pd(_mm_loadu_ps(x3.as_ptr().add(k)));
+                // 4×4 transpose: col_t = [x0[k+t], x1[k+t], x2[k+t], x3[k+t]].
+                let lo01 = _mm256_unpacklo_pd(r0, r1);
+                let hi01 = _mm256_unpackhi_pd(r0, r1);
+                let lo23 = _mm256_unpacklo_pd(r2, r3);
+                let hi23 = _mm256_unpackhi_pd(r2, r3);
+                let col0 = _mm256_permute2f128_pd::<0x20>(lo01, lo23);
+                let col1 = _mm256_permute2f128_pd::<0x20>(hi01, hi23);
+                let col2 = _mm256_permute2f128_pd::<0x31>(lo01, lo23);
+                let col3 = _mm256_permute2f128_pd::<0x31>(hi01, hi23);
+                // Feature-order accumulation, one rounded mul + one
+                // rounded add per term per lane — bit-for-bit the
+                // scalar recurrence. No FMA: fused rounding would
+                // change bits.
+                let q0 = _mm256_permute4x64_pd::<0x00>(q);
+                let q1 = _mm256_permute4x64_pd::<0x55>(q);
+                let q2 = _mm256_permute4x64_pd::<0xAA>(q);
+                let q3 = _mm256_permute4x64_pd::<0xFF>(q);
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(q0, col0));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(q1, col1));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(q2, col2));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(q3, col3));
+                k += 4;
+            }
+            while k < d {
+                let v = _mm256_set1_pd(xi[k] as f64);
+                // `_mm256_set_pd` takes arguments high-to-low: lane 0
+                // (output d0) receives x0[k].
+                let col = _mm256_set_pd(x3[k] as f64, x2[k] as f64, x1[k] as f64, x0[k] as f64);
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(v, col));
+                k += 1;
+            }
+            let mut out = [0f64; 4];
+            _mm256_storeu_pd(out.as_mut_ptr(), acc);
+            out
+        }
+    }
+
+    /// The tile called once [`simd_active`] returned true. On targets
+    /// where the intrinsics cannot exist (non-x86_64, miri)
+    /// [`simd_active`] is always false, so the fallback body below is
+    /// never hot — it exists to keep the dispatch monomorphic.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    #[inline]
+    pub(crate) fn active_dot4(
+        xi: &[f32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> [f64; 4] {
+        // SAFETY: callers gate on `simd_active()`, which selects the
+        // AVX2 tile only after `is_x86_64_feature_detected!("avx2")`
+        // succeeded on this CPU; slice lengths are asserted inside.
+        unsafe { avx2::dot4(xi, x0, x1, x2, x3) }
+    }
+
+    /// Non-x86_64 / miri stub: [`simd_active`] never returns true
+    /// there, so this is unreachable in practice — but panic-free and
+    /// correct if it ever runs.
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    #[inline]
+    pub(crate) fn active_dot4(
+        xi: &[f32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> [f64; 4] {
+        scalar_dot4(xi, x0, x1, x2, x3)
+    }
+
+    #[cfg(test)]
+    thread_local! {
+        /// Tiles routed to the SIMD path on this thread (tests assert
+        /// dispatch decisions through this; thread-local so parallel
+        /// tests never race on it).
+        pub(crate) static SIMD_TILES: std::cell::Cell<usize> =
+            std::cell::Cell::new(0);
+    }
+
+    /// Tests: SIMD tiles dispatched on the current thread so far.
+    #[cfg(test)]
+    pub(crate) fn simd_tiles_on_thread() -> usize {
+        SIMD_TILES.with(|c| c.get())
+    }
 }
 
 /// How many scoped workers a block of `entries` kernel entries over
@@ -127,6 +399,10 @@ fn dot_block<C: Fn(usize) -> usize, E: FnMut(usize, usize, f64)>(
         }
     };
     let d = data.dim();
+    // One dispatch decision per block: the AVX2 tile only pays off with
+    // at least one full 4-feature step, so sub-4 dims stay scalar even
+    // when SIMD is selected.
+    let use_simd = d >= 4 && simd::simd_active();
     let mut p = 0usize;
     while p + 4 <= n {
         let j0 = col(base + p);
@@ -137,14 +413,13 @@ fn dot_block<C: Fn(usize) -> usize, E: FnMut(usize, usize, f64)>(
         let x1 = data.row(j1);
         let x2 = data.row(j2);
         let x3 = data.row(j3);
-        let (mut d0, mut d1, mut d2, mut d3) = (0f64, 0f64, 0f64, 0f64);
-        for k in 0..d {
-            let v = xi[k] as f64;
-            d0 += v * x0[k] as f64;
-            d1 += v * x1[k] as f64;
-            d2 += v * x2[k] as f64;
-            d3 += v * x3[k] as f64;
-        }
+        let [d0, d1, d2, d3] = if use_simd {
+            #[cfg(test)]
+            simd::SIMD_TILES.with(|c| c.set(c.get() + 1));
+            simd::active_dot4(xi, x0, x1, x2, x3)
+        } else {
+            simd::scalar_dot4(xi, x0, x1, x2, x3)
+        };
         emit(p, j0, d0);
         emit(p + 1, j1, d1);
         emit(p + 2, j2, d2);
@@ -403,5 +678,158 @@ mod tests {
             chunk[0] = 7.0;
         });
         assert_eq!(one[0], 7.0);
+    }
+
+    /// The entire SIMD wall lives in one `#[test]` because the tile
+    /// selection is process-global: a single test serializes every mode
+    /// flip. Concurrently-running tests may observe the flips, but all
+    /// their assertions are bit-parity statements that hold under
+    /// either tile — only the dispatch-*accounting* assertions here
+    /// need the mode pinned.
+    #[test]
+    fn simd_wall_force_vs_off_parity_and_dispatch() {
+        use super::simd::{self, SimdMode};
+
+        // Mode parsing and detection consistency (every host).
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("FORCE"), Some(SimdMode::Force));
+        assert_eq!(SimdMode::parse("Off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("fast"), None);
+        assert!(simd::set_simd_mode(SimdMode::Off), "off always succeeds");
+        assert!(!simd::simd_active());
+        assert!(simd::set_simd_mode(SimdMode::Auto), "auto always succeeds");
+        assert_eq!(simd::simd_active(), simd::simd_supported());
+        assert_eq!(
+            simd::set_simd_mode(SimdMode::Force),
+            simd::simd_supported(),
+            "force succeeds exactly on AVX2 hosts"
+        );
+        assert_eq!(simd::simd_active(), simd::simd_supported());
+
+        if simd::simd_supported() {
+            let kernels = [
+                KernelFunction::Rbf { gamma: 0.7 },
+                KernelFunction::Linear,
+                KernelFunction::Poly { gamma: 0.4, coef0: 1.0, degree: 3 },
+                KernelFunction::Sigmoid { gamma: 0.2, coef0: -0.5 },
+            ];
+            // n covers remainder lanes 1–3 and sub-4 blocks; d covers
+            // sub-4 dims (scalar even under force) and 4k+r tails.
+            for &n in &[1usize, 2, 3, 4, 5, 7, 8, 37] {
+                for &d in &[1usize, 2, 3, 4, 5, 7, 8, 13] {
+                    let ds = random_ds(n, d, (n * 31 + d) as u64);
+                    let sq = squared_norms(&ds);
+                    let xi: Vec<f32> = ds.row(n / 2).to_vec();
+                    for k in kernels {
+                        simd::set_simd_mode(SimdMode::Off);
+                        let mut want = vec![0f64; n];
+                        kernel_block(k, Row::Dense(&xi), sq[n / 2], &sq, &ds, &|p| p, 0, n, |p, v| {
+                            want[p] = v
+                        });
+                        simd::set_simd_mode(SimdMode::Force);
+                        let before = simd::simd_tiles_on_thread();
+                        let mut got = vec![0f64; n];
+                        kernel_block(k, Row::Dense(&xi), sq[n / 2], &sq, &ds, &|p| p, 0, n, |p, v| {
+                            got[p] = v
+                        });
+                        let tiles = simd::simd_tiles_on_thread() - before;
+                        for p in 0..n {
+                            assert_eq!(
+                                got[p].to_bits(),
+                                want[p].to_bits(),
+                                "{k:?} n={n} d={d} p={p}: {} vs {}",
+                                got[p],
+                                want[p]
+                            );
+                        }
+                        assert_eq!(
+                            tiles,
+                            if d >= 4 { n / 4 } else { 0 },
+                            "{k:?} n={n} d={d}: wrong tile dispatch count"
+                        );
+                    }
+                }
+            }
+
+            // CSR pairings keep the merged-dot fallback even under force.
+            simd::set_simd_mode(SimdMode::Force);
+            let dense = random_ds(23, 9, 5);
+            let sparse = dense.to_sparse();
+            let sq_s = squared_norms(&sparse);
+            let before = simd::simd_tiles_on_thread();
+            let mut out = vec![0f32; 23];
+            kernel_block_f32(
+                KernelFunction::Rbf { gamma: 0.6 },
+                sparse.row_ref(2),
+                sq_s[2],
+                &sq_s,
+                &sparse,
+                &|p| p,
+                0,
+                &mut out,
+            );
+            let mut out2 = vec![0f32; 23];
+            kernel_block_f32(
+                KernelFunction::Linear,
+                Row::Dense(&dense.row(2).to_vec()),
+                sq_s[2],
+                &sq_s,
+                &sparse,
+                &|p| p,
+                0,
+                &mut out2,
+            );
+            assert_eq!(
+                simd::simd_tiles_on_thread(),
+                before,
+                "CSR pairings must not take the SIMD tile"
+            );
+
+            // Threaded chunked composition under force is bit-identical
+            // to the inline scalar tile.
+            let ds = random_ds(257, 16, 6);
+            let sq = squared_norms(&ds);
+            let xi: Vec<f32> = ds.row(0).to_vec();
+            let k = KernelFunction::Rbf { gamma: 0.5 };
+            simd::set_simd_mode(SimdMode::Off);
+            let mut inline = vec![0f32; 257];
+            kernel_block_f32(k, Row::Dense(&xi), sq[0], &sq, &ds, &|p| p, 0, &mut inline);
+            simd::set_simd_mode(SimdMode::Force);
+            for workers in [2usize, 3, 8] {
+                let mut par = vec![0f32; 257];
+                chunked(workers, &mut par, |base, chunk| {
+                    kernel_block_f32(k, Row::Dense(&xi), sq[0], &sq, &ds, &|p| p, base, chunk);
+                });
+                assert!(
+                    inline.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "workers={workers}: SIMD chunked diverges from scalar inline"
+                );
+            }
+
+            // A full Gram row through the native computer, both modes.
+            use crate::kernel::matrix::RowComputer;
+            let ds = std::sync::Arc::new(random_ds(130, 24, 7));
+            let nat = crate::kernel::NativeRowComputer::new(
+                ds.clone(),
+                KernelFunction::Rbf { gamma: 0.3 },
+            );
+            simd::set_simd_mode(SimdMode::Off);
+            let mut off_row = vec![0f32; 130];
+            nat.compute_row(17, &mut off_row);
+            simd::set_simd_mode(SimdMode::Force);
+            let mut on_row = vec![0f32; 130];
+            nat.compute_row(17, &mut on_row);
+            assert!(
+                off_row.iter().zip(&on_row).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "native Gram row diverges between tiles"
+            );
+        }
+
+        // Restore the ambient mode for concurrently-running tests.
+        let ambient = std::env::var("PASMO_SIMD")
+            .ok()
+            .and_then(|v| SimdMode::parse(&v))
+            .unwrap_or(SimdMode::Auto);
+        simd::set_simd_mode(ambient);
     }
 }

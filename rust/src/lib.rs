@@ -68,6 +68,8 @@
 
 /// `pasmo audit`: the repo's own source-tree lint (offline, no deps).
 pub mod audit;
+/// Persistent bench baselines: `BENCH_baseline.json` and the CI perf gate.
+pub mod bench;
 /// Experiment drivers and the permutation fan-out (paper §7 protocol).
 pub mod coordinator;
 /// Datasets: dense storage, LIBSVM IO, splits, the synthetic suite.

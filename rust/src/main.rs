@@ -63,6 +63,19 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    // Global `--simd auto|force|off` (same values as `PASMO_SIMD`):
+    // pick the kernel-tile implementation once, before any subcommand
+    // touches the dispatch. `force` on a CPU without AVX2 is a hard
+    // error rather than a silent scalar fallback.
+    if let Some(spec) = args.get("simd") {
+        use pasmo::kernel::tile::simd::{self, SimdMode};
+        let mode = SimdMode::parse(spec)
+            .with_context(|| format!("--simd {spec:?}: expected auto, force, or off"))?;
+        ensure!(
+            simd::set_simd_mode(mode),
+            "--simd force: this CPU does not support the AVX2 tile (use auto or off)"
+        );
+    }
     match args.command() {
         Some("datasets") => cmd_datasets(),
         Some("train") => cmd_train(args),
@@ -207,7 +220,19 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --max-queue N         admission queue bound (default 0 = unbounded);\n\
                                      shed queries are counted per config\n\
                --deadline-us U       per-query deadline in µs (default 0 = none);\n\
-                                     expired queries are counted per config"
+                                     expired queries are counted per config\n\n\
+             baseline mode (the CI perf gate — DESIGN.md §4g):\n\
+               --save-baseline       measure the tiny fixed train+predict workload\n\
+                                     (medians of 5 reps) and record it into the\n\
+                                     checksummed baseline artifact\n\
+               --check-baseline      re-measure and fail (exit nonzero) when any\n\
+                                     committed metric regresses beyond its noise\n\
+                                     tolerance — tight for deterministic counters,\n\
+                                     loose for wall-clock; a missing or empty\n\
+                                     baseline bootstraps (measures, saves, passes)\n\
+               --baseline FILE       the baseline artifact (default\n\
+                                     BENCH_baseline.json; --len/--seed size the\n\
+                                     workload in both modes)"
         ),
         "serve" => "usage: pasmo serve --model FILE[,NAME=FILE...] [options]\n\n\
              Persistent micro-batching inference tier: a std-only TCP server\n\
@@ -226,7 +251,13 @@ fn subcommand_help(cmd: &str) -> Option<String> {
                --max-batch N         micro-batch admission cap (default 64)\n\
                --max-wait-us U       admission window in µs after a batch's\n\
                                      first query arrives (default 200)\n\
-               --threads N           scoring worker threads per batch pass\n\n\
+               --threads N           scoring worker threads per batch pass\n\
+               --f32-sv              opt into the packed-f32 SV fast path: each\n\
+                                     loaded machine is accuracy-gated at load time\n\
+                                     (worst decision delta over its own SVs vs the\n\
+                                     exact f64 tile) and scores through packed f32\n\
+                                     only where it passes; dense×dense only, exact\n\
+                                     path everywhere else\n\n\
              overload handling (see DESIGN.md §4e):\n\
                --max-queue N         admission queue bound (default 1024; 0 = unbounded).\n\
                                      Queries arriving at a full queue get an explicit\n\
@@ -321,10 +352,13 @@ fn print_usage() {
                       benchmarks batch scoring into BENCH_predict.json;\n\
                       --serve saturates the serving tier open-loop\n\
                       ([--rate R --queries N --conns N --batches a,b,c])\n\
-                      into BENCH_serve.json\n\
+                      into BENCH_serve.json; --save-baseline /\n\
+                      --check-baseline [--baseline FILE] run the persistent\n\
+                      perf gate against BENCH_baseline.json\n\
            serve      --model FILE[,NAME=FILE...] [--addr HOST:PORT]\n\
                       [--max-batch N] [--max-wait-us U] [--threads N]\n\
                       [--max-queue N] [--deadline-us U] [--max-conns N]\n\
+                      [--f32-sv] (accuracy-gated packed-f32 fast path)\n\
                       micro-batching TCP inference tier (newline-delimited\n\
                       JSON; responses bit-match offline predict; bounded\n\
                       admission sheds overload explicitly)\n\
@@ -336,6 +370,13 @@ fn print_usage() {
                       the repo's own source lint (panic-free library paths,\n\
                       SAFETY comments, float comparisons, thread scope)\n\
            info                              environment / artifact status\n\
+         \n\
+         global:\n\
+           --simd auto|force|off             kernel-tile implementation: auto\n\
+                      (AVX2 when the CPU has it — the default), force (error\n\
+                      if unsupported), off (scalar tile). Same values as the\n\
+                      PASMO_SIMD environment variable; SIMD and scalar tiles\n\
+                      are bit-identical (DESIGN.md §4g)\n\
          \n\
          `pasmo <command> --help` (or `pasmo help <command>`) prints the\n\
          complete flag reference for one command."
@@ -811,6 +852,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use pasmo::util::json::Json;
     use std::collections::BTreeMap;
 
+    if args.flag("save-baseline") || args.flag("check-baseline") {
+        return cmd_bench_baseline(args);
+    }
     if args.flag("sparse") {
         return cmd_bench_sparse(args);
     }
@@ -1170,6 +1214,131 @@ fn cmd_bench_sparse(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Measure the fixed tiny baseline workload: train the chessboard suite
+/// entry REPS times, then score a same-sized query set with the trained
+/// model. Medians of an odd repetition count keep deterministic
+/// counters exact and absorb scheduler spikes on the wall metrics.
+fn measure_baseline(len: usize, seed: u64) -> Result<pasmo::bench::Baseline> {
+    use pasmo::bench::{median, Baseline, Direction, TOL_COUNTER, TOL_WALL};
+    use pasmo::svm::Scorer;
+    use pasmo::util::timer::{black_box, Stopwatch};
+
+    const REPS: usize = 5;
+    let spec = suite::find("chess-board-1000")
+        .context("bench baseline: suite dataset chess-board-1000")?;
+    let ds = Arc::new(spec.generate(len, seed));
+    let queries = spec.generate(len, seed.wrapping_add(1));
+
+    let mut train_wall = Vec::with_capacity(REPS);
+    let mut train_iters = Vec::with_capacity(REPS);
+    let mut train_entries = Vec::with_capacity(REPS);
+    let mut model = None;
+    for _ in 0..REPS {
+        let out = Trainer::rbf(spec.c, spec.gamma).train(&ds);
+        train_wall.push(out.result.wall_time_s);
+        train_iters.push(out.result.iterations as f64);
+        train_entries.push(out.result.kernel_entries as f64);
+        model = Some(out.model);
+    }
+    let model = model.context("bench baseline: training produced no model")?;
+
+    let scorer = Scorer::new(model.kernel, &model.support, &model.coef, model.bias);
+    let pred_entries = scorer.kernel_entries_per_pass(queries.len()) as f64;
+    let mut pred_rate = Vec::with_capacity(REPS);
+    for _ in 0..REPS {
+        let sw = Stopwatch::start();
+        let vals = scorer.decision_values(&queries);
+        let secs = sw.secs().max(1e-9);
+        black_box(&vals);
+        pred_rate.push(queries.len() as f64 / secs);
+    }
+
+    let mut b = Baseline::new();
+    b.set("train.chess.wall_s", median(&mut train_wall), Direction::Lower, TOL_WALL);
+    b.set("train.chess.iterations", median(&mut train_iters), Direction::Lower, TOL_COUNTER);
+    b.set(
+        "train.chess.kernel_entries",
+        median(&mut train_entries),
+        Direction::Lower,
+        TOL_COUNTER,
+    );
+    b.set("predict.chess.rows_per_s", median(&mut pred_rate), Direction::Higher, TOL_WALL);
+    b.set("predict.chess.kernel_entries", pred_entries, Direction::Lower, TOL_COUNTER);
+    Ok(b)
+}
+
+/// The perf-trajectory gate (`pasmo bench --save-baseline` /
+/// `--check-baseline`): measure the tiny fixed workload, then either
+/// record the medians into the checksummed `--baseline FILE` artifact
+/// or compare against it and exit nonzero on any regression beyond
+/// tolerance (or any committed metric this run failed to measure). A
+/// missing or empty committed baseline bootstraps: the check measures,
+/// saves, and passes, so the gate self-initializes on a new host class
+/// instead of comparing against another machine's clock.
+fn cmd_bench_baseline(args: &Args) -> Result<()> {
+    use pasmo::bench::{self, Baseline};
+
+    let path_s = args.get_or("baseline", "BENCH_baseline.json");
+    let path = Path::new(&path_s);
+    let len = args.get_parse_or("len", 240usize);
+    let seed = args.get_parse_or("seed", 42u64);
+    let simd_on = pasmo::kernel::tile::simd::simd_active();
+
+    println!("==== pasmo bench (baseline gate) ====");
+    println!(
+        "file={path_s} ℓ={len} seed={seed} simd={}\n",
+        if simd_on { "on" } else { "off" }
+    );
+    let current = measure_baseline(len, seed)?;
+    for (name, m) in &current.metrics {
+        println!("  {name:<28} {:>16.6}  ({} is better)", m.value, m.direction.as_str());
+    }
+
+    if args.flag("save-baseline") {
+        current.save(path).with_context(|| format!("write baseline {path_s}"))?;
+        println!("\nbaseline saved to {path_s} ({} metrics)", current.metrics.len());
+        return Ok(());
+    }
+
+    // --check-baseline
+    let committed = if path.exists() { Baseline::load(path)? } else { Baseline::new() };
+    if committed.is_empty() {
+        current.save(path).with_context(|| format!("write baseline {path_s}"))?;
+        println!(
+            "\nbaseline was empty — bootstrapped {path_s} ({} metrics); \
+             future checks gate against this run",
+            current.metrics.len()
+        );
+        return Ok(());
+    }
+    let report = bench::check(&committed, &current, &path_s);
+    println!();
+    for line in &report.new_metrics {
+        println!("note: {line}");
+    }
+    for line in &report.improvements {
+        println!("improved: {line}");
+    }
+    for line in &report.missing {
+        eprintln!("missing: {line}");
+    }
+    for line in &report.regressions {
+        eprintln!("regression: {line}");
+    }
+    ensure!(
+        report.ok(),
+        "bench baseline gate failed: {} regression(s), {} missing metric(s) against {}",
+        report.regressions.len(),
+        report.missing.len(),
+        path_s
+    );
+    println!(
+        "baseline gate passed: {} committed metrics within tolerance of {path_s}",
+        committed.metrics.len()
+    );
+    Ok(())
+}
+
 /// Parse a `--model` spec: comma-separated `FILE` or `NAME=FILE`
 /// entries; the name defaults to the file stem.
 fn parse_model_specs(spec: &str) -> Result<Vec<(String, AnyModel)>> {
@@ -1220,11 +1389,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args.get_parse_or("max-queue", 1024usize),
         deadline_us: args.get_parse_or("deadline-us", 0u64),
         max_conns: args.get_parse_or("max-conns", 0usize),
+        f32_sv: args.flag("f32-sv"),
     };
     let (max_batch, max_wait_us, threads) =
         (config.max_batch, config.max_wait_us, config.threads);
     let (max_queue, deadline_us, max_conns) =
         (config.max_queue, config.deadline_us, config.max_conns);
+    let f32_sv = config.f32_sv;
     for (name, m) in &models {
         println!(
             "model {name:?}: kind={} n_sv={} dim={}",
@@ -1237,7 +1408,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "pasmo serve listening on {} (max-batch={max_batch} max-wait-us={max_wait_us} \
          threads={threads} max-queue={max_queue} deadline-us={deadline_us} \
-         max-conns={max_conns})",
+         max-conns={max_conns} f32-sv={f32_sv})",
         server.local_addr()
     );
     std::io::stdout().flush().context("flush startup banner")?;

@@ -268,7 +268,8 @@ fn score_group(
                 m.bias,
                 &entry.invariants[0],
             )
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_f32_sv(entry.f32_sv(0));
             let entries = scorer.kernel_entries_per_pass(n);
             let out = scorer.decision_scratch(scratch);
             for (k, &i) in idxs.iter().enumerate() {
@@ -291,7 +292,8 @@ fn score_group(
                 m.bias,
                 &entry.invariants[0],
             )
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_f32_sv(entry.f32_sv(0));
             let entries = scorer.kernel_entries_per_pass(n);
             let out = scorer.decision_scratch(scratch);
             for (k, &i) in idxs.iter().enumerate() {
@@ -309,7 +311,8 @@ fn score_group(
                 -m.rho,
                 &entry.invariants[0],
             )
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_f32_sv(entry.f32_sv(0));
             let entries = scorer.kernel_entries_per_pass(n);
             let out = scorer.decision_scratch(scratch);
             for (k, &i) in idxs.iter().enumerate() {
@@ -336,7 +339,8 @@ fn score_group(
                     mach.bias,
                     &entry.invariants[j],
                 )
-                .with_threads(threads);
+                .with_threads(threads)
+                .with_f32_sv(entry.f32_sv(j));
                 entries += scorer.kernel_entries_per_pass(n);
                 let out = scorer.decision_scratch(scratch);
                 machine_out[j * n..(j + 1) * n].copy_from_slice(out);

@@ -87,6 +87,11 @@ pub struct ServeConfig {
     /// connection over the cap gets one polite error line and is
     /// closed; established connections are unaffected.
     pub max_conns: usize,
+    /// Request the packed-f32 SV fast path (`--f32-sv`): every machine
+    /// loaded into the registry runs the accuracy gate at load time and
+    /// scores through packed f32 only where it passes (see
+    /// `server::registry::F32_SV_TOL_SCALE`).
+    pub f32_sv: bool,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +104,7 @@ impl Default for ServeConfig {
             max_queue: 1024,
             deadline_us: 0,
             max_conns: 0,
+            f32_sv: false,
         }
     }
 }
@@ -133,7 +139,7 @@ impl Server {
             .with_context(|| format!("bind {}", config.addr))?;
         let local_addr = listener.local_addr().context("listener local_addr")?;
         let state = Arc::new(ServerState {
-            registry: Registry::new(models),
+            registry: Registry::new_with(models, config.f32_sv),
             queue: BatchQueue::new(config.max_queue),
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),

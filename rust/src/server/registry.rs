@@ -8,15 +8,38 @@
 //! request captures its entry at admission, so a concurrent hot-swap
 //! (`{"cmd":"load"}`) never changes which model generation scores an
 //! already-admitted query.
+//!
+//! Two load-time optimizations live here rather than in the scorer:
+//!
+//! - **Invariant reuse on bit-identical hot-swap.** Reloading a model
+//!   file that expands to the same machines (kernel parameters, support
+//!   storage, and coefficients all bit-equal) shares the previous
+//!   generation's invariants through an `Arc` instead of recomputing
+//!   `O(n_sv * d)` squared norms per machine. Observable through
+//!   [`ModelEntry::reused_invariants`]; quarantined generations never
+//!   donate.
+//! - **The packed-f32 admission gate.** When the registry is built with
+//!   the fast path requested ([`Registry::new_with`], `pasmo serve
+//!   --f32-sv`), each machine is scored over its own support set both
+//!   ways at load time and the `Scorer::with_f32_sv` path is enabled
+//!   only where the worst decision delta stays under
+//!   [`F32_SV_TOL_SCALE`] of the expansion's natural scale.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::data::dataset::Dataset;
+use crate::kernel::function::KernelFunction;
 use crate::svm::schema::{load_any, AnyModel};
-use crate::svm::scorer::SupportInvariants;
+use crate::svm::scorer::{Scorer, SupportInvariants};
 use crate::util::error::Result;
+
+/// Relative accuracy budget for the packed-f32 admission gate: the
+/// worst decision delta over the machine's own support set must stay
+/// below this fraction of `1 + |offset| + sum |coef_i|`.
+pub const F32_SV_TOL_SCALE: f64 = 1e-4;
 
 /// A registered model plus the support-side invariants its scorers
 /// borrow.
@@ -28,8 +51,16 @@ pub struct ModelEntry {
     pub model: AnyModel,
     /// Precomputed support invariants, one per underlying machine:
     /// a single entry for svc/svr/oneclass, one per pairwise machine
-    /// (aligned with `OvoModel::machines`) for multiclass.
-    pub invariants: Vec<SupportInvariants>,
+    /// (aligned with `OvoModel::machines`) for multiclass. Behind an
+    /// `Arc` so a bit-identical hot-swap shares rather than recomputes
+    /// them.
+    pub invariants: Arc<Vec<SupportInvariants>>,
+    /// Per-machine packed-f32 verdicts (aligned with `invariants`);
+    /// all-false unless the registry requested the fast path.
+    f32_flags: Vec<bool>,
+    /// Did this generation inherit its invariants from the entry it
+    /// replaced?
+    reused: bool,
     /// Health flag: cleared when a scoring pass over this entry
     /// panics. Unhealthy entries are refused by [`Registry::resolve`]
     /// until the name is reloaded (a reload installs a fresh, healthy
@@ -37,26 +68,130 @@ pub struct ModelEntry {
     healthy: AtomicBool,
 }
 
+/// Flatten a model into its scoring machines: `(kernel, support, coef,
+/// offset)` per machine, aligned with the entry's invariants.
+fn machine_expansions(model: &AnyModel) -> Vec<(KernelFunction, &Dataset, &[f64], f64)> {
+    match model {
+        AnyModel::Svc(m) => vec![(m.kernel, &m.support, &m.coef[..], m.bias)],
+        AnyModel::Svr(m) => vec![(m.kernel, &m.support, &m.coef[..], m.bias)],
+        AnyModel::OneClass(m) => vec![(m.kernel, &m.support, &m.coef[..], -m.rho)],
+        AnyModel::Multiclass(m) => m
+            .machines
+            .iter()
+            .map(|b| (b.kernel, &b.support, &b.coef[..], b.bias))
+            .collect(),
+    }
+}
+
+/// Bit-level kernel equality: every parameter compared through
+/// `to_bits`, so NaN parameters never alias a reuse.
+fn same_kernel(a: KernelFunction, b: KernelFunction) -> bool {
+    use KernelFunction::{Linear, Poly, Rbf, Sigmoid};
+    match (a, b) {
+        (Linear, Linear) => true,
+        (Rbf { gamma: ga }, Rbf { gamma: gb }) => ga.to_bits() == gb.to_bits(),
+        (
+            Poly { gamma: ga, coef0: ca, degree: da },
+            Poly { gamma: gb, coef0: cb, degree: db },
+        ) => ga.to_bits() == gb.to_bits() && ca.to_bits() == cb.to_bits() && da == db,
+        (Sigmoid { gamma: ga, coef0: ca }, Sigmoid { gamma: gb, coef0: cb }) => {
+            ga.to_bits() == gb.to_bits() && ca.to_bits() == cb.to_bits()
+        }
+        _ => false,
+    }
+}
+
+/// Is `b` the same expansion as `a` for invariant purposes? The offset
+/// is deliberately ignored — it never enters `SupportInvariants`. The
+/// storage comparison requires the same backend (a dense reload of a
+/// sparse model recomputes — conservative, never wrong).
+fn same_expansion(
+    a: &(KernelFunction, &Dataset, &[f64], f64),
+    b: &(KernelFunction, &Dataset, &[f64], f64),
+) -> bool {
+    same_kernel(a.0, b.0)
+        && a.2.len() == b.2.len()
+        && a.2.iter().zip(b.2.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.1.storage() == b.1.storage()
+}
+
+/// Admission gate for the packed-f32 SV fast path: score the machine's
+/// own support set through both tiles and require the worst decision
+/// delta to stay within [`F32_SV_TOL_SCALE`] of the expansion's natural
+/// scale.
+fn f32_gate(kernel: KernelFunction, support: &Dataset, coef: &[f64], offset: f64) -> bool {
+    let mass: f64 = coef.iter().map(|c| c.abs()).sum();
+    let delta = Scorer::new(kernel, support, coef, offset).f32_sv_max_delta();
+    delta <= F32_SV_TOL_SCALE * (1.0 + offset.abs() + mass)
+}
+
 impl ModelEntry {
-    /// Wrap a model, precomputing the scoring invariants once.
+    /// Wrap a model, precomputing the scoring invariants once. The
+    /// packed-f32 fast path stays off; registries request it through
+    /// [`Registry::new_with`].
     pub fn new(name: String, model: AnyModel) -> ModelEntry {
-        let invariants = match &model {
-            AnyModel::Svc(m) => {
-                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+        ModelEntry::build(name, model, false, None)
+    }
+
+    /// Build an entry, reusing `prev`'s invariants when the new model
+    /// expands bit-identically, and running the packed-f32 admission
+    /// gate per machine when `f32_sv` is requested.
+    fn build(name: String, model: AnyModel, f32_sv: bool, prev: Option<&ModelEntry>) -> ModelEntry {
+        let reuse = prev.filter(|p| {
+            p.is_healthy() && {
+                let pm = machine_expansions(&p.model);
+                let nm = machine_expansions(&model);
+                pm.len() == nm.len() && pm.iter().zip(&nm).all(|(a, b)| same_expansion(a, b))
             }
-            AnyModel::Svr(m) => {
-                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+        });
+        match reuse {
+            Some(p) => {
+                let invariants = Arc::clone(&p.invariants);
+                let f32_flags = p.f32_flags.clone();
+                ModelEntry {
+                    name,
+                    model,
+                    invariants,
+                    f32_flags,
+                    reused: true,
+                    healthy: AtomicBool::new(true),
+                }
             }
-            AnyModel::OneClass(m) => {
-                vec![SupportInvariants::compute(m.kernel, &m.support, &m.coef)]
+            None => {
+                let machines = machine_expansions(&model);
+                let invariants: Vec<SupportInvariants> = machines
+                    .iter()
+                    .map(|(k, s, c, _)| SupportInvariants::compute(*k, s, c))
+                    .collect();
+                let f32_flags: Vec<bool> = if f32_sv {
+                    machines.iter().map(|(k, s, c, o)| f32_gate(*k, s, c, *o)).collect()
+                } else {
+                    vec![false; machines.len()]
+                };
+                drop(machines);
+                ModelEntry {
+                    name,
+                    model,
+                    invariants: Arc::new(invariants),
+                    f32_flags,
+                    reused: false,
+                    healthy: AtomicBool::new(true),
+                }
             }
-            AnyModel::Multiclass(m) => m
-                .machines
-                .iter()
-                .map(|b| SupportInvariants::compute(b.kernel, &b.support, &b.coef))
-                .collect(),
-        };
-        ModelEntry { name, model, invariants, healthy: AtomicBool::new(true) }
+        }
+    }
+
+    /// Did this generation inherit the previous generation's invariants
+    /// because the hot-swap installed a bit-identical expansion?
+    pub fn reused_invariants(&self) -> bool {
+        self.reused
+    }
+
+    /// Whether machine `j` passed the packed-f32 admission gate (always
+    /// `false` unless the registry requested the fast path, or for
+    /// out-of-range `j`).
+    pub fn f32_sv(&self, j: usize) -> bool {
+        self.f32_flags.get(j).copied().unwrap_or(false)
     }
 
     /// Is this entry still serving? (Cleared by [`ModelEntry::quarantine`].)
@@ -78,16 +213,26 @@ impl ModelEntry {
 #[derive(Debug)]
 pub struct Registry {
     models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    f32_sv: bool,
 }
 
 impl Registry {
-    /// Build a registry preloaded with `(name, model)` pairs.
+    /// Build a registry preloaded with `(name, model)` pairs. The
+    /// packed-f32 fast path stays off; see [`Registry::new_with`].
     pub fn new(initial: Vec<(String, AnyModel)>) -> Registry {
-        let mut map = BTreeMap::new();
+        Registry::new_with(initial, false)
+    }
+
+    /// Build a registry, optionally requesting the packed-f32 SV fast
+    /// path: every machine loaded into this registry (now or via
+    /// hot-swap) is then run through the accuracy gate and scores with
+    /// `Scorer::with_f32_sv` only where it passes.
+    pub fn new_with(initial: Vec<(String, AnyModel)>, f32_sv: bool) -> Registry {
+        let reg = Registry { models: RwLock::new(BTreeMap::new()), f32_sv };
         for (name, model) in initial {
-            map.insert(name.clone(), Arc::new(ModelEntry::new(name, model)));
+            reg.insert(&name, model);
         }
-        Registry { models: RwLock::new(map) }
+        reg
     }
 
     /// Look up a model by name.
@@ -128,9 +273,16 @@ impl Registry {
 
     /// Register (or hot-swap) `model` under `name`. Queries admitted
     /// against the old generation still score against it; new requests
-    /// resolve to the replacement.
+    /// resolve to the replacement. A bit-identical swap shares the old
+    /// generation's invariants ([`ModelEntry::reused_invariants`]).
     pub fn insert(&self, name: &str, model: AnyModel) -> Arc<ModelEntry> {
-        let entry = Arc::new(ModelEntry::new(name.to_string(), model));
+        let prev = self.get(name);
+        let entry = Arc::new(ModelEntry::build(
+            name.to_string(),
+            model,
+            self.f32_sv,
+            prev.as_deref(),
+        ));
         let mut map = self.models.write().unwrap_or_else(|p| p.into_inner());
         map.insert(name.to_string(), Arc::clone(&entry));
         entry
@@ -212,6 +364,74 @@ mod tests {
         // a hot-swap installs a fresh, healthy generation
         reg.insert("m", tiny_model());
         assert!(reg.resolve(Some("m")).is_ok());
+    }
+
+    #[test]
+    fn bit_identical_hot_swap_reuses_invariants() {
+        let reg = Registry::new(vec![("m".to_string(), tiny_model())]);
+        let first = reg.resolve(Some("m")).unwrap();
+        assert!(!first.reused_invariants(), "a cold load computes its own invariants");
+
+        // training is deterministic, so a second tiny_model() expands
+        // bit-identically and the swap shares the invariant Arc
+        let again = reg.insert("m", tiny_model());
+        assert!(again.reused_invariants());
+        assert!(Arc::ptr_eq(&first.invariants, &again.invariants));
+
+        // a genuinely different expansion must recompute
+        let data = std::sync::Arc::new(chessboard(60, 4, 7));
+        let other = AnyModel::Svc(Trainer::rbf(10.0, 0.5).train(&data).model);
+        let fresh = reg.insert("m", other);
+        assert!(!fresh.reused_invariants());
+        assert!(!Arc::ptr_eq(&again.invariants, &fresh.invariants));
+
+        // quarantined generations never donate invariants
+        let held = reg.insert("m", tiny_model());
+        held.quarantine();
+        let after = reg.insert("m", tiny_model());
+        assert!(!after.reused_invariants());
+    }
+
+    #[test]
+    fn invariant_reuse_is_kernel_entries_neutral() {
+        use crate::svm::scorer::Scorer;
+        let reg = Registry::new(vec![("m".to_string(), tiny_model())]);
+        let cold = reg.resolve(Some("m")).unwrap();
+        let warm = reg.insert("m", tiny_model());
+        assert!(warm.reused_invariants());
+        let queries = chessboard(40, 4, 2);
+        let (AnyModel::Svc(a), AnyModel::Svc(b)) = (&cold.model, &warm.model) else {
+            panic!("tiny_model trains an svc");
+        };
+        let sa =
+            Scorer::with_invariants(a.kernel, &a.support, &a.coef, a.bias, &cold.invariants[0]);
+        let sb =
+            Scorer::with_invariants(b.kernel, &b.support, &b.coef, b.bias, &warm.invariants[0]);
+        assert_eq!(
+            sa.kernel_entries_per_pass(queries.len()),
+            sb.kernel_entries_per_pass(queries.len()),
+            "reuse must not change how much kernel work a pass does"
+        );
+        let va = sa.decision_values(&queries);
+        let vb = sb.decision_values(&queries);
+        for (x, y) in va.iter().zip(&vb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_gate_enables_the_fast_path_only_when_requested() {
+        let reg = Registry::new_with(vec![("m".to_string(), tiny_model())], true);
+        let entry = reg.resolve(Some("m")).unwrap();
+        assert!(entry.f32_sv(0), "the tiny RBF model passes the accuracy gate");
+        assert!(!entry.f32_sv(7), "out-of-range machines read false");
+
+        let off = Registry::new(vec![("m".to_string(), tiny_model())]);
+        assert!(!off.resolve(Some("m")).unwrap().f32_sv(0));
+
+        // the verdict survives a reusing hot-swap
+        let again = reg.insert("m", tiny_model());
+        assert!(again.reused_invariants() && again.f32_sv(0));
     }
 
     #[test]

@@ -28,6 +28,19 @@
 //! path), which differs from the direct `exp(−γ‖a−b‖²)` evaluation only
 //! in the last floating-point bits; the dot-product kernels
 //! (linear/poly/sigmoid) are bit-identical to [`KernelFunction::eval`].
+//!
+//! ## Opt-in packed-f32 fast path
+//!
+//! [`Scorer::with_f32_sv`] switches the SV×query dot products from the
+//! f64 accumulator to a deterministic eight-lane f32 accumulation
+//! (features are stored as f32 anyway, so the operands are exact; only
+//! the accumulation precision drops). This is an *approximate* path —
+//! decisions can differ from the f64 tile in the low bits — so it is
+//! opt-in and meant to be gated by [`Scorer::f32_sv_max_delta`], which
+//! measures the worst decision-value disagreement over the model's own
+//! support vectors. Dense support × dense query only: any CSR side
+//! keeps the exact f64 merged dot, and the linear primal collapse
+//! (already O(d) with zero kernel entries) always wins over the flag.
 
 use std::borrow::Cow;
 
@@ -96,6 +109,34 @@ pub struct Scorer<'m> {
     /// Collapsed primal weights for the linear kernel (None = expansion).
     w: Option<Cow<'m, [f64]>>,
     threads: usize,
+    /// Opt-in packed-f32 dot accumulation (dense×dense pairs only; see
+    /// the module docs). Off by default — the exact f64 tile.
+    f32_sv: bool,
+}
+
+/// Deterministic packed-f32 dot: eight fixed strided accumulators over
+/// `chunks_exact(8)`, a fixed tree reduction, then the scalar tail.
+/// No reassociation is left to the compiler — the result is identical
+/// at every optimization level — while the fixed 8-lane stride maps
+/// directly onto 8-wide f32 SIMD, which is where the ~2× width win
+/// over the 4-wide f64 tile comes from.
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += xa * xb;
+    }
+    (((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))) + tail
 }
 
 /// Collapsed primal weights `w = Σ_s coef_s · x_s` for the linear
@@ -180,6 +221,7 @@ impl<'m> Scorer<'m> {
             sv_sqnorms: Cow::Owned(sv_sqnorms),
             w: None,
             threads: 1,
+            f32_sv: false,
         };
         s = s.collapse_linear(true);
         s
@@ -218,6 +260,7 @@ impl<'m> Scorer<'m> {
             sv_sqnorms: Cow::Borrowed(&inv.sv_sqnorms),
             w: inv.w.as_deref().map(Cow::Borrowed),
             threads: 1,
+            f32_sv: false,
         }
     }
 
@@ -241,6 +284,43 @@ impl<'m> Scorer<'m> {
             _ => None,
         };
         self
+    }
+
+    /// Opt into (or out of) the packed-f32 SV dot accumulation for
+    /// dense×dense pairs (module docs). Approximate — gate it with
+    /// [`Scorer::f32_sv_max_delta`] before serving traffic through it.
+    /// CSR pairings keep the exact f64 merged dot, and the linear
+    /// primal collapse always wins over this flag.
+    pub fn with_f32_sv(mut self, on: bool) -> Scorer<'m> {
+        self.f32_sv = on;
+        self
+    }
+
+    /// Is the packed-f32 fast path enabled?
+    pub fn is_f32_sv(&self) -> bool {
+        self.f32_sv
+    }
+
+    /// The accuracy-delta gate for the packed-f32 path: score the
+    /// model's **own support vectors** through the exact f64 tile and
+    /// through the f32 path, and return the worst absolute
+    /// decision-value disagreement. The support set brackets the data
+    /// distribution the model was trained on, so this is a cheap,
+    /// deterministic proxy for the expansion's sensitivity to the
+    /// reduced accumulator — callers compare it against a tolerance
+    /// scaled to their decision margins before enabling the path.
+    /// Returns 0.0 for collapsed or empty expansions.
+    pub fn f32_sv_max_delta(&self) -> f64 {
+        if self.is_collapsed() || self.n_sv() == 0 {
+            return 0.0;
+        }
+        let exact = self.clone().with_f32_sv(false).decision_values(self.support);
+        let fast = self.clone().with_f32_sv(true).decision_values(self.support);
+        exact
+            .iter()
+            .zip(&fast)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
     }
 
     /// The kernel this scorer evaluates.
@@ -365,12 +445,36 @@ impl<'m> Scorer<'m> {
         }
         let n_sv = self.coef.len();
         let rbf = matches!(self.kernel, KernelFunction::Rbf { .. });
+        // Multi-block passes revisit every query once per SV block, so
+        // hoist the query norms to one computation per chunk. The
+        // single-block case — the serving tier's steady state — keeps
+        // the inline computation and its zero-allocation property.
+        let qnorms: Vec<f64> = if rbf && n_sv > SV_BLOCK {
+            (0..out.len()).map(|q| src.row(base + q).sqnorm()).collect()
+        } else {
+            Vec::new()
+        };
         let mut s0 = 0usize;
         while s0 < n_sv {
             let block = (n_sv - s0).min(SV_BLOCK);
             for (q, o) in out.iter_mut().enumerate() {
                 let x = src.row(base + q);
-                let nq = if rbf { x.sqnorm() } else { 0.0 };
+                let nq = if rbf {
+                    if qnorms.is_empty() {
+                        x.sqnorm()
+                    } else {
+                        qnorms[q]
+                    }
+                } else {
+                    0.0
+                };
+                if self.f32_sv {
+                    if let (Row::Dense(xq), Features::Dense { .. }) = (x, self.support.storage())
+                    {
+                        *o = self.score_block_f32(xq, nq, s0, block, *o);
+                        continue;
+                    }
+                }
                 let mut f = *o;
                 tile::kernel_block(
                     self.kernel,
@@ -387,6 +491,30 @@ impl<'m> Scorer<'m> {
             }
             s0 += block;
         }
+    }
+
+    /// One query against one SV block through the packed-f32 dot — the
+    /// same kernel maps as [`tile::kernel_block`] (RBF via the
+    /// `‖a‖²+‖b‖²−2a·b` decomposition with f64 norms), only the dot
+    /// accumulation differs. SV order, and therefore the coefficient
+    /// association order, matches the exact path.
+    fn score_block_f32(&self, xq: &[f32], nq: f64, s0: usize, block: usize, init: f64) -> f64 {
+        let mut f = init;
+        for p in 0..block {
+            let dot = dot_f32(xq, self.support.row(s0 + p)) as f64;
+            let v = match self.kernel {
+                KernelFunction::Rbf { gamma } => {
+                    (-gamma * (nq + self.sv_sqnorms[s0 + p] - 2.0 * dot).max(0.0)).exp()
+                }
+                KernelFunction::Linear => dot,
+                KernelFunction::Poly { gamma, coef0, degree } => {
+                    (gamma * dot + coef0).powi(degree as i32)
+                }
+                KernelFunction::Sigmoid { gamma, coef0 } => (gamma * dot + coef0).tanh(),
+            };
+            f += self.coef[s0 + p] * v;
+        }
+        f
     }
 }
 
@@ -747,5 +875,109 @@ mod tests {
         let (sv, coef, offset) = random_expansion(5, 3, 81);
         let scorer = Scorer::new(KernelFunction::Linear, &sv, &coef, offset);
         scorer.decision(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn rbf_multiblock_norm_hoist_is_bit_identical_across_query_backends() {
+        // n_sv > SV_BLOCK takes the hoisted-qnorm path; dense and CSR
+        // query sources must produce the same bits (Row::sqnorm is
+        // bit-identical across backends), and both must stay within the
+        // legacy tolerance.
+        let mut rng = Pcg::new(131);
+        let mut sv = Dataset::with_dim(6);
+        let mut row = vec![0f32; 6];
+        let mut coef = Vec::new();
+        for _ in 0..SV_BLOCK + 33 {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            sv.push(&row, 1);
+            coef.push(rng.normal());
+        }
+        let kernel = KernelFunction::Rbf { gamma: 0.4 };
+        let scorer = Scorer::new(kernel, &sv, &coef, 0.25);
+        let mut queries = Dataset::with_dim(6);
+        for _ in 0..9 {
+            row.iter_mut().for_each(|v| {
+                *v = if rng.bernoulli(0.5) { rng.normal() as f32 } else { 0.0 }
+            });
+            queries.push(&row, 1);
+        }
+        let dense = scorer.decision_values(&queries);
+        let sparse = scorer.decision_values(&queries.to_sparse());
+        assert!(
+            dense.iter().zip(&sparse).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "hoisted norms diverge across query backends"
+        );
+        for q in 0..queries.len() {
+            let want = legacy_decision(kernel, &sv, &coef, 0.25, queries.row(q));
+            assert!((dense[q] - want).abs() <= tol(&coef, want), "q={q}");
+        }
+    }
+
+    #[test]
+    fn f32_sv_path_tracks_the_exact_tile_within_the_gate() {
+        for kernel in KERNELS {
+            let (sv, coef, offset) = random_expansion(53, 19, 141);
+            let exact = Scorer::new(kernel, &sv, &coef, offset).collapse_linear(false);
+            let fast = exact.clone().with_f32_sv(true);
+            assert!(fast.is_f32_sv() && !exact.is_f32_sv());
+            let delta = fast.f32_sv_max_delta();
+            // Modest expansion, unit-scale features: the f32 accumulator
+            // loses ~2^-24 per term relative to the coefficient mass.
+            let mass: f64 = coef.iter().map(|c| c.abs()).sum();
+            assert!(delta <= 1e-3 * (1.0 + mass), "{kernel:?}: delta {delta}");
+            let queries = random_queries(21, 19, 142);
+            let (mut a, mut b) = (vec![0f64; 21], vec![0f64; 21]);
+            exact.decision_block(19, &queries, &mut a);
+            fast.decision_block(19, &queries, &mut b);
+            for q in 0..21 {
+                assert!(
+                    (a[q] - b[q]).abs() <= 1e-3 * (1.0 + a[q].abs() + mass),
+                    "{kernel:?} q={q}: exact {} vs f32 {}",
+                    a[q],
+                    b[q]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_sv_flag_is_inert_for_sparse_pairs_and_collapsed_linear() {
+        // CSR on either side keeps the exact f64 merged dot: bits match
+        // the flag-off run exactly.
+        let mut rng = Pcg::new(151);
+        let mut sv = Dataset::with_dim(7);
+        let mut row = vec![0f32; 7];
+        let mut coef = Vec::new();
+        for _ in 0..31 {
+            row.iter_mut().for_each(|v| {
+                *v = if rng.bernoulli(0.4) { rng.normal() as f32 } else { 0.0 }
+            });
+            sv.push(&row, 1);
+            coef.push(rng.normal());
+        }
+        let sv_sparse = sv.to_sparse();
+        let mut queries = Dataset::with_dim(7);
+        for _ in 0..11 {
+            row.iter_mut().for_each(|v| *v = rng.normal() as f32);
+            queries.push(&row, 1);
+        }
+        let kernel = KernelFunction::Rbf { gamma: 0.8 };
+        let off = Scorer::new(kernel, &sv_sparse, &coef, 0.5);
+        let on = off.clone().with_f32_sv(true);
+        let (a, b) = (off.decision_values(&queries), on.decision_values(&queries));
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "f32 flag must be inert for sparse support"
+        );
+        // Collapsed linear: the primal path wins over the flag and the
+        // gate reports zero delta.
+        let collapsed = Scorer::new(KernelFunction::Linear, &sv, &coef, 0.5).with_f32_sv(true);
+        assert!(collapsed.is_collapsed());
+        assert_eq!(collapsed.f32_sv_max_delta(), 0.0);
+        let (c, d) = (
+            collapsed.decision_values(&queries),
+            collapsed.clone().with_f32_sv(false).decision_values(&queries),
+        );
+        assert!(c.iter().zip(&d).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 }

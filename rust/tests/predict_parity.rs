@@ -336,3 +336,61 @@ fn malformed_documents_fail_with_positions() {
     assert!(format!("{err:#}").contains("coef[1]"), "{err:#}");
     std::fs::remove_file(&path).ok();
 }
+
+/// The SIMD wall, end to end: forced-SIMD and forced-scalar scoring
+/// passes are `to_bits`-identical for all four kernels (expansion path,
+/// so the tile runs for linear too), for a trained model, and for CSR
+/// queries (which must keep taking the merged-dot fallback under both
+/// modes). Skipped where AVX2 is absent — there is only one tile there.
+#[test]
+fn simd_off_and_force_scoring_passes_are_bit_identical() {
+    use pasmo::kernel::tile::simd::{self, SimdMode};
+    if !simd::simd_supported() {
+        return;
+    }
+    let mut rng = Pcg::new(0x51D);
+    let sv = random_ds(120, 19, &mut rng);
+    let coef: Vec<f64> = (0..sv.len()).map(|_| rng.normal()).collect();
+    let queries = random_ds(64, 19, &mut rng);
+    let kernels = [
+        KernelFunction::Rbf { gamma: 0.4 },
+        KernelFunction::Linear,
+        KernelFunction::Poly { gamma: 0.3, coef0: 1.0, degree: 3 },
+        KernelFunction::Sigmoid { gamma: 0.2, coef0: 0.1 },
+    ];
+    for kernel in kernels {
+        let scorer = Scorer::new(kernel, &sv, &coef, 0.25).collapse_linear(false);
+        assert!(simd::set_simd_mode(SimdMode::Off));
+        let want = scorer.decision_values(&queries);
+        assert!(simd::set_simd_mode(SimdMode::Force));
+        let got = scorer.decision_values(&queries);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits(), "{kernel:?}: SIMD pass diverged");
+        }
+    }
+
+    let data = Arc::new(pasmo::data::synth::chessboard(160, 4, 3));
+    let model = Trainer::rbf(10.0, 0.5).train(&data).model;
+    let dense_q = pasmo::data::synth::chessboard(80, 4, 4);
+    let sparse_q = dense_q.to_sparse();
+    let scorer = Scorer::new(model.kernel, &model.support, &model.coef, model.bias);
+    assert!(simd::set_simd_mode(SimdMode::Off));
+    let want_dense = scorer.decision_values(&dense_q);
+    let want_sparse = scorer.decision_values(&sparse_q);
+    assert!(simd::set_simd_mode(SimdMode::Force));
+    let got_dense = scorer.decision_values(&dense_q);
+    let got_sparse = scorer.decision_values(&sparse_q);
+    for (w, g) in want_dense.iter().zip(&got_dense) {
+        assert_eq!(w.to_bits(), g.to_bits(), "trained-model SIMD pass diverged");
+    }
+    for (w, g) in want_sparse.iter().zip(&got_sparse) {
+        assert_eq!(w.to_bits(), g.to_bits(), "CSR fallback must not depend on the mode");
+    }
+
+    // restore the ambient selection for the rest of this binary
+    let ambient = std::env::var("PASMO_SIMD")
+        .ok()
+        .and_then(|v| SimdMode::parse(&v))
+        .unwrap_or(SimdMode::Auto);
+    assert!(simd::set_simd_mode(ambient));
+}
